@@ -1,0 +1,118 @@
+//! Edge-deployment scenario (the paper's §1 motivation): a device with
+//! no FP units. Reports what actually matters there:
+//!
+//!   * weight memory: FP32 vs integer-only W4 (packed) footprints
+//!   * KV-cache memory at 8-bit integer lanes
+//!   * decode tokens/s through the all-integer engine
+//!   * arithmetic census: the request path executes ZERO float ops
+//!     inside the model graph (boundary dequant only)
+//!
+//! Run: `cargo run --release --example edge_deploy`
+
+use illm::coordinator::engine::{greedy, Engine, IntEngine};
+use illm::data::load_corpus;
+use illm::int_model::quantize::quantize_model;
+use illm::int_model::IntMlp;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::util::Table;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir)?;
+    let mut table = Table::new(&[
+        "model", "fp32 KiB", "w8 KiB", "w4 KiB", "ratio", "decode tok/s",
+        "kv KiB/seq",
+    ]);
+    for name in ["tinyllama_s", "tinyllama_m", "tinyopt_s"] {
+        let fp = load_model(&dir, name)?;
+        let fp_bytes = model_fp_bytes(&fp);
+        let w8 = quantize_model(&fp, QuantScheme::W8A8, None, None);
+        let w4 = quantize_model(&fp, QuantScheme::W4A4, None, None);
+        let w8_bytes = model_int_bytes(&w8, 8);
+        let w4_bytes = model_int_bytes(&w4, 4);
+
+        // decode throughput through the integer KV path
+        let engine = IntEngine { model: Arc::new(w8) };
+        let prompt = illm::data::encode("the engineer builds ");
+        let (mut st, mut logits) = engine.prefill(&prompt);
+        let n = 64usize;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let next = greedy(&logits);
+            logits = engine.decode(&mut st, next);
+        }
+        let tok_s = n as f64 / t0.elapsed().as_secs_f64();
+        let kv_bytes = engine.kv_bytes(&st);
+        table.row(vec![
+            name.to_string(),
+            format!("{}", fp_bytes / 1024),
+            format!("{}", w8_bytes / 1024),
+            format!("{}", w4_bytes / 1024),
+            format!("{:.1}x", fp_bytes as f64 / w4_bytes as f64),
+            format!("{tok_s:.0}"),
+            format!("{:.1}", kv_bytes as f64 / 1024.0),
+        ]);
+    }
+    table.print();
+    let _ = corpus;
+    println!("\nnote: integer engine stores weights as packed n-bit + \
+              per-channel i16 mantissas;\nKV lanes are 8-bit integer with \
+              per-head dyadic scales (grow-only rescale).");
+    Ok(())
+}
+
+fn model_fp_bytes(fp: &illm::nn::FpModel) -> usize {
+    let mut n = fp.embed.data.len();
+    if let Some(pe) = &fp.pos_embed {
+        n += pe.data.len();
+    }
+    for l in &fp.layers {
+        n += l.wq.w.data.len() + l.wk.w.data.len() + l.wv.w.data.len()
+            + l.wo.w.data.len();
+        n += match &l.mlp {
+            illm::nn::Mlp::SwiGlu { wg, wu, wd } => {
+                wg.w.data.len() + wu.w.data.len() + wd.w.data.len()
+            }
+            illm::nn::Mlp::Relu { w1, w2 } => {
+                w1.w.data.len() + w2.w.data.len()
+            }
+        };
+    }
+    n * 4
+}
+
+/// Deployment footprint: packed n-bit weights + i16 channel mantissas +
+/// 8-bit embedding tables.
+fn model_int_bytes(m: &illm::int_model::IntModel, bits: usize) -> usize {
+    let wq_bytes = |n_elems: usize, n_chan: usize| {
+        n_elems * bits / 8 + n_chan * 2 + 8
+    };
+    let mut total = m.embed.q.vals.data.len() + m.embed.q.m.len() * 12;
+    if let Some(pe) = &m.pos_embed {
+        total += pe.q.vals.data.len() + pe.q.m.len() * 12;
+    }
+    for l in &m.layers {
+        for w in [&l.wq, &l.wk, &l.wv, &l.wo] {
+            total += wq_bytes(w.wq.data.len(), w.mw.len());
+        }
+        match &l.mlp {
+            IntMlp::SwiGlu { wg, wu, wd, alpha } => {
+                for w in [wg, wu, wd] {
+                    total += wq_bytes(w.wq.data.len(), w.mw.len());
+                }
+                total += alpha.am.len() * 3;
+            }
+            IntMlp::Relu { w1, w2 } => {
+                for w in [w1, w2] {
+                    total += wq_bytes(w.wq.data.len(), w.mw.len());
+                    total += w.bias_q.as_ref().map_or(0, |b| b.len() * 4);
+                }
+            }
+        }
+    }
+    total += wq_bytes(m.lm_head.wq.data.len(), m.lm_head.mw.len());
+    total
+}

@@ -1,0 +1,63 @@
+//! Quantization-design explorer: sweep methods x schemes on one model
+//! and print the PPL grid — the interactive companion to the paper's
+//! Tables 1/2. Useful for judging how far each mechanism (smoothing,
+//! learned clip, dynamic quant, integer ops) carries at each bit width.
+//!
+//! Run: `cargo run --release --example quant_explore [model]`
+
+use illm::baselines::{self, fakequant::ActQuantMode};
+use illm::calib::{fold_smoothing, fsbr_calibrate, FsbrOptions};
+use illm::data::load_corpus;
+use illm::eval::{perplexity, LogitsModel};
+use illm::int_model::quantize::quantize_model;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::util::{fmt_ppl, Table};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "tinyllama_s".into());
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir)?;
+    let fp = load_model(&dir, &model)?;
+    let fp_ppl = perplexity(&fp, &corpus);
+    println!("{model}: FP baseline ppl {fp_ppl:.3}\n");
+
+    let methods: &[&str] = &["rtn", "sq", "omni", "fsbr", "illm"];
+    let schemes = [QuantScheme::W8A8, QuantScheme::W6A6,
+                   QuantScheme::W4A4];
+    let mut t = Table::new(&["method", "w8a8", "w6a6", "w4a4"]);
+    for &method in methods {
+        let mut row = vec![method.to_string()];
+        for scheme in schemes {
+            let m: Box<dyn LogitsModel> = match method {
+                "rtn" => Box::new(baselines::rtn(&fp, &corpus, scheme)),
+                "sq" => Box::new(
+                    baselines::smoothquant(&fp, &corpus, scheme)),
+                "omni" => Box::new(
+                    baselines::omniquant(&fp, &corpus, scheme)),
+                "fsbr" => Box::new(
+                    baselines::fsbr_fakequant(&fp, &corpus, scheme,
+                                              ActQuantMode::PerToken).0),
+                _ => {
+                    let windows = baselines::calib_windows(&corpus);
+                    let params = fsbr_calibrate(&fp, &windows, scheme,
+                                                FsbrOptions::default());
+                    let folded = fold_smoothing(&fp, &params);
+                    let alpha: Vec<Option<Vec<f64>>> = params
+                        .layers.iter().map(|l| l.alpha.clone()).collect();
+                    Box::new(quantize_model(&folded, scheme,
+                                            Some(&alpha), None))
+                }
+            };
+            row.push(fmt_ppl(perplexity(m.as_ref(), &corpus)));
+        }
+        t.row(row);
+        eprintln!("  {method} done");
+    }
+    t.print();
+    println!("\nrtn/sq/omni = simulated quant (static acts); \
+              fsbr = simulated (per-token); illm = integer-only engine");
+    Ok(())
+}

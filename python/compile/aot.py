@@ -1,0 +1,377 @@
+"""AOT compile path: lower L2 models (+ one L1 pallas kernel) to HLO text.
+
+HLO *text* is the interchange format — jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). NEVER use
+`lowered.compile().serialize()` here.
+
+Outputs (under artifacts/):
+  manifest.json                 — everything the rust runtime needs
+  <model>.weights.bin           — FP weights (written by train.py)
+  fp_forward.<model>.s<T>.hlo.txt
+  int_forward.<model>.<scheme>.s<T>.hlo.txt
+  kernels/di_matmul.hlo.txt     — the L1 pallas kernel, standalone
+  goldens.json                  — cross-language op test vectors
+
+Usage: python -m compile.aot --out ../artifacts [--steps N] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import intops, train
+from .intops import I32, I64
+from .model import (ModelConfig, PRESETS, QuantScheme, fp_forward,
+                    fp_param_spec, int_forward, int_param_spec,
+                    int_params_from_fp)
+
+SEQ_BUCKETS = (64, 256)
+SCHEMES = {"w8a8": QuantScheme(8, 8), "w4a4": QuantScheme(4, 4),
+           "w6a6": QuantScheme(6, 6)}
+DTYPES = {"i32": jnp.int32, "i64": jnp.int64, "f32": jnp.float32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides big
+    # literals as `constant({...})`, which the 0.5.1-era text parser
+    # accepts silently and materializes as garbage — causal masks and
+    # RoPE tables would vanish from the artifact.
+    return comp.as_hlo_text(True)
+
+
+def _write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# ---------------------------------------------------------------------------
+# model lowering
+# ---------------------------------------------------------------------------
+
+def lower_fp_forward(cfg: ModelConfig, seq: int) -> tuple[str, list]:
+    spec = fp_param_spec(cfg)
+
+    def fn(tokens, *flat):
+        params = {name: arr for (name, _), arr in zip(spec, flat)}
+        return (fp_forward(cfg, params, tokens),)
+
+    args = [jax.ShapeDtypeStruct((seq,), jnp.int32)]
+    args += [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in spec]
+    lowered = jax.jit(fn).lower(*args)
+    params_meta = [{"name": n, "shape": list(s), "dtype": "f32"}
+                   for n, s in spec]
+    return to_hlo_text(lowered), params_meta
+
+
+def lower_int_forward(cfg: ModelConfig, scheme: QuantScheme,
+                      seq: int) -> tuple[str, list]:
+    spec = int_param_spec(cfg)
+
+    def fn(tokens, *flat):
+        qp = {name: arr for (name, _, _), arr in zip(spec, flat)}
+        return (int_forward(cfg, qp, tokens, scheme),)
+
+    args = [jax.ShapeDtypeStruct((seq,), jnp.int32)]
+    args += [jax.ShapeDtypeStruct(shape, DTYPES[dt]) for _, shape, dt in spec]
+    lowered = jax.jit(fn).lower(*args)
+    params_meta = [{"name": n, "shape": list(s), "dtype": dt}
+                   for n, s, dt in spec]
+    return to_hlo_text(lowered), params_meta
+
+
+def lower_di_matmul_kernel(t=64, k=128, n=128, out_bits=8) -> str:
+    """Standalone L1 pallas kernel artifact (proves pallas->HLO->rust)."""
+    from .kernels.di_matmul import di_matmul
+
+    def fn(x, mx, kx, zpx, wq, mw):
+        return (di_matmul(x, mx, kx, zpx, wq, mw, 12, out_bits),)
+
+    args = [
+        jax.ShapeDtypeStruct((t, k), I32),
+        jax.ShapeDtypeStruct((t,), I32),
+        jax.ShapeDtypeStruct((t,), I32),
+        jax.ShapeDtypeStruct((t,), I32),
+        jax.ShapeDtypeStruct((k, n), I32),
+        jax.ShapeDtypeStruct((n,), I32),
+    ]
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# golden vectors for the rust ops crate
+# ---------------------------------------------------------------------------
+
+def make_goldens(seed: int = 42) -> dict:
+    rng = np.random.default_rng(seed)
+    g = {}
+    # ilog2 / isqrt
+    xs = np.concatenate([
+        np.arange(1, 40), 2 ** np.arange(0, 60, dtype=np.int64),
+        rng.integers(1, 1 << 60, 50),
+    ]).astype(np.int64)
+    g["ilog2"] = {"x": xs.tolist(),
+                  "y": np.asarray(intops.ilog2(jnp.asarray(xs))).tolist()}
+    sq = np.concatenate([np.arange(0, 40),
+                         rng.integers(0, 1 << 60, 50)]).astype(np.int64)
+    g["isqrt"] = {"x": sq.tolist(),
+                  "y": np.asarray(intops.isqrt(jnp.asarray(sq))).tolist()}
+    # dyadic_from_float
+    sc = np.concatenate([10.0 ** rng.uniform(-7, 2, 40), [1.0, 0.5, 255.0]])
+    m, k = intops.dyadic_from_float(jnp.asarray(sc))
+    g["dyadic"] = {"s": sc.tolist(), "m": np.asarray(m).tolist(),
+                   "k": np.asarray(k).tolist()}
+    # requant_rows
+    p = rng.integers(-(1 << 40), 1 << 40, (6, 32)).astype(np.int64)
+    m_in = rng.integers(100, 250, 6).astype(np.int64)
+    k_in = rng.integers(10, 30, 6).astype(np.int32)
+    for bits in (4, 8):
+        v, my, ky, zp = intops.requant_rows(
+            jnp.asarray(p), jnp.asarray(m_in), jnp.asarray(k_in), bits)
+        g[f"requant{bits}"] = {
+            "p": p.tolist(), "m_in": m_in.tolist(), "k_in": k_in.tolist(),
+            "vals": np.asarray(v).tolist(), "m": np.asarray(my).tolist(),
+            "k": np.asarray(ky).tolist(), "zp": np.asarray(zp).tolist()}
+    # di_exp
+    xe = rng.integers(-500, 1, (5, 16)).astype(np.int32)
+    me = rng.integers(128, 256, 5).astype(np.int32)
+    ke = rng.integers(4, 12, 5).astype(np.int32)
+    ye = intops.di_exp(jnp.asarray(xe), jnp.asarray(me), jnp.asarray(ke))
+    g["di_exp"] = {"x": xe.tolist(), "m": me.tolist(), "k": ke.tolist(),
+                   "y": np.asarray(ye).tolist()}
+    # di_clipped_softmax (with mask)
+    ps = (rng.normal(0, 3e5, (4, 12))).astype(np.int64)
+    m1 = rng.integers(128, 256, 4).astype(np.int32)
+    k1 = np.full(4, 12, np.int32)
+    mask = np.tril(np.ones((4, 12), bool), 8)
+    ys = intops.di_clipped_softmax(
+        jnp.asarray(ps), jnp.asarray(m1), jnp.asarray(k1), 177, 11, 8,
+        mask=jnp.asarray(mask))
+    g["di_softmax"] = {"p": ps.tolist(), "m1": m1.tolist(),
+                       "k1": k1.tolist(), "m2": 177, "k2": 11,
+                       "mask": mask.astype(int).tolist(),
+                       "y": np.asarray(ys).tolist()}
+    # di_norm (both variants)
+    xn = rng.integers(0, 256, (4, 24)).astype(np.int32)
+    zpn = rng.integers(100, 150, 4).astype(np.int32)
+    for cent, tag in ((False, "rms"), (True, "ln")):
+        v, my, ky, zp = intops.di_norm(jnp.asarray(xn), jnp.asarray(zpn),
+                                       8, cent)
+        g[f"di_norm_{tag}"] = {
+            "x": xn.tolist(), "zp": zpn.tolist(),
+            "vals": np.asarray(v).tolist(), "m": np.asarray(my).tolist(),
+            "k": np.asarray(ky).tolist(), "ozp": np.asarray(zp).tolist()}
+    # di_swiglu
+    xg = rng.integers(0, 256, (3, 16)).astype(np.int32)
+    xu = rng.integers(0, 256, (3, 16)).astype(np.int32)
+    mg = rng.integers(128, 256, 3).astype(np.int32)
+    kg = np.full(3, 12, np.int32)
+    zg = rng.integers(100, 150, 3).astype(np.int32)
+    mu = rng.integers(128, 256, 3).astype(np.int32)
+    ku = np.full(3, 13, np.int32)
+    zu = rng.integers(100, 150, 3).astype(np.int32)
+    am = rng.integers(128, 256, 16).astype(np.int32)
+    ak = rng.integers(5, 9, 16).astype(np.int32)
+    v, my, ky, zp = intops.di_swiglu(
+        *(jnp.asarray(a) for a in (xg, mg, kg, zg, xu, mu, ku, zu, am, ak)),
+        8, 8)
+    g["di_swiglu"] = {
+        "xg": xg.tolist(), "mg": mg.tolist(), "kg": kg.tolist(),
+        "zpg": zg.tolist(), "xu": xu.tolist(), "mu": mu.tolist(),
+        "ku": ku.tolist(), "zpu": zu.tolist(), "am": am.tolist(),
+        "ak": ak.tolist(), "vals": np.asarray(v).tolist(),
+        "m": np.asarray(my).tolist(), "k": np.asarray(ky).tolist(),
+        "zp": np.asarray(zp).tolist()}
+    # di_add
+    xa = rng.integers(0, 256, (4, 16)).astype(np.int32)
+    xb = rng.integers(0, 256, (4, 16)).astype(np.int32)
+    ma = rng.integers(128, 256, 4).astype(np.int32)
+    ka = rng.integers(10, 14, 4).astype(np.int32)
+    za = rng.integers(100, 150, 4).astype(np.int32)
+    mb = rng.integers(128, 256, 4).astype(np.int32)
+    kb = rng.integers(10, 14, 4).astype(np.int32)
+    zb = rng.integers(100, 150, 4).astype(np.int32)
+    v, my, ky, zp = intops.di_add(
+        *(jnp.asarray(a) for a in (xa, ma, ka, za, xb, mb, kb, zb)), 8)
+    g["di_add"] = {
+        "xa": xa.tolist(), "ma": ma.tolist(), "ka": ka.tolist(),
+        "za": za.tolist(), "xb": xb.tolist(), "mb": mb.tolist(),
+        "kb": kb.tolist(), "zb": zb.tolist(),
+        "vals": np.asarray(v).tolist(), "m": np.asarray(my).tolist(),
+        "k": np.asarray(ky).tolist(), "zp": np.asarray(zp).tolist()}
+    # di_linear (with and without bias)
+    x = rng.integers(0, 256, (4, 24)).astype(np.int32)
+    mx = rng.integers(128, 256, 4).astype(np.int32)
+    kx = np.full(4, 12, np.int32)
+    zx = rng.integers(100, 150, 4).astype(np.int32)
+    wq = rng.integers(-127, 128, (24, 12)).astype(np.int32)
+    mw = rng.integers(100, 1 << 14, 12).astype(np.int32)
+    kw = 18
+    bq = rng.integers(-(1 << 20), 1 << 20, 12).astype(np.int64)
+    for bias, tag in ((None, "nobias"), (bq, "bias")):
+        b = None if bias is None else jnp.asarray(bias)
+        v, my, ky, zp = intops.di_linear(
+            jnp.asarray(x), jnp.asarray(mx), jnp.asarray(kx),
+            jnp.asarray(zx), jnp.asarray(wq), jnp.asarray(mw),
+            jnp.asarray(kw, I32), b, 8)
+        g[f"di_linear_{tag}"] = {
+            "x": x.tolist(), "mx": mx.tolist(), "kx": kx.tolist(),
+            "zpx": zx.tolist(), "wq": wq.tolist(), "mw": mw.tolist(),
+            "kw": kw, "bq": (bias.tolist() if bias is not None else None),
+            "vals": np.asarray(v).tolist(), "m": np.asarray(my).tolist(),
+            "k": np.asarray(ky).tolist(), "zp": np.asarray(zp).tolist()}
+    # requant_common
+    v, m, k, zp = intops.requant_common(
+        jnp.asarray(x), jnp.asarray(mx), jnp.asarray(kx), jnp.asarray(zx), 8)
+    g["requant_common"] = {
+        "x": x.tolist(), "mx": mx.tolist(), "kx": kx.tolist(),
+        "zpx": zx.tolist(), "vals": np.asarray(v).tolist(),
+        "m": int(m), "k": int(k), "zp": int(zp)}
+    # di_rope
+    cos_q, sin_q = intops.rope_tables(8, 6)
+    xr = rng.integers(0, 256, (6, 2, 8)).astype(np.int32)
+    zr = rng.integers(100, 150, 6).astype(np.int32)
+    yr = intops.di_rope(jnp.asarray(xr), jnp.asarray(zr),
+                        jnp.asarray(cos_q), jnp.asarray(sin_q))
+    g["di_rope"] = {"x": xr.tolist(), "zp": zr.tolist(),
+                    "cos": cos_q.tolist(), "sin": sin_q.tolist(),
+                    "y": np.asarray(yr).tolist()}
+    return g
+
+
+def model_goldens(out_dir: str, models: list, seq: int = 48) -> dict:
+    """End-to-end logits fingerprints: rust native engines must reproduce
+    the FP logits within tolerance and the int logits structure."""
+    g = {}
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 256, seq).astype(np.int32)
+    for name in models:
+        wpath = os.path.join(out_dir, f"{name}.weights.bin")
+        if not os.path.exists(wpath):
+            continue
+        params, meta = train.load_weights(wpath)
+        cfg = ModelConfig.from_dict(meta["config"])
+        fp = np.asarray(fp_forward(cfg, params, jnp.asarray(toks)))
+        qp = int_params_from_fp(cfg, params, SCHEMES["w8a8"])
+        iq = np.asarray(int_forward(cfg, qp, jnp.asarray(toks),
+                                    SCHEMES["w8a8"]))
+        g[name] = {
+            "tokens": toks.tolist(),
+            "fp_logits_last": fp[-1, :16].astype(float).tolist(),
+            "fp_logits_sum": float(fp.sum()),
+            "int_w8a8_logits_last": iq[-1, :16].astype(float).tolist(),
+        }
+    return g
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=350)
+    ap.add_argument("--fast", action="store_true",
+                    help="small models only, fewer steps (CI/dev)")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    models = (["tinyllama_s", "tinyopt_s"] if args.fast
+              else list(PRESETS))
+    steps = 120 if args.fast else args.steps
+
+    # 1. corpus + training (skipped if weights exist and not forced)
+    need_train = [m for m in models if not os.path.exists(
+        os.path.join(out, f"{m}.weights.bin"))]
+    if need_train and not args.skip_train:
+        train.train_all(out, steps=steps, models=need_train)
+
+    manifest = {"models": {}, "hlo": [], "kernels": {}, "schemes":
+                {k: {"w_bits": v.w_bits, "a_bits": v.a_bits}
+                 for k, v in SCHEMES.items()},
+                "seq_buckets": list(SEQ_BUCKETS)}
+
+    # 2. model HLO artifacts.
+    # fp_forward compiles in <1s on the CPU PJRT client; the full
+    # integer graph does NOT (XLA CPU compile is superlinear in
+    # instruction count: 1 layer ~ 19s, 4 layers ~ 5min on this box), so
+    # the AOT integer artifact is a ONE-LAYER block (same param contract
+    # with n_layers=1) — the rust native-vs-PJRT integration test proves
+    # the whole DI-* pipeline composes through XLA. Full-depth integer
+    # inference runs on the rust native engine. See DESIGN.md §Artifacts.
+    import dataclasses
+
+    for name in models:
+        wpath = os.path.join(out, f"{name}.weights.bin")
+        _, meta = train.load_weights(wpath)
+        cfg = ModelConfig.from_dict(meta["config"])
+        manifest["models"][name] = {
+            "config": cfg.to_dict(), "weights": f"{name}.weights.bin",
+            "final_loss": meta.get("final_loss")}
+        for seq in SEQ_BUCKETS:
+            text, pmeta = lower_fp_forward(cfg, seq)
+            fn = f"fp_forward.{name}.s{seq}.hlo.txt"
+            _write(os.path.join(out, fn), text)
+            manifest["hlo"].append({
+                "kind": "fp_forward", "model": name, "seq": seq,
+                "file": fn, "params": pmeta,
+                "outputs": [{"shape": [seq, cfg.vocab], "dtype": "f32"}]})
+            print(f"  wrote {fn} ({len(text)//1024} KiB)")
+
+    # integer one-layer block artifacts for the two small models
+    block_seq = 32
+    for name in [m for m in ("tinyllama_s", "tinyopt_s") if m in models]:
+        _, meta = train.load_weights(os.path.join(out,
+                                                  f"{name}.weights.bin"))
+        cfg = ModelConfig.from_dict(meta["config"])
+        bcfg = dataclasses.replace(cfg, n_layers=1)
+        for tag in ("w8a8", "w4a4"):
+            text, pmeta = lower_int_forward(bcfg, SCHEMES[tag], block_seq)
+            fn = f"int_block.{name}.{tag}.s{block_seq}.hlo.txt"
+            _write(os.path.join(out, fn), text)
+            manifest["hlo"].append({
+                "kind": "int_block", "model": name, "seq": block_seq,
+                "scheme": tag, "n_layers": 1, "file": fn, "params": pmeta,
+                "outputs": [{"shape": [block_seq, cfg.vocab],
+                             "dtype": "f32"}]})
+            print(f"  wrote {fn} ({len(text)//1024} KiB)")
+
+    # 3. L1 kernel artifact
+    ktext = lower_di_matmul_kernel()
+    _write(os.path.join(out, "kernels", "di_matmul.hlo.txt"), ktext)
+    manifest["kernels"]["di_matmul"] = {
+        "file": "kernels/di_matmul.hlo.txt", "t": 64, "k": 128, "n": 128,
+        "kw": 12, "out_bits": 8}
+    print(f"  wrote kernels/di_matmul.hlo.txt ({len(ktext)//1024} KiB)")
+
+    # 4. goldens
+    g = make_goldens()
+    g["models"] = model_goldens(out, models)
+    with open(os.path.join(out, "goldens.json"), "w") as f:
+        json.dump(g, f)
+    print("  wrote goldens.json")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("  wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Deterministic synthetic corpus generator.
+
+The paper evaluates on WikiText2/C4, which we do not have. This module
+generates an English-like templated corpus with enough compositional
+structure (grammar, agreement, copy/induction patterns) that a tiny
+byte-level transformer learns non-trivial statistics, and that quantization
+error shows up as a measurable perplexity delta.
+
+The SAME text is consumed by the rust side (artifacts/corpus.txt), so the
+generator lives only here; rust never re-generates it. Determinism: a
+simple xorshift PRNG seeded explicitly — no dependence on python hash
+randomization or numpy version.
+"""
+
+from __future__ import annotations
+
+SUBJECTS = [
+    "the engineer", "a quiet student", "the old captain", "my neighbor",
+    "the tired doctor", "a young painter", "the night guard", "the chess player",
+    "an honest merchant", "the river pilot", "the clockmaker", "a wandering poet",
+]
+SUBJECTS_PL = [
+    "the engineers", "two quiet students", "the old captains", "my neighbors",
+    "the tired doctors", "some young painters", "the night guards",
+    "the chess players", "honest merchants", "the river pilots",
+]
+VERBS_S = [
+    "builds", "paints", "repairs", "studies", "watches", "measures",
+    "records", "carries", "designs", "inspects", "sharpens", "collects",
+]
+VERBS_P = [
+    "build", "paint", "repair", "study", "watch", "measure",
+    "record", "carry", "design", "inspect", "sharpen", "collect",
+]
+OBJECTS = [
+    "a small bridge", "the copper lantern", "an iron gate", "the wooden boat",
+    "a stone tower", "the broken compass", "a silver bell", "the long ladder",
+    "an oak table", "the narrow road", "a glass prism", "the heavy anchor",
+]
+PLACES = [
+    "near the harbor", "behind the mill", "under the archway", "by the canal",
+    "inside the workshop", "at the market", "on the hillside", "along the pier",
+    "beside the granary", "within the old walls",
+]
+TIMES = [
+    "every morning", "before dawn", "after the storm", "in late autumn",
+    "during the festival", "on quiet evenings", "at the turn of the tide",
+    "when the bells ring", "in the dry season",
+]
+CONNECT = [
+    "and then", "but later", "so that", "because", "although", "while",
+]
+ADJ = [
+    "careful", "patient", "curious", "steady", "practical", "stubborn",
+    "cheerful", "precise", "weary", "bold",
+]
+
+
+class XorShift:
+    """xorshift32 — deterministic across platforms/versions."""
+
+    def __init__(self, seed: int):
+        self.s = (seed & 0xFFFFFFFF) or 0x9E3779B9
+
+    def next(self) -> int:
+        x = self.s
+        x ^= (x << 13) & 0xFFFFFFFF
+        x ^= x >> 17
+        x ^= (x << 5) & 0xFFFFFFFF
+        self.s = x
+        return x
+
+    def randint(self, n: int) -> int:
+        return self.next() % n
+
+    def choice(self, seq):
+        return seq[self.randint(len(seq))]
+
+
+def _sentence(rng: XorShift) -> str:
+    kind = rng.randint(10)
+    if kind < 4:
+        # simple SVO with agreement
+        if rng.randint(2) == 0:
+            s, v = rng.choice(SUBJECTS), rng.choice(VERBS_S)
+        else:
+            s, v = rng.choice(SUBJECTS_PL), rng.choice(VERBS_P)
+        return f"{s} {v} {rng.choice(OBJECTS)} {rng.choice(PLACES)}."
+    if kind < 6:
+        # temporal clause
+        s, v = rng.choice(SUBJECTS), rng.choice(VERBS_S)
+        return f"{rng.choice(TIMES)}, {s} {v} {rng.choice(OBJECTS)}."
+    if kind < 8:
+        # compound with connector
+        s1, v1 = rng.choice(SUBJECTS), rng.choice(VERBS_S)
+        s2, v2 = rng.choice(SUBJECTS_PL), rng.choice(VERBS_P)
+        return (
+            f"{s1} {v1} {rng.choice(OBJECTS)} {rng.choice(CONNECT)} "
+            f"{s2} {v2} {rng.choice(OBJECTS)} {rng.choice(PLACES)}."
+        )
+    if kind < 9:
+        # copular with adjective
+        return f"{rng.choice(SUBJECTS)} is {rng.choice(ADJ)} {rng.choice(TIMES)}."
+    # induction-friendly repetition: "X built Y. X admired Y."
+    s = rng.choice(SUBJECTS)
+    o = rng.choice(OBJECTS)
+    v1, v2 = rng.choice(VERBS_S), rng.choice(VERBS_S)
+    return f"{s} {v1} {o}. later {s} also {v2} {o}."
+
+
+def generate(n_chars: int, seed: int = 1234) -> str:
+    rng = XorShift(seed)
+    parts: list[str] = []
+    total = 0
+    while total < n_chars:
+        para_len = 3 + rng.randint(5)
+        sents = [_sentence(rng) for _ in range(para_len)]
+        para = " ".join(sents) + "\n"
+        parts.append(para)
+        total += len(para)
+    return "".join(parts)[:n_chars]
+
+
+def train_val_split(text: str, val_frac: float = 0.1) -> tuple[str, str]:
+    cut = int(len(text) * (1.0 - val_frac))
+    # split on a newline boundary so no sentence straddles the split
+    nl = text.rfind("\n", 0, cut)
+    if nl > 0:
+        cut = nl + 1
+    return text[:cut], text[cut:]
+
+
+def encode(text: str) -> list[int]:
+    """Byte-level tokenization (vocab = 256). Mirrors rust data::tokenizer."""
+    return list(text.encode("utf-8"))
+
+
+if __name__ == "__main__":
+    import sys
+
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 400_000
+    sys.stdout.write(generate(n))

@@ -1,0 +1,507 @@
+"""Integer-only operator specification (pure jnp).
+
+This module is the *specification* of every dynamic integer-only (DI)
+operator in the I-LLM paper, shared by three consumers:
+
+  1. the L2 JAX integer model (`model.py`) — lowered to HLO and executed
+     from rust via PJRT,
+  2. the L1 Pallas kernels (`kernels/*.py`) — checked against these
+     functions in pytest,
+  3. the L3 rust `ops/` crate — a bit-exact native mirror, cross-checked
+     through golden vectors (`aot.py --goldens`) and through the
+     native-vs-PJRT integration test.
+
+Bit-exactness rules (rust must follow the same):
+  * all divisions are FLOOR divisions (numpy `//` semantics, also for
+    negative operands); rust uses an explicit `fdiv` helper,
+  * "round" is implemented as `floor_div(num + den // 2, den)` —
+    round-half-up, never banker's rounding,
+  * right shifts on negative ints are arithmetic (floor) shifts,
+  * accumulation in int32 where the bound allows it, int64 for
+    requantization arithmetic and residual alignment.
+
+Quantized activation layout ("DynQ"): integer values in [0, 2^bits),
+plus per-row (per-token) dyadic scale s = m / 2^k and zero point zp.
+Weights are per-output-channel symmetric with mantissas aligned to one
+common exponent k_w (see `align_channel_scales`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# int64 is required for requantization arithmetic (products up to ~2^56).
+# Explicit dtypes are used everywhere, so enabling x64 does not change the
+# behaviour of f32 model code.
+jax.config.update("jax_enable_x64", True)
+
+I32 = jnp.int32
+I64 = jnp.int64
+
+# Bound on dyadic exponents so (qmax << (k + 8)) stays in i64.
+K_MAX = 46
+# Activation-scale exponent cap: composite exponents (k_gate + k_up +
+# p_sig - 1, k_act + k_w + 8, ...) must stay <= 55 for i64 shifts.
+ACT_K_MAX = 20
+# Weight common-exponent cap.
+W_K_MAX = 24
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def fdiv(a, b):
+    """Floor division (numpy // semantics). a, b integer arrays."""
+    return a // b
+
+
+def rdiv(a, b):
+    """Round-half-up division for b > 0: floor((a + b//2) / b)."""
+    return (a + b // 2) // b
+
+
+def ilog2(x):
+    """floor(log2(x)) for x >= 1, via bit counting (MSB method, Eq. 6)."""
+    x = jnp.asarray(x, I64)
+    r = jnp.zeros_like(x)
+    for shift in (32, 16, 8, 4, 2, 1):
+        hit = x >= (jnp.asarray(1, I64) << shift)
+        r = jnp.where(hit, r + shift, r)
+        x = jnp.where(hit, x >> shift, x)
+    return r
+
+
+def isqrt(x):
+    """Bit-wise integer square root of int64 x >= 0 (paper Alg. 4 I-SQRT).
+
+    Non-restoring method: the largest n with n*n <= x.
+    """
+    x = jnp.asarray(x, I64)
+    n = jnp.zeros_like(x)
+    rem = x
+    # 31 bit-pairs cover int64 inputs up to 2^62.
+    for v in range(30, -1, -1):
+        bit = jnp.asarray(1, I64) << v
+        # (n + 2^v)^2 - n^2 = (2n + 2^v) * 2^v
+        temp = ((n << 1) + bit) << v
+        take = rem >= temp
+        rem = jnp.where(take, rem - temp, rem)
+        n = jnp.where(take, n + bit, n)
+    return n
+
+
+def quantize_f32(x, bits):
+    """Float -> (vals, m, k, zp) asymmetric per-row quantization.
+
+    Offline/boundary only (weights, embedding table, goldens). Runtime
+    requantization never touches floats — see `requant_rows`.
+    x: (..., N) float; scales per leading rows.
+    """
+    qmax = (1 << bits) - 1
+    # include zero in the range: keeps zp in [0, qmax] (representable)
+    # and makes constant rows exact — standard asymmetric-quant practice.
+    xmax = jnp.maximum(jnp.max(x, axis=-1), 0.0)
+    xmin = jnp.minimum(jnp.min(x, axis=-1), 0.0)
+    rng = jnp.maximum(xmax - xmin, 1e-9)
+    s = rng / qmax
+    m, k = dyadic_from_float(s)
+    s_d = m.astype(jnp.float64) / (jnp.asarray(1, I64) << k).astype(jnp.float64)
+    zp = jnp.clip(jnp.floor(-xmin / s_d + 0.5), 0, qmax).astype(I32)
+    vals = jnp.clip(
+        jnp.floor(x / s_d[..., None] + 0.5).astype(I64) + zp[..., None].astype(I64),
+        0,
+        qmax,
+    ).astype(I32)
+    return vals, m, k, zp
+
+
+def dyadic_from_float(s):
+    """Float scale -> dyadic (m, k) with m in [128, 255] (normalized).
+
+    Offline only. k = floor(log2(255 / s)); m = round(s * 2^k).
+    """
+    s = jnp.asarray(s, jnp.float64)
+    k = jnp.floor(jnp.log2(255.0 / s)).astype(I32)
+    k = jnp.clip(k, 0, ACT_K_MAX)
+    m = jnp.floor(s * jnp.exp2(k.astype(jnp.float64)) + 0.5).astype(I32)
+    # m could land on 256 by rounding; renormalize.
+    bump = m > 255
+    m = jnp.where(bump, (m + 1) >> 1, m)
+    k = jnp.where(bump, k - 1, k)
+    return jnp.maximum(m, 1), k
+
+
+def dyadic_to_float(m, k):
+    return m.astype(jnp.float64) / jnp.exp2(k.astype(jnp.float64))
+
+
+def align_channel_scales(s, k_common_bits=14):
+    """Per-channel float scales -> integer mantissas at one common exponent.
+
+    Returns (mw: i32 per channel, kw: scalar i32) with s[c] ~= mw[c] / 2^kw
+    and max mantissa < 2^15 (so P * mw fits i64 after i32 accumulation).
+    """
+    s = jnp.asarray(s, jnp.float64)
+    smax = jnp.max(s)
+    # largest kw with round(smax * 2^kw) < 2^15
+    kw = jnp.clip(
+        jnp.floor(jnp.log2((1 << 14) / smax)).astype(I32), 0, W_K_MAX
+    )
+    mw = jnp.floor(s * jnp.exp2(kw.astype(jnp.float64)) + 0.5).astype(I32)
+    return jnp.maximum(mw, 1), kw
+
+
+# ---------------------------------------------------------------------------
+# requantization (Eq. 4-8) — the heart of DI-MatMul
+# ---------------------------------------------------------------------------
+
+def requant_rows(p, m_in, k_in, bits, clip=None):
+    """Dynamically requantize integer rows to `bits` (Eq. 6-8).
+
+    p:    (T, N) int64 raw values with conceptual scale m_in / 2^k_in
+    m_in: (T,) int64 per-row mantissa;  k_in: (T,) int32 per-row exponent
+    clip: optional (cm, ck) dyadic clip constant c = cm / 2^ck in OUTPUT
+          float units: limits p_min >= p_max - c / s_in (Eq. 10).
+    Returns (vals i32 in [0, qmax], m_y i32, k_y i32, zp i32) per row.
+    """
+    p = jnp.asarray(p, I64)
+    m_in = jnp.asarray(m_in, I64)
+    k_in = jnp.asarray(k_in, I32)
+    qmax = jnp.asarray((1 << bits) - 1, I64)
+
+    # include zero in the range (see quantize_f32)
+    pmax = jnp.maximum(jnp.max(p, axis=-1), 0)
+    pmin = jnp.minimum(jnp.min(p, axis=-1), 0)
+    if clip is not None:
+        cm, ck = clip
+        # c^I = (cm << (k_in - ck)) / m_in: clip constant in p-units
+        # (p_float = p * m_in / 2^k_in, so c/s_in = c * 2^k_in / m_in).
+        sh = jnp.clip(k_in - ck, 0, 56)
+        c_i = fdiv(jnp.asarray(cm, I64) << sh, m_in)
+        pmin = jnp.maximum(pmin, pmax - jnp.maximum(c_i, 1))
+        p = jnp.maximum(p, pmin[..., None])
+    rng = jnp.maximum(pmax - pmin, 1)
+
+    # Eq. 6 (with the mantissa kept, m_y normalized into [128, 255]):
+    #   k_y = floor(log2(qmax * 2^(k_in+8) / (rng * m_in)))
+    num = qmax << jnp.minimum(k_in + 8, 56).astype(I32)
+    k_y = ilog2(jnp.maximum(num // (rng * m_in), 1)).astype(I32)
+    k_y = jnp.clip(k_y, 0, ACT_K_MAX)
+    # Eq. 7: m_y = floor(rng * m_in * 2^(k_y - k_in) / qmax)
+    sh = k_y - k_in
+    prod = rng * m_in
+    m_y = jnp.where(
+        sh >= 0,
+        (prod << jnp.maximum(sh, 0)) // qmax,
+        (prod >> jnp.maximum(-sh, 0)) // qmax,
+    )
+    m_y = jnp.clip(m_y, 1, 255).astype(I32)
+    # Eq. 8 (round-half-up):
+    zp = rdiv(-pmin * qmax, rng).astype(I32)
+    vals = rdiv((p - pmin[..., None]) * qmax, rng[..., None]) .astype(I32)
+    return vals, m_y, k_y, zp
+
+
+def requant_common(x, mx, kx, zpx, bits):
+    """Requantize per-row-scaled DynQ rows to ONE shared dyadic scale.
+
+    Used for the key/value blocks of attention: Q keeps per-token scales,
+    K/V are requantized per head to a single (m, k, zp) so that the score
+    matrix has one scale per query row (required by the integer max in
+    DI-ClippedSoftmax). All-integer: rows are aligned to the max exponent
+    then jointly range-reduced.
+    Returns (vals (T,N) i32, m i32, k i32, zp i32) — scalar scales.
+    """
+    xc = (x - zpx[..., None]).astype(I64)
+    kc = jnp.max(kx)
+    sh = jnp.minimum(kc - kx, 32).astype(I32)
+    v = xc * (mx.astype(I64) << sh)[..., None]
+    flat = v.reshape(1, -1)
+    vals, m, k, zp = requant_rows(
+        flat, jnp.ones((1,), I64), jnp.full((1,), kc, I32), bits
+    )
+    return vals.reshape(x.shape), m[0], k[0], zp[0]
+
+
+def requant_per_head(x3, mx, kx, zpx, bits):
+    """Vectorized `requant_common` over the head axis.
+
+    x3: (T, H, D) i32 values with per-token scales (mx, kx, zpx); zpx may
+    be None when x3 is already centered (post-RoPE). Each head's (T, D)
+    block is requantized to ONE shared dyadic scale.
+    Returns (vals (H, T, D) i64 CENTERED, m (H,), k (H,), zp (H,)).
+    """
+    t, h, d = x3.shape
+    xc = x3.astype(I64) if zpx is None else (
+        x3 - zpx[:, None, None]).astype(I64)
+    kcom = jnp.max(kx)
+    sh = jnp.minimum(kcom - kx, 32).astype(I32)
+    v = xc * (mx.astype(I64) << sh)[:, None, None]
+    flat = jnp.transpose(v, (1, 0, 2)).reshape(h, t * d)
+    vals, m, k, zp = requant_rows(
+        flat, jnp.ones((h,), I64), jnp.full((h,), kcom, I32), bits)
+    cent = (vals.reshape(h, t, d) - zp[:, None, None]).astype(I64)
+    return cent, m, k, zp
+
+
+# ---------------------------------------------------------------------------
+# DI-MatMul (Eq. 2-8)
+# ---------------------------------------------------------------------------
+
+BIAS_Q = 16  # fixed-point exponent of offline-quantized biases
+
+
+def di_linear_raw(x, mx, kx, zpx, wq, mw, kw, bias_q):
+    """DI-MatMul accumulate phase: returns raw (p i64, m_in i64, k_in i32).
+
+    x:  (T, K) i32 quantized activations, per-row (mx, kx, zpx)
+    wq: (K, N) i32 symmetric per-channel weights (values in [-127,127])
+    mw: (N,) i32 channel mantissas at common exponent kw (i32 scalar)
+    bias_q: optional (N,) i64 bias in Q(BIAS_Q) fixed point,
+            bias_q[n] = round(b[n] * 2^BIAS_Q). Aligned to P's per-row
+            scale via p += fdiv(bias_q << (k_in - BIAS_Q), m_in) —
+            all-integer (Eq. 3 extended with a bias term).
+    """
+    xc = (x - zpx[..., None]).astype(I32)
+    p = jnp.matmul(xc, wq, preferred_element_type=I32).astype(I64)
+    p = p * mw[None, :].astype(I64)  # fold per-channel mantissa
+    m_in = mx.astype(I64)
+    k_in = (kx + kw).astype(I32)
+    if bias_q is not None:
+        sh = jnp.clip(k_in - BIAS_Q, -40, 40)[..., None]
+        num = jnp.where(
+            sh >= 0,
+            bias_q[None, :] << jnp.maximum(sh, 0),
+            bias_q[None, :] >> jnp.maximum(-sh, 0),
+        )
+        p = p + fdiv(num, m_in[..., None])
+    return p, m_in, k_in
+
+
+def di_linear(x, mx, kx, zpx, wq, mw, kw, bias_q, out_bits):
+    """Dynamic integer-only linear layer (Eq. 2-8): accumulate + requant."""
+    p, m_in, k_in = di_linear_raw(x, mx, kx, zpx, wq, mw, kw, bias_q)
+    return requant_rows(p, m_in, k_in, out_bits)
+
+
+def bias_quantize(b):
+    """Offline: float bias -> i64 Q(BIAS_Q) fixed point."""
+    return jnp.floor(
+        jnp.asarray(b, jnp.float64) * (1 << BIAS_Q) + 0.5
+    ).astype(I64)
+
+
+# ---------------------------------------------------------------------------
+# DI-Exp (Alg. 1)
+# ---------------------------------------------------------------------------
+
+def di_exp(x, m, k):
+    """Shift-only exponential. x: i32 <= 0 values (post max-subtraction)
+    with scale m/2^k (per-row m, k broadcast over last dim).
+    Returns i32 'unshifted' exponential with conceptual scale s_f = 1/t
+    (the caller only ever uses ratios, so s_f cancels).
+    """
+    x = jnp.asarray(x, I64)
+    m = jnp.asarray(m, I64)[..., None]
+    k = jnp.asarray(k, I32)[..., None]
+    m_f = m + (m >> 1) - (m >> 4)  # ~ m * log2(e)
+    # t = round(-1 / s_f) with s_f = m_f / 2^k  ->  t = -round(2^k / m_f)
+    two_k = jnp.asarray(1, I64) << jnp.minimum(k, 62).astype(I32)
+    t = -jnp.maximum(rdiv(two_k, m_f), 1)
+    q = fdiv(x, t)  # >= 0 since x <= 0, t < 0
+    r = x - q * t  # in (t, 0]
+    unshifted = (r >> 1) - t  # ~ (1 - |r|/(2|t|)) * |t|
+    qc = jnp.minimum(q, 62)
+    return (unshifted >> qc.astype(I32)).astype(I32)
+
+
+# ---------------------------------------------------------------------------
+# DI-ClippedSoftmax (Alg. 2 + Eq. 10)
+# ---------------------------------------------------------------------------
+
+# clip constant c = 15 as dyadic 240/2^4 (paper Table 5 optimum).
+CLIP_M, CLIP_K = 240, 4
+
+
+def di_clipped_softmax(p, m1, k1, m2, k2, p_out, mask=None,
+                       clip=(CLIP_M, CLIP_K)):
+    """Softmax over raw i64 attention scores P (per-row scale m1*m2/2^(k1+k2)).
+
+    p: (T, S) int64; m1,k1 per-row (query token); m2,k2 scalar or
+    per-row (key-side shared scale, one per row's head).
+    mask: optional (T, S) bool, True = attend. Masked entries excluded
+    from the max and forced to probability 0.
+    Returns (y i32 in [0, 2^(p_out-1)], m_out=1, k_out=p_out-1).
+    """
+    p = jnp.asarray(p, I64)
+    m_in = (jnp.asarray(m1, I64) * jnp.asarray(m2, I64))
+    k_in = jnp.asarray(k1, I32) + jnp.asarray(k2, I32)
+    if mask is not None:
+        very_small = jnp.asarray(-(1 << 62), I64)
+        p = jnp.where(mask, p, very_small)
+    # max over valid entries
+    pmax = jnp.max(p, axis=-1)
+    # clipped floor (Eq. 10): p_min >= p_max - c^I with
+    # c^I = (cm << (k_in - ck)) / m_in  (clip constant in p-units)
+    cm, ck = clip
+    sh = jnp.clip(k_in - ck, 0, 56)
+    c_i = jnp.maximum(fdiv(jnp.asarray(cm, I64) << sh, m_in), 1)
+    floor_v = pmax - c_i
+    pc = jnp.maximum(p, floor_v[..., None])
+    rng = jnp.maximum(pmax - floor_v, 1)
+    qmax = jnp.asarray(255, I64)
+    # 8-bit row requant of the clipped window (scale = rng*m_in/(255*2^k_in))
+    x8 = rdiv((pc - floor_v[..., None]) * qmax, rng[..., None]).astype(I32)
+    num = qmax << jnp.minimum(k_in + 8, 56).astype(I32)
+    k8 = jnp.clip(ilog2(jnp.maximum(num // (rng * m_in), 1)).astype(I32), 0, K_MAX)
+    sh8 = k8 - k_in
+    prod = rng * m_in
+    m8 = jnp.where(sh8 >= 0, (prod << jnp.maximum(sh8, 0)) // qmax,
+                   (prod >> jnp.maximum(-sh8, 0)) // qmax)
+    m8 = jnp.clip(m8, 1, 255).astype(I32)
+    # exp of (x8 - 255) at scale m8/2^k8
+    e = di_exp(x8 - 255, m8, k8).astype(I64)
+    if mask is not None:
+        e = jnp.where(mask, e, 0)
+    denom = jnp.maximum(jnp.sum(e, axis=-1), 1)
+    pout_max = jnp.asarray(1, I64) << (p_out - 1)
+    y = rdiv(e * pout_max, denom[..., None]).astype(I32)
+    return y  # scale = 1 / 2^(p_out-1), zp = 0
+
+
+# ---------------------------------------------------------------------------
+# DI-Norm (Alg. 4) — RMSNorm and LayerNorm, gamma folded into next linear
+# ---------------------------------------------------------------------------
+
+NORM_FP_K = 16  # output fixed-point exponent before requant
+
+
+def di_norm(x, zpx, p_out, centered):
+    """Integer-only normalization of (T, N) i32 rows.
+
+    x quantized per-row; the row scale CANCELS in x/rms(x), so only the
+    centered integers matter. gamma/beta are folded into the following
+    linear (weights were pre-multiplied offline), making this pure
+    normalization: y = xc * sqrt(N) / sqrt(sum(xc^2))  [RMSNorm]
+    or the mean-subtracted variant [LayerNorm].
+    Output: DynQ at p_out bits (per-row dynamic requant of Q16 values).
+    """
+    xc = (x - zpx[..., None]).astype(I64)
+    n = x.shape[-1]
+    if centered:
+        mu = rdiv(jnp.sum(xc, axis=-1), jnp.asarray(n, I64))
+        xc = xc - mu[..., None]
+    var = jnp.sum(xc * xc, axis=-1)
+    std = jnp.maximum(isqrt(var), 1)  # = sqrt(sum xc^2)
+    dsq = isqrt(jnp.asarray(n, I64) << 20)  # sqrt(N) in Q10
+    # y_q16 = xc * sqrt(N) * 2^16 / std   (Q16 fixed point, |y| <~ 12)
+    num = xc * dsq * (jnp.asarray(1, I64) << 6)
+    y = fdiv(num, std[..., None])
+    t = x.shape[0]
+    m_in = jnp.ones((t,), I64)
+    k_in = jnp.full((t,), NORM_FP_K, I32)
+    return requant_rows(y, m_in, k_in, p_out)
+
+
+# ---------------------------------------------------------------------------
+# DI-SwiGLU (Alg. 3)
+# ---------------------------------------------------------------------------
+
+def di_swiglu(xg, mg, kg, zpg, xu, mu, ku, zpu, alpha_m, alpha_k,
+              p_sig, out_bits):
+    """Integer-only SwiGLU: y = gate * sigmoid(gate / alpha) * up.
+
+    xg/xu: (T, N) i32 quantized gate/up activations with per-row scales.
+    alpha_m/alpha_k: (N,) i32 per-channel dyadic act-smooth factors
+    (FSBR's s; sigma'(x) = sigma(x / s)). Pass ones/zeros for identity.
+    p_sig: sigmoid probability bits (8). Output requantized to out_bits.
+    """
+    gc = (xg - zpg[..., None]).astype(I64)
+    uc = (xu - zpu[..., None]).astype(I64)
+    # de-smooth the sigmoid argument: x / alpha = x * 2^alpha_k / alpha_m
+    xs = fdiv(gc << jnp.minimum(alpha_k, 24)[None, :].astype(I32),
+              jnp.asarray(alpha_m, I64)[None, :])
+    # Per-ELEMENT stable integer sigmoid:
+    #   sigma(x) = e^{min(x,0)} / (e^{min(x,0)} + e^{min(-x,0)})
+    # (both DI-Exp arguments <= 0). The paper's Alg. 3 subtracts the ROW
+    # max instead, which underflows both exponentials to 0 for rows with
+    # wide dynamic range — the per-element form is exact for any range.
+    # Documented as an Alg-3 fix in DESIGN.md.
+    zero = jnp.zeros_like(xs)
+    e_d = di_exp(jnp.minimum(xs, zero).astype(I32), mg, kg).astype(I64)
+    e_m = di_exp(jnp.minimum(-xs, zero).astype(I32), mg, kg).astype(I64)
+    psig_max = jnp.asarray(1, I64) << (p_sig - 1)
+    sig = rdiv(e_d * psig_max, jnp.maximum(e_d + e_m, 1))
+    y = gc * sig * uc  # scale = sg * su / 2^(p_sig-1)
+    m_in = mg.astype(I64) * mu.astype(I64)
+    k_in = kg + ku + (p_sig - 1)
+    return requant_rows(y, m_in, k_in, out_bits)
+
+
+# ---------------------------------------------------------------------------
+# integer residual add
+# ---------------------------------------------------------------------------
+
+def di_add(xa, ma, ka, zpa, xb, mb, kb, zpb, out_bits):
+    """Residual add of two DynQ tensors -> DynQ at out_bits.
+
+    Aligns both to the max exponent (capped shift 32) and requantizes.
+    """
+    ac = (xa - zpa[..., None]).astype(I64)
+    bc = (xb - zpb[..., None]).astype(I64)
+    kc = jnp.maximum(ka, kb)
+    sa = jnp.minimum(kc - ka, 32).astype(I32)
+    sb = jnp.minimum(kc - kb, 32).astype(I32)
+    y = (ac * (ma.astype(I64) << sa)[..., None]
+         + bc * (mb.astype(I64) << sb)[..., None])
+    m_in = jnp.ones_like(ma, I64)
+    return requant_rows(y, m_in, kc, out_bits)
+
+
+# ---------------------------------------------------------------------------
+# integer RoPE (precomputed Q14 tables — constants, no runtime FP)
+# ---------------------------------------------------------------------------
+
+ROPE_Q = 14
+
+
+def rope_tables(head_dim, max_seq, theta=10000.0):
+    """Offline: integer Q14 cos/sin tables, shape (max_seq, head_dim/2)."""
+    import numpy as np
+
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(half, dtype=np.float64) / half))
+    ang = np.arange(max_seq, dtype=np.float64)[:, None] * inv[None, :]
+    cos_q = np.floor(np.cos(ang) * (1 << ROPE_Q) + 0.5).astype(np.int32)
+    sin_q = np.floor(np.sin(ang) * (1 << ROPE_Q) + 0.5).astype(np.int32)
+    return cos_q, sin_q
+
+
+def di_rope(x, zpx, cos_q, sin_q):
+    """Apply integer RoPE to (T, H, D) centered-on-the-fly values.
+
+    x i32 quantized (per-row scales unchanged by rotation). cos_q/sin_q:
+    (T, D/2) Q14 tables for the row positions. Returns centered i32
+    values (zp removed), same scale as input.
+    """
+    xc = (x - zpx[:, None, None]).astype(I64)
+    d = x.shape[-1]
+    h = d // 2
+    x1, x2 = xc[..., :h], xc[..., h:]
+    c = cos_q[:, None, :].astype(I64)
+    s = sin_q[:, None, :].astype(I64)
+    half = jnp.asarray(1 << (ROPE_Q - 1), I64)
+    r1 = (x1 * c - x2 * s + half) >> ROPE_Q
+    r2 = (x1 * s + x2 * c + half) >> ROPE_Q
+    return jnp.concatenate([r1, r2], axis=-1).astype(I32)
+
+
+# ---------------------------------------------------------------------------
+# integer ReLU (OPT-style MLP)
+# ---------------------------------------------------------------------------
+
+def di_relu(x, zpx):
+    """ReLU on DynQ values: max(x, zp). Scale/zp unchanged."""
+    return jnp.maximum(x, zpx[..., None])

@@ -1,0 +1,61 @@
+"""Pallas kernel: DI-Exp (paper Alg. 1) — shift-only exponential.
+
+Element-wise VPU kernel: no transcendental unit, no multiply-heavy
+polynomial — the whole approximation is two shifts, one floor division by
+a per-row constant, and one subtraction. Grid over row tiles; each tile
+lives in VMEM with its per-row (m, k) scale scalars.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..intops import I32, I64, fdiv, rdiv
+
+DEFAULT_BLOCK_T = 128
+
+
+def _kernel(x_ref, m_ref, k_ref, o_ref):
+    x = x_ref[...].astype(I64)
+    m = m_ref[...].astype(I64)[:, None]
+    k = k_ref[...][:, None]
+    m_f = m + (m >> 1) - (m >> 4)
+    two_k = jnp.asarray(1, I64) << jnp.minimum(k, 62).astype(I32)
+    t = -jnp.maximum(rdiv(two_k, m_f), 1)
+    q = fdiv(x, t)
+    r = x - q * t
+    unshifted = (r >> 1) - t
+    o_ref[...] = (unshifted >> jnp.minimum(q, 62).astype(I32)).astype(I32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def di_exp(x, m, k, block_t=DEFAULT_BLOCK_T):
+    """x: (T, N) i32 (values <= 0, post max-subtraction), per-row m, k.
+
+    Bit-exact with intops.di_exp.
+    """
+    t, n = x.shape
+    bt = min(block_t, t)
+    t_pad = (t + bt - 1) // bt * bt
+    if t_pad != t:
+        pad = t_pad - t
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        m = jnp.pad(m, (0, pad), constant_values=1)
+        k = jnp.pad(k, (0, pad))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(t_pad // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, n), I32),
+        interpret=True,
+    )(x, m, k)
+    return out[:t]

@@ -1,0 +1,127 @@
+"""Pallas kernel: fused DI-MatMul (integer GEMM + dynamic requant epilogue).
+
+This is the paper's compute hot-spot (Eq. 2-8). The kernel fuses, per
+token-tile:
+
+  1. zero-point-centered i32 GEMM         P = (X - zp) @ Wq
+  2. per-channel mantissa fold            P *= mw[None, :]      (i64)
+  3. dynamic range reduction              pmax/pmin over the row
+  4. dyadic output-scale solve (Eq. 6-7)  k_y via MSB, m_y by shift
+  5. requantization (Eq. 8)               round-half-up to out_bits
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the GEMM runs on the MXU as
+an i8xi8->i32 contraction per (BT, K)x(K, N) tile held in VMEM; steps 2-5
+are VPU element-wise/reduction work fused into the same kernel so P never
+round-trips to HBM. Zero-point cross terms are avoided entirely by
+centering X in VMEM (weights are symmetric, zp_w = 0).
+
+interpret=True everywhere in this repo: CPU PJRT cannot execute Mosaic
+custom-calls; numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import intops
+from ..intops import ACT_K_MAX, I32, I64
+
+DEFAULT_BLOCK_T = 64
+
+
+def _requant_epilogue(p, m_in, k_in, qmax_i):
+    """Steps 3-5 on an in-VMEM (BT, N) i64 tile. Mirrors intops.requant_rows."""
+    qmax = jnp.asarray(qmax_i, I64)
+    pmax = jnp.maximum(jnp.max(p, axis=-1), 0)
+    pmin = jnp.minimum(jnp.min(p, axis=-1), 0)
+    rng = jnp.maximum(pmax - pmin, 1)
+    num = qmax << jnp.minimum(k_in + 8, 56).astype(I32)
+    k_y = jnp.clip(
+        intops.ilog2(jnp.maximum(num // (rng * m_in), 1)).astype(I32), 0,
+        ACT_K_MAX,
+    )
+    sh = k_y - k_in
+    prod = rng * m_in
+    m_y = jnp.where(
+        sh >= 0,
+        (prod << jnp.maximum(sh, 0)) // qmax,
+        (prod >> jnp.maximum(-sh, 0)) // qmax,
+    )
+    m_y = jnp.clip(m_y, 1, 255).astype(I32)
+    zp = intops.rdiv(-pmin * qmax, rng).astype(I32)
+    vals = intops.rdiv((p - pmin[..., None]) * qmax, rng[..., None]).astype(I32)
+    return vals, m_y, k_y, zp
+
+
+def _kernel(x_ref, mx_ref, kx_ref, zpx_ref, w_ref, mw_ref,
+            y_ref, my_ref, ky_ref, zpy_ref, *, out_bits):
+    xc = x_ref[...] - zpx_ref[...][:, None]
+    p = jnp.matmul(xc, w_ref[...], preferred_element_type=I32).astype(I64)
+    p = p * mw_ref[...][None, :].astype(I64)
+    m_in = mx_ref[...].astype(I64)
+    k_in = kx_ref[...] + jnp.asarray(0, I32)  # kw folded by caller
+    vals, m_y, k_y, zp = _requant_epilogue(p, m_in, k_in, (1 << out_bits) - 1)
+    y_ref[...] = vals
+    my_ref[...] = m_y
+    ky_ref[...] = k_y
+    zpy_ref[...] = zp
+
+
+@functools.partial(jax.jit, static_argnames=("out_bits", "block_t"))
+def di_matmul(x, mx, kx, zpx, wq, mw, kw, out_bits=8,
+              block_t=DEFAULT_BLOCK_T):
+    """Fused dynamic integer-only linear: returns (vals, m, k, zp).
+
+    x (T, K) i32, per-row (mx, kx, zpx); wq (K, N) i32 symmetric weights
+    with per-channel mantissas mw (N,) at common exponent kw (python int
+    or traced scalar folded into kx here).
+    Bit-exact with intops.di_linear(..., bias_i=None).
+    """
+    t, _ = x.shape
+    n = wq.shape[1]
+    bt = min(block_t, t)
+    # pad T to a multiple of bt (extra rows quantize independently; sliced off)
+    t_pad = (t + bt - 1) // bt * bt
+    if t_pad != t:
+        pad = t_pad - t
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        mx = jnp.pad(mx, (0, pad), constant_values=1)
+        kx = jnp.pad(kx, (0, pad))
+        zpx = jnp.pad(zpx, (0, pad))
+    kx_eff = kx + jnp.asarray(kw, I32)
+
+    grid = (t_pad // bt,)
+    kernel = functools.partial(_kernel, out_bits=out_bits)
+    out_shapes = (
+        jax.ShapeDtypeStruct((t_pad, n), I32),
+        jax.ShapeDtypeStruct((t_pad,), I32),
+        jax.ShapeDtypeStruct((t_pad,), I32),
+        jax.ShapeDtypeStruct((t_pad,), I32),
+    )
+    row = lambda i: (i, 0)
+    vec = lambda i: (i,)
+    vals, m_y, k_y, zp = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, x.shape[1]), row),
+            pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((wq.shape[0], n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bt, n), row),
+            pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt,), vec),
+        ),
+        out_shape=out_shapes,
+        interpret=True,
+    )(x, mx, kx_eff, zpx, wq, mw)
+    return vals[:t], m_y[:t], k_y[:t], zp[:t]

@@ -1,0 +1,87 @@
+"""Pallas kernel: DI-Norm (paper Alg. 4) — integer RMSNorm / LayerNorm.
+
+Row-wise kernel: center (LayerNorm only), i64 sum-of-squares, bit-wise
+I-SQRT (the paper's non-restoring square root — consistent between
+calibration and inference, unlike I-BERT's Newton iterations), Q16
+normalize, then the standard dynamic requant epilogue.
+
+gamma/beta are folded into the following linear offline (FSBR's serial
+norm-linear smoothing already rewrites them), so the kernel is pure
+normalization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import intops
+from ..intops import I32, I64, NORM_FP_K, fdiv, rdiv
+
+DEFAULT_BLOCK_T = 64
+
+
+def _kernel(x_ref, zp_ref, y_ref, my_ref, ky_ref, zpy_ref, *,
+            centered, p_out):
+    x = x_ref[...]
+    zp = zp_ref[...]
+    xc = (x - zp[:, None]).astype(I64)
+    n = x.shape[-1]
+    if centered:
+        mu = rdiv(jnp.sum(xc, axis=-1), jnp.asarray(n, I64))
+        xc = xc - mu[:, None]
+    var = jnp.sum(xc * xc, axis=-1)
+    std = jnp.maximum(intops.isqrt(var), 1)
+    dsq = intops.isqrt(jnp.asarray(n, I64) << 20)
+    num = xc * dsq * (jnp.asarray(1, I64) << 6)
+    y = fdiv(num, std[:, None])
+    bt = x.shape[0]
+    m_in = jnp.ones((bt,), I64)
+    k_in = jnp.full((bt,), NORM_FP_K, I32)
+    vals, m_y, k_y, zpy = intops.requant_rows(y, m_in, k_in, p_out)
+    y_ref[...] = vals
+    my_ref[...] = m_y
+    ky_ref[...] = k_y
+    zpy_ref[...] = zpy
+
+
+@functools.partial(jax.jit, static_argnames=("centered", "p_out", "block_t"))
+def di_norm(x, zpx, centered=False, p_out=8, block_t=DEFAULT_BLOCK_T):
+    """x: (T, N) i32 DynQ values, per-row zp (scale cancels in x/rms).
+
+    centered=True -> LayerNorm, False -> RMSNorm.
+    Bit-exact with intops.di_norm.
+    """
+    t, n = x.shape
+    bt = min(block_t, t)
+    t_pad = (t + bt - 1) // bt * bt
+    if t_pad != t:
+        pad = t_pad - t
+        x = jnp.pad(x, ((0, pad), (0, 0)), constant_values=1)
+        zpx = jnp.pad(zpx, (0, pad))
+    kernel = functools.partial(_kernel, centered=centered, p_out=p_out)
+    vals, m_y, k_y, zp = pl.pallas_call(
+        kernel,
+        grid=(t_pad // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((t_pad, n), I32),
+            jax.ShapeDtypeStruct((t_pad,), I32),
+            jax.ShapeDtypeStruct((t_pad,), I32),
+            jax.ShapeDtypeStruct((t_pad,), I32),
+        ),
+        interpret=True,
+    )(x, zpx)
+    return vals[:t], m_y[:t], k_y[:t], zp[:t]

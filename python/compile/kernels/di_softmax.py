@@ -1,0 +1,92 @@
+"""Pallas kernel: DI-ClippedSoftmax (paper Alg. 2 + Eq. 10).
+
+Row-wise kernel over raw i64 attention scores. Fuses, per row tile:
+max-reduce -> clipped floor (Eq. 10, c = cm/2^ck) -> 8-bit window requant
+(Eq. 6-8 on the clipped range) -> DI-Exp -> integer normalize (IntDiv).
+
+The clip bounds the quantization window to c regardless of the score
+dynamic range, which is what lets an 8-bit softmax input survive the
+long-tailed score distributions of LLMs (paper Table 5: c = 15).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import intops
+from ..intops import CLIP_K, CLIP_M, I32, I64, K_MAX, rdiv
+
+DEFAULT_BLOCK_T = 64
+
+
+def _kernel(p_ref, m1_ref, k1_ref, mask_ref, o_ref, *, m2, k2, p_out, cm, ck):
+    p = p_ref[...].astype(I64)
+    mask = mask_ref[...] != 0
+    m_in = m1_ref[...].astype(I64) * jnp.asarray(m2, I64)
+    k_in = k1_ref[...] + jnp.asarray(k2, I32)
+    p = jnp.where(mask, p, jnp.asarray(-(1 << 62), I64))
+    pmax = jnp.max(p, axis=-1)
+    sh = jnp.clip(k_in - ck, 0, 56)
+    c_i = jnp.maximum((jnp.asarray(cm, I64) << sh) // m_in, 1)
+    floor_v = pmax - c_i
+    pc = jnp.maximum(p, floor_v[:, None])
+    rng = jnp.maximum(pmax - floor_v, 1)
+    qmax = jnp.asarray(255, I64)
+    x8 = rdiv((pc - floor_v[:, None]) * qmax, rng[:, None]).astype(I32)
+    num = qmax << jnp.minimum(k_in + 8, 56).astype(I32)
+    k8 = jnp.clip(
+        intops.ilog2(jnp.maximum(num // (rng * m_in), 1)).astype(I32), 0, K_MAX
+    )
+    sh8 = k8 - k_in
+    prod = rng * m_in
+    m8 = jnp.where(sh8 >= 0, (prod << jnp.maximum(sh8, 0)) // qmax,
+                   (prod >> jnp.maximum(-sh8, 0)) // qmax)
+    m8 = jnp.clip(m8, 1, 255).astype(I32)
+    e = intops.di_exp(x8 - 255, m8, k8).astype(I64)
+    e = jnp.where(mask, e, 0)
+    denom = jnp.maximum(jnp.sum(e, axis=-1), 1)
+    pout_max = jnp.asarray(1, I64) << (p_out - 1)
+    o_ref[...] = rdiv(e * pout_max, denom[:, None]).astype(I32)
+
+
+@functools.partial(jax.jit, static_argnames=("m2", "k2", "p_out", "clip",
+                                             "block_t"))
+def di_clipped_softmax(p, m1, k1, mask, m2, k2, p_out=8,
+                       clip=(CLIP_M, CLIP_K), block_t=DEFAULT_BLOCK_T):
+    """p: (T, S) i64 scores, per-row (m1, k1); key-side scalars (m2, k2).
+
+    mask: (T, S) i32/bool, nonzero = attend. Bit-exact with
+    intops.di_clipped_softmax.
+    """
+    t, s = p.shape
+    bt = min(block_t, t)
+    t_pad = (t + bt - 1) // bt * bt
+    mask = mask.astype(I32)
+    if t_pad != t:
+        pad = t_pad - t
+        p = jnp.pad(p, ((0, pad), (0, 0)))
+        m1 = jnp.pad(m1, (0, pad), constant_values=1)
+        k1 = jnp.pad(k1, (0, pad))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)), constant_values=1)
+    cm, ck = clip
+    kernel = functools.partial(
+        _kernel, m2=int(m2), k2=int(k2), p_out=p_out, cm=cm, ck=ck
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(t_pad // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, s), I32),
+        interpret=True,
+    )(p, m1, k1, mask)
+    return out[:t]

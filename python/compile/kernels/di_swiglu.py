@@ -1,0 +1,90 @@
+"""Pallas kernel: DI-SwiGLU (paper Alg. 3).
+
+Fuses the FSBR-decomposed gated unit: per-channel de-smooth of the sigmoid
+argument (x / alpha via dyadic shift-divide), integer sigmoid built from
+two DI-Exp evaluations (sigma(x) = e^{x-M} / (e^{x-M} + e^{-M})), the
+three-way product gate * sigma * up, and the dynamic requant epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import intops
+from ..intops import I32, I64, fdiv, rdiv
+
+DEFAULT_BLOCK_T = 64
+
+
+def _kernel(xg_ref, mg_ref, kg_ref, zpg_ref,
+            xu_ref, mu_ref, ku_ref, zpu_ref,
+            am_ref, ak_ref,
+            y_ref, my_ref, ky_ref, zpy_ref, *, p_sig, out_bits):
+    gc = (xg_ref[...] - zpg_ref[...][:, None]).astype(I64)
+    uc = (xu_ref[...] - zpu_ref[...][:, None]).astype(I64)
+    ak = jnp.minimum(ak_ref[...], 24)[None, :].astype(I32)
+    xs = fdiv(gc << ak, am_ref[...].astype(I64)[None, :])
+    mg = mg_ref[...]
+    kg = kg_ref[...]
+    # per-element stable integer sigmoid (see intops.di_swiglu)
+    zero = jnp.zeros_like(xs)
+    e_d = intops.di_exp(jnp.minimum(xs, zero).astype(I32), mg, kg).astype(I64)
+    e_m = intops.di_exp(jnp.minimum(-xs, zero).astype(I32), mg, kg).astype(I64)
+    psig_max = jnp.asarray(1, I64) << (p_sig - 1)
+    sig = rdiv(e_d * psig_max, jnp.maximum(e_d + e_m, 1))
+    y = gc * sig * uc
+    m_in = mg.astype(I64) * mu_ref[...].astype(I64)
+    k_in = kg + ku_ref[...] + (p_sig - 1)
+    vals, m_y, k_y, zp = intops.requant_rows(y, m_in, k_in, out_bits)
+    y_ref[...] = vals
+    my_ref[...] = m_y
+    ky_ref[...] = k_y
+    zpy_ref[...] = zp
+
+
+@functools.partial(jax.jit, static_argnames=("p_sig", "out_bits", "block_t"))
+def di_swiglu(xg, mg, kg, zpg, xu, mu, ku, zpu, alpha_m, alpha_k,
+              p_sig=8, out_bits=8, block_t=DEFAULT_BLOCK_T):
+    """Bit-exact with intops.di_swiglu. Shapes: (T, N) + per-row scales +
+    per-channel (alpha_m, alpha_k)."""
+    t, n = xg.shape
+    bt = min(block_t, t)
+    t_pad = (t + bt - 1) // bt * bt
+    if t_pad != t:
+        pad = t_pad - t
+        pv = lambda a, c=0: jnp.pad(a, (0, pad), constant_values=c)
+        xg = jnp.pad(xg, ((0, pad), (0, 0)))
+        xu = jnp.pad(xu, ((0, pad), (0, 0)))
+        mg, kg, zpg = pv(mg, 1), pv(kg), pv(zpg)
+        mu, ku, zpu = pv(mu, 1), pv(ku), pv(zpu)
+    kernel = functools.partial(_kernel, p_sig=p_sig, out_bits=out_bits)
+    row = lambda i: (i, 0)
+    vec = lambda i: (i,)
+    chan = lambda i: (0,)
+    vals, m_y, k_y, zp = pl.pallas_call(
+        kernel,
+        grid=(t_pad // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), row), pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt,), vec), pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt, n), row), pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt,), vec), pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((n,), chan), pl.BlockSpec((n,), chan),
+        ],
+        out_specs=(
+            pl.BlockSpec((bt, n), row), pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt,), vec), pl.BlockSpec((bt,), vec),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((t_pad, n), I32),
+            jax.ShapeDtypeStruct((t_pad,), I32),
+            jax.ShapeDtypeStruct((t_pad,), I32),
+            jax.ShapeDtypeStruct((t_pad,), I32),
+        ),
+        interpret=True,
+    )(xg, mg, kg, zpg, xu, mu, ku, zpu, alpha_m, alpha_k)
+    return vals[:t], m_y[:t], k_y[:t], zp[:t]

@@ -1,0 +1,78 @@
+"""Pure-jnp float oracles for the integer-only kernels.
+
+Every DI-* operator approximates a float computation; these are the float
+computations. pytest checks (a) pallas kernel == intops spec bit-exactly,
+and (b) intops spec ~= these oracles within the paper's error bounds
+(e.g. DI-ClippedSoftmax max error <= c/(2^8-1) ~ 0.059 per element).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def softmax(x, mask=None):
+    x = jnp.asarray(x, jnp.float64)
+    if mask is not None:
+        x = jnp.where(mask, x, -jnp.inf)
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def rmsnorm(x, eps=0.0):
+    x = jnp.asarray(x, jnp.float64)
+    return x / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def layernorm(x, eps=0.0):
+    x = jnp.asarray(x, jnp.float64)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    return xc / jnp.sqrt(jnp.mean(xc * xc, axis=-1, keepdims=True) + eps)
+
+
+def silu(x):
+    x = jnp.asarray(x, jnp.float64)
+    return x / (1.0 + jnp.exp(-x))
+
+
+def swiglu(gate, up, alpha=None):
+    """gate * sigmoid(gate / alpha) * up — FSBR's decomposed SiLU.
+
+    alpha: per-channel smoothing factor (None = plain SiLU(gate)*up).
+    """
+    gate = jnp.asarray(gate, jnp.float64)
+    up = jnp.asarray(up, jnp.float64)
+    arg = gate if alpha is None else gate / alpha
+    return gate * (1.0 / (1.0 + jnp.exp(-arg))) * up
+
+
+def linear(x, w, b=None):
+    y = jnp.matmul(jnp.asarray(x, jnp.float64), jnp.asarray(w, jnp.float64))
+    if b is not None:
+        y = y + b
+    return y
+
+
+def dequant(vals, m, k, zp):
+    """DynQ -> float, per-row dyadic scales."""
+    s = m.astype(jnp.float64) / jnp.exp2(k.astype(jnp.float64))
+    return (vals.astype(jnp.float64) - zp[..., None]) * s[..., None]
+
+
+def rope(x, theta=10000.0, pos0=0):
+    """Float RoPE on (T, H, D), half-split layout (matches di_rope)."""
+    import numpy as np
+
+    t, _, d = x.shape
+    half = d // 2
+    inv = 1.0 / (theta ** (np.arange(half, dtype=np.float64) / half))
+    ang = (np.arange(t, dtype=np.float64) + pos0)[:, None] * inv[None, :]
+    c = jnp.asarray(np.cos(ang))[:, None, :]
+    s = jnp.asarray(np.sin(ang))[:, None, :]
+    x = jnp.asarray(x, jnp.float64)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)

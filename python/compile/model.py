@@ -1,0 +1,481 @@
+"""L2: the paper's model layer — FP reference transformer + integer-only
+transformer, both in JAX, both AOT-lowered to HLO for the rust runtime.
+
+Two architectures (matching the paper's evaluation families):
+  * "llama": pre-RMSNorm, RoPE attention, SwiGLU MLP, no biases
+  * "opt":   pre-LayerNorm, learned position embeddings, ReLU MLP, biases
+
+The integer model is built exclusively from `intops` (the DI-* operator
+spec) — its computational graph is integer-only end to end; the single
+float op is the final logits dequantization at the model boundary.
+
+Weights enter the integer model ALREADY quantized and FSBR-folded (the
+rust L3 quantizer produces them); this module defines the parameter
+ordering contract (`int_param_spec` / `fp_param_spec`) that the rust
+runtime uses to feed PJRT executables.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import intops
+from .intops import I32, I64
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch: str  # "llama" | "opt"
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    name: str = "tinyllama_s"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self):
+        return {
+            "arch": self.arch, "vocab": self.vocab, "d_model": self.d_model,
+            "n_layers": self.n_layers, "n_heads": self.n_heads,
+            "d_ff": self.d_ff, "max_seq": self.max_seq,
+            "rope_theta": self.rope_theta, "norm_eps": self.norm_eps,
+            "name": self.name,
+        }
+
+    @staticmethod
+    def from_dict(d):
+        return ModelConfig(**d)
+
+
+@dataclass(frozen=True)
+class QuantScheme:
+    """Quantization configuration (paper notation WxAy)."""
+    w_bits: int = 8
+    a_bits: int = 8
+    softmax_bits: int = 8  # p_out of DI-ClippedSoftmax (paper: 8)
+    sig_bits: int = 8      # p_sig of DI-SwiGLU
+    clip: tuple = (intops.CLIP_M, intops.CLIP_K)  # DI-ClippedSoftmax c
+
+    @property
+    def tag(self) -> str:
+        return f"w{self.w_bits}a{self.a_bits}"
+
+
+PRESETS = {
+    # LLaMA family stand-ins (paper: 7B/13B/30B -> S/M/L)
+    "tinyllama_s": ModelConfig("llama", d_model=128, n_layers=4, n_heads=4,
+                               d_ff=256, name="tinyllama_s"),
+    "tinyllama_m": ModelConfig("llama", d_model=192, n_layers=6, n_heads=6,
+                               d_ff=384, name="tinyllama_m"),
+    "tinyllama_l": ModelConfig("llama", d_model=256, n_layers=8, n_heads=8,
+                               d_ff=512, name="tinyllama_l"),
+    # OPT family stand-ins (paper: 6.7B/13B/30B -> S/M)
+    "tinyopt_s": ModelConfig("opt", d_model=128, n_layers=4, n_heads=4,
+                             d_ff=512, name="tinyopt_s"),
+    "tinyopt_m": ModelConfig("opt", d_model=192, n_layers=6, n_heads=6,
+                             d_ff=768, name="tinyopt_m"),
+}
+
+
+# ---------------------------------------------------------------------------
+# FP parameters
+# ---------------------------------------------------------------------------
+
+def _linears(cfg: ModelConfig, i: int) -> list:
+    base = [f"layers.{i}.attn.wq", f"layers.{i}.attn.wk",
+            f"layers.{i}.attn.wv", f"layers.{i}.attn.wo"]
+    if cfg.arch == "llama":
+        base += [f"layers.{i}.mlp.wg", f"layers.{i}.mlp.wu",
+                 f"layers.{i}.mlp.wd"]
+    else:
+        base += [f"layers.{i}.mlp.w1", f"layers.{i}.mlp.w2"]
+    return base
+
+
+def _linear_shape(cfg: ModelConfig, name: str):
+    d, f = cfg.d_model, cfg.d_ff
+    kind = name.rsplit(".", 1)[1]
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "wg": (d, f), "wu": (d, f), "wd": (f, d),
+        "w1": (d, f), "w2": (f, d),
+    }[kind]
+
+
+def fp_param_spec(cfg: ModelConfig) -> list:
+    """Ordered (name, shape) list — the FP weights contract."""
+    spec = [("embed", (cfg.vocab, cfg.d_model))]
+    if cfg.arch == "opt":
+        spec.append(("pos_embed", (cfg.max_seq, cfg.d_model)))
+    for i in range(cfg.n_layers):
+        for ln in _linears(cfg, i):
+            spec.append((ln, _linear_shape(cfg, ln)))
+            if cfg.arch == "opt":
+                spec.append((ln + ".b", (_linear_shape(cfg, ln)[1],)))
+        spec.append((f"layers.{i}.norm1.g", (cfg.d_model,)))
+        spec.append((f"layers.{i}.norm2.g", (cfg.d_model,)))
+        if cfg.arch == "opt":
+            spec.append((f"layers.{i}.norm1.b", (cfg.d_model,)))
+            spec.append((f"layers.{i}.norm2.b", (cfg.d_model,)))
+    spec.append(("final_norm.g", (cfg.d_model,)))
+    if cfg.arch == "opt":
+        spec.append(("final_norm.b", (cfg.d_model,)))
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in fp_param_spec(cfg):
+        if name.endswith(".g"):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith(".b"):
+            params[name] = np.zeros(shape, np.float32)
+        elif name in ("embed", "pos_embed"):
+            params[name] = rng.normal(0, 0.02, shape).astype(np.float32)
+        else:
+            fan_in = shape[0]
+            std = (2.0 / (fan_in + shape[1])) ** 0.5
+            params[name] = rng.normal(0, std, shape).astype(np.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# FP forward (f32) — the reference the paper quantizes
+# ---------------------------------------------------------------------------
+
+def _fp_norm(x, g, b, eps, centered):
+    if centered:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        x = x - mu
+    v = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x / jnp.sqrt(v + eps) * g
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _fp_rope(x, cfg: ModelConfig, pos0=0):
+    t, _, d = x.shape
+    half = d // 2
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(half, dtype=np.float64) / half))
+    ang = (np.arange(t, dtype=np.float64) + pos0)[:, None] * inv[None, :]
+    c = jnp.asarray(np.cos(ang), F32)[:, None, :]
+    s = jnp.asarray(np.sin(ang), F32)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def fp_forward(cfg: ModelConfig, params: dict, tokens):
+    """tokens (T,) i32 -> logits (T, V) f32. Causal, single sequence."""
+    t = tokens.shape[0]
+    x = jnp.asarray(params["embed"], F32)[tokens]
+    if cfg.arch == "opt":
+        x = x + jnp.asarray(params["pos_embed"], F32)[:t]
+    h_dim, n_h = cfg.head_dim, cfg.n_heads
+    mask = np.tril(np.ones((t, t), bool))
+    centered = cfg.arch == "opt"
+    for i in range(cfg.n_layers):
+        p = lambda s: jnp.asarray(params[f"layers.{i}.{s}"], F32)
+        pb = (lambda s: jnp.asarray(params[f"layers.{i}.{s}"], F32)
+              if cfg.arch == "opt" else None)
+        pbx = lambda s: (jnp.asarray(params[f"layers.{i}.{s}"], F32)
+                         if cfg.arch == "opt" else None)
+        h = _fp_norm(x, p("norm1.g"), pbx("norm1.b"), cfg.norm_eps, centered)
+        q = h @ p("attn.wq")
+        k = h @ p("attn.wk")
+        v = h @ p("attn.wv")
+        if cfg.arch == "opt":
+            q = q + p("attn.wq.b")
+            k = k + p("attn.wk.b")
+            v = v + p("attn.wv.b")
+        q = q.reshape(t, n_h, h_dim)
+        k = k.reshape(t, n_h, h_dim)
+        v = v.reshape(t, n_h, h_dim)
+        if cfg.arch == "llama":
+            q, k = _fp_rope(q, cfg), _fp_rope(k, cfg)
+        scores = jnp.einsum("thd,shd->hts", q, k)
+        scores = jnp.where(mask[None], scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("hts,shd->thd", probs, v).reshape(t, cfg.d_model)
+        o = o @ p("attn.wo")
+        if cfg.arch == "opt":
+            o = o + p("attn.wo.b")
+        x = x + o
+        h = _fp_norm(x, p("norm2.g"), pbx("norm2.b"), cfg.norm_eps, centered)
+        if cfg.arch == "llama":
+            gate = h @ p("mlp.wg")
+            up = h @ p("mlp.wu")
+            act = gate * jax.nn.sigmoid(gate) * up
+            y = act @ p("mlp.wd")
+        else:
+            a = jax.nn.relu(h @ p("mlp.w1") + p("mlp.w1.b"))
+            y = a @ p("mlp.w2") + p("mlp.w2.b")
+        x = x + y
+    fb = (jnp.asarray(params["final_norm.b"], F32)
+          if cfg.arch == "opt" else None)
+    x = _fp_norm(x, jnp.asarray(params["final_norm.g"], F32), fb,
+                 cfg.norm_eps, centered)
+    return x @ jnp.asarray(params["embed"], F32).T
+
+
+# ---------------------------------------------------------------------------
+# integer-only parameters contract
+# ---------------------------------------------------------------------------
+
+def int_param_spec(cfg: ModelConfig) -> list:
+    """Ordered (name, shape, dtype) — the quantized-weights contract fed
+    to the AOT int_forward executable by the rust runtime. Weight scales
+    per output channel at one common exponent; norm gammas are folded
+    into the following linear offline (see rust calib::fold)."""
+    d, v, s = cfg.d_model, cfg.vocab, cfg.max_seq
+    spec = [
+        ("embed.vals", (v, d), "i32"), ("embed.m", (v,), "i32"),
+        ("embed.k", (v,), "i32"), ("embed.zp", (v,), "i32"),
+    ]
+    if cfg.arch == "opt":
+        spec += [
+            ("pos_embed.vals", (s, d), "i32"), ("pos_embed.m", (s,), "i32"),
+            ("pos_embed.k", (s,), "i32"), ("pos_embed.zp", (s,), "i32"),
+        ]
+    if cfg.arch == "llama":
+        half = cfg.head_dim // 2
+        spec += [("rope.cos", (s, half), "i32"),
+                 ("rope.sin", (s, half), "i32")]
+    for i in range(cfg.n_layers):
+        for ln in _linears(cfg, i):
+            kk, nn = _linear_shape(cfg, ln)
+            spec += [(ln + ".wq", (kk, nn), "i32"),
+                     (ln + ".mw", (nn,), "i32"),
+                     (ln + ".kw", (1,), "i32")]
+            if cfg.arch == "opt":
+                spec.append((ln + ".bq", (nn,), "i64"))
+        if cfg.arch == "llama":
+            spec += [(f"layers.{i}.alpha_m", (cfg.d_ff,), "i32"),
+                     (f"layers.{i}.alpha_k", (cfg.d_ff,), "i32")]
+    spec += [("lm_head.wq", (d, v), "i32"), ("lm_head.mw", (v,), "i32"),
+             ("lm_head.kw", (1,), "i32")]
+    if cfg.arch == "opt":
+        spec.append(("lm_head.bq", (v,), "i64"))
+    return spec
+
+
+def int_params_from_fp(cfg: ModelConfig, params: dict,
+                       scheme: QuantScheme, alpha=None) -> dict:
+    """Python-side quantization (for tests & goldens; rust L3 has its own).
+
+    Folds norm gammas (and betas, for opt) into the following linears,
+    quantizes weights per-channel symmetric to w_bits, embedding and
+    positional tables per-row asymmetric 8-bit.
+    alpha: optional per-layer (d_ff,) act-smooth factors (FSBR); the gate
+    weight columns are multiplied by alpha and alpha is handed to
+    DI-SwiGLU as the dyadic de-smoothing constant.
+    """
+    out = {}
+    ev, em, ek, ezp = intops.quantize_f32(jnp.asarray(params["embed"]), 8)
+    out.update({"embed.vals": ev, "embed.m": em, "embed.k": ek,
+                "embed.zp": ezp})
+    if cfg.arch == "opt":
+        pv, pm, pk, pzp = intops.quantize_f32(
+            jnp.asarray(params["pos_embed"]), 8)
+        out.update({"pos_embed.vals": pv, "pos_embed.m": pm,
+                    "pos_embed.k": pk, "pos_embed.zp": pzp})
+    if cfg.arch == "llama":
+        cos_q, sin_q = intops.rope_tables(cfg.head_dim, cfg.max_seq,
+                                          cfg.rope_theta)
+        out["rope.cos"] = jnp.asarray(cos_q)
+        out["rope.sin"] = jnp.asarray(sin_q)
+
+    def quant_linear(prefix, w, b=None):
+        qmax = (1 << (scheme.w_bits - 1)) - 1
+        sc = np.maximum(np.abs(np.asarray(w)).max(axis=0), 1e-8) / qmax
+        mw, kw = intops.align_channel_scales(jnp.asarray(sc))
+        s_d = np.asarray(mw, np.float64) / np.exp2(float(kw))
+        wq = jnp.clip(
+            jnp.floor(jnp.asarray(w, jnp.float64) / s_d[None, :] + 0.5),
+            -qmax, qmax).astype(I32)
+        out[prefix + ".wq"] = wq
+        out[prefix + ".mw"] = mw
+        out[prefix + ".kw"] = jnp.asarray(kw, I32).reshape((1,))
+        if cfg.arch == "opt":
+            bb = b if b is not None else np.zeros(w.shape[1], np.float64)
+            out[prefix + ".bq"] = intops.bias_quantize(jnp.asarray(bb))
+
+    for i in range(cfg.n_layers):
+        g1 = np.asarray(params[f"layers.{i}.norm1.g"], np.float64)
+        g2 = np.asarray(params[f"layers.{i}.norm2.g"], np.float64)
+        for ln in _linears(cfg, i):
+            w = np.asarray(params[ln], np.float64).copy()
+            kind = ln.rsplit(".", 1)[1]
+            b = params.get(ln + ".b")
+            b = None if b is None else np.asarray(b, np.float64).copy()
+            # fold norm gamma (and beta for opt) into the linear:
+            #   (norm(x)*g + beta) @ W + b = norm(x) @ (g[:,None]*W)
+            #                                + (b + beta @ W)
+            if kind in ("wq", "wk", "wv"):
+                if cfg.arch == "opt" and b is not None:
+                    beta = np.asarray(params[f"layers.{i}.norm1.b"],
+                                      np.float64)
+                    b = b + beta @ w
+                w = w * g1[:, None]
+            if kind in ("wg", "wu", "w1"):
+                if cfg.arch == "opt" and b is not None and kind == "w1":
+                    beta = np.asarray(params[f"layers.{i}.norm2.b"],
+                                      np.float64)
+                    b = b + beta @ w
+                w = w * g2[:, None]
+            if kind == "wg" and alpha is not None:
+                w = w * np.asarray(alpha[i], np.float64)[None, :]
+            quant_linear(ln, w, b)
+        if cfg.arch == "llama":
+            a = (np.ones(cfg.d_ff, np.float64) if alpha is None
+                 else np.asarray(alpha[i], np.float64))
+            am, ak = intops.dyadic_from_float(jnp.asarray(a))
+            out[f"layers.{i}.alpha_m"] = am
+            out[f"layers.{i}.alpha_k"] = ak
+    gf = np.asarray(params["final_norm.g"], np.float64)
+    emb_t = np.asarray(params["embed"], np.float64).T
+    lm_w = emb_t * gf[:, None]
+    if cfg.arch == "opt":
+        # final-norm beta folds into a logits bias
+        lm_b = np.asarray(params["final_norm.b"], np.float64) @ emb_t
+    else:
+        lm_b = None
+    quant_linear("lm_head", lm_w, lm_b)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# integer-only forward
+# ---------------------------------------------------------------------------
+
+def _heads_merge_requant(o3, vm, vk, p_bits, a_bits):
+    """Merge per-head raw PV products into per-token DynQ rows.
+
+    o3: (H, T, hd) i64 with per-head scale vm[h]/2^(vk[h]+p-1).
+    Aligns heads to a common exponent then requantizes per token.
+    """
+    h, t, hd = o3.shape
+    kcom = jnp.max(vk)
+    sh = jnp.minimum(kcom - vk, 32).astype(I32)
+    aligned = o3 * (vm.astype(I64) << sh)[:, None, None]
+    y = jnp.transpose(aligned, (1, 0, 2)).reshape(t, h * hd)
+    m_in = jnp.ones((t,), I64)
+    k_in = jnp.zeros((t,), I32) + kcom + (p_bits - 1)
+    return intops.requant_rows(y, m_in, k_in, a_bits)
+
+
+def int_forward(cfg: ModelConfig, qp: dict, tokens,
+                scheme: QuantScheme = QuantScheme()):
+    """tokens (T,) i32 -> logits (T, V) f32 via integer-only ops.
+
+    The graph is integer-only except the final dequantization multiply.
+    Mirrored by rust int_model::IntModel::forward_full.
+    """
+    t = int(tokens.shape[0])
+    a_bits = scheme.a_bits
+    nl_bits = 8  # non-linear operator activations stay 8-bit (paper §4)
+    # embedding gather: per-row quantized table -> per-token DynQ
+    x = qp["embed.vals"][tokens]
+    xm = qp["embed.m"][tokens]
+    xk = qp["embed.k"][tokens]
+    xzp = qp["embed.zp"][tokens]
+    if cfg.arch == "opt":
+        x, xm, xk, xzp = intops.di_add(
+            x, xm, xk, xzp,
+            qp["pos_embed.vals"][:t], qp["pos_embed.m"][:t],
+            qp["pos_embed.k"][:t], qp["pos_embed.zp"][:t], nl_bits)
+    mask = jnp.asarray(np.tril(np.ones((t, t), bool)))
+    n_h, hd = cfg.n_heads, cfg.head_dim
+    centered = cfg.arch == "opt"
+
+    for i in range(cfg.n_layers):
+        g = lambda s: qp[f"layers.{i}.{s}"]
+        # ---- attention ----
+        h, hm, hk, hzp = intops.di_norm(x, xzp, a_bits, centered)
+
+        def lin(ln, hh=h, hhm=hm, hhk=hk, hhzp=hzp, bits=a_bits, li=i):
+            pre = f"layers.{li}.{ln}"
+            bq = qp.get(pre + ".bq") if cfg.arch == "opt" else None
+            return intops.di_linear(hh, hhm, hhk, hhzp, qp[pre + ".wq"],
+                                    qp[pre + ".mw"], qp[pre + ".kw"],
+                                    bq, bits)
+
+        qv, qm, qk, qzp = lin("attn.wq")
+        kv, km, kk, kzp = lin("attn.wk")
+        vv, vm_, vk_, vzp = lin("attn.wv")
+        if cfg.arch == "llama":
+            cos = qp["rope.cos"][:t]
+            sin = qp["rope.sin"][:t]
+            qc = intops.di_rope(qv.reshape(t, n_h, hd), qzp, cos, sin)
+            kc = intops.di_rope(kv.reshape(t, n_h, hd), kzp, cos, sin)
+        else:
+            qc = (qv.reshape(t, n_h, hd) - qzp[:, None, None]).astype(I32)
+            kc = (kv.reshape(t, n_h, hd) - kzp[:, None, None]).astype(I32)
+        vc3 = vv.reshape(t, n_h, hd)
+        # K, V to one shared scale per head (DESIGN §5, requant_per_head)
+        kch, k_m, k_k, _ = intops.requant_per_head(
+            kc, km, kk, None, a_bits)
+        vch, v_m, v_k, _ = intops.requant_per_head(
+            vc3, vm_, vk_, vzp, a_bits)
+        qch = jnp.transpose(qc, (1, 0, 2)).astype(I64)  # (H, T, hd)
+        p = jnp.einsum("htd,hsd->hts", qch, kch)  # i64 scores
+        probs = intops.di_clipped_softmax(
+            p.reshape(n_h * t, t),
+            jnp.tile(qm, n_h), jnp.tile(qk, n_h),
+            jnp.repeat(k_m, t), jnp.repeat(k_k, t),
+            scheme.softmax_bits, mask=jnp.tile(mask, (n_h, 1)),
+            clip=scheme.clip).reshape(n_h, t, t)
+        o3 = jnp.einsum("hts,hsd->htd", probs.astype(I64), vch)
+        att, am_, ak_, azp = _heads_merge_requant(
+            o3, v_m, v_k, scheme.softmax_bits, a_bits)
+        o, om, ok, ozp = intops.di_linear(
+            att, am_, ak_, azp, g("attn.wo.wq"), g("attn.wo.mw"),
+            g("attn.wo.kw"),
+            g("attn.wo.bq") if cfg.arch == "opt" else None, a_bits)
+        x, xm, xk, xzp = intops.di_add(x, xm, xk, xzp, o, om, ok, ozp,
+                                       nl_bits)
+        # ---- mlp ----
+        h, hm, hk, hzp = intops.di_norm(x, xzp, a_bits, centered)
+        if cfg.arch == "llama":
+            gv, gm_, gk_, gzp = lin("mlp.wg", h, hm, hk, hzp, nl_bits)
+            uv, um_, uk_, uzp = lin("mlp.wu", h, hm, hk, hzp, nl_bits)
+            sw, sm, sk, szp = intops.di_swiglu(
+                gv, gm_, gk_, gzp, uv, um_, uk_, uzp,
+                g("alpha_m"), g("alpha_k"), scheme.sig_bits, a_bits)
+            y, ym, yk, yzp = intops.di_linear(
+                sw, sm, sk, szp, g("mlp.wd.wq"), g("mlp.wd.mw"),
+                g("mlp.wd.kw"), None, a_bits)
+        else:
+            av, am2, ak2, azp2 = lin("mlp.w1", h, hm, hk, hzp)
+            av = intops.di_relu(av, azp2)
+            y, ym, yk, yzp = intops.di_linear(
+                av, am2, ak2, azp2, g("mlp.w2.wq"), g("mlp.w2.mw"),
+                g("mlp.w2.kw"), g("mlp.w2.bq"), a_bits)
+        x, xm, xk, xzp = intops.di_add(x, xm, xk, xzp, y, ym, yk, yzp,
+                                       nl_bits)
+
+    h, hm, hk, hzp = intops.di_norm(x, xzp, nl_bits, centered)
+    p, m_in, k_in = intops.di_linear_raw(
+        h, hm, hk, hzp, qp["lm_head.wq"], qp["lm_head.mw"],
+        qp["lm_head.kw"], qp.get("lm_head.bq"))
+    # model boundary: dequantize logits (the only float op in the graph)
+    s = m_in.astype(jnp.float64) / jnp.exp2(k_in.astype(jnp.float64))
+    return (p.astype(jnp.float64) * s[:, None]).astype(F32)

@@ -1,0 +1,224 @@
+"""Build-time trainer: tiny LLaMA/OPT models on the synthetic corpus.
+
+The paper quantizes pretrained LLaMA/OPT checkpoints; we have none, so
+`make artifacts` trains byte-level stand-ins (~0.5-2M params) with AdamW
+on the deterministic corpus from `corpus.py`, then applies the
+OUTLIER-INJECTION pass (DESIGN.md S17): a function-preserving rewrite
+that concentrates large per-channel scales in exactly the
+activation-weight pairs FSBR smooths —
+
+  * norm gamma  <- gamma * s,  following linear rows <- rows / s
+    (post-norm activations develop channel outliers; paper Fig. 1)
+  * wu columns  <- * s, wd rows <- / s   (SwiGLU up path; paper Fig. 2)
+  * wv columns  <- * s, wo rows <- / s   (attention v->o path)
+
+Each rewrite leaves the FP function bit-identical in exact arithmetic but
+makes naive per-tensor quantization collapse, reproducing the failure
+mode the paper attributes to LLMs. FSBR can (and does) learn the inverse.
+
+Python runs at build time only; the weights go to artifacts/ in a
+safetensors-like container the rust runtime reads.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, PRESETS, fp_forward, fp_param_spec, init_params
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# weights container (JSON header + raw little-endian tensors)
+# ---------------------------------------------------------------------------
+
+def save_weights(path: str, tensors: dict, meta: dict | None = None):
+    header = {"__meta__": meta or {}}
+    blobs = []
+    offset = 0
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        dt = {"float32": "f32", "int32": "i32", "int64": "i64"}[str(arr.dtype)]
+        nb = arr.nbytes
+        header[name] = {"dtype": dt, "shape": list(arr.shape),
+                        "offset": offset, "nbytes": nb}
+        blobs.append(arr.tobytes())
+        offset += nb
+    hjson = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(hjson)))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+
+
+def load_weights(path: str) -> tuple[dict, dict]:
+    with open(path, "rb") as f:
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+        data = f.read()
+    meta = header.pop("__meta__", {})
+    out = {}
+    for name, info in header.items():
+        dt = {"f32": np.float32, "i32": np.int32, "i64": np.int64}[info["dtype"]]
+        a = np.frombuffer(data, dt, count=int(np.prod(info["shape"]) or 1),
+                          offset=info["offset"])
+        out[name] = a.reshape(info["shape"])
+    return out, meta
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def batches(tokens: np.ndarray, seq: int, bsz: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    for _ in range(steps):
+        idx = rng.integers(0, n, bsz)
+        x = np.stack([tokens[i:i + seq] for i in idx])
+        y = np.stack([tokens[i + 1:i + seq + 1] for i in idx])
+        yield jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32)
+
+
+def train_model(cfg: ModelConfig, text: str, steps: int = 400,
+                seq: int = 128, bsz: int = 16, lr: float = 3e-3,
+                seed: int = 0, log=print) -> dict:
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, seed).items()}
+    toks = np.asarray(corpus.encode(text), np.int32)
+
+    def loss_fn(p, x, y):
+        logits = jax.vmap(lambda t: fp_forward(cfg, p, t))(x)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, y[..., None], axis=-1)
+        return -jnp.mean(ll)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    # AdamW (minimal, no schedule beyond linear warmup)
+    mom = {k: jnp.zeros_like(v) for k, v in params.items()}
+    var = {k: jnp.zeros_like(v) for k, v in params.items()}
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+
+    @jax.jit
+    def update(p, m, v, g, step, lr_t):
+        new_p, new_m, new_v = {}, {}, {}
+        for k in p:
+            new_m[k] = b1 * m[k] + (1 - b1) * g[k]
+            new_v[k] = b2 * v[k] + (1 - b2) * g[k] * g[k]
+            mhat = new_m[k] / (1 - b1 ** step)
+            vhat = new_v[k] / (1 - b2 ** step)
+            upd = mhat / (jnp.sqrt(vhat) + eps) + wd * p[k]
+            new_p[k] = p[k] - lr_t * upd
+        return new_p, new_m, new_v
+
+    losses = []
+    for step, (x, y) in enumerate(batches(toks, seq, bsz, steps, seed + 1),
+                                  start=1):
+        lr_t = lr * min(1.0, step / 40)
+        loss, g = grad_fn(params, x, y)
+        params, mom, var = update(params, mom, var, g, step, lr_t)
+        losses.append(float(loss))
+        if step % 50 == 0 or step == 1:
+            log(f"  [{cfg.name}] step {step:4d} loss {float(loss):.4f}")
+    return {k: np.asarray(v) for k, v in params.items()}, losses
+
+
+# ---------------------------------------------------------------------------
+# outlier injection (S17) — function-preserving channel-scale pathology
+# ---------------------------------------------------------------------------
+
+def inject_outliers(cfg: ModelConfig, params: dict, frac: float = 0.06,
+                    lo: float = 8.0, hi: float = 32.0, seed: int = 7) -> dict:
+    """See module docstring. Returns a new params dict; FP function is
+    unchanged (up to float rounding), activation statistics are not."""
+    rng = np.random.default_rng(seed)
+    p = {k: np.asarray(v, np.float64).copy() for k, v in params.items()}
+
+    def chan_scales(n):
+        s = np.ones(n)
+        k = max(1, int(n * frac))
+        idx = rng.choice(n, k, replace=False)
+        s[idx] = rng.uniform(lo, hi, k)
+        return s
+
+    for i in range(cfg.n_layers):
+        d = cfg.d_model
+        # norm1 -> qkv
+        s1 = chan_scales(d)
+        p[f"layers.{i}.norm1.g"] *= s1
+        if cfg.arch == "opt":
+            p[f"layers.{i}.norm1.b"] *= s1
+        for w in ("wq", "wk", "wv"):
+            p[f"layers.{i}.attn.{w}"] /= s1[:, None]
+        # norm2 -> mlp in
+        s2 = chan_scales(d)
+        p[f"layers.{i}.norm2.g"] *= s2
+        if cfg.arch == "opt":
+            p[f"layers.{i}.norm2.b"] *= s2
+        ins = ("wg", "wu") if cfg.arch == "llama" else ("w1",)
+        for w in ins:
+            p[f"layers.{i}.mlp.{w}"] /= s2[:, None]
+        # v -> o (linear path through attention)
+        sv = chan_scales(d)
+        p[f"layers.{i}.attn.wv"] *= sv[None, :]
+        if cfg.arch == "opt":
+            p[f"layers.{i}.attn.wv.b"] *= sv
+        p[f"layers.{i}.attn.wo"] /= sv[:, None]
+        # up -> down (SwiGLU up path is linear; ReLU path is
+        # positively-homogeneous so scaling also commutes for opt)
+        sup = chan_scales(cfg.d_ff)
+        upn = "wu" if cfg.arch == "llama" else "w1"
+        dnn = "wd" if cfg.arch == "llama" else "w2"
+        p[f"layers.{i}.mlp.{upn}"] *= sup[None, :]
+        if cfg.arch == "opt":
+            p[f"layers.{i}.mlp.{upn}.b"] *= sup
+        p[f"layers.{i}.mlp.{dnn}"] /= sup[:, None]
+    return {k: np.asarray(v, np.float32) for k, v in p.items()}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def train_all(out_dir: str, corpus_chars: int = 400_000, steps: int = 400,
+              models=None, log=print) -> dict:
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    text = corpus.generate(corpus_chars, seed=1234)
+    train_text, val_text = corpus.train_val_split(text)
+    with open(os.path.join(out_dir, "corpus.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, "corpus.meta.json"), "w") as f:
+        json.dump({"n_chars": len(text), "train_chars": len(train_text),
+                   "val_chars": len(val_text), "seed": 1234}, f)
+    summary = {}
+    for name in (models or list(PRESETS)):
+        cfg = PRESETS[name]
+        log(f"training {name} ({cfg.arch}, d={cfg.d_model}, "
+            f"L={cfg.n_layers}) ...")
+        params, losses = train_model(cfg, train_text, steps=steps, log=log)
+        params = inject_outliers(cfg, params)
+        meta = {"config": cfg.to_dict(), "final_loss": losses[-1],
+                "steps": steps}
+        save_weights(os.path.join(out_dir, f"{name}.weights.bin"),
+                     params, meta)
+        summary[name] = {"final_loss": losses[-1],
+                         "loss_curve": losses[::25]}
+    return summary
+
+
+if __name__ == "__main__":
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    steps = int(sys.argv[2]) if len(sys.argv) > 2 else 400
+    s = train_all(out, steps=steps)
+    print(json.dumps(s, indent=1))

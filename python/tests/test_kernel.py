@@ -1,0 +1,230 @@
+"""L1 correctness: pallas kernels vs the intops spec (bit-exact) and
+the intops spec vs float oracles (error-bounded). Hypothesis sweeps
+shapes/values; the paper's error bounds anchor the tolerances."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import intops
+from compile.intops import I32, I64
+from compile.kernels import ref
+from compile.kernels.di_exp import di_exp as pl_exp
+from compile.kernels.di_matmul import di_matmul as pl_matmul
+from compile.kernels.di_norm import di_norm as pl_norm
+from compile.kernels.di_softmax import di_clipped_softmax as pl_softmax
+from compile.kernels.di_swiglu import di_swiglu as pl_swiglu
+
+SET = dict(max_examples=12, deadline=None)
+
+
+def quant_mat(rng, t, n, scale=2.0, bits=8):
+    x = rng.normal(0, scale, (t, n))
+    return intops.quantize_f32(jnp.asarray(x), bits), x
+
+
+# ---------------------------------------------------------------------------
+# pallas == spec (bit-exact)
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(t=st.integers(1, 33), k=st.integers(4, 48), n=st.integers(2, 24),
+       seed=st.integers(0, 10_000), block=st.sampled_from([4, 16, 64]))
+def test_pallas_matmul_bitexact(t, k, n, seed, block):
+    rng = np.random.default_rng(seed)
+    (xv, m, kx, zp), _ = quant_mat(rng, t, k)
+    w = rng.normal(0, 0.2, (k, n))
+    sc = np.maximum(np.abs(w).max(axis=0), 1e-8) / 127.0
+    mw, kw = intops.align_channel_scales(jnp.asarray(sc))
+    wq = jnp.clip(jnp.floor(jnp.asarray(w) / (np.asarray(mw) /
+                  np.exp2(float(kw)))[None, :] + 0.5), -127, 127).astype(I32)
+    want = intops.di_linear(xv, m, kx, zp, wq, mw, kw, None, 8)
+    got = pl_matmul(xv, m, kx, zp, wq, mw, int(kw), 8, block_t=block)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(**SET)
+@given(t=st.integers(1, 40), n=st.integers(1, 32), seed=st.integers(0, 9999))
+def test_pallas_exp_bitexact(t, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-3000, 1, (t, n)), I32)
+    m = jnp.asarray(rng.integers(128, 256, t), I32)
+    k = jnp.asarray(rng.integers(4, 16, t), I32)
+    np.testing.assert_array_equal(
+        np.asarray(intops.di_exp(x, m, k)), np.asarray(pl_exp(x, m, k)))
+
+
+@settings(**SET)
+@given(t=st.integers(1, 24), s=st.integers(2, 24), seed=st.integers(0, 9999))
+def test_pallas_softmax_bitexact(t, s, seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.normal(0, 5e5, (t, s)).astype(np.int64), I64)
+    m1 = jnp.asarray(rng.integers(128, 256, t), I32)
+    k1 = jnp.asarray(rng.integers(10, 18, t), I32)
+    mask = jnp.asarray(np.tril(np.ones((t, s), bool), s // 2))
+    want = intops.di_clipped_softmax(p, m1, k1, 177, 13, 8, mask=mask)
+    got = pl_softmax(p, m1, k1, mask, 177, 13, 8)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@settings(**SET)
+@given(t=st.integers(1, 24), n=st.integers(2, 48), seed=st.integers(0, 9999),
+       centered=st.booleans())
+def test_pallas_norm_bitexact(t, n, seed, centered):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, (t, n)), I32)
+    zp = jnp.asarray(rng.integers(80, 170, t), I32)
+    want = intops.di_norm(x, zp, 8, centered)
+    got = pl_norm(x, zp, centered, 8)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(**SET)
+@given(t=st.integers(1, 16), n=st.integers(2, 32), seed=st.integers(0, 9999))
+def test_pallas_swiglu_bitexact(t, n, seed):
+    rng = np.random.default_rng(seed)
+    (gv, gm, gk, gzp), _ = quant_mat(rng, t, n, 2.5)
+    (uv, um, uk, uzp), _ = quant_mat(rng, t, n, 1.0)
+    am = jnp.asarray(rng.integers(100, 256, n), I32)
+    ak = jnp.asarray(rng.integers(4, 10, n), I32)
+    want = intops.di_swiglu(gv, gm, gk, gzp, uv, um, uk, uzp, am, ak, 8, 8)
+    got = pl_swiglu(gv, gm, gk, gzp, uv, um, uk, uzp, am, ak)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# spec vs float oracles (error-bounded)
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(seed=st.integers(0, 9999), t=st.integers(2, 12),
+       n=st.integers(8, 64))
+def test_linear_tracks_float(seed, t, n):
+    rng = np.random.default_rng(seed)
+    (xv, m, kx, zp), x = quant_mat(rng, t, n)
+    w = rng.normal(0, 0.2, (n, 12))
+    sc = np.maximum(np.abs(w).max(axis=0), 1e-8) / 127.0
+    mw, kw = intops.align_channel_scales(jnp.asarray(sc))
+    wq = jnp.clip(jnp.floor(jnp.asarray(w) / (np.asarray(mw) /
+                  np.exp2(float(kw)))[None, :] + 0.5), -127, 127).astype(I32)
+    out = intops.di_linear(xv, m, kx, zp, wq, mw, kw, None, 8)
+    got = np.asarray(ref.dequant(*out))
+    want = np.asarray(ref.linear(jnp.asarray(x), jnp.asarray(w)))
+    amax = np.abs(want).max() + 1e-6
+    assert np.abs(got - want).max() < amax * 0.04 + 0.05
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 9999))
+def test_softmax_error_bound(seed):
+    """Paper: clipped softmax max error bounded by the window/255 plus
+    the DI-Exp approximation (<= ~0.06 total)."""
+    rng = np.random.default_rng(seed)
+    t, s = 6, 20
+    p = jnp.asarray(rng.normal(0, 8e5, (t, s)).astype(np.int64), I64)
+    m1 = jnp.asarray(rng.integers(128, 256, t), I32)
+    k1 = jnp.asarray(rng.integers(10, 14, t), I32)
+    y = intops.di_clipped_softmax(p, m1, k1, 200, 12, 8)
+    sc = (np.asarray(m1, np.float64) * 200 /
+          np.exp2(np.asarray(k1) + 12.0))[:, None]
+    want = np.asarray(ref.softmax(np.asarray(p) * sc))
+    got = np.asarray(y) / 128.0
+    assert np.abs(got - want).max() < 0.065
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 9999), centered=st.booleans())
+def test_norm_tracks_float(seed, centered):
+    rng = np.random.default_rng(seed)
+    (xv, m, k, zp), _ = quant_mat(rng, 5, 48, 3.0)
+    out = intops.di_norm(xv, zp, 8, centered)
+    got = np.asarray(ref.dequant(*out))
+    xd = np.asarray(ref.dequant(xv, m, k, zp))
+    want = np.asarray(
+        ref.layernorm(xd) if centered else ref.rmsnorm(xd))
+    assert np.abs(got - want).max() < 0.08
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 9999))
+def test_swiglu_tracks_float(seed):
+    rng = np.random.default_rng(seed)
+    (gv, gm, gk, gzp), _ = quant_mat(rng, 4, 24, 2.0)
+    (uv, um, uk, uzp), _ = quant_mat(rng, 4, 24, 1.0)
+    am = jnp.full((24,), 1, I32)
+    ak = jnp.zeros((24,), I32)
+    out = intops.di_swiglu(gv, gm, gk, gzp, uv, um, uk, uzp, am, ak, 8, 8)
+    got = np.asarray(ref.dequant(*out))
+    gd = ref.dequant(gv, gm, gk, gzp)
+    ud = ref.dequant(uv, um, uk, uzp)
+    want = np.asarray(ref.swiglu(gd, ud))
+    amax = np.abs(want).max() + 1e-6
+    assert np.abs(got - want).max() < amax * 0.3 + 0.08
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 9999), bits=st.sampled_from([4, 6, 8]))
+def test_requant_roundtrip(seed, bits):
+    rng = np.random.default_rng(seed)
+    # ranges chosen so the output scale stays representable in the
+    # paper's 8-bit dyadic format: s_out = m/2^k with k >= 0 caps the
+    # float range at qmax*255 (~3.8k even at 4 bits)
+    p = jnp.asarray(rng.integers(-(1 << 17), 1 << 17, (4, 16)), I64)
+    m = jnp.asarray(rng.integers(128, 256, 4).astype(np.int64), I64)
+    k = jnp.asarray(rng.integers(14, 19, 4), I32)
+    v, my, ky, zp = intops.requant_rows(p, m, k, bits)
+    s_in = np.asarray(m, np.float64) / np.exp2(np.asarray(k))
+    s_out = np.asarray(my, np.float64) / np.exp2(np.asarray(ky))
+    want = np.asarray(p) * s_in[:, None]
+    got = (np.asarray(v) - np.asarray(zp)[:, None]) * s_out[:, None]
+    # <= 1 output step from value + zero-point rounding, plus up to
+    # ~1/128 relative from the dyadic mantissa FLOOR of Eq. 7
+    step = s_out[:, None] * 1.05 + np.abs(want) * 0.02
+    assert (np.abs(want - got) <= step + 1e-9).all()
+    # values must fill the range (dynamic quantization)
+    qmax = (1 << bits) - 1
+    assert np.asarray(v).max() <= qmax and np.asarray(v).min() >= 0
+
+
+def test_isqrt_and_ilog2_exact():
+    xs = np.concatenate([np.arange(0, 300),
+                         2 ** np.arange(0, 60, dtype=np.int64)])
+    got = np.asarray(intops.isqrt(jnp.asarray(xs)))
+    want = np.floor(np.sqrt(xs.astype(np.float64) + 1e-12)).astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+    xs2 = xs[xs >= 1]
+    got2 = np.asarray(intops.ilog2(jnp.asarray(xs2)))
+    want2 = np.floor(np.log2(xs2.astype(np.float64))).astype(np.int64)
+    np.testing.assert_array_equal(got2, want2)
+
+
+def test_rope_orthogonality():
+    cos_q, sin_q = intops.rope_tables(16, 32)
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 256, (32, 2, 16)),
+                    I32)
+    zp = jnp.full((32,), 128, I32)
+    y = intops.di_rope(x, zp, jnp.asarray(cos_q), jnp.asarray(sin_q))
+    xc = np.asarray(x, np.int64) - 128
+    n0 = (xc ** 2).sum(axis=-1)
+    n1 = (np.asarray(y, np.int64) ** 2).sum(axis=-1)
+    rel = np.abs(n1 - n0) / np.maximum(n0, 1)
+    assert rel.max() < 0.03
+
+
+def test_clip_value_effect():
+    """Larger clip c widens the represented window (Table 5 mechanics)."""
+    rng = np.random.default_rng(5)
+    p = jnp.asarray(rng.normal(0, 1e6, (1, 32)).astype(np.int64), I64)
+    m1 = jnp.asarray([255], I32)
+    k1 = jnp.asarray([8], I32)
+    outs = {}
+    for c, (cm, ck) in {10: (160, 4), 15: (240, 4), 20: (160, 3)}.items():
+        y = intops.di_clipped_softmax(p, m1, k1, 255, 8, 8,
+                                      clip=(cm, ck))
+        outs[c] = int((np.asarray(y) > 0).sum())
+    # wider clip keeps more non-zero probabilities
+    assert outs[10] <= outs[15] <= outs[20] + 1

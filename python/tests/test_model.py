@@ -1,0 +1,135 @@
+"""L2 model tests: shapes, fp-vs-int fidelity, param contracts, and the
+outlier-injection substrate's function preservation."""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import intops, train
+from compile.model import (ModelConfig, PRESETS, QuantScheme, fp_forward,
+                           fp_param_spec, init_params, int_forward,
+                           int_param_spec, int_params_from_fp)
+from compile.intops import I32
+
+TOKS = jnp.asarray(np.random.default_rng(3).integers(0, 256, 40), I32)
+
+
+@pytest.mark.parametrize("name", ["tinyllama_s", "tinyopt_s"])
+def test_fp_forward_shapes(name):
+    cfg = PRESETS[name]
+    params = init_params(cfg, 0)
+    out = fp_forward(cfg, params, TOKS)
+    assert out.shape == (40, cfg.vocab)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("name", ["tinyllama_s", "tinyopt_s"])
+def test_int_forward_tracks_fp_w8a8(name):
+    cfg = PRESETS[name]
+    params = init_params(cfg, 1)
+    sch = QuantScheme(8, 8)
+    fp = np.asarray(fp_forward(cfg, params, TOKS))
+    qp = int_params_from_fp(cfg, params, sch)
+    iq = np.asarray(int_forward(cfg, qp, TOKS, sch))
+    corr = np.corrcoef(fp.ravel(), iq.ravel())[0, 1]
+    assert corr > 0.85, f"{name} w8a8 corr {corr}"
+
+
+def test_w4a4_degrades_more_than_w8a8():
+    cfg = PRESETS["tinyllama_s"]
+    params = init_params(cfg, 2)
+    fp = np.asarray(fp_forward(cfg, params, TOKS))
+    errs = {}
+    for wb, ab in [(8, 8), (4, 4)]:
+        sch = QuantScheme(wb, ab)
+        qp = int_params_from_fp(cfg, params, sch)
+        iq = np.asarray(int_forward(cfg, qp, TOKS, sch))
+        errs[(wb, ab)] = float(np.abs(fp - iq).mean())
+    assert errs[(4, 4)] > errs[(8, 8)] * 1.5
+
+
+def test_param_specs_complete_and_ordered():
+    for name, cfg in PRESETS.items():
+        fps = fp_param_spec(cfg)
+        names = [n for n, _ in fps]
+        assert len(set(names)) == len(names), f"dup fp params {name}"
+        params = init_params(cfg, 0)
+        assert set(names) == set(params.keys())
+        ints = int_param_spec(cfg)
+        inames = [n for n, _, _ in ints]
+        assert len(set(inames)) == len(inames), f"dup int params {name}"
+        qp = int_params_from_fp(cfg, params, QuantScheme(8, 8))
+        missing = [n for n, _, _ in ints if n not in qp]
+        assert not missing, f"{name} missing {missing}"
+        for n, shape, _dt in ints:
+            got = tuple(np.asarray(qp[n]).shape)
+            assert got == tuple(shape), f"{name} {n}: {got} vs {shape}"
+
+
+def test_outlier_injection_preserves_function():
+    cfg = PRESETS["tinyllama_s"]
+    params = init_params(cfg, 4)
+    fp0 = np.asarray(fp_forward(cfg, params, TOKS))
+    inj = train.inject_outliers(cfg, params)
+    fp1 = np.asarray(fp_forward(cfg, inj, TOKS))
+    scale = np.abs(fp0).max()
+    assert np.abs(fp0 - fp1).max() < scale * 2e-2 + 1e-3
+
+
+def test_outlier_injection_creates_channel_imbalance():
+    cfg = PRESETS["tinyllama_s"]
+    params = init_params(cfg, 4)
+    inj = train.inject_outliers(cfg, params)
+    g0 = np.asarray(params["layers.0.norm1.g"])
+    g1 = np.asarray(inj["layers.0.norm1.g"])
+    def imb(g):
+        s = np.sort(np.abs(g))
+        return s[-1] / max(np.median(s), 1e-9)
+    assert imb(g1) > imb(g0) * 4, (imb(g0), imb(g1))
+
+
+def test_weights_roundtrip(tmp_path):
+    cfg = dataclasses.replace(PRESETS["tinyllama_s"], n_layers=1)
+    params = init_params(cfg, 5)
+    path = str(tmp_path / "w.bin")
+    train.save_weights(path, params, {"config": cfg.to_dict(), "x": 1})
+    loaded, meta = train.load_weights(path)
+    assert meta["x"] == 1
+    assert ModelConfig.from_dict(meta["config"]) == cfg
+    for k, v in params.items():
+        np.testing.assert_array_equal(loaded[k], v)
+
+
+def test_block_config_slices_model():
+    """The int_block artifact contract: an n_layers=1 config over the
+    same weights must match the full model's layer-0 semantics."""
+    cfg = PRESETS["tinyllama_s"]
+    bcfg = dataclasses.replace(cfg, n_layers=1)
+    params = init_params(cfg, 6)
+    sch = QuantScheme(8, 8)
+    qp_full = int_params_from_fp(cfg, params, sch)
+    qp_block = int_params_from_fp(bcfg, params, sch)
+    # layer-0 quantized weights identical
+    for suffix in ["attn.wq.wq", "mlp.wg.mw", "alpha_m"]:
+        np.testing.assert_array_equal(
+            np.asarray(qp_full[f"layers.0.{suffix}"]),
+            np.asarray(qp_block[f"layers.0.{suffix}"]))
+    out = int_forward(bcfg, qp_block, TOKS, sch)
+    assert out.shape == (40, cfg.vocab)
+
+
+def test_corpus_deterministic():
+    from compile import corpus
+
+    a = corpus.generate(5000, 42)
+    b = corpus.generate(5000, 42)
+    assert a == b
+    c = corpus.generate(5000, 43)
+    assert a != c
+    tr, va = corpus.train_val_split(a)
+    assert tr + va == a
+    # split snaps to the previous paragraph boundary, so the val
+    # fraction overshoots 10% by up to one paragraph on tiny inputs
+    assert 0.05 < len(va) / len(a) < 0.25

@@ -1,0 +1,53 @@
+//! Figure 4 reproduction: W8A8 PPL across methods on the LLaMA family,
+//! including the I-BERT-style static integer-only baseline.
+//!
+//! Paper reference: I-Bert's W8A8 PPL is so high it needs its own axis
+//! (thousands), while SmoothQuant/OmniQuant/I-LLM sit near FP, with
+//! I-LLM closest. Shape: static integer quantization >> everything
+//! else; I-LLM ~ FP.
+
+use illm::data::load_corpus;
+use illm::eval::{methods, perplexity};
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::util::{fmt_ppl, Table};
+
+fn main() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).expect("run `make artifacts`");
+    let fast = std::env::var_os("ILLM_BENCH_FAST").is_some();
+    let models: &[&str] = if fast {
+        &["tinyllama_s"]
+    } else {
+        &["tinyllama_s", "tinyllama_m", "tinyllama_l"]
+    };
+    println!("== Figure 4: W8A8 PPL by method (paper: LLaMA family) \
+              ==\n");
+    let scheme = QuantScheme::W8A8;
+    let meths = ["fp", "ibert", "sq", "omni", "illm"];
+    let mut t = Table::new(&["Method", "S", "M", "L"]);
+    let mut rows: Vec<Vec<String>> = meths
+        .iter()
+        .map(|m| vec![methods::label(m).to_string()])
+        .collect();
+    for &model in models {
+        let fp = load_model(&dir, model).expect("model");
+        for (mi, &method) in meths.iter().enumerate() {
+            let m = methods::build(method, &fp, &corpus, scheme)
+                .expect("build");
+            let ppl = perplexity(m.as_ref(), &corpus);
+            eprintln!("  {model} {method}: {}", fmt_ppl(ppl));
+            rows[mi].push(fmt_ppl(ppl));
+        }
+    }
+    for mut row in rows {
+        while row.len() < 4 {
+            row.push("-".into());
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("\npaper shape check: I-BERT-style static quantization is \
+              orders of magnitude worse (dedicated y-axis in the paper); \
+              I-LLM closest to FP.");
+}

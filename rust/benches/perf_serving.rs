@@ -1,0 +1,72 @@
+//! §Perf end-to-end serving benchmark: throughput/latency of the
+//! coordinator + integer engine, vs the FP engine, across batch sizes.
+//!
+//! The paper's deployment claim: the integer-only pipeline serves LLMs
+//! on integer hardware; here we verify the coordinator adds negligible
+//! overhead (<10% of step time) and show continuous-batching scaling.
+
+use illm::coordinator::batcher::BatcherConfig;
+use illm::coordinator::engine::{FpEngine, IntEngine};
+use illm::coordinator::{run_workload, workload};
+use illm::data::load_corpus;
+use illm::eval::methods;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::util::Table;
+use std::sync::Arc;
+
+fn main() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).expect("run `make artifacts`");
+    let fast = std::env::var_os("ILLM_BENCH_FAST").is_some();
+    let model = "tinyllama_s";
+    let fp = load_model(&dir, model).expect("model");
+    let (im, _) = methods::build_illm(&fp, &corpus, QuantScheme::W8A8);
+    let im = Arc::new(im);
+    let fpa = Arc::new(fp);
+    let n_requests = if fast { 12 } else { 32 };
+    println!("== perf: serving throughput ({model}, {n_requests} \
+              requests, closed loop) ==\n");
+    let mut t = Table::new(&["engine", "batch", "decode tok/s",
+                             "prefill tok/s", "p50 lat (s)",
+                             "p99 lat (s)", "occupancy", "coord ovh %"]);
+    for batch in [1usize, 2, 4, 8] {
+        for engine_name in ["int-w8a8", "fp32"] {
+            let spec = workload::WorkloadSpec {
+                n_requests,
+                prompt_len: (12, 40),
+                max_new: (8, 24),
+                ..Default::default()
+            };
+            let reqs = workload::generate(&spec, &corpus);
+            let cfg = BatcherConfig { max_batch: batch,
+                                      ..Default::default() };
+            let (_resp, m) = match engine_name {
+                "int-w8a8" => run_workload(
+                    IntEngine { model: im.clone() }, cfg, reqs, 0.0),
+                _ => run_workload(
+                    FpEngine { model: fpa.clone() }, cfg, reqs, 0.0),
+            };
+            let engine_time = m.decode_time_s + m.prefill_time_s;
+            let ovh = 100.0 * (m.step_time_s - engine_time)
+                / m.step_time_s.max(1e-9);
+            t.row(vec![
+                engine_name.into(),
+                batch.to_string(),
+                format!("{:.0}", m.decode_tok_per_s()),
+                format!("{:.0}", m.prefill_tok_per_s()),
+                format!("{:.3}", m.latency_p50()),
+                format!("{:.3}", m.latency_p99()),
+                format!("{:.2}", m.mean_occupancy()),
+                format!("{ovh:.1}"),
+            ]);
+            eprintln!("  {engine_name} batch {batch}: {:.0} decode tok/s",
+                      m.decode_tok_per_s());
+        }
+    }
+    t.print();
+    println!("\ntargets (DESIGN.md §8): coordinator overhead < 10%; \
+              note the FP engine recomputes the prefix each step (no \
+              FP KV cache) — the integer engine's KV path is the \
+              deployment design.");
+}

@@ -1,0 +1,54 @@
+//! Table 3 reproduction: zero-shot accuracy on six multiple-choice
+//! suites (stand-ins for PIQA/ARC-e/ARC-c/BoolQ/HellaSwag/WinoGrande)
+//! at W6A6 and W4A4.
+//!
+//! Paper reference (LLaMA-7B avg): FP 64.09; W6A6: SQ 62.81, OQ 63.17,
+//! I-LLM 63.39; W4A4: SQ 38.41 (chance-ish), OQ 52.65, I-LLM 54.21.
+//! Shape: at W6A6 all methods near FP; at W4A4 SmoothQuant drops toward
+//! chance while I-LLM retains most accuracy.
+
+use illm::data::load_corpus;
+use illm::eval::{methods, zero_shot};
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::util::Table;
+
+fn main() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).expect("run `make artifacts`");
+    let fast = std::env::var_os("ILLM_BENCH_FAST").is_some();
+    let model = "tinyllama_s";
+    let items = if fast { 20 } else { 50 };
+    let fp = load_model(&dir, model).expect("model");
+    println!("== Table 3: zero-shot accuracy ({model}, {items} \
+              items/suite) ==\n");
+    let mut t = Table::new(&["#Bits", "Method", "Cont", "Agr", "Ind",
+                             "Cons", "End", "Ref", "Avg"]);
+    let mut run = |bits: &str, method: &str, scheme: Option<QuantScheme>| {
+        let (rows, avg) = match scheme {
+            None => zero_shot(&fp, items, 1),
+            Some(s) => {
+                let m = methods::build(method, &fp, &corpus, s)
+                    .expect("build");
+                zero_shot(m.as_ref(), items, 1)
+            }
+        };
+        let mut cells = vec![bits.to_string(),
+                             methods::label(method).to_string()];
+        for (_, acc) in &rows {
+            cells.push(format!("{acc:.1}"));
+        }
+        cells.push(format!("{avg:.1}"));
+        eprintln!("  {bits} {method}: avg {avg:.1}");
+        t.row(cells);
+    };
+    run("FP16", "fp", None);
+    for scheme in [QuantScheme::W6A6, QuantScheme::W4A4] {
+        for method in ["sq", "omni", "illm"] {
+            run(&scheme.tag().to_uppercase(), method, Some(scheme));
+        }
+    }
+    t.print();
+    println!("\nchance levels: 2-way 50%, 3-way 33%, 4-way 25% \
+              (suite sizes 2/2/4/2/3/4).");
+}

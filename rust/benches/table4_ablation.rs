@@ -1,0 +1,73 @@
+//! Table 4 reproduction: ablation — PTQ method under PSEUDO-quant
+//! (SmoothQuant vs OmniQuant-lite vs FSBR), then integer-only operators
+//! enabled one by one on top of FSBR.
+//!
+//! Paper reference (LLaMA-7B W4A4 WikiText2): SQ 256.58, OQ 122.18,
+//! FSBR 9.44; +DI-ClippedSoftmax 9.44, +DI-SwiGLU 9.12, +DI-Norm 9.52.
+//! Shape: FSBR dominates the recovery; each DI op is ~neutral (DI-Norm
+//! slightly negative due to residual-stream quantization).
+
+use illm::baselines::{self, fakequant::ActQuantMode};
+use illm::calib::fold_smoothing;
+use illm::data::load_corpus;
+use illm::eval::{methods, perplexity};
+use illm::int_model::quantize::quantize_model;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::util::{fmt_ppl, Table};
+
+fn main() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).expect("run `make artifacts`");
+    let model = "tinyllama_s";
+    let fp = load_model(&dir, model).expect("model");
+    println!("== Table 4: PTQ-method + integer-operator ablation \
+              ({model}) ==\n");
+    let mut t = Table::new(&["Method", "W4A4", "W6A6"]);
+    // --- pseudo-quant method comparison ---
+    for method in ["sq", "omni", "fsbr"] {
+        let mut row = vec![methods::label(method).to_string()];
+        for scheme in [QuantScheme::W4A4, QuantScheme::W6A6] {
+            let m = methods::build(method, &fp, &corpus, scheme)
+                .expect("build");
+            let ppl = perplexity(m.as_ref(), &corpus);
+            eprintln!("  {method} {}: {}", scheme.tag(), fmt_ppl(ppl));
+            row.push(fmt_ppl(ppl));
+        }
+        t.row(row);
+    }
+    // --- integer-only operator stack on top of FSBR ---
+    // (the full IntModel enables DI-MatMul + DI-ClippedSoftmax +
+    // DI-SwiGLU + DI-Norm together; we ablate the clipped softmax by
+    // disabling the clip, and DI-SwiGLU precision via sig_bits.)
+    for (label, mk) in [
+        ("+DI ops (full I-LLM)", 0usize),
+        ("+DI ops, softmax UNclipped", 1),
+        ("+DI ops, sig_bits=4", 2),
+    ] {
+        let mut row = vec![label.to_string()];
+        for base in [QuantScheme::W4A4, QuantScheme::W6A6] {
+            let mut scheme = base;
+            match mk {
+                1 => scheme.clip = None,
+                2 => scheme.sig_bits = 4,
+                _ => {}
+            }
+            let (fsbr_model, params) = baselines::fsbr_fakequant(
+                &fp, &corpus, scheme, ActQuantMode::PerToken);
+            drop(fsbr_model);
+            let folded = fold_smoothing(&fp, &params);
+            let alpha: Vec<Option<Vec<f64>>> =
+                params.layers.iter().map(|l| l.alpha.clone()).collect();
+            let im = quantize_model(&folded, scheme, Some(&alpha), None);
+            let ppl = perplexity(&im, &corpus);
+            eprintln!("  {label} {}: {}", base.tag(), fmt_ppl(ppl));
+            row.push(fmt_ppl(ppl));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("\npaper shape check: FSBR >> SQ/OQ recovery at W4A4; \
+              the DI operator stack costs little on top of FSBR; \
+              unclipped softmax collapses (paper Table 5 row 1).");
+}

@@ -1,0 +1,469 @@
+//! Block-level machinery for FSBR: capture per-block inputs/outputs,
+//! apply smoothing vectors to a layer (function-preserving fold), and
+//! run one block with fake quantization at the Fig.-3 nodes — the
+//! reconstruction objective.
+
+use crate::config::{Arch, ModelConfig};
+use crate::nn::{FpLayer, FpModel, Linear, Mlp};
+use crate::quant::{fake_quant_rows, quantize_weight, QuantScheme};
+use crate::tensor::Mat;
+
+/// Activation fake-quant mode in the reconstruction objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActQuant {
+    /// dynamic per-token (the I-LLM pipeline)
+    PerToken,
+    /// static per-tensor scale computed over the calibration window
+    /// (the SmoothQuant / OmniQuant / I-BERT deployment assumption)
+    Static,
+}
+
+/// Materialized smoothing vectors for one layer (identity when None).
+#[derive(Debug, Clone, Default)]
+pub struct Smooth {
+    pub norm1: Option<Vec<f64>>,
+    pub norm2: Option<Vec<f64>>,
+    pub v: Option<Vec<f64>>,
+    pub up: Option<Vec<f64>>,
+    pub alpha: Option<Vec<f64>>,
+}
+
+impl Smooth {
+    pub fn from(l: &super::LayerSmoothing) -> Smooth {
+        Smooth {
+            norm1: l.norm1.clone(),
+            norm2: l.norm2.clone(),
+            v: l.v.clone(),
+            up: l.up.clone(),
+            alpha: l.alpha.clone(),
+        }
+    }
+}
+
+/// Captured (input, FP output) residual-stream pairs per block.
+pub struct BlockIo {
+    pub inputs: Vec<Mat>,
+    pub outputs: Vec<Mat>,
+}
+
+/// Run the FP model over the windows once, capturing every block's
+/// residual input/output.
+pub fn capture_block_io(fp: &FpModel, windows: &[Vec<u16>])
+    -> Vec<BlockIo> {
+    let nl = fp.cfg.n_layers;
+    let mut ios: Vec<BlockIo> = (0..nl)
+        .map(|_| BlockIo { inputs: vec![], outputs: vec![] })
+        .collect();
+    for w in windows {
+        // block input of layer 0 = embed_out; of layer i = resid_out of
+        // layer i-1; block output of layer i = resid_out of layer i.
+        let mut embed: Option<Mat> = None;
+        let mut resid: Vec<Mat> = Vec::with_capacity(nl);
+        {
+            let mut cb = |layer: usize, site: &str, x: &Mat| {
+                if layer == usize::MAX && site == "embed_out" {
+                    embed = Some(x.clone());
+                } else if site == "resid_out" {
+                    resid.push(x.clone());
+                }
+            };
+            let _ = fp.forward_full(w, 0, Some(&mut cb));
+        }
+        let embed = embed.expect("embed_out not observed");
+        for li in 0..nl {
+            let input = if li == 0 {
+                embed.clone()
+            } else {
+                resid[li - 1].clone()
+            };
+            ios[li].inputs.push(input);
+            ios[li].outputs.push(resid[li].clone());
+        }
+    }
+    ios
+}
+
+fn scale_cols(w: &mut Mat, s: &[f64], invert: bool) {
+    for r in 0..w.rows {
+        let row = w.row_mut(r);
+        for (c, v) in row.iter_mut().enumerate() {
+            let f = if invert { 1.0 / s[c] } else { s[c] };
+            *v = (*v as f64 * f) as f32;
+        }
+    }
+}
+
+fn scale_rows(w: &mut Mat, s: &[f64], invert: bool) {
+    for r in 0..w.rows {
+        let f = if invert { 1.0 / s[r] } else { s[r] };
+        for v in w.row_mut(r) {
+            *v = (*v as f64 * f) as f32;
+        }
+    }
+}
+
+fn scale_vec(b: &mut [f32], s: &[f64], invert: bool) {
+    for (v, &f) in b.iter_mut().zip(s.iter()) {
+        let f = if invert { 1.0 / f } else { f };
+        *v = (*v as f64 * f) as f32;
+    }
+}
+
+/// Apply smoothing to a COPY of the layer (function-preserving):
+///  * norm1: gamma/beta /= s ; wq/wk/wv rows *= s
+///  * norm2: gamma/beta /= s ; gate/up/w1 rows *= s
+///  * v:     wv cols (and bias) /= s ; wo rows *= s
+///  * up:    wu|w1 cols (and bias) /= s ; wd|w2 rows *= s
+///  * alpha: wg cols *= a ; wu cols /= a (runtime sigma'(x)=sigma(x/a))
+pub fn smooth_layer(l: &FpLayer, sm: &Smooth) -> FpLayer {
+    let mut out = l.clone();
+    if let Some(s) = &sm.norm1 {
+        scale_vec(&mut out.norm1.g, s, true);
+        if let Some(b) = &mut out.norm1.b {
+            scale_vec(b, s, true);
+        }
+        scale_rows(&mut out.wq.w, s, false);
+        scale_rows(&mut out.wk.w, s, false);
+        scale_rows(&mut out.wv.w, s, false);
+    }
+    if let Some(s) = &sm.norm2 {
+        scale_vec(&mut out.norm2.g, s, true);
+        if let Some(b) = &mut out.norm2.b {
+            scale_vec(b, s, true);
+        }
+        match &mut out.mlp {
+            Mlp::SwiGlu { wg, wu, .. } => {
+                scale_rows(&mut wg.w, s, false);
+                scale_rows(&mut wu.w, s, false);
+            }
+            Mlp::Relu { w1, .. } => scale_rows(&mut w1.w, s, false),
+        }
+    }
+    if let Some(s) = &sm.v {
+        scale_cols(&mut out.wv.w, s, true);
+        if let Some(b) = &mut out.wv.b {
+            scale_vec(b, s, true);
+        }
+        scale_rows(&mut out.wo.w, s, false);
+    }
+    if let Some(s) = &sm.up {
+        match &mut out.mlp {
+            Mlp::SwiGlu { wu, wd, .. } => {
+                scale_cols(&mut wu.w, s, true);
+                if let Some(b) = &mut wu.b {
+                    scale_vec(b, s, true);
+                }
+                scale_rows(&mut wd.w, s, false);
+            }
+            Mlp::Relu { w1, w2 } => {
+                scale_cols(&mut w1.w, s, true);
+                if let Some(b) = &mut w1.b {
+                    scale_vec(b, s, true);
+                }
+                scale_rows(&mut w2.w, s, false);
+            }
+        }
+    }
+    if let Some(a) = &sm.alpha {
+        if let Mlp::SwiGlu { wg, wu, .. } = &mut out.mlp {
+            scale_cols(&mut wg.w, a, false);
+            scale_cols(&mut wu.w, a, true);
+        }
+    }
+    out
+}
+
+fn fq_act(x: &Mat, bits: u32, mode: ActQuant) -> Mat {
+    match mode {
+        ActQuant::PerToken => fake_quant_rows(x, bits),
+        ActQuant::Static => {
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for &v in &x.data {
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            crate::quant::fake_quant_static(x, bits, mn, mx)
+        }
+    }
+}
+
+/// Replace every weight matrix with its quantize->dequantize image.
+/// Done ONCE per candidate (not per window) — the dominant cost of the
+/// naive reconstruction loop was re-quantizing weights per window.
+pub fn fq_weights(l: &FpLayer, w_bits: u32) -> FpLayer {
+    let mut out = l.clone();
+    let fq = |w: &Mat| quantize_weight(w, w_bits, 1.0, None).dequant();
+    out.wq.w = fq(&out.wq.w);
+    out.wk.w = fq(&out.wk.w);
+    out.wv.w = fq(&out.wv.w);
+    out.wo.w = fq(&out.wo.w);
+    match &mut out.mlp {
+        Mlp::SwiGlu { wg, wu, wd } => {
+            wg.w = fq(&wg.w);
+            wu.w = fq(&wu.w);
+            wd.w = fq(&wd.w);
+        }
+        Mlp::Relu { w1, w2 } => {
+            w1.w = fq(&w1.w);
+            w2.w = fq(&w2.w);
+        }
+    }
+    out
+}
+
+fn fq_linear(x: &Mat, lin: &Linear) -> Mat {
+    // weights were pre-quantized by fq_weights
+    let mut y = x.matmul(&lin.w);
+    if let Some(b) = &lin.b {
+        for r in 0..y.rows {
+            for (v, bv) in y.row_mut(r).iter_mut().zip(b.iter()) {
+                *v += bv;
+            }
+        }
+    }
+    y
+}
+
+/// One block with fake quantization at every Fig.-3 node (activations
+/// entering matmuls + weights; softmax probs at 8 bits). `sm.alpha`
+/// requires the de-smoothed sigmoid argument, matching DI-SwiGLU.
+pub fn fq_block_forward(
+    l: &FpLayer,
+    cfg: &ModelConfig,
+    x_in: &Mat,
+    scheme: QuantScheme,
+    mode: ActQuant,
+    sm: &Smooth,
+) -> Mat {
+    let centered = cfg.arch == Arch::Opt;
+    let t = x_in.rows;
+    let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+    let ab = scheme.a_bits;
+    let h = l.norm1.apply(x_in, cfg.norm_eps, centered);
+    let hq = fq_act(&h, ab, mode);
+    let v = fq_linear(&hq, &l.wv);
+    let mut q = fq_act(&fq_linear(&hq, &l.wq), ab, mode);
+    let mut k = fq_act(&fq_linear(&hq, &l.wk), ab, mode);
+    let vf = fq_act(&v, ab, mode);
+    if cfg.arch == Arch::Llama {
+        rope_f32(&mut q, cfg);
+        rope_f32(&mut k, cfg);
+    }
+    // attention (f32 softmax; probs quantized to softmax_bits)
+    let mut att = Mat::zeros(t, cfg.d_model);
+    let mut scores = vec![0f32; t];
+    let pq = (1i64 << (scheme.softmax_bits - 1)) as f32;
+    for head in 0..nh {
+        let base = head * hd;
+        for i in 0..t {
+            let qrow = &q.row(i)[base..base + hd];
+            let mut mx = f32::NEG_INFINITY;
+            for (j, s) in scores.iter_mut().enumerate().take(i + 1) {
+                let krow = &k.row(j)[base..base + hd];
+                let mut acc = 0f32;
+                for (a, b) in qrow.iter().zip(krow.iter()) {
+                    acc += a * b;
+                }
+                *s = acc;
+                mx = mx.max(acc);
+            }
+            let mut denom = 0f32;
+            for s in scores.iter_mut().take(i + 1) {
+                *s = (*s - mx).exp();
+                denom += *s;
+            }
+            let orow = &mut att.row_mut(i)[base..base + hd];
+            for j in 0..=i {
+                // probability quantized to softmax_bits
+                let p = (scores[j] / denom * pq).round() / pq;
+                if p == 0.0 {
+                    continue;
+                }
+                let vrow = &vf.row(j)[base..base + hd];
+                for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                    *o += p * vv;
+                }
+            }
+        }
+    }
+    let attq = fq_act(&att, ab, mode);
+    let o = fq_linear(&attq, &l.wo);
+    let mut x = x_in.clone();
+    x.add_assign(&o);
+    let h2 = l.norm2.apply(&x, cfg.norm_eps, centered);
+    let h2q = fq_act(&h2, ab, mode);
+    let y = match &l.mlp {
+        Mlp::SwiGlu { wg, wu, wd } => {
+            let gate = fq_act(&fq_linear(&h2q, wg), 8, mode);
+            let up = fq_act(&fq_linear(&h2q, wu), 8, mode);
+            let mut act = Mat::zeros(t, cfg.d_ff);
+            for r in 0..t {
+                for c in 0..cfg.d_ff {
+                    let g = gate.at(r, c);
+                    let arg = match &sm.alpha {
+                        Some(a) => (g as f64 / a[c]) as f32,
+                        None => g,
+                    };
+                    let sig = 1.0 / (1.0 + (-arg).exp());
+                    *act.at_mut(r, c) = g * sig * up.at(r, c);
+                }
+            }
+            let actq = fq_act(&act, ab, mode);
+            fq_linear(&actq, wd)
+        }
+        Mlp::Relu { w1, w2 } => {
+            let mut a = fq_linear(&h2q, w1);
+            for vv in a.data.iter_mut() {
+                if *vv < 0.0 {
+                    *vv = 0.0;
+                }
+            }
+            let aq = fq_act(&a, ab, mode);
+            fq_linear(&aq, w2)
+        }
+    };
+    x.add_assign(&y);
+    x
+}
+
+fn rope_f32(x: &mut Mat, cfg: &ModelConfig) {
+    let h = cfg.n_heads;
+    let hd = cfg.d_model / h;
+    let half = hd / 2;
+    for t in 0..x.rows {
+        let pos = t as f64;
+        let row = x.row_mut(t);
+        for head in 0..h {
+            let base = head * hd;
+            for j in 0..half {
+                let inv = 1.0 / cfg.rope_theta.powf(j as f64 / half as f64);
+                let ang = pos * inv;
+                let (c, s) = (ang.cos() as f32, ang.sin() as f32);
+                let x1 = row[base + j];
+                let x2 = row[base + half + j];
+                row[base + j] = x1 * c - x2 * s;
+                row[base + half + j] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Norm;
+    use crate::util::rng::Pcg64;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            arch: Arch::Llama,
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            norm_eps: 1e-6,
+            name: "test".into(),
+        }
+    }
+
+    fn rand_layer(cfg: &ModelConfig, rng: &mut Pcg64) -> FpLayer {
+        let mut m = |r: usize, c: usize| {
+            Mat::from_vec(r, c,
+                (0..r * c).map(|_| (rng.normal() * 0.2) as f32).collect())
+        };
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        FpLayer {
+            norm1: Norm { g: vec![1.0; d], b: None },
+            norm2: Norm { g: vec![1.0; d], b: None },
+            wq: Linear { w: m(d, d), b: None },
+            wk: Linear { w: m(d, d), b: None },
+            wv: Linear { w: m(d, d), b: None },
+            wo: Linear { w: m(d, d), b: None },
+            mlp: Mlp::SwiGlu {
+                wg: Linear { w: m(d, f), b: None },
+                wu: Linear { w: m(d, f), b: None },
+                wd: Linear { w: m(f, d), b: None },
+            },
+        }
+    }
+
+    /// smoothing must be function-preserving on the FP path: run the
+    /// fq block at very high bit width (negligible quant noise) with and
+    /// without smoothing; outputs must agree.
+    #[test]
+    fn smoothing_preserves_function() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg64::new(77);
+        let layer = rand_layer(&cfg, &mut rng);
+        let x = Mat::from_vec(6, 16,
+            (0..96).map(|_| (rng.normal()) as f32).collect());
+        let hi = QuantScheme {
+            w_bits: 16, a_bits: 16, softmax_bits: 16, sig_bits: 16,
+            clip: None,
+        };
+        let id = Smooth::default();
+        let y0 = fq_block_forward(&fq_weights(&layer, hi.w_bits), &cfg,
+                                  &x, hi, ActQuant::PerToken, &id);
+        let s: Vec<f64> = (0..16).map(|_| rng.range_f64(0.25, 4.0)).collect();
+        let sf: Vec<f64> = (0..24).map(|_| rng.range_f64(0.25, 4.0)).collect();
+        let sm = Smooth {
+            norm1: Some(s.clone()),
+            norm2: Some(s.clone()),
+            v: Some(s),
+            up: Some(sf.clone()),
+            alpha: Some(sf),
+        };
+        let folded = fq_weights(&smooth_layer(&layer, &sm), hi.w_bits);
+        let y1 = fq_block_forward(&folded, &cfg, &x, hi,
+                                  ActQuant::PerToken, &sm);
+        let mse = y0.mse(&y1);
+        let scale: f64 = y0.data.iter()
+            .map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            / y0.data.len() as f64;
+        assert!(mse < scale * 5e-4, "mse {mse} vs scale {scale}");
+    }
+
+    /// smoothing must HELP when a channel outlier is injected.
+    #[test]
+    fn smoothing_reduces_reconstruction_error() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg64::new(42);
+        let mut layer = rand_layer(&cfg, &mut rng);
+        // inject an outlier channel into norm1 gamma (Fig. 1 pathology)
+        layer.norm1.g[3] = 24.0;
+        for w in [&mut layer.wq.w, &mut layer.wk.w, &mut layer.wv.w] {
+            w.scale_row(3, 1.0 / 24.0);
+        }
+        let x = Mat::from_vec(8, 16,
+            (0..128).map(|_| rng.normal() as f32).collect());
+        let hi = QuantScheme {
+            w_bits: 16, a_bits: 16, softmax_bits: 16, sig_bits: 16,
+            clip: None,
+        };
+        let ref_out = fq_block_forward(&fq_weights(&layer, hi.w_bits),
+                                       &cfg, &x, hi, ActQuant::PerToken,
+                                       &Smooth::default());
+        let low = QuantScheme::new(4, 4);
+        let y_plain = fq_block_forward(&fq_weights(&layer, low.w_bits),
+                                       &cfg, &x, low, ActQuant::PerToken,
+                                       &Smooth::default());
+        // smooth norm1 with the known inverse
+        let mut s = vec![1.0f64; 16];
+        s[3] = 24.0;
+        let sm = Smooth { norm1: Some(s), ..Default::default() };
+        let folded = fq_weights(&smooth_layer(&layer, &sm), low.w_bits);
+        let y_smooth = fq_block_forward(&folded, &cfg, &x, low,
+                                        ActQuant::PerToken, &sm);
+        let e_plain = y_plain.mse(&ref_out);
+        let e_smooth = y_smooth.mse(&ref_out);
+        assert!(
+            e_smooth < e_plain * 0.7,
+            "smooth {e_smooth} vs plain {e_plain}"
+        );
+    }
+}

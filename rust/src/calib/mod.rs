@@ -1,0 +1,302 @@
+//! FSBR — Fully-Smooth Block-Reconstruction (paper §3.2).
+//!
+//! For every transformer block, FSBR learns channel-wise smoothing
+//! vectors for ALL equivalent-transformation pairs:
+//!
+//!   1. serial norm -> linear      (norm1 -> qkv, norm2 -> gate/up/w1)
+//!   2. serial linear -> linear    (v -> o through attention;
+//!                                  up/act -> down)
+//!   3. parallel linear-linear +
+//!      non-linear act-smooth      (gate vs up with the SiLU
+//!                                  decomposition sigma'(x)=sigma(x/s))
+//!
+//! Each vector is parameterized by the migration exponent alpha:
+//!     s_j = act_amax_j^alpha / w_amax_j^(1-alpha)
+//! (SmoothQuant's form; alpha = 0 -> no smoothing, 0.5 -> balanced).
+//! The paper optimizes the vectors by differentiable block
+//! reconstruction; on CPU we perform the same objective with
+//! deterministic coordinate descent over pairs and a grid over alpha,
+//! measuring fake-quantized block-output MSE against the FP block on
+//! the calibration set (see `block::fq_block_forward`). SmoothQuant and
+//! OmniQuant are the alpha=0.5 / norm-linear-only special cases
+//! (paper: "SmoothQuant and OmniQuant are subsets of FSBR").
+
+pub mod block;
+pub mod stats;
+
+use crate::config::Arch;
+use crate::nn::{FpModel, Mlp};
+use crate::quant::QuantScheme;
+use crate::tensor::Mat;
+use block::{capture_block_io, fq_block_forward, fq_weights,
+            smooth_layer, ActQuant, BlockIo, Smooth};
+use stats::ActStats;
+
+/// Per-layer smoothing vectors (identity when empty). All vectors are in
+/// the "divide activation / multiply following weight rows" convention.
+#[derive(Debug, Clone, Default)]
+pub struct LayerSmoothing {
+    /// norm1 output channels (d_model)
+    pub norm1: Option<Vec<f64>>,
+    /// norm2 output channels (d_model)
+    pub norm2: Option<Vec<f64>>,
+    /// v output channels (d_model): wv cols /= s, wo rows *= s
+    pub v: Option<Vec<f64>>,
+    /// up/act channels (d_ff): wu|w1 cols /= s, wd|w2 rows *= s
+    pub up: Option<Vec<f64>>,
+    /// SwiGLU act-smooth (d_ff): wg cols *= a, wu cols /= a,
+    /// sigma'(x) = sigma(x/a) at runtime (llama only)
+    pub alpha: Option<Vec<f64>>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SmoothingParams {
+    pub layers: Vec<LayerSmoothing>,
+}
+
+/// Which pairs to search (lets Table 4 ablate and lets SmoothQuant /
+/// OmniQuant-lite reuse the machinery as subsets).
+#[derive(Debug, Clone, Copy)]
+pub struct FsbrOptions {
+    pub norm_linear: bool,
+    pub serial_linear: bool,
+    pub act_smooth: bool,
+    /// alpha grid searched per pair
+    pub grid: &'static [f64],
+    /// coordinate-descent passes over the pairs
+    pub passes: usize,
+    /// fake-quant mode used in the reconstruction objective
+    pub act_quant: ActQuant,
+}
+
+pub const FSBR_GRID: &[f64] =
+    &[0.0, 0.25, 0.4, 0.5, 0.6, 0.75, 0.9];
+
+impl Default for FsbrOptions {
+    fn default() -> Self {
+        Self {
+            norm_linear: true,
+            serial_linear: true,
+            act_smooth: true,
+            grid: FSBR_GRID,
+            passes: 2,
+            act_quant: ActQuant::PerToken,
+        }
+    }
+}
+
+impl FsbrOptions {
+    /// SmoothQuant: fixed alpha = 0.5, norm->linear pairs only.
+    pub fn smoothquant() -> Self {
+        Self {
+            norm_linear: true,
+            serial_linear: false,
+            act_smooth: false,
+            grid: &[0.5],
+            passes: 1,
+            act_quant: ActQuant::PerToken,
+        }
+    }
+
+    /// OmniQuant-lite: learned (grid) alpha on norm->linear pairs.
+    pub fn omniquant() -> Self {
+        Self {
+            norm_linear: true,
+            serial_linear: false,
+            act_smooth: false,
+            grid: FSBR_GRID,
+            passes: 1,
+            act_quant: ActQuant::PerToken,
+        }
+    }
+}
+
+/// Compute the smoothing vector for one pair from amax statistics.
+///   s_j = act_amax_j^alpha / w_amax_j^(1-alpha), clamped to [1/64, 64],
+/// normalized so that median(s) = 1 (pure re-balancing, no global gain).
+pub fn smoothing_vector(act_amax: &[f32], w_amax: &[f32], alpha: f64)
+    -> Vec<f64> {
+    let n = act_amax.len();
+    let mut s: Vec<f64> = (0..n)
+        .map(|j| {
+            let a = (act_amax[j] as f64).max(1e-6);
+            let w = (w_amax.get(j).copied().unwrap_or(1.0) as f64)
+                .max(1e-6);
+            (a.powf(alpha) / w.powf(1.0 - alpha)).clamp(1.0 / 64.0, 64.0)
+        })
+        .collect();
+    let mut sorted = s.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = sorted[n / 2].max(1e-9);
+    for v in s.iter_mut() {
+        *v /= med;
+    }
+    s
+}
+
+/// Per-output-channel-pair amax of weight rows (the "w" side of a
+/// smoothing pair): max over the named matrices' row j.
+fn rows_amax(mats: &[&Mat]) -> Vec<f32> {
+    let n = mats[0].rows;
+    let mut out = vec![0f32; n];
+    for m in mats {
+        for (j, o) in out.iter_mut().enumerate() {
+            let ra = m.row(j).iter().fold(0f32, |a, &v| a.max(v.abs()));
+            if ra > *o {
+                *o = ra;
+            }
+        }
+    }
+    out
+}
+
+fn cols_amax(m: &Mat) -> Vec<f32> {
+    m.col_amax()
+}
+
+/// The FSBR calibration driver. Returns smoothing params; the caller
+/// folds them (`fold_smoothing`) and quantizes.
+pub fn fsbr_calibrate(
+    fp: &FpModel,
+    windows: &[Vec<u16>],
+    scheme: QuantScheme,
+    opts: FsbrOptions,
+) -> SmoothingParams {
+    let stats = ActStats::collect(fp, windows);
+    let ios: Vec<BlockIo> = capture_block_io(fp, windows);
+    let mut params = SmoothingParams {
+        layers: vec![LayerSmoothing::default(); fp.cfg.n_layers],
+    };
+    for (li, layer) in fp.layers.iter().enumerate() {
+        let io = &ios[li];
+        let amax = |site: &str| -> Vec<f32> {
+            stats
+                .get(li, site)
+                .map(|s| s.chan_amax.clone())
+                .unwrap_or_default()
+        };
+        // candidate pair list: (field id, act amax, weight-rows amax)
+        let mut pairs: Vec<(usize, Vec<f32>, Vec<f32>)> = Vec::new();
+        if opts.norm_linear {
+            pairs.push((0, amax("norm1_out"),
+                        rows_amax(&[&layer.wq.w, &layer.wk.w,
+                                    &layer.wv.w])));
+            let norm2_w = match &layer.mlp {
+                Mlp::SwiGlu { wg, wu, .. } =>
+                    rows_amax(&[&wg.w, &wu.w]),
+                Mlp::Relu { w1, .. } => rows_amax(&[&w1.w]),
+            };
+            pairs.push((1, amax("norm2_out"), norm2_w));
+        }
+        if opts.serial_linear {
+            pairs.push((2, amax("v_out"), rows_amax(&[&layer.wo.w])));
+            let (up_act, down_w) = match &layer.mlp {
+                Mlp::SwiGlu { wd, .. } =>
+                    (amax("up_out"), rows_amax(&[&wd.w])),
+                Mlp::Relu { w2, .. } =>
+                    (amax("mlp_act"), rows_amax(&[&w2.w])),
+            };
+            let _ = cols_amax; // (kept for symmetric uses in benches)
+            pairs.push((3, up_act, down_w));
+        }
+        if opts.act_smooth && fp.cfg.arch == Arch::Llama {
+            // act-act pair: balance gate vs up channel ranges
+            pairs.push((4, amax("gate_out"), {
+                // "weight" side is the up activation amax: s_j =
+                // (gate/up)^alpha balances the two operands of the
+                // elementwise product.
+                amax("up_out")
+            }));
+        }
+        // coordinate descent over pairs
+        for _pass in 0..opts.passes {
+            for (field, act_a, w_a) in &pairs {
+                if act_a.is_empty() || w_a.is_empty() {
+                    continue;
+                }
+                let mut best: (f64, Option<Vec<f64>>) = (f64::INFINITY,
+                                                         None);
+                for &alpha in opts.grid {
+                    let cand = if alpha == 0.0 {
+                        None
+                    } else {
+                        Some(smoothing_vector(act_a, w_a, alpha))
+                    };
+                    let mut trial = params.layers[li].clone();
+                    set_field(&mut trial, *field, cand.clone());
+                    let sm = Smooth::from(&trial);
+                    // fold + weight-quantize ONCE per candidate; windows
+                    // then only pay activations (16x less weight quant)
+                    let test_layer =
+                        fq_weights(&smooth_layer(layer, &sm),
+                                   scheme.w_bits);
+                    let mut mse = 0f64;
+                    for (x_in, x_out) in
+                        io.inputs.iter().zip(io.outputs.iter())
+                    {
+                        let y = fq_block_forward(
+                            &test_layer, &fp.cfg, x_in, scheme,
+                            opts.act_quant, &sm,
+                        );
+                        mse += y.mse(x_out);
+                    }
+                    if mse < best.0 {
+                        best = (mse, cand);
+                    }
+                }
+                set_field(&mut params.layers[li], *field, best.1);
+            }
+        }
+    }
+    params
+}
+
+fn set_field(l: &mut LayerSmoothing, field: usize, v: Option<Vec<f64>>) {
+    match field {
+        0 => l.norm1 = v,
+        1 => l.norm2 = v,
+        2 => l.v = v,
+        3 => l.up = v,
+        _ => l.alpha = v,
+    }
+}
+
+/// Fold smoothing into a CLONE of the FP model (function preserving up
+/// to float rounding; alpha is NOT folded — it must survive to the
+/// DI-SwiGLU runtime op and is handled by int_model::quantize /
+/// baselines::fakequant).
+pub fn fold_smoothing(fp: &FpModel, params: &SmoothingParams) -> FpModel {
+    let mut out = fp.clone();
+    for (li, l) in out.layers.iter_mut().enumerate() {
+        let sm = Smooth::from(&params.layers[li]);
+        *l = smooth_layer(l, &sm);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothing_vector_balances() {
+        // channel 3 is an activation outlier -> its s must be largest
+        let act = vec![1.0f32, 1.0, 1.0, 64.0];
+        let w = vec![1.0f32; 4];
+        let s = smoothing_vector(&act, &w, 0.5);
+        assert!(s[3] > s[0] * 4.0, "{s:?}");
+        // alpha=0 -> flat
+        let s0 = smoothing_vector(&act, &w, 0.0);
+        assert!((s0[0] - s0[3]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smoothing_vector_median_normalized() {
+        let act = vec![0.5f32, 2.0, 8.0, 32.0, 1.0];
+        let w = vec![0.3f32, 0.1, 0.5, 0.2, 0.4];
+        let s = smoothing_vector(&act, &w, 0.5);
+        let mut sorted = s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((sorted[2] - 1.0).abs() < 1e-9);
+    }
+}

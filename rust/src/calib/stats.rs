@@ -1,0 +1,131 @@
+//! Activation statistics collection (per-channel / per-token amax) via
+//! the FP model's observer hook. Feeds FSBR smoothing, the static-scale
+//! baselines, and the Fig. 1/2/6 distribution benches.
+
+use crate::nn::FpModel;
+use crate::tensor::Mat;
+use std::collections::BTreeMap;
+
+/// Per-site accumulated statistics.
+#[derive(Debug, Clone, Default)]
+pub struct SiteStats {
+    /// per-channel max |x|
+    pub chan_amax: Vec<f32>,
+    /// per-channel min / max (for asymmetric static scales)
+    pub chan_min: Vec<f32>,
+    pub chan_max: Vec<f32>,
+    /// tensor-level min / max
+    pub t_min: f32,
+    pub t_max: f32,
+    /// per-token amax samples (for token-variance figures)
+    pub token_amax: Vec<f32>,
+    pub count: usize,
+}
+
+impl SiteStats {
+    fn update(&mut self, x: &Mat) {
+        if self.chan_amax.is_empty() {
+            self.chan_amax = vec![0.0; x.cols];
+            self.chan_min = vec![f32::INFINITY; x.cols];
+            self.chan_max = vec![f32::NEG_INFINITY; x.cols];
+            self.t_min = f32::INFINITY;
+            self.t_max = f32::NEG_INFINITY;
+        }
+        for r in 0..x.rows {
+            let row = x.row(r);
+            let mut tok = 0f32;
+            for (c, &v) in row.iter().enumerate() {
+                let a = v.abs();
+                if a > self.chan_amax[c] {
+                    self.chan_amax[c] = a;
+                }
+                if v < self.chan_min[c] {
+                    self.chan_min[c] = v;
+                }
+                if v > self.chan_max[c] {
+                    self.chan_max[c] = v;
+                }
+                if a > tok {
+                    tok = a;
+                }
+            }
+            if self.token_amax.len() < 4096 {
+                self.token_amax.push(tok);
+            }
+            self.t_min = self.t_min.min(row.iter().cloned()
+                .fold(f32::INFINITY, f32::min));
+            self.t_max = self.t_max.max(row.iter().cloned()
+                .fold(f32::NEG_INFINITY, f32::max));
+        }
+        self.count += x.rows;
+    }
+
+    /// Channel-imbalance metric: max(chan_amax) / median(chan_amax) —
+    /// the quantity Fig. 1/2/6 visualize shrinking under FSBR.
+    pub fn channel_imbalance(&self) -> f64 {
+        if self.chan_amax.is_empty() {
+            return 1.0;
+        }
+        let mut s: Vec<f32> = self.chan_amax.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = s[s.len() / 2].max(1e-9);
+        (s[s.len() - 1] / med) as f64
+    }
+
+    /// Token-imbalance metric: max / median over token amax.
+    pub fn token_imbalance(&self) -> f64 {
+        if self.token_amax.is_empty() {
+            return 1.0;
+        }
+        let mut s = self.token_amax.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = s[s.len() / 2].max(1e-9);
+        (s[s.len() - 1] / med) as f64
+    }
+}
+
+/// All sites, keyed by (layer, site-name). Layer usize::MAX = model-level.
+#[derive(Debug, Default)]
+pub struct ActStats {
+    pub sites: BTreeMap<(usize, String), SiteStats>,
+}
+
+impl ActStats {
+    pub fn get(&self, layer: usize, site: &str) -> Option<&SiteStats> {
+        self.sites.get(&(layer, site.to_string()))
+    }
+
+    /// Run the model over calibration windows, recording every site.
+    pub fn collect(model: &FpModel, windows: &[Vec<u16>]) -> ActStats {
+        let mut stats = ActStats::default();
+        for w in windows {
+            let mut cb = |layer: usize, site: &str, x: &Mat| {
+                stats
+                    .sites
+                    .entry((layer, site.to_string()))
+                    .or_default()
+                    .update(x);
+            };
+            let _ = model.forward_full(w, 0, Some(&mut cb));
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_metrics() {
+        let mut s = SiteStats::default();
+        let x = Mat::from_vec(2, 4, vec![1.0, 1.0, 1.0, 50.0,
+                                         -1.0, 0.5, 1.0, -40.0]);
+        s.update(&x);
+        assert!(s.channel_imbalance() > 20.0);
+        assert_eq!(s.chan_amax, vec![1.0, 1.0, 1.0, 50.0]);
+        assert_eq!(s.t_max, 50.0);
+        assert_eq!(s.t_min, -40.0);
+        assert_eq!(s.count, 2);
+    }
+}

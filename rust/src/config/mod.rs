@@ -1,0 +1,116 @@
+//! Model / scheme configuration, parsed from artifacts/manifest.json and
+//! weights metadata (the contract with python/compile/model.py).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// pre-RMSNorm, RoPE, SwiGLU, no biases (LLaMA family stand-in)
+    Llama,
+    /// pre-LayerNorm, learned positions, ReLU MLP, biases (OPT stand-in)
+    Opt,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Result<Arch> {
+        match s {
+            "llama" => Ok(Arch::Llama),
+            "opt" => Ok(Arch::Opt),
+            _ => Err(anyhow!("unknown arch {s:?}")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Arch::Llama => "llama",
+            Arch::Opt => "opt",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub arch: Arch,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub name: String,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        let get = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| anyhow!("config missing {k:?}"))
+        };
+        Ok(ModelConfig {
+            arch: Arch::parse(
+                get("arch")?.as_str().ok_or_else(|| anyhow!("arch type"))?,
+            )?,
+            vocab: get("vocab")?.as_i64().unwrap_or(256) as usize,
+            d_model: get("d_model")?.as_i64().unwrap_or(128) as usize,
+            n_layers: get("n_layers")?.as_i64().unwrap_or(4) as usize,
+            n_heads: get("n_heads")?.as_i64().unwrap_or(4) as usize,
+            d_ff: get("d_ff")?.as_i64().unwrap_or(256) as usize,
+            max_seq: get("max_seq")?.as_i64().unwrap_or(256) as usize,
+            rope_theta: get("rope_theta")?.as_f64().unwrap_or(10000.0),
+            norm_eps: get("norm_eps")?.as_f64().unwrap_or(1e-6),
+            name: get("name")?
+                .as_str()
+                .unwrap_or("unnamed")
+                .to_string(),
+        })
+    }
+
+    /// Linear layer names per block, in the canonical order shared with
+    /// python (`model._linears`).
+    pub fn linear_kinds(&self) -> Vec<&'static str> {
+        match self.arch {
+            Arch::Llama => vec!["attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                                "mlp.wg", "mlp.wu", "mlp.wd"],
+            Arch::Opt => vec!["attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                              "mlp.w1", "mlp.w2"],
+        }
+    }
+
+    /// (in, out) shape of a linear by kind suffix.
+    pub fn linear_shape(&self, kind: &str) -> (usize, usize) {
+        let (d, f) = (self.d_model, self.d_ff);
+        match kind.rsplit('.').next().unwrap() {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "wg" | "wu" | "w1" => (d, f),
+            "wd" | "w2" => (f, d),
+            other => panic!("unknown linear kind {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let j = Json::parse(
+            r#"{"arch":"llama","vocab":256,"d_model":128,"n_layers":4,
+                "n_heads":4,"d_ff":256,"max_seq":256,
+                "rope_theta":10000.0,"norm_eps":1e-6,"name":"t"}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.arch, Arch::Llama);
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.linear_kinds().len(), 7);
+        assert_eq!(c.linear_shape("mlp.wd"), (256, 128));
+    }
+}

@@ -1,0 +1,299 @@
+//! Continuous batcher: the scheduling core of the coordinator.
+//!
+//! Policy (vLLM-style continuous batching scaled to this testbed):
+//!  * a bounded number of ACTIVE sequences decode together, one token
+//!    per wave, with immediate eviction on completion;
+//!  * admissions happen between waves: a waiting request is admitted
+//!    when (a) there is an active slot and (b) the KV budget admits its
+//!    prompt + generation headroom (admission control prevents cache
+//!    thrash);
+//!  * prefill is chunked so a long prompt cannot stall decode waves
+//!    beyond `prefill_chunk` tokens.
+
+use super::engine::{greedy, Engine, SeqState};
+use super::metrics::ServeMetrics;
+use super::{Request, Response};
+use crate::data;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// max concurrently-decoding sequences
+    pub max_batch: usize,
+    /// max total logical KV bytes across active sequences
+    pub kv_budget: usize,
+    /// max prompt tokens prefetched per scheduling step
+    pub prefill_chunk: usize,
+    /// stop token (byte); generation also stops at max_new
+    pub stop_token: Option<u16>,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            kv_budget: 64 << 20,
+            prefill_chunk: 64,
+            stop_token: Some(b'\n' as u16),
+        }
+    }
+}
+
+struct Active {
+    req: Request,
+    state: SeqState,
+    /// prompt tokens not yet prefilled (chunked prefill)
+    pending_prompt: Vec<u16>,
+    generated: Vec<u16>,
+    last_logits: Option<Vec<f32>>,
+    ttft: Option<f64>,
+    prompt_len: usize,
+}
+
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    active: Vec<Active>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher { cfg, queue: VecDeque::new(), active: Vec::new() }
+    }
+
+    pub fn enqueue(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// One scheduling step; returns finished responses.
+    pub fn step<E: Engine>(&mut self, engine: &E,
+                           metrics: &mut ServeMetrics) -> Vec<Response> {
+        let step_t0 = Instant::now();
+        // ---- admission ----
+        while self.active.len() < self.cfg.max_batch {
+            let kv_used: usize = self
+                .active
+                .iter()
+                .map(|a| engine.kv_bytes(&a.state))
+                .sum();
+            let Some(front) = self.queue.front() else { break };
+            // rough admission estimate: prompt + max_new tokens of KV
+            let est = (front.prompt.len() + front.max_new) * 64;
+            if kv_used + est > self.cfg.kv_budget
+                && !self.active.is_empty()
+            {
+                metrics.admission_blocks += 1;
+                break;
+            }
+            let req = self.queue.pop_front().unwrap();
+            let mut prompt = data::encode(&req.prompt);
+            let max_ctx = engine.max_seq().saturating_sub(req.max_new + 1);
+            if prompt.len() > max_ctx {
+                prompt.truncate(max_ctx);
+            }
+            if prompt.is_empty() {
+                prompt.push(b' ' as u16);
+            }
+            let prompt_len = prompt.len();
+            // chunked prefill: first chunk now, rest in later steps
+            let first = prompt
+                [..prompt.len().min(self.cfg.prefill_chunk)]
+                .to_vec();
+            let rest = prompt[first.len()..].to_vec();
+            let t0 = Instant::now();
+            let (state, logits) = engine.prefill(&first);
+            metrics.prefill_tokens += first.len() as u64;
+            metrics.prefill_time_s += t0.elapsed().as_secs_f64();
+            self.active.push(Active {
+                req,
+                state,
+                pending_prompt: rest,
+                generated: Vec::new(),
+                last_logits: Some(logits),
+                ttft: None,
+                prompt_len,
+            });
+        }
+        // ---- one decode/prefill wave over active sequences ----
+        let mut finished_idx: Vec<usize> = Vec::new();
+        for (i, a) in self.active.iter_mut().enumerate() {
+            if !a.pending_prompt.is_empty() {
+                // continue chunked prefill
+                let n = a.pending_prompt.len().min(self.cfg.prefill_chunk);
+                let chunk: Vec<u16> =
+                    a.pending_prompt.drain(..n).collect();
+                let t0 = Instant::now();
+                let mut logits = a.last_logits.take().unwrap();
+                for &t in &chunk {
+                    logits = engine.decode(&mut a.state, t);
+                }
+                metrics.prefill_tokens += chunk.len() as u64;
+                metrics.prefill_time_s += t0.elapsed().as_secs_f64();
+                a.last_logits = Some(logits);
+                continue;
+            }
+            // decode one token
+            let logits = a.last_logits.as_ref().expect("logits");
+            let next = greedy(logits);
+            let stop = Some(next) == self.cfg.stop_token
+                || a.generated.len() + 1 >= a.req.max_new
+                || a.prompt_len + a.generated.len() + 1
+                    >= engine.max_seq();
+            a.generated.push(next);
+            if a.ttft.is_none() {
+                a.ttft =
+                    Some(a.req.submitted.elapsed().as_secs_f64());
+            }
+            metrics.decode_tokens += 1;
+            if stop {
+                finished_idx.push(i);
+            } else {
+                let t0 = Instant::now();
+                let logits = engine.decode(&mut a.state, next);
+                metrics.decode_time_s += t0.elapsed().as_secs_f64();
+                a.last_logits = Some(logits);
+            }
+        }
+        metrics.steps += 1;
+        metrics.batch_occupancy_sum += self.active.len() as u64;
+        metrics.step_time_s += step_t0.elapsed().as_secs_f64();
+        // ---- evict finished ----
+        let mut out = Vec::new();
+        for i in finished_idx.into_iter().rev() {
+            let a = self.active.swap_remove(i);
+            let latency = a.req.submitted.elapsed().as_secs_f64();
+            metrics.record_request(latency, a.ttft.unwrap_or(latency));
+            out.push(Response {
+                id: a.req.id,
+                text: data::decode(&a.generated),
+                n_prompt: a.prompt_len,
+                n_generated: a.generated.len(),
+                ttft: a.ttft.unwrap_or(latency),
+                latency,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic dummy engine: next token = (last + 1) % 256.
+    struct Echo;
+
+    impl Engine for Echo {
+        fn max_seq(&self) -> usize {
+            128
+        }
+
+        fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>) {
+            let last = *prompt.last().unwrap();
+            (SeqState::Fp { tokens: prompt.to_vec() },
+             one_hot(((last as usize) + 1) % 256))
+        }
+
+        fn decode(&self, state: &mut SeqState, token: u16)
+            -> Vec<f32> {
+            if let SeqState::Fp { tokens } = state {
+                tokens.push(token);
+            }
+            one_hot(((token as usize) + 1) % 256)
+        }
+
+        fn kv_bytes(&self, _state: &SeqState) -> usize {
+            64
+        }
+    }
+
+    fn one_hot(i: usize) -> Vec<f32> {
+        let mut v = vec![0f32; 256];
+        v[i] = 1.0;
+        v
+    }
+
+    #[test]
+    fn generates_incrementing_bytes() {
+        let mut b = Batcher::new(BatcherConfig {
+            stop_token: None,
+            ..Default::default()
+        });
+        let mut m = ServeMetrics::default();
+        b.enqueue(Request {
+            id: 1,
+            prompt: "a".into(),
+            max_new: 4,
+            submitted: Instant::now(),
+        });
+        let mut done = Vec::new();
+        while !b.is_idle() {
+            done.extend(b.step(&Echo, &mut m));
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].text, "bcde");
+        assert_eq!(done[0].n_generated, 4);
+        assert!(m.decode_tokens >= 4);
+    }
+
+    #[test]
+    fn batches_multiple_and_finishes_all() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 3,
+            stop_token: None,
+            ..Default::default()
+        });
+        let mut m = ServeMetrics::default();
+        for i in 0..7u64 {
+            b.enqueue(Request {
+                id: i,
+                prompt: "x".into(),
+                max_new: 3,
+                submitted: Instant::now(),
+            });
+        }
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while !b.is_idle() {
+            done.extend(b.step(&Echo, &mut m));
+            guard += 1;
+            assert!(guard < 100, "batcher did not converge");
+        }
+        assert_eq!(done.len(), 7);
+        // occupancy must have exceeded 1 (real batching happened)
+        assert!(m.batch_occupancy_sum > m.steps);
+    }
+
+    #[test]
+    fn long_prompts_are_chunked() {
+        let mut b = Batcher::new(BatcherConfig {
+            prefill_chunk: 8,
+            stop_token: None,
+            ..Default::default()
+        });
+        let mut m = ServeMetrics::default();
+        let long: String =
+            std::iter::repeat('y').take(40).collect();
+        b.enqueue(Request {
+            id: 1,
+            prompt: long,
+            max_new: 2,
+            submitted: Instant::now(),
+        });
+        let mut done = Vec::new();
+        while !b.is_idle() {
+            done.extend(b.step(&Echo, &mut m));
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(m.prefill_tokens, 40);
+    }
+}

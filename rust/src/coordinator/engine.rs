@@ -1,0 +1,107 @@
+//! Inference engine abstraction + implementations. The coordinator only
+//! sees `Engine`; the integer engine (IntModel + IntKvCache) is the
+//! deployment path, the FP engine exists for baseline comparisons in
+//! the serving benches.
+
+use crate::int_model::kv_cache::IntKvCache;
+use crate::int_model::IntModel;
+use crate::nn::FpModel;
+use std::sync::Arc;
+
+/// Per-sequence decoding state owned by the coordinator.
+pub enum SeqState {
+    Int { cache: IntKvCache },
+    Fp { tokens: Vec<u16> },
+}
+
+pub trait Engine: Send {
+    /// Max context length.
+    fn max_seq(&self) -> usize;
+
+    /// Create state and run prefill over the prompt; returns (state,
+    /// logits of the last prompt position).
+    fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>);
+
+    /// One decode step: feed `token`, return next-token logits.
+    fn decode(&self, state: &mut SeqState, token: u16) -> Vec<f32>;
+
+    /// Logical KV bytes held by a state (admission control input).
+    fn kv_bytes(&self, state: &SeqState) -> usize;
+}
+
+/// Greedy sampling at the model boundary (argmax over f32 logits).
+pub fn greedy(logits: &[f32]) -> u16 {
+    let mut best = (f32::NEG_INFINITY, 0usize);
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best.0 {
+            best = (v, i);
+        }
+    }
+    best.1 as u16
+}
+
+/// The integer-only serving engine.
+pub struct IntEngine {
+    pub model: Arc<IntModel>,
+}
+
+impl Engine for IntEngine {
+    fn max_seq(&self) -> usize {
+        self.model.cfg.max_seq
+    }
+
+    fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>) {
+        let mut cache = IntKvCache::new(&self.model);
+        let logits = self.model.prefill(prompt, &mut cache);
+        (SeqState::Int { cache }, logits)
+    }
+
+    fn decode(&self, state: &mut SeqState, token: u16) -> Vec<f32> {
+        match state {
+            SeqState::Int { cache } => self.model.decode_one(token, cache),
+            _ => panic!("wrong state kind"),
+        }
+    }
+
+    fn kv_bytes(&self, state: &SeqState) -> usize {
+        match state {
+            SeqState::Int { cache } => cache.logical_bytes(),
+            _ => 0,
+        }
+    }
+}
+
+/// FP baseline engine (recomputes the full prefix each step — the
+/// "no KV cache, float" strawman used in perf comparisons, and also a
+/// correctness oracle for the integer decode path).
+pub struct FpEngine {
+    pub model: Arc<FpModel>,
+}
+
+impl Engine for FpEngine {
+    fn max_seq(&self) -> usize {
+        self.model.cfg.max_seq
+    }
+
+    fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>) {
+        let logits = self.model.forward_last(prompt);
+        (SeqState::Fp { tokens: prompt.to_vec() }, logits)
+    }
+
+    fn decode(&self, state: &mut SeqState, token: u16) -> Vec<f32> {
+        match state {
+            SeqState::Fp { tokens } => {
+                tokens.push(token);
+                self.model.forward_last(tokens)
+            }
+            _ => panic!("wrong state kind"),
+        }
+    }
+
+    fn kv_bytes(&self, state: &SeqState) -> usize {
+        match state {
+            SeqState::Fp { tokens } => tokens.len() * 4,
+            _ => 0,
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Serving metrics: throughput, latency percentiles, batching behaviour.
+
+#[derive(Debug, Default, Clone)]
+pub struct ServeMetrics {
+    pub decode_tokens: u64,
+    pub prefill_tokens: u64,
+    pub decode_time_s: f64,
+    pub prefill_time_s: f64,
+    pub step_time_s: f64,
+    pub steps: u64,
+    pub batch_occupancy_sum: u64,
+    pub admission_blocks: u64,
+    pub latencies: Vec<f64>,
+    pub ttfts: Vec<f64>,
+}
+
+impl ServeMetrics {
+    pub fn record_request(&mut self, latency: f64, ttft: f64) {
+        self.latencies.push(latency);
+        self.ttfts.push(ttft);
+    }
+
+    pub fn requests(&self) -> usize {
+        self.latencies.len()
+    }
+
+    pub fn decode_tok_per_s(&self) -> f64 {
+        if self.decode_time_s > 0.0 {
+            self.decode_tokens as f64 / self.decode_time_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn prefill_tok_per_s(&self) -> f64 {
+        if self.prefill_time_s > 0.0 {
+            self.prefill_tokens as f64 / self.prefill_time_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn total_tok_per_s(&self) -> f64 {
+        let t = self.step_time_s;
+        if t > 0.0 {
+            (self.decode_tokens + self.prefill_tokens) as f64 / t
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps > 0 {
+            self.batch_occupancy_sum as f64 / self.steps as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn pct(xs: &[f64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[((p * (s.len() - 1) as f64).round() as usize).min(s.len() - 1)]
+    }
+
+    pub fn latency_p50(&self) -> f64 {
+        Self::pct(&self.latencies, 0.5)
+    }
+
+    pub fn latency_p99(&self) -> f64 {
+        Self::pct(&self.latencies, 0.99)
+    }
+
+    pub fn ttft_p50(&self) -> f64 {
+        Self::pct(&self.ttfts, 0.5)
+    }
+
+    pub fn print_summary(&self, label: &str) {
+        println!("--- serving metrics: {label} ---");
+        println!(
+            "requests {:>6}   decode {:>8} tok @ {:>9.1} tok/s   \
+             prefill {:>8} tok @ {:>9.1} tok/s",
+            self.requests(),
+            self.decode_tokens,
+            self.decode_tok_per_s(),
+            self.prefill_tokens,
+            self.prefill_tok_per_s(),
+        );
+        println!(
+            "latency p50 {:>7.3}s p99 {:>7.3}s   ttft p50 {:>7.3}s   \
+             occupancy {:>5.2}   admission blocks {}",
+            self.latency_p50(),
+            self.latency_p99(),
+            self.ttft_p50(),
+            self.mean_occupancy(),
+            self.admission_blocks,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(ServeMetrics::pct(&xs, 0.5), 51.0); // round(49.5)=50 -> xs[50]
+        assert_eq!(ServeMetrics::pct(&xs, 0.99), 99.0);
+        assert_eq!(ServeMetrics::pct(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut m = ServeMetrics::default();
+        m.decode_tokens = 100;
+        m.decode_time_s = 2.0;
+        assert!((m.decode_tok_per_s() - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,157 @@
+//! Serving coordinator: request router, continuous batcher, integer
+//! KV-cache manager and prefill/decode scheduler over the integer-only
+//! engine. Python never appears on this path — the engine is the rust
+//! `IntModel` (quantized offline) and, for the compose-proof, AOT PJRT
+//! executables loaded by `runtime`.
+//!
+//! Concurrency is std::thread + mpsc (the offline vendor set has no
+//! tokio); the coordinator loop owns the engine and serializes model
+//! access — on a 1-core testbed that IS the throughput-optimal design,
+//! and the batching policy (continuous batching with prefill admission
+//! control) is where the scheduling contribution lives.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod workload;
+
+use crate::data;
+use batcher::{Batcher, BatcherConfig};
+use engine::Engine;
+use metrics::ServeMetrics;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+    pub submitted: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub n_prompt: usize,
+    pub n_generated: usize,
+    /// time to first generated token (s)
+    pub ttft: f64,
+    /// total latency (s)
+    pub latency: f64,
+}
+
+/// Front handle: submit requests, receive responses.
+pub struct Coordinator {
+    pub tx: Sender<Request>,
+    pub rx: Receiver<Response>,
+    handle: Option<std::thread::JoinHandle<ServeMetrics>>,
+}
+
+impl Coordinator {
+    /// Spawn the coordinator loop over an engine.
+    pub fn spawn<E: Engine + 'static>(engine: E, cfg: BatcherConfig)
+        -> Coordinator {
+        let (req_tx, req_rx) = channel::<Request>();
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let handle = std::thread::spawn(move || {
+            run_loop(engine, cfg, req_rx, resp_tx)
+        });
+        Coordinator { tx: req_tx, rx: resp_rx, handle: Some(handle) }
+    }
+
+    /// Close the request side and join, returning serving metrics.
+    pub fn finish(mut self) -> ServeMetrics {
+        drop(self.tx);
+        self.handle
+            .take()
+            .expect("already finished")
+            .join()
+            .expect("coordinator panicked")
+    }
+}
+
+fn run_loop<E: Engine>(
+    engine: E,
+    cfg: BatcherConfig,
+    req_rx: Receiver<Request>,
+    resp_tx: Sender<Response>,
+) -> ServeMetrics {
+    let mut batcher = Batcher::new(cfg);
+    let mut metrics = ServeMetrics::default();
+    let mut closed = false;
+    loop {
+        // admit pending requests (non-blocking drain; block when idle)
+        if !closed {
+            if batcher.is_idle() {
+                match req_rx.recv() {
+                    Ok(r) => batcher.enqueue(r),
+                    Err(_) => closed = true,
+                }
+            }
+            loop {
+                match req_rx.try_recv() {
+                    Ok(r) => batcher.enqueue(r),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if closed && batcher.is_idle() {
+            break;
+        }
+        // one scheduling step: prefill admissions + one decode wave
+        let finished = batcher.step(&engine, &mut metrics);
+        for f in finished {
+            let _ = resp_tx.send(f);
+        }
+    }
+    metrics
+}
+
+/// Convenience: run a closed-loop workload through a coordinator and
+/// return (responses, metrics).
+pub fn run_workload<E: Engine + 'static>(
+    engine: E,
+    cfg: BatcherConfig,
+    requests: Vec<(String, usize)>,
+    inter_arrival_s: f64,
+) -> (Vec<Response>, ServeMetrics) {
+    let n = requests.len();
+    let coord = Coordinator::spawn(engine, cfg);
+    let tx = coord.tx.clone();
+    let feeder = std::thread::spawn(move || {
+        for (i, (prompt, max_new)) in requests.into_iter().enumerate() {
+            let _ = tx.send(Request {
+                id: i as u64,
+                prompt,
+                max_new,
+                submitted: Instant::now(),
+            });
+            if inter_arrival_s > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    inter_arrival_s,
+                ));
+            }
+        }
+    });
+    let mut responses = Vec::with_capacity(n);
+    for _ in 0..n {
+        match coord.rx.recv() {
+            Ok(r) => responses.push(r),
+            Err(_) => break,
+        }
+    }
+    feeder.join().expect("feeder panicked");
+    let metrics = coord.finish();
+    (responses, metrics)
+}
+
+/// Tokenize a prompt for the engines (byte-level).
+pub fn tokenize(prompt: &str) -> Vec<u16> {
+    data::encode(prompt)
+}

@@ -1,0 +1,88 @@
+//! Synthetic serving workloads: Poisson arrivals over corpus-derived
+//! prompts (the workload generator for the serving benches).
+
+use crate::data::Corpus;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    pub prompt_len: (usize, usize),
+    pub max_new: (usize, usize),
+    /// mean requests per second for open-loop arrival; 0 = closed loop
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self {
+            n_requests: 32,
+            prompt_len: (16, 64),
+            max_new: (8, 32),
+            rate: 0.0,
+            seed: 0xF00D,
+        }
+    }
+}
+
+/// Prompts sampled from the corpus val split.
+pub fn generate(spec: &WorkloadSpec, corpus: &Corpus)
+    -> Vec<(String, usize)> {
+    let mut rng = Pcg64::new(spec.seed);
+    let text = crate::data::decode(&corpus.val);
+    let bytes = text.as_bytes();
+    (0..spec.n_requests)
+        .map(|_| {
+            let plen = spec.prompt_len.0
+                + rng.below(spec.prompt_len.1 - spec.prompt_len.0 + 1);
+            let mlen = spec.max_new.0
+                + rng.below(spec.max_new.1 - spec.max_new.0 + 1);
+            let start =
+                rng.below(bytes.len().saturating_sub(plen + 1).max(1));
+            // snap to char boundary (ascii corpus, but be safe)
+            let mut s = start;
+            while s > 0 && !text.is_char_boundary(s) {
+                s -= 1;
+            }
+            let mut e = s + plen;
+            while e < text.len() && !text.is_char_boundary(e) {
+                e += 1;
+            }
+            (text[s..e].to_string(), mlen)
+        })
+        .collect()
+}
+
+/// Inter-arrival time for the spec (exponential for open loop).
+pub fn inter_arrival(spec: &WorkloadSpec) -> f64 {
+    if spec.rate > 0.0 {
+        1.0 / spec.rate
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_shapes() {
+        let corpus = Corpus {
+            train: vec![],
+            val: "the engineer builds a small bridge near the harbor. "
+                .repeat(20)
+                .bytes()
+                .map(|b| b as u16)
+                .collect(),
+        };
+        let spec = WorkloadSpec::default();
+        let w = generate(&spec, &corpus);
+        assert_eq!(w.len(), spec.n_requests);
+        for (p, m) in &w {
+            assert!(p.len() >= spec.prompt_len.0 - 1);
+            assert!(*m >= spec.max_new.0 && *m <= spec.max_new.1);
+        }
+    }
+}

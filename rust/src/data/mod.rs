@@ -1,0 +1,96 @@
+//! Data substrate: corpus loading, byte-level tokenizer, calibration
+//! sampling, and the synthetic zero-shot task suites (the stand-ins for
+//! the paper's WikiText2/C4 + PIQA/ARC/BoolQ/HellaSwag/WinoGrande).
+
+pub mod tasks;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Byte-level tokenizer (vocab = 256). Mirrors corpus.encode in python.
+pub fn encode(text: &str) -> Vec<u16> {
+    text.as_bytes().iter().map(|&b| b as u16).collect()
+}
+
+pub fn decode(tokens: &[u16]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| t as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// The corpus with its train/val split (written by python corpus.py via
+/// train.train_all; split sizes in corpus.meta.json).
+pub struct Corpus {
+    pub train: Vec<u16>,
+    pub val: Vec<u16>,
+}
+
+pub fn load_corpus(artifacts: &Path) -> Result<Corpus> {
+    let text = std::fs::read_to_string(artifacts.join("corpus.txt"))
+        .context("read corpus.txt")?;
+    let meta = std::fs::read_to_string(artifacts.join("corpus.meta.json"))
+        .context("read corpus.meta.json")?;
+    let meta = crate::util::json::Json::parse(&meta)
+        .map_err(|e| anyhow::anyhow!("corpus meta: {e}"))?;
+    let train_chars = meta
+        .get("train_chars")
+        .and_then(|v| v.as_i64())
+        .unwrap_or((text.len() as f64 * 0.9) as i64) as usize;
+    let toks = encode(&text);
+    let train = toks[..train_chars.min(toks.len())].to_vec();
+    let val = toks[train_chars.min(toks.len())..].to_vec();
+    Ok(Corpus { train, val })
+}
+
+impl Corpus {
+    /// Deterministic calibration sample: `n` windows of length `seq`
+    /// from the train split (the paper uses 128 reconstruction samples).
+    pub fn calib_windows(&self, n: usize, seq: usize, seed: u64)
+        -> Vec<Vec<u16>> {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let span = self.train.len().saturating_sub(seq + 1);
+        (0..n)
+            .map(|_| {
+                let start = rng.below(span.max(1));
+                self.train[start..start + seq].to_vec()
+            })
+            .collect()
+    }
+
+    /// Evaluation windows over the val split with a fixed stride
+    /// (sliding-window perplexity protocol).
+    pub fn val_windows(&self, seq: usize, stride: usize, limit: usize)
+        -> Vec<Vec<u16>> {
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        while start + seq + 1 <= self.val.len() && out.len() < limit {
+            out.push(self.val[start..start + seq + 1].to_vec());
+            start += stride;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "the engineer builds a small bridge.";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn windows_have_expected_shape() {
+        let c = Corpus {
+            train: (0..1000).map(|i| (i % 256) as u16).collect(),
+            val: (0..500).map(|i| (i % 256) as u16).collect(),
+        };
+        let cw = c.calib_windows(5, 64, 1);
+        assert_eq!(cw.len(), 5);
+        assert!(cw.iter().all(|w| w.len() == 64));
+        let vw = c.val_windows(128, 128, 100);
+        assert!(!vw.is_empty());
+        assert!(vw.iter().all(|w| w.len() == 129));
+    }
+}

@@ -1,0 +1,297 @@
+//! Synthetic zero-shot task suites (stand-ins for PIQA / ARC-e / ARC-c /
+//! BoolQ / HellaSwag / WinoGrande — paper Table 3).
+//!
+//! Each suite is a set of multiple-choice items scored by
+//! length-normalized continuation log-probability — the same scoring
+//! rule lm-eval-harness applies to the real benchmarks. Items are built
+//! from the SAME grammar as the training corpus (corpus.py), so a
+//! trained tiny model scores well above chance on the FP baseline and
+//! quantization damage shows up as accuracy deltas.
+
+use crate::util::rng::XorShift32;
+
+/// vocabulary fragments — MUST stay in sync with python corpus.py
+const SUBJECTS: &[&str] = &[
+    "the engineer", "a quiet student", "the old captain", "my neighbor",
+    "the tired doctor", "a young painter", "the night guard",
+    "the chess player", "an honest merchant", "the river pilot",
+    "the clockmaker", "a wandering poet",
+];
+const VERBS_S: &[&str] = &[
+    "builds", "paints", "repairs", "studies", "watches", "measures",
+    "records", "carries", "designs", "inspects", "sharpens", "collects",
+];
+const VERBS_P: &[&str] = &[
+    "build", "paint", "repair", "study", "watch", "measure", "record",
+    "carry", "design", "inspect", "sharpen", "collect",
+];
+const SUBJECTS_PL: &[&str] = &[
+    "the engineers", "two quiet students", "the old captains",
+    "my neighbors", "the tired doctors", "some young painters",
+    "the night guards", "the chess players", "honest merchants",
+    "the river pilots",
+];
+const OBJECTS: &[&str] = &[
+    "a small bridge", "the copper lantern", "an iron gate",
+    "the wooden boat", "a stone tower", "the broken compass",
+    "a silver bell", "the long ladder", "an oak table", "the narrow road",
+    "a glass prism", "the heavy anchor",
+];
+const PLACES: &[&str] = &[
+    "near the harbor", "behind the mill", "under the archway",
+    "by the canal", "inside the workshop", "at the market",
+    "on the hillside", "along the pier", "beside the granary",
+    "within the old walls",
+];
+const TIMES: &[&str] = &[
+    "every morning", "before dawn", "after the storm", "in late autumn",
+    "during the festival", "on quiet evenings", "at the turn of the tide",
+    "when the bells ring", "in the dry season",
+];
+const ADJ: &[&str] = &[
+    "careful", "patient", "curious", "steady", "practical", "stubborn",
+    "cheerful", "precise", "weary", "bold",
+];
+
+/// One multiple-choice item: shared prefix, candidate continuations,
+/// index of the correct one.
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub prefix: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    /// grammatical continuation after a subject (PIQA stand-in)
+    Continuation,
+    /// subject-verb number agreement (ARC-e stand-in)
+    Agreement,
+    /// 4-way object selection after copy context (ARC-c stand-in)
+    Induction,
+    /// yes/no style: pick the consistent restatement (BoolQ stand-in)
+    Consistency,
+    /// pick the plausible sentence ending (HellaSwag stand-in)
+    Ending,
+    /// referent tracking across a compound (WinoGrande stand-in)
+    Reference,
+}
+
+impl Suite {
+    pub fn all() -> [Suite; 6] {
+        [Suite::Continuation, Suite::Agreement, Suite::Induction,
+         Suite::Consistency, Suite::Ending, Suite::Reference]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::Continuation => "Continuation(PIQA)",
+            Suite::Agreement => "Agreement(ARC-e)",
+            Suite::Induction => "Induction(ARC-c)",
+            Suite::Consistency => "Consistency(BoolQ)",
+            Suite::Ending => "Ending(HellaSwag)",
+            Suite::Reference => "Reference(WinoGrande)",
+        }
+    }
+
+    pub fn n_choices(&self) -> usize {
+        match self {
+            Suite::Continuation | Suite::Consistency => 2,
+            Suite::Agreement => 2,
+            Suite::Ending => 3,
+            Suite::Induction | Suite::Reference => 4,
+        }
+    }
+}
+
+fn pick<'a>(rng: &mut XorShift32, xs: &[&'a str]) -> &'a str {
+    xs[rng.randint(xs.len() as u32) as usize]
+}
+
+fn pick_other<'a>(rng: &mut XorShift32, xs: &[&'a str], not: &str)
+    -> &'a str {
+    loop {
+        let c = pick(rng, xs);
+        if c != not {
+            return c;
+        }
+    }
+}
+
+/// Generate `n` items for a suite (deterministic per seed).
+pub fn generate(suite: Suite, n: usize, seed: u32) -> Vec<Item> {
+    let mut rng = XorShift32::new(seed ^ 0xA5A5_0000);
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let item = match suite {
+            Suite::Continuation => {
+                // "<subj> <verb_s> ..." vs corrupted word-salad tail
+                let s = pick(&mut rng, SUBJECTS);
+                let v = pick(&mut rng, VERBS_S);
+                let o = pick(&mut rng, OBJECTS);
+                let p = pick(&mut rng, PLACES);
+                let good = format!("{v} {o} {p}.");
+                let bad = format!("{p} {v} the {v}.",);
+                shuffle2(&mut rng, format!("{s} "), good, bad)
+            }
+            Suite::Agreement => {
+                // singular subject -> singular verb
+                let sing = rng.randint(2) == 0;
+                let (s, good, bad) = if sing {
+                    let s = pick(&mut rng, SUBJECTS);
+                    let v = pick(&mut rng, VERBS_S);
+                    let vb = VERBS_P[VERBS_S.iter()
+                        .position(|&x| x == v).unwrap()];
+                    (s, v, vb)
+                } else {
+                    let s = pick(&mut rng, SUBJECTS_PL);
+                    let v = pick(&mut rng, VERBS_P);
+                    let vb = VERBS_S[VERBS_P.iter()
+                        .position(|&x| x == v).unwrap()];
+                    (s, v, vb)
+                };
+                let o = pick(&mut rng, OBJECTS);
+                shuffle2(&mut rng, format!("{s} "),
+                         format!("{good} {o}."), format!("{bad} {o}."))
+            }
+            Suite::Induction => {
+                // copy pattern: "X v1 O. later X also v2 __" -> O
+                let s = pick(&mut rng, SUBJECTS);
+                let o = pick(&mut rng, OBJECTS);
+                let v1 = pick(&mut rng, VERBS_S);
+                let v2 = pick(&mut rng, VERBS_S);
+                let prefix =
+                    format!("{s} {v1} {o}. later {s} also {v2} ");
+                let mut choices = vec![format!("{o}.")];
+                while choices.len() < 4 {
+                    let alt = pick_other(&mut rng, OBJECTS, o);
+                    let cand = format!("{alt}.");
+                    if !choices.contains(&cand) {
+                        choices.push(cand);
+                    }
+                }
+                shuffle_n(&mut rng, prefix, choices, 0)
+            }
+            Suite::Consistency => {
+                // "<s> is <adj> <time>." then restatement with same or
+                // contradicting adjective
+                let s = pick(&mut rng, SUBJECTS);
+                let a = pick(&mut rng, ADJ);
+                let t = pick(&mut rng, TIMES);
+                let ab = pick_other(&mut rng, ADJ, a);
+                let prefix = format!("{s} is {a} {t}. {s} is ");
+                shuffle2(&mut rng, prefix, format!("{a} {t}."),
+                         format!("{ab} {t}."))
+            }
+            Suite::Ending => {
+                // temporal-clause sentence; endings: place (grammatical),
+                // dangling connector, subject-salad
+                let t = pick(&mut rng, TIMES);
+                let s = pick(&mut rng, SUBJECTS);
+                let v = pick(&mut rng, VERBS_S);
+                let o = pick(&mut rng, OBJECTS);
+                let prefix = format!("{t}, {s} {v} {o} ");
+                let good = format!("{}.", pick(&mut rng, PLACES));
+                let bad1 = "because so that and then.".to_string();
+                let bad2 = format!("{} {}.", pick(&mut rng, SUBJECTS),
+                                   pick(&mut rng, SUBJECTS));
+                shuffle_n(&mut rng, prefix, vec![good, bad1, bad2], 0)
+            }
+            Suite::Reference => {
+                // "S1 v1 O and then S1 also v2 __": the repeated-subject
+                // pattern from the corpus; correct = same object
+                let s1 = pick(&mut rng, SUBJECTS);
+                let o1 = pick(&mut rng, OBJECTS);
+                let v1 = pick(&mut rng, VERBS_S);
+                let v2 = pick(&mut rng, VERBS_S);
+                let prefix =
+                    format!("{s1} {v1} {o1} and then {s1} also {v2} ");
+                let mut choices = vec![format!("{o1} again.")];
+                while choices.len() < 4 {
+                    let alt = pick_other(&mut rng, OBJECTS, o1);
+                    let cand = format!("{alt} again.");
+                    if !choices.contains(&cand) {
+                        choices.push(cand);
+                    }
+                }
+                shuffle_n(&mut rng, prefix, choices, 0)
+            }
+        };
+        items.push(item);
+    }
+    items
+}
+
+fn shuffle2(rng: &mut XorShift32, prefix: String, good: String,
+            bad: String) -> Item {
+    if rng.randint(2) == 0 {
+        Item { prefix, choices: vec![good, bad], answer: 0 }
+    } else {
+        Item { prefix, choices: vec![bad, good], answer: 1 }
+    }
+}
+
+fn shuffle_n(rng: &mut XorShift32, prefix: String, mut choices: Vec<String>,
+             answer: usize) -> Item {
+    let mut ans = answer;
+    let n = choices.len();
+    for i in 0..n {
+        let j = i + rng.randint((n - i) as u32) as usize;
+        choices.swap(i, j);
+        if ans == j {
+            ans = i;
+        } else if ans == i {
+            ans = j;
+        }
+    }
+    Item { prefix, choices, answer: ans }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(Suite::Induction, 10, 1);
+        let b = generate(Suite::Induction, 10, 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.prefix, y.prefix);
+            assert_eq!(x.choices, y.choices);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn answers_within_choice_count() {
+        for suite in Suite::all() {
+            for item in generate(suite, 30, 7) {
+                assert_eq!(item.choices.len(), suite.n_choices(),
+                           "{}", suite.name());
+                assert!(item.answer < item.choices.len());
+                // choices must be distinct
+                let mut c = item.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), item.choices.len(),
+                           "dup choices in {}", suite.name());
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_preserves_answer() {
+        let mut rng = XorShift32::new(9);
+        for _ in 0..50 {
+            let item = shuffle_n(
+                &mut rng,
+                "p".into(),
+                vec!["good".into(), "b1".into(), "b2".into(), "b3".into()],
+                0,
+            );
+            assert_eq!(item.choices[item.answer], "good");
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Method registry shared by the CLI, examples and benches: build any
+//! of the paper's PTQ pipelines by name over a loaded FP model.
+
+use super::LogitsModel;
+use crate::baselines::{self, fakequant::ActQuantMode};
+use crate::calib::{fold_smoothing, fsbr_calibrate, FsbrOptions,
+                   SmoothingParams};
+use crate::data::Corpus;
+use crate::int_model::quantize::quantize_model;
+use crate::int_model::IntModel;
+use crate::nn::FpModel;
+use crate::quant::QuantScheme;
+use anyhow::{bail, Result};
+
+pub const METHODS: &[&str] =
+    &["fp", "rtn", "ibert", "sq", "omni", "fsbr", "illm"];
+
+/// Human-readable label used in bench tables (paper terminology).
+pub fn label(method: &str) -> &'static str {
+    match method {
+        "fp" => "FP16",
+        "rtn" => "RTN",
+        "ibert" => "I-BERT(static)",
+        "sq" => "SmoothQuant",
+        "omni" => "OmniQuant-lite",
+        "fsbr" => "FSBR(fake-quant)",
+        "illm" => "I-LLM",
+        _ => "?",
+    }
+}
+
+/// Build the I-LLM integer engine (FSBR + DI ops) for a model/scheme.
+pub fn build_illm(fp: &FpModel, corpus: &Corpus, scheme: QuantScheme)
+    -> (IntModel, SmoothingParams) {
+    let windows = baselines::calib_windows(corpus);
+    let params = fsbr_calibrate(fp, &windows, scheme,
+                                FsbrOptions::default());
+    let folded = fold_smoothing(fp, &params);
+    let alpha: Vec<Option<Vec<f64>>> =
+        params.layers.iter().map(|l| l.alpha.clone()).collect();
+    (quantize_model(&folded, scheme, Some(&alpha), None), params)
+}
+
+/// Build any method by name.
+pub fn build(method: &str, fp: &FpModel, corpus: &Corpus,
+             scheme: QuantScheme) -> Result<Box<dyn LogitsModel>> {
+    Ok(match method {
+        "fp" => Box::new(fp.clone()),
+        "rtn" => Box::new(baselines::rtn(fp, corpus, scheme)),
+        "ibert" => Box::new(baselines::ibert_static(fp, corpus, scheme)),
+        "sq" => Box::new(baselines::smoothquant(fp, corpus, scheme)),
+        "omni" => Box::new(baselines::omniquant(fp, corpus, scheme)),
+        "fsbr" => Box::new(
+            baselines::fsbr_fakequant(fp, corpus, scheme,
+                                      ActQuantMode::PerToken).0,
+        ),
+        "illm" => Box::new(build_illm(fp, corpus, scheme).0),
+        m => bail!("unknown method {m}"),
+    })
+}

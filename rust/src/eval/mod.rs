@@ -1,0 +1,185 @@
+//! Evaluation harness: sliding-window perplexity (WikiText2/C4 protocol)
+//! and length-normalized multiple-choice scoring (lm-eval-harness
+//! protocol) over any engine implementing `LogitsModel`.
+
+pub mod methods;
+
+use crate::baselines::fakequant::FakeQuantModel;
+use crate::data::tasks::{generate, Item, Suite};
+use crate::data::Corpus;
+use crate::int_model::IntModel;
+use crate::nn::FpModel;
+use crate::tensor::Mat;
+
+/// Anything that maps tokens -> per-position logits.
+pub trait LogitsModel {
+    fn logits(&self, tokens: &[u16], pos0: usize) -> Mat;
+    fn vocab(&self) -> usize;
+}
+
+impl LogitsModel for FpModel {
+    fn logits(&self, tokens: &[u16], pos0: usize) -> Mat {
+        self.forward_full(tokens, pos0, None)
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+}
+
+impl LogitsModel for IntModel {
+    fn logits(&self, tokens: &[u16], pos0: usize) -> Mat {
+        self.forward_full(tokens, pos0)
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+}
+
+impl LogitsModel for FakeQuantModel {
+    fn logits(&self, tokens: &[u16], pos0: usize) -> Mat {
+        self.forward_full(tokens, pos0)
+    }
+
+    fn vocab(&self) -> usize {
+        self.fp.cfg.vocab
+    }
+}
+
+/// log-softmax of one logits row; returns logprob of `target`.
+fn logprob_of(row: &[f32], target: u16) -> f64 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut denom = 0f64;
+    for &v in row {
+        denom += ((v as f64) - mx).exp();
+    }
+    (row[target as usize] as f64 - mx) - denom.ln()
+}
+
+/// Default evaluation protocol constants (scaled to the tiny testbed).
+pub const PPL_SEQ: usize = 128;
+pub const PPL_STRIDE: usize = 128;
+pub const PPL_MAX_WINDOWS: usize = 40;
+
+/// Sliding-window perplexity over the validation split.
+pub fn perplexity<M: LogitsModel + ?Sized>(model: &M, corpus: &Corpus)
+    -> f64 {
+    perplexity_opts(model, corpus, PPL_SEQ, PPL_STRIDE, PPL_MAX_WINDOWS)
+}
+
+pub fn perplexity_opts<M: LogitsModel + ?Sized>(
+    model: &M,
+    corpus: &Corpus,
+    seq: usize,
+    stride: usize,
+    max_windows: usize,
+) -> f64 {
+    let windows = corpus.val_windows(seq, stride, max_windows);
+    assert!(!windows.is_empty(), "no eval windows");
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    for w in &windows {
+        let inputs = &w[..seq];
+        let logits = model.logits(inputs, 0);
+        for i in 0..seq {
+            let target = w[i + 1];
+            nll -= logprob_of(logits.row(i), target);
+            count += 1;
+        }
+    }
+    (nll / count as f64).exp()
+}
+
+/// Score one multiple-choice item: length-normalized continuation
+/// logprob, argmax over choices.
+pub fn score_item<M: LogitsModel + ?Sized>(model: &M, item: &Item)
+    -> usize {
+    let prefix = crate::data::encode(&item.prefix);
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (ci, choice) in item.choices.iter().enumerate() {
+        let cont = crate::data::encode(choice);
+        let mut tokens = prefix.clone();
+        tokens.extend_from_slice(&cont);
+        let logits = model.logits(&tokens, 0);
+        let mut lp = 0f64;
+        for (j, &target) in cont.iter().enumerate() {
+            let pos = prefix.len() + j - 1; // logits at pos predict pos+1
+            lp += logprob_of(logits.row(pos), target);
+        }
+        let norm = lp / cont.len() as f64;
+        if norm > best.0 {
+            best = (norm, ci);
+        }
+    }
+    best.1
+}
+
+/// Accuracy (%) of a model on a task suite.
+pub fn suite_accuracy<M: LogitsModel + ?Sized>(
+    model: &M,
+    suite: Suite,
+    n_items: usize,
+    seed: u32,
+) -> f64 {
+    let items = generate(suite, n_items, seed);
+    let correct = items
+        .iter()
+        .filter(|it| score_item(model, it) == it.answer)
+        .count();
+    100.0 * correct as f64 / items.len() as f64
+}
+
+/// All six suites; returns (per-suite accuracy, average).
+pub fn zero_shot<M: LogitsModel + ?Sized>(model: &M, n_items: usize,
+                                          seed: u32)
+    -> (Vec<(&'static str, f64)>, f64) {
+    let mut rows = Vec::new();
+    let mut sum = 0.0;
+    for suite in Suite::all() {
+        let acc = suite_accuracy(model, suite, n_items, seed);
+        rows.push((suite.name(), acc));
+        sum += acc;
+    }
+    let avg = sum / rows.len() as f64;
+    (rows, avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A trivial model that always predicts token (prev + 1) % V.
+    struct NextByte;
+
+    impl LogitsModel for NextByte {
+        fn logits(&self, tokens: &[u16], _pos0: usize) -> Mat {
+            let v = 256;
+            let mut m = Mat::zeros(tokens.len(), v);
+            for (i, &t) in tokens.iter().enumerate() {
+                let want = ((t as usize) + 1) % v;
+                m.row_mut(i)[want] = 10.0;
+            }
+            m
+        }
+
+        fn vocab(&self) -> usize {
+            256
+        }
+    }
+
+    #[test]
+    fn perplexity_of_perfect_predictor_is_low() {
+        let seq: Vec<u16> = (0..4000u32).map(|i| (i % 256) as u16).collect();
+        let corpus = Corpus { train: seq.clone(), val: seq };
+        let ppl = perplexity_opts(&NextByte, &corpus, 64, 64, 8);
+        assert!(ppl < 1.2, "ppl {ppl}");
+    }
+
+    #[test]
+    fn logprob_normalizes() {
+        let row = vec![0.0f32, 0.0, 0.0, 0.0];
+        let lp = logprob_of(&row, 2);
+        assert!((lp - (0.25f64).ln()).abs() < 1e-9);
+    }
+}

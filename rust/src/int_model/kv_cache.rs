@@ -1,0 +1,376 @@
+//! Integer KV cache + single-token decode path (the serving hot loop).
+//!
+//! The cache stores CENTERED key/value vectors per (layer, head) at one
+//! shared dyadic scale per head — the decode-time analogue of the
+//! prefill path's per-head `requant_common`. Because decode streams
+//! tokens, the shared scale must adapt: the cache uses a GROW-ONLY
+//! policy — when an incoming vector overflows the current 8-bit range,
+//! all cached values are right-shifted to a coarser scale (an integer
+//! rescale; never a float op). Growing never loses more than 1 bit of
+//! precision per doubling, matching dynamic-range behaviour of the
+//! paper's per-token quantization.
+
+use super::{dequant_logits, IntMlp, IntModel, NL_BITS};
+use crate::config::Arch;
+use crate::ops::di_add::di_add;
+use crate::ops::di_matmul::{di_linear, di_linear_raw};
+use crate::ops::di_norm::di_norm;
+use crate::ops::di_softmax::di_softmax_row;
+use crate::ops::di_swiglu::di_swiglu;
+use crate::ops::{di_relu, rdiv, requant_row};
+use crate::quant::DynQ;
+use crate::tensor::IMat;
+
+/// One head's cache lane: centered values at scale m/2^k.
+#[derive(Debug, Clone)]
+struct Lane {
+    /// (len, head_dim) row-major centered values
+    vals: Vec<i32>,
+    m: i32,
+    k: i32,
+}
+
+impl Lane {
+    fn new(cap_hint: usize, hd: usize) -> Self {
+        Self {
+            vals: Vec::with_capacity(cap_hint * hd),
+            m: 128,
+            k: 30, // placeholder; the first append adopts its input scale
+        }
+    }
+
+    /// Append a centered vector with scale mt/2^kt, requantizing into
+    /// the lane scale (growing the lane scale if needed).
+    fn append(&mut self, x: &[i64], mt: i32, kt: i32, hd: usize) {
+        if self.vals.is_empty() {
+            // adopt the first vector's scale directly — avoids a long
+            // halving chain (each halving rounds, and tens of them bias
+            // cached values measurably)
+            self.m = mt;
+            self.k = kt;
+        }
+        // incoming value in lane units: v * mt * 2^(k - kt) / m
+        loop {
+            let mut ok = true;
+            let sh = self.k - kt;
+            for &v in x {
+                let num = if sh >= 0 {
+                    (v * mt as i64) << sh.min(40)
+                } else {
+                    (v * mt as i64) >> (-sh).min(40)
+                };
+                let q = rdiv(num, self.m as i64);
+                if q.abs() > 127 {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                break;
+            }
+            self.grow();
+        }
+        let sh = self.k - kt;
+        for &v in x {
+            let num = if sh >= 0 {
+                (v * mt as i64) << sh.min(40)
+            } else {
+                (v * mt as i64) >> (-sh).min(40)
+            };
+            self.vals.push(rdiv(num, self.m as i64) as i32);
+        }
+        debug_assert_eq!(self.vals.len() % hd, 0);
+    }
+
+    /// Coarsen the lane scale by 2x: halve cached values, k -= 1.
+    fn grow(&mut self) {
+        for v in self.vals.iter_mut() {
+            *v = rdiv(*v as i64, 2) as i32;
+        }
+        self.k -= 1;
+    }
+
+    fn len(&self, hd: usize) -> usize {
+        self.vals.len() / hd
+    }
+}
+
+/// Integer KV cache for one sequence.
+#[derive(Debug, Clone)]
+pub struct IntKvCache {
+    k: Vec<Lane>,
+    v: Vec<Lane>,
+    n_heads: usize,
+    hd: usize,
+    pub pos: usize,
+}
+
+impl IntKvCache {
+    pub fn new(model: &IntModel) -> Self {
+        let cfg = &model.cfg;
+        let lanes = cfg.n_layers * cfg.n_heads;
+        IntKvCache {
+            k: (0..lanes)
+                .map(|_| Lane::new(cfg.max_seq, cfg.head_dim()))
+                .collect(),
+            v: (0..lanes)
+                .map(|_| Lane::new(cfg.max_seq, cfg.head_dim()))
+                .collect(),
+            n_heads: cfg.n_heads,
+            hd: cfg.head_dim(),
+            pos: 0,
+        }
+    }
+
+    fn lane(&mut self, which: char, layer: usize, head: usize)
+        -> &mut Lane {
+        let idx = layer * self.n_heads + head;
+        match which {
+            'k' => &mut self.k[idx],
+            _ => &mut self.v[idx],
+        }
+    }
+
+    /// Memory footprint of the cached values in bytes if stored as i8
+    /// (what a deployment would allocate; we hold i32 for simplicity).
+    pub fn logical_bytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|l| l.vals.len()).sum()
+    }
+}
+
+impl IntModel {
+    /// Prefill: run the full integer forward and populate the cache;
+    /// returns last-position logits.
+    pub fn prefill(&self, tokens: &[u16], cache: &mut IntKvCache)
+        -> Vec<f32> {
+        // simple + exact: replay tokens through decode one by one.
+        // (kept deliberately straightforward; the batched decode loop in
+        // coordinator::engine amortizes weights across sequences, which
+        // is where the serving throughput comes from.)
+        let mut last = Vec::new();
+        for &t in tokens {
+            last = self.decode_one(t, cache);
+        }
+        last
+    }
+
+    /// Decode one token given the cache; appends K/V and returns logits.
+    pub fn decode_one(&self, token: u16, cache: &mut IntKvCache)
+        -> Vec<f32> {
+        let raw = self.decode_raw(token, cache);
+        let logits = dequant_logits(&raw);
+        logits.row(0).to_vec()
+    }
+
+    fn decode_raw(&self, token: u16, cache: &mut IntKvCache)
+        -> crate::ops::RawRows {
+        let cfg = &self.cfg;
+        let centered = cfg.arch == Arch::Opt;
+        let a_bits = self.scheme.a_bits;
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let pos = cache.pos;
+        assert!(pos < cfg.max_seq, "sequence exceeds max_seq");
+        let mut x = self.embed.gather(&[token as usize]);
+        if let Some(pe) = &self.pos_embed {
+            let p = pe.gather(&[pos]);
+            x = di_add(&x, &p, NL_BITS);
+        }
+        let mut scores: Vec<i64> = Vec::new();
+        let mut probs: Vec<i32> = Vec::new();
+        let mut scratch: Vec<i64> = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let hh = di_norm(&x, a_bits, centered);
+            let q = di_linear(&hh, &layer.wq, a_bits);
+            let k = di_linear(&hh, &layer.wk, a_bits);
+            let v = di_linear(&hh, &layer.wv, a_bits);
+            // center + rope (single row)
+            let rotate = cfg.arch == Arch::Llama;
+            let qh = self.center_rope_row(&q, pos, rotate);
+            let kh = self.center_rope_row(&k, pos, rotate);
+            let vh = self.center_rope_row(&v, 0, false);
+            // append to cache, then attend over the lane
+            let mut o_raw = vec![0i64; h * hd];
+            let mut vks = vec![0i32; h];
+            let mut vms = vec![0i32; h];
+            for head in 0..h {
+                let lane_k = cache.lane('k', li, head);
+                lane_k.append(&kh[head * hd..(head + 1) * hd], k.m[0],
+                              k.k[0], hd);
+                let (lkm, lkk) = (lane_k.m, lane_k.k);
+                let len = lane_k.len(hd);
+                scores.resize(len, 0);
+                {
+                    let lane_k = &cache.k[li * h + head];
+                    let qrow = &qh[head * hd..(head + 1) * hd];
+                    for (j, s) in scores.iter_mut().enumerate() {
+                        let krow = &lane_k.vals[j * hd..(j + 1) * hd];
+                        let mut acc = 0i64;
+                        for (a, &b) in qrow.iter().zip(krow.iter()) {
+                            acc += a * b as i64;
+                        }
+                        *s = acc;
+                    }
+                }
+                probs.resize(len, 0);
+                di_softmax_row(
+                    &scores,
+                    q.m[0],
+                    q.k[0],
+                    lkm,
+                    lkk,
+                    self.scheme.softmax_bits,
+                    self.scheme.clip,
+                    len,
+                    &mut probs,
+                    &mut scratch,
+                );
+                let lane_v = cache.lane('v', li, head);
+                lane_v.append(&vh[head * hd..(head + 1) * hd], v.m[0],
+                              v.k[0], hd);
+                vms[head] = lane_v.m;
+                vks[head] = lane_v.k;
+                let lane_v = &cache.v[li * h + head];
+                let orow = &mut o_raw[head * hd..(head + 1) * hd];
+                for (j, &p) in probs.iter().enumerate() {
+                    if p == 0 {
+                        continue;
+                    }
+                    let vrow = &lane_v.vals[j * hd..(j + 1) * hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                        *o += p as i64 * vv as i64;
+                    }
+                }
+            }
+            // merge heads (single token)
+            let kcom = vks.iter().copied().max().unwrap();
+            let mut aligned = vec![0i64; h * hd];
+            for head in 0..h {
+                let sh = (kcom - vks[head]).min(32);
+                let mult = (vms[head] as i64) << sh;
+                for c in 0..hd {
+                    aligned[head * hd + c] = o_raw[head * hd + c] * mult;
+                }
+            }
+            let mut merged = IMat::zeros(1, h * hd);
+            let (mm, mk, mz) = requant_row(
+                &aligned,
+                1,
+                kcom + (self.scheme.softmax_bits as i32 - 1),
+                a_bits,
+                None,
+                merged.row_mut(0),
+            );
+            let att = DynQ {
+                vals: merged,
+                m: vec![mm],
+                k: vec![mk],
+                zp: vec![mz],
+                bits: a_bits,
+            };
+            let o = di_linear(&att, &layer.wo, a_bits);
+            x = di_add(&x, &o, NL_BITS);
+            let h2 = di_norm(&x, a_bits, centered);
+            let y = match &layer.mlp {
+                IntMlp::SwiGlu { wg, wu, wd, alpha } => {
+                    let gate = di_linear(&h2, wg, NL_BITS);
+                    let up = di_linear(&h2, wu, NL_BITS);
+                    let sw = di_swiglu(&gate, &up, alpha,
+                                       self.scheme.sig_bits, a_bits);
+                    di_linear(&sw, wd, a_bits)
+                }
+                IntMlp::Relu { w1, w2 } => {
+                    let mut a = di_linear(&h2, w1, a_bits);
+                    di_relu(&mut a);
+                    di_linear(&a, w2, a_bits)
+                }
+            };
+            x = di_add(&x, &y, NL_BITS);
+        }
+        cache.pos += 1;
+        let hf = di_norm(&x, NL_BITS, centered);
+        di_linear_raw(&hf, &self.lm_head)
+    }
+
+    /// Center + rotate a single-row qkv output; returns (H*hd,) i64.
+    fn center_rope_row(&self, x: &DynQ, pos: usize, rotate: bool)
+        -> Vec<i64> {
+        let h = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let zp = x.zp[0] as i64;
+        let mut out: Vec<i64> =
+            x.vals.row(0).iter().map(|&v| v as i64 - zp).collect();
+        if rotate {
+            let tables = self.rope.as_ref().expect("rope tables");
+            for head in 0..h {
+                tables.rotate(&mut out[head * hd..(head + 1) * hd], pos);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_append_and_dequant_roundtrip() {
+        let hd = 4;
+        let mut lane = Lane::new(8, hd);
+        // two vectors at different incoming scales
+        let v1 = vec![100i64, -50, 25, 0]; // scale 200/2^12
+        lane.append(&v1, 200, 12, hd);
+        let v2 = vec![10i64, -120, 60, 90]; // scale 150/2^10
+        lane.append(&v2, 150, 10, hd);
+        assert_eq!(lane.len(hd), 2);
+        let s_lane = lane.m as f64 / (lane.k as f64).exp2();
+        let s1 = 200f64 / (12f64).exp2();
+        let s2 = 150f64 / (10f64).exp2();
+        for c in 0..hd {
+            let want1 = v1[c] as f64 * s1;
+            let got1 = lane.vals[c] as f64 * s_lane;
+            assert!((want1 - got1).abs() <= s_lane * 0.75 + 1e-9,
+                    "v1[{c}] {want1} vs {got1}");
+            let want2 = v2[c] as f64 * s2;
+            let got2 = lane.vals[hd + c] as f64 * s_lane;
+            assert!((want2 - got2).abs() <= s_lane * 0.75 + 1e-9,
+                    "v2[{c}] {want2} vs {got2}");
+        }
+    }
+
+    #[test]
+    fn lane_grows_scale_on_overflow_and_preserves_old_values() {
+        let hd = 2;
+        let mut lane = Lane::new(8, hd);
+        lane.append(&[100, -100], 128, 10, hd); // small values
+        let s_before = lane.m as f64 / (lane.k as f64).exp2();
+        let want_old = 100f64 * 128.0 / (10f64).exp2();
+        // a vector 100x larger forces grow-only rescaling
+        lane.append(&[10_000, -10_000], 128, 10, hd);
+        let s_after = lane.m as f64 / (lane.k as f64).exp2();
+        assert!(s_after > s_before, "lane scale must coarsen");
+        // old entry still dequantizes to ~the same float value
+        let got_old = lane.vals[0] as f64 * s_after;
+        assert!(
+            (got_old - want_old).abs() <= want_old * 0.05 + s_after,
+            "old value drifted: {got_old} vs {want_old}"
+        );
+        // new entry fits in 8-bit range
+        assert!(lane.vals[hd..].iter().all(|&v| v.abs() <= 127));
+    }
+
+    #[test]
+    fn lane_values_stay_within_i8_range() {
+        let hd = 3;
+        let mut lane = Lane::new(8, hd);
+        let mut mag = 1i64;
+        for step in 0..20 {
+            let v = vec![mag, -mag / 2, mag / 3];
+            lane.append(&v, 128 + (step % 100) as i32, 12, hd);
+            mag = (mag * 3).min(1 << 40);
+        }
+        assert!(lane.vals.iter().all(|&v| v.abs() <= 127),
+                "cache lane exceeded 8-bit range");
+        assert_eq!(lane.len(hd), 20);
+    }
+}

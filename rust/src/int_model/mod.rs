@@ -1,0 +1,316 @@
+//! Integer-only transformer engine (the paper's deployed pipeline).
+//!
+//! The whole computational graph runs on i32/i64 integer arithmetic via
+//! the ops:: DI-* operators; the single float operation is the logits
+//! dequantization at the model boundary. `forward_full` mirrors the L2
+//! JAX graph (python/compile/model.py::int_forward) operator by
+//! operator; `decode` (see kv_cache.rs) is the serving path with the
+//! integer KV cache.
+
+pub mod kv_cache;
+pub mod quantize;
+
+use crate::config::{Arch, ModelConfig};
+use crate::ops::di_add::di_add;
+use crate::ops::di_matmul::{di_linear, di_linear_raw};
+use crate::ops::di_norm::di_norm;
+use crate::ops::di_softmax::di_softmax_row;
+use crate::ops::di_swiglu::{di_swiglu, AlphaSmooth};
+use crate::ops::rope::RopeTables;
+use crate::ops::{di_relu, requant_common, requant_row, CommonQ};
+use crate::quant::{DynQ, Dyadic, QWeight, QuantScheme};
+use crate::tensor::{IMat, Mat};
+
+/// Bit width of non-linear operator activations (paper §4: always 8).
+pub const NL_BITS: u32 = 8;
+
+#[derive(Debug, Clone)]
+pub enum IntMlp {
+    SwiGlu {
+        wg: QWeight,
+        wu: QWeight,
+        wd: QWeight,
+        alpha: AlphaSmooth,
+    },
+    Relu {
+        w1: QWeight,
+        w2: QWeight,
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct IntLayer {
+    pub wq: QWeight,
+    pub wk: QWeight,
+    pub wv: QWeight,
+    pub wo: QWeight,
+    pub mlp: IntMlp,
+}
+
+/// Per-row quantized lookup table (embedding / positional).
+#[derive(Debug, Clone)]
+pub struct QTable {
+    pub q: DynQ,
+}
+
+impl QTable {
+    /// Gather rows by token ids into a DynQ activation.
+    pub fn gather(&self, ids: &[usize]) -> DynQ {
+        let cols = self.q.cols();
+        let mut vals = IMat::zeros(ids.len(), cols);
+        let mut m = Vec::with_capacity(ids.len());
+        let mut k = Vec::with_capacity(ids.len());
+        let mut zp = Vec::with_capacity(ids.len());
+        for (r, &id) in ids.iter().enumerate() {
+            vals.row_mut(r).copy_from_slice(self.q.vals.row(id));
+            m.push(self.q.m[id]);
+            k.push(self.q.k[id]);
+            zp.push(self.q.zp[id]);
+        }
+        DynQ { vals, m, k, zp, bits: self.q.bits }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IntModel {
+    pub cfg: ModelConfig,
+    pub scheme: QuantScheme,
+    pub embed: QTable,
+    pub pos_embed: Option<QTable>,
+    pub rope: Option<RopeTables>,
+    pub layers: Vec<IntLayer>,
+    pub lm_head: QWeight,
+}
+
+/// Centered per-head views of a rotated/centered activation:
+/// values (T, H, hd) in i64 with the ORIGINAL per-token scales.
+pub struct Heads {
+    pub t: usize,
+    pub h: usize,
+    pub hd: usize,
+    /// row-major (T, H*hd)
+    pub vals: Vec<i64>,
+}
+
+impl Heads {
+    #[inline]
+    pub fn head_row(&self, tok: usize, head: usize) -> &[i64] {
+        let base = tok * self.h * self.hd + head * self.hd;
+        &self.vals[base..base + self.hd]
+    }
+}
+
+impl IntModel {
+    /// Center a qkv linear output and (for llama) apply integer RoPE.
+    fn center_rope(&self, x: &DynQ, pos0: usize, rotate: bool) -> Heads {
+        let t = x.rows();
+        let h = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let mut vals = vec![0i64; t * h * hd];
+        for r in 0..t {
+            let zp = x.zp[r] as i64;
+            let row = x.vals.row(r);
+            let out = &mut vals[r * h * hd..(r + 1) * h * hd];
+            for c in 0..h * hd {
+                out[c] = row[c] as i64 - zp;
+            }
+            if rotate {
+                let tables = self.rope.as_ref().expect("rope tables");
+                for head in 0..h {
+                    tables.rotate(
+                        &mut out[head * hd..(head + 1) * hd],
+                        r + pos0,
+                    );
+                }
+            }
+        }
+        Heads { t, h, hd, vals }
+    }
+
+    /// Requantize one head's (T, hd) block of `heads` to a common scale.
+    fn head_common(&self, heads: &Heads, head: usize, m: &[i32],
+                   k: &[i32], bits: u32) -> CommonQ {
+        let (t, hd) = (heads.t, heads.hd);
+        let mut block = vec![0i64; t * hd];
+        for tok in 0..t {
+            block[tok * hd..(tok + 1) * hd]
+                .copy_from_slice(heads.head_row(tok, head));
+        }
+        requant_common(&block, t, hd, m, k, bits)
+    }
+
+    /// Integer attention for a full (prefill) sequence; mirrors the JAX
+    /// graph: per-head K/V common requant -> scores -> DI-ClippedSoftmax
+    /// -> PV -> head merge requant.
+    #[allow(clippy::too_many_arguments)]
+    fn attention(&self, q: &DynQ, k: &DynQ, v: &DynQ, pos0: usize) -> DynQ {
+        let cfg = &self.cfg;
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let t = q.rows();
+        let rotate = cfg.arch == Arch::Llama;
+        let qh = self.center_rope(q, pos0, rotate);
+        let kh = self.center_rope(k, pos0, rotate);
+        let vh = self.center_rope(v, 0, false);
+        let a_bits = self.scheme.a_bits;
+        let p_bits = self.scheme.softmax_bits;
+
+        // NOTE on the JAX mirror: requant_per_head uses kcom = max over
+        // all tokens, shared across heads — requant_common recomputes the
+        // same value per head from identical (m,k) vectors.
+        let kc: Vec<CommonQ> = (0..h)
+            .map(|head| self.head_common(&kh, head, &k.m, &k.k, a_bits))
+            .collect();
+        let vc: Vec<CommonQ> = (0..h)
+            .map(|head| self.head_common(&vh, head, &v.m, &v.k, a_bits))
+            .collect();
+
+        // per-head raw PV outputs at scale vm/2^(vk + p - 1)
+        let mut o_raw = vec![0i64; t * h * hd];
+        let mut scores = vec![0i64; t];
+        let mut probs = vec![0i32; t];
+        let mut scratch: Vec<i64> = Vec::new();
+        for head in 0..h {
+            let kch = &kc[head];
+            let vch = &vc[head];
+            for i in 0..t {
+                let qrow = qh.head_row(i, head);
+                let valid = i + 1;
+                for (j, s) in scores.iter_mut().enumerate().take(valid) {
+                    let krow = &kch.vals[j * hd..(j + 1) * hd];
+                    let mut acc = 0i64;
+                    for (a, b) in qrow.iter().zip(krow.iter()) {
+                        acc += a * b;
+                    }
+                    *s = acc;
+                }
+                di_softmax_row(
+                    &scores[..valid],
+                    q.m[i],
+                    q.k[i],
+                    kch.m,
+                    kch.k,
+                    p_bits,
+                    self.scheme.clip,
+                    valid,
+                    &mut probs[..valid],
+                    &mut scratch,
+                );
+                let orow = &mut o_raw
+                    [i * h * hd + head * hd..i * h * hd + (head + 1) * hd];
+                for (j, &p) in probs.iter().enumerate().take(valid) {
+                    if p == 0 {
+                        continue;
+                    }
+                    let vrow = &vch.vals[j * hd..(j + 1) * hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                        *o += p as i64 * vv;
+                    }
+                }
+            }
+        }
+        // head merge: align per-head scales to the max exponent, then a
+        // per-token dynamic requant (mirrors _heads_merge_requant)
+        let kcom = vc.iter().map(|c| c.k).max().unwrap_or(0);
+        let mut merged = IMat::zeros(t, h * hd);
+        let mut m_out = vec![0i32; t];
+        let mut k_out = vec![0i32; t];
+        let mut zp_out = vec![0i32; t];
+        let mut aligned = vec![0i64; h * hd];
+        for i in 0..t {
+            for head in 0..h {
+                let sh = (kcom - vc[head].k).min(32);
+                let mult = (vc[head].m as i64) << sh;
+                let src = &o_raw
+                    [i * h * hd + head * hd..i * h * hd + (head + 1) * hd];
+                let dst = &mut aligned[head * hd..(head + 1) * hd];
+                for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                    *d = s * mult;
+                }
+            }
+            let (my, ky, z) = requant_row(
+                &aligned,
+                1,
+                kcom + (p_bits as i32 - 1),
+                a_bits,
+                None,
+                merged.row_mut(i),
+            );
+            m_out[i] = my;
+            k_out[i] = ky;
+            zp_out[i] = z;
+        }
+        DynQ { vals: merged, m: m_out, k: k_out, zp: zp_out, bits: a_bits }
+    }
+
+    /// Full integer-only forward: tokens -> (T, V) f32 logits.
+    /// Mirrors python int_forward. `pos0` for chunked evaluation.
+    pub fn forward_full(&self, tokens: &[u16], pos0: usize) -> Mat {
+        let raw = self.forward_raw(tokens, pos0);
+        dequant_logits(&raw)
+    }
+
+    /// Integer part of the forward pass (everything but the boundary
+    /// dequant): returns raw lm_head accumulators + per-row scales.
+    pub fn forward_raw(&self, tokens: &[u16], pos0: usize)
+        -> crate::ops::RawRows {
+        let cfg = &self.cfg;
+        let centered = cfg.arch == Arch::Opt;
+        let a_bits = self.scheme.a_bits;
+        let ids: Vec<usize> = tokens.iter().map(|&t| t as usize).collect();
+        let mut x = self.embed.gather(&ids);
+        if let Some(pe) = &self.pos_embed {
+            let pos_ids: Vec<usize> =
+                (0..tokens.len()).map(|i| i + pos0).collect();
+            let p = pe.gather(&pos_ids);
+            x = di_add(&x, &p, NL_BITS);
+        }
+        for layer in &self.layers {
+            // ---- attention ----
+            let h = di_norm(&x, a_bits, centered);
+            let q = di_linear(&h, &layer.wq, a_bits);
+            let k = di_linear(&h, &layer.wk, a_bits);
+            let v = di_linear(&h, &layer.wv, a_bits);
+            let att = self.attention(&q, &k, &v, pos0);
+            let o = di_linear(&att, &layer.wo, a_bits);
+            x = di_add(&x, &o, NL_BITS);
+            // ---- mlp ----
+            let h2 = di_norm(&x, a_bits, centered);
+            let y = match &layer.mlp {
+                IntMlp::SwiGlu { wg, wu, wd, alpha } => {
+                    let gate = di_linear(&h2, wg, NL_BITS);
+                    let up = di_linear(&h2, wu, NL_BITS);
+                    let sw = di_swiglu(&gate, &up, alpha,
+                                       self.scheme.sig_bits, a_bits);
+                    di_linear(&sw, wd, a_bits)
+                }
+                IntMlp::Relu { w1, w2 } => {
+                    let mut a = di_linear(&h2, w1, a_bits);
+                    di_relu(&mut a);
+                    di_linear(&a, w2, a_bits)
+                }
+            };
+            x = di_add(&x, &y, NL_BITS);
+        }
+        let hf = di_norm(&x, NL_BITS, centered);
+        di_linear_raw(&hf, &self.lm_head)
+    }
+
+    /// Logits for the last position only.
+    pub fn forward_last(&self, tokens: &[u16]) -> Vec<f32> {
+        let logits = self.forward_full(tokens, 0);
+        logits.row(logits.rows - 1).to_vec()
+    }
+}
+
+/// Model boundary: dequantize raw logits (the only float op).
+pub fn dequant_logits(raw: &crate::ops::RawRows) -> Mat {
+    let mut out = Mat::zeros(raw.rows, raw.cols);
+    for r in 0..raw.rows {
+        let s = Dyadic { m: raw.m_in[r] as i32, k: raw.k_in[r] }.to_f64();
+        let prow = raw.row(r);
+        for (o, &p) in out.row_mut(r).iter_mut().zip(prow.iter()) {
+            *o = (p as f64 * s) as f32;
+        }
+    }
+    out
+}

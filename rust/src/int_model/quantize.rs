@@ -1,0 +1,146 @@
+//! Offline quantization: FpModel (+ optional FSBR smoothing) -> IntModel.
+//!
+//! Folding rules (mirrors python int_params_from_fp):
+//!  * norm gamma (and beta for opt) fold into the following linear:
+//!      (norm(x)*g + beta) @ W + b = norm(x) @ (g[:,None]*W) + (b + beta@W)
+//!  * FSBR smoothing vectors are already baked into the FpModel clone by
+//!    calib::fold before this runs, EXCEPT the SwiGLU act-smooth alpha,
+//!    which must survive to runtime (sigma'(x) = sigma(x / alpha)):
+//!    gate columns are multiplied by alpha here and alpha is attached to
+//!    the DI-SwiGLU operator as a dyadic constant.
+//!  * the final norm folds into lm_head (tied embedding transpose).
+
+use super::{IntLayer, IntMlp, IntModel, QTable};
+use crate::config::Arch;
+use crate::nn::{FpModel, Linear, Mlp, Norm};
+use crate::ops::di_swiglu::AlphaSmooth;
+use crate::ops::rope::RopeTables;
+use crate::quant::{quantize_rows_f32, quantize_weight, QWeight,
+                   QuantScheme};
+use crate::tensor::Mat;
+
+/// Per-layer SwiGLU act-smooth factors (FSBR's s); None = identity.
+pub type AlphaMap = Vec<Option<Vec<f64>>>;
+
+/// Optional per-linear weight-clip ratios (OmniQuant-lite learned clip).
+#[derive(Debug, Clone, Default)]
+pub struct ClipMap {
+    /// keyed by "layers.{i}.{kind}" -> ratio in (0, 1]
+    pub ratios: std::collections::BTreeMap<String, f64>,
+}
+
+impl ClipMap {
+    pub fn get(&self, key: &str) -> f64 {
+        self.ratios.get(key).copied().unwrap_or(1.0)
+    }
+}
+
+fn fold_norm_into(w: &Linear, norm: &Norm) -> (Mat, Option<Vec<f32>>) {
+    let mut wf = w.w.clone();
+    for r in 0..wf.rows {
+        let g = norm.g[r];
+        for v in wf.row_mut(r) {
+            *v *= g;
+        }
+    }
+    let bias = match (&norm.b, &w.b) {
+        (None, None) => None,
+        _ => {
+            // b' = b + beta @ W (W unfolded)
+            let beta = norm.b.clone().unwrap_or_else(|| vec![0.0; wf.rows]);
+            let mut b = w.b.clone().unwrap_or_else(|| vec![0.0; wf.cols]);
+            for (c, bv) in b.iter_mut().enumerate() {
+                let mut acc = 0f64;
+                for r in 0..wf.rows {
+                    acc += beta[r] as f64 * w.w.at(r, c) as f64;
+                }
+                *bv += acc as f32;
+            }
+            Some(b)
+        }
+    };
+    (wf, bias)
+}
+
+fn quant(w: Mat, b: Option<Vec<f32>>, bits: u32, clip: f64) -> QWeight {
+    quantize_weight(&w, bits, clip, b.as_deref())
+}
+
+/// Quantize an FpModel into an integer-only engine.
+/// `alpha`: per-layer SwiGLU act-smooth factors (from FSBR); `clips`:
+/// per-linear weight clip ratios (from OmniQuant-lite); both optional.
+pub fn quantize_model(
+    fp: &FpModel,
+    scheme: QuantScheme,
+    alpha: Option<&AlphaMap>,
+    clips: Option<&ClipMap>,
+) -> IntModel {
+    let cfg = fp.cfg.clone();
+    let wb = scheme.w_bits;
+    let default_clips = ClipMap::default();
+    let clips = clips.unwrap_or(&default_clips);
+    let embed = QTable { q: quantize_rows_f32(&fp.embed, 8) };
+    let pos_embed = fp
+        .pos_embed
+        .as_ref()
+        .map(|pe| QTable { q: quantize_rows_f32(pe, 8) });
+    let rope = match cfg.arch {
+        Arch::Llama => Some(RopeTables::new(cfg.head_dim(), cfg.max_seq,
+                                            cfg.rope_theta)),
+        Arch::Opt => None,
+    };
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for (i, l) in fp.layers.iter().enumerate() {
+        let key = |kind: &str| format!("layers.{i}.{kind}");
+        let qn = |lin: &Linear, norm: &Norm, kind: &str| -> QWeight {
+            let (w, b) = fold_norm_into(lin, norm);
+            quant(w, b, wb, clips.get(&key(kind)))
+        };
+        let plain = |lin: &Linear, kind: &str| -> QWeight {
+            quant(lin.w.clone(), lin.b.clone(), wb, clips.get(&key(kind)))
+        };
+        let mlp = match &l.mlp {
+            Mlp::SwiGlu { wg, wu, wd } => {
+                let a = alpha
+                    .and_then(|m| m[i].clone())
+                    .unwrap_or_else(|| vec![1.0; cfg.d_ff]);
+                // bake alpha into the (norm-folded) gate weights
+                let (mut wgf, bgf) = fold_norm_into(wg, &l.norm2);
+                for c in 0..wgf.cols {
+                    wgf.scale_col(c, a[c] as f32);
+                }
+                IntMlp::SwiGlu {
+                    wg: quant(wgf, bgf, wb, clips.get(&key("mlp.wg"))),
+                    wu: qn(wu, &l.norm2, "mlp.wu"),
+                    wd: plain(wd, "mlp.wd"),
+                    alpha: AlphaSmooth::from_f64(&a),
+                }
+            }
+            Mlp::Relu { w1, w2 } => IntMlp::Relu {
+                w1: qn(w1, &l.norm2, "mlp.w1"),
+                w2: plain(w2, "mlp.w2"),
+            },
+        };
+        layers.push(IntLayer {
+            wq: qn(&l.wq, &l.norm1, "attn.wq"),
+            wk: qn(&l.wk, &l.norm1, "attn.wk"),
+            wv: qn(&l.wv, &l.norm1, "attn.wv"),
+            wo: plain(&l.wo, "attn.wo"),
+            mlp,
+        });
+    }
+    // final norm folds into the tied lm head
+    let emb_t = fp.embed.transpose();
+    let lm_lin = Linear { w: emb_t, b: None };
+    let (lm_w, lm_b) = fold_norm_into(&lm_lin, &fp.final_norm);
+    let lm_head = quant(lm_w, lm_b, wb, clips.get("lm_head"));
+    IntModel {
+        cfg,
+        scheme,
+        embed,
+        pos_embed,
+        rope,
+        layers,
+        lm_head,
+    }
+}

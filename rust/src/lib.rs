@@ -1,0 +1,39 @@
+//! I-LLM: integer-only fully-quantized inference for LLMs.
+//!
+//! A three-layer reproduction of "I-LLM: Efficient Integer-Only Inference
+//! for Fully-Quantized Low-Bit Large Language Models" (Hu et al., 2024):
+//!
+//!  * L1/L2 (python, build time): Pallas kernels + JAX fp/int models,
+//!    AOT-lowered to HLO text under artifacts/.
+//!  * L3 (this crate): the integer-only operator library (`ops`), the
+//!    PTQ pipeline — FSBR calibration (`calib`) and the baselines it is
+//!    compared against (`baselines`) — the FP and integer transformer
+//!    engines (`nn`, `int_model`), the evaluation harness (`eval`), the
+//!    PJRT runtime for AOT artifacts (`runtime`) and the serving
+//!    coordinator (`coordinator`).
+//!
+//! See DESIGN.md for the paper -> module map and EXPERIMENTS.md for the
+//! reproduced tables/figures.
+
+pub mod baselines;
+pub mod calib;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod int_model;
+pub mod nn;
+pub mod ops;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory: $ILLM_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("ILLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,361 @@
+//! FP reference transformer substrate (the model the paper quantizes).
+//!
+//! Mirrors python/compile/model.py::fp_forward: LLaMA-style
+//! (pre-RMSNorm + RoPE + SwiGLU) and OPT-style (pre-LayerNorm + learned
+//! positions + ReLU + biases), causal, single sequence, f32.
+//!
+//! The forward pass takes an optional observer callback that receives
+//! every named intermediate activation — the calibration pipeline
+//! (calib::stats) and the figure benches are built on it.
+
+pub mod weights;
+
+use crate::config::{Arch, ModelConfig};
+use crate::tensor::Mat;
+use anyhow::{anyhow, Result};
+use weights::WeightsFile;
+
+/// Activation observation callback: (layer index, site name, activation).
+/// Layer index `usize::MAX` marks model-level sites (embed, final norm).
+pub type Observer<'a> = &'a mut dyn FnMut(usize, &str, &Mat);
+
+#[derive(Debug, Clone)]
+pub struct Linear {
+    pub w: Mat,
+    pub b: Option<Vec<f32>>,
+}
+
+impl Linear {
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut y = x.matmul(&self.w);
+        if let Some(b) = &self.b {
+            for r in 0..y.rows {
+                for (v, bv) in y.row_mut(r).iter_mut().zip(b.iter()) {
+                    *v += bv;
+                }
+            }
+        }
+        y
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Norm {
+    pub g: Vec<f32>,
+    pub b: Option<Vec<f32>>,
+}
+
+impl Norm {
+    /// RMSNorm (centered=false) or LayerNorm (centered=true).
+    pub fn apply(&self, x: &Mat, eps: f64, centered: bool) -> Mat {
+        let mut out = Mat::zeros(x.rows, x.cols);
+        let n = x.cols as f64;
+        for r in 0..x.rows {
+            let row = x.row(r);
+            let mu = if centered {
+                row.iter().map(|&v| v as f64).sum::<f64>() / n
+            } else {
+                0.0
+            };
+            let var = row
+                .iter()
+                .map(|&v| (v as f64 - mu) * (v as f64 - mu))
+                .sum::<f64>()
+                / n;
+            let inv = 1.0 / (var + eps).sqrt();
+            let orow = out.row_mut(r);
+            for c in 0..x.cols {
+                let mut v = ((row[c] as f64 - mu) * inv) as f32 * self.g[c];
+                if let Some(b) = &self.b {
+                    v += b[c];
+                }
+                orow[c] = v;
+            }
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum Mlp {
+    /// SwiGLU: down( gate(x) * sigmoid(gate(x)) * up(x) )
+    SwiGlu { wg: Linear, wu: Linear, wd: Linear },
+    /// OPT: w2( relu(w1(x)) )
+    Relu { w1: Linear, w2: Linear },
+}
+
+#[derive(Debug, Clone)]
+pub struct FpLayer {
+    pub norm1: Norm,
+    pub norm2: Norm,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub mlp: Mlp,
+}
+
+#[derive(Debug, Clone)]
+pub struct FpModel {
+    pub cfg: ModelConfig,
+    pub embed: Mat,
+    pub pos_embed: Option<Mat>,
+    pub layers: Vec<FpLayer>,
+    pub final_norm: Norm,
+}
+
+fn get_b(w: &WeightsFile, name: &str) -> Option<Vec<f32>> {
+    w.vec_f32(name).ok()
+}
+
+impl FpModel {
+    pub fn from_weights(w: &WeightsFile) -> Result<FpModel> {
+        let cfg = w.config()?;
+        let embed = w.mat("embed")?;
+        let pos_embed = match cfg.arch {
+            Arch::Opt => Some(w.mat("pos_embed")?),
+            Arch::Llama => None,
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let lin = |kind: &str| -> Result<Linear> {
+                let name = format!("layers.{i}.{kind}");
+                Ok(Linear {
+                    w: w.mat(&name)?,
+                    b: get_b(w, &format!("{name}.b")),
+                })
+            };
+            let norm = |which: &str| -> Result<Norm> {
+                Ok(Norm {
+                    g: w.vec_f32(&format!("layers.{i}.{which}.g"))?,
+                    b: get_b(w, &format!("layers.{i}.{which}.b")),
+                })
+            };
+            let mlp = match cfg.arch {
+                Arch::Llama => Mlp::SwiGlu {
+                    wg: lin("mlp.wg")?,
+                    wu: lin("mlp.wu")?,
+                    wd: lin("mlp.wd")?,
+                },
+                Arch::Opt => Mlp::Relu {
+                    w1: lin("mlp.w1")?,
+                    w2: lin("mlp.w2")?,
+                },
+            };
+            layers.push(FpLayer {
+                norm1: norm("norm1")?,
+                norm2: norm("norm2")?,
+                wq: lin("attn.wq")?,
+                wk: lin("attn.wk")?,
+                wv: lin("attn.wv")?,
+                wo: lin("attn.wo")?,
+                mlp,
+            });
+        }
+        let final_norm = Norm {
+            g: w.vec_f32("final_norm.g")?,
+            b: get_b(w, "final_norm.b"),
+        };
+        Ok(FpModel { cfg, embed, pos_embed, layers, final_norm })
+    }
+
+    /// Float RoPE on (T, H*hd) mats, half-split per head, position offset
+    /// pos0. Matches python _fp_rope (f64 angles, f32 multiply).
+    fn rope(&self, x: &mut Mat, pos0: usize) {
+        let h = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let half = hd / 2;
+        let theta = self.cfg.rope_theta;
+        for t in 0..x.rows {
+            let pos = (t + pos0) as f64;
+            let row = x.row_mut(t);
+            for head in 0..h {
+                let base = head * hd;
+                for j in 0..half {
+                    let inv = 1.0 / theta.powf(j as f64 / half as f64);
+                    let ang = pos * inv;
+                    let (c, s) = ((ang.cos()) as f32, (ang.sin()) as f32);
+                    let x1 = row[base + j];
+                    let x2 = row[base + half + j];
+                    row[base + j] = x1 * c - x2 * s;
+                    row[base + half + j] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+
+    /// Causal multi-head attention core on f32 (scores WITHOUT 1/sqrt(hd)
+    /// — the trained model absorbs the constant; python matches).
+    fn attention(&self, q: &Mat, k: &Mat, v: &Mat,
+                 obs: &mut Option<Observer>, layer: usize) -> Mat {
+        let t = q.rows;
+        let h = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let mut out = Mat::zeros(t, self.cfg.d_model);
+        let mut scores_all = if obs.is_some() {
+            Some(Mat::zeros(t, h * t))
+        } else {
+            None
+        };
+        let mut probs = vec![0f32; t];
+        for head in 0..h {
+            let base = head * hd;
+            for i in 0..t {
+                let qrow = &q.row(i)[base..base + hd];
+                // scores over attendable prefix
+                let mut mx = f32::NEG_INFINITY;
+                for (j, p) in probs.iter_mut().enumerate().take(i + 1) {
+                    let krow = &k.row(j)[base..base + hd];
+                    let mut acc = 0f32;
+                    for (a, b) in qrow.iter().zip(krow.iter()) {
+                        acc += a * b;
+                    }
+                    *p = acc;
+                    if acc > mx {
+                        mx = acc;
+                    }
+                }
+                if let Some(sc) = scores_all.as_mut() {
+                    for j in 0..=i {
+                        *sc.at_mut(i, head * t + j) = probs[j];
+                    }
+                }
+                let mut denom = 0f32;
+                for p in probs.iter_mut().take(i + 1) {
+                    *p = (*p - mx).exp();
+                    denom += *p;
+                }
+                let inv = 1.0 / denom;
+                let orow = &mut out.row_mut(i)[base..base + hd];
+                for (j, &p) in probs.iter().enumerate().take(i + 1) {
+                    let w = p * inv;
+                    let vrow = &v.row(j)[base..base + hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        if let (Some(f), Some(sc)) = (obs.as_mut(), scores_all.as_ref()) {
+            f(layer, "scores", sc);
+        }
+        out
+    }
+
+    /// Full forward: tokens -> (T, V) logits. `pos0` offsets positions
+    /// (RoPE / learned) for chunked evaluation.
+    pub fn forward_full(&self, tokens: &[u16], pos0: usize,
+                        mut obs: Option<Observer>) -> Mat {
+        let t = tokens.len();
+        let cfg = &self.cfg;
+        let centered = cfg.arch == Arch::Opt;
+        let mut x = Mat::zeros(t, cfg.d_model);
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        if let Some(pe) = &self.pos_embed {
+            for i in 0..t {
+                for (v, p) in x.row_mut(i).iter_mut()
+                    .zip(pe.row(i + pos0).iter())
+                {
+                    *v += p;
+                }
+            }
+        }
+        if let Some(f) = obs.as_mut() {
+            f(usize::MAX, "embed_out", &x);
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let h = layer.norm1.apply(&x, cfg.norm_eps, centered);
+            if let Some(f) = obs.as_mut() {
+                f(li, "norm1_out", &h);
+            }
+            let mut q = layer.wq.apply(&h);
+            let mut k = layer.wk.apply(&h);
+            let v = layer.wv.apply(&h);
+            if let Some(f) = obs.as_mut() {
+                f(li, "q_out", &q);
+                f(li, "k_out", &k);
+                f(li, "v_out", &v);
+            }
+            if cfg.arch == Arch::Llama {
+                self.rope(&mut q, pos0);
+                self.rope(&mut k, pos0);
+            }
+            let att = self.attention(&q, &k, &v, &mut obs, li);
+            if let Some(f) = obs.as_mut() {
+                f(li, "attn_out", &att);
+            }
+            let o = layer.wo.apply(&att);
+            x.add_assign(&o);
+            if let Some(f) = obs.as_mut() {
+                f(li, "resid_mid", &x);
+            }
+            let h2 = layer.norm2.apply(&x, cfg.norm_eps, centered);
+            if let Some(f) = obs.as_mut() {
+                f(li, "norm2_out", &h2);
+            }
+            let y = match &layer.mlp {
+                Mlp::SwiGlu { wg, wu, wd } => {
+                    let gate = wg.apply(&h2);
+                    let up = wu.apply(&h2);
+                    if let Some(f) = obs.as_mut() {
+                        f(li, "gate_out", &gate);
+                        f(li, "up_out", &up);
+                    }
+                    let mut act = Mat::zeros(t, cfg.d_ff);
+                    for idx in 0..act.data.len() {
+                        let g = gate.data[idx];
+                        let sig = 1.0 / (1.0 + (-g).exp());
+                        act.data[idx] = g * sig * up.data[idx];
+                    }
+                    if let Some(f) = obs.as_mut() {
+                        f(li, "swiglu_out", &act);
+                    }
+                    wd.apply(&act)
+                }
+                Mlp::Relu { w1, w2 } => {
+                    let mut a = w1.apply(&h2);
+                    for v in a.data.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                    if let Some(f) = obs.as_mut() {
+                        f(li, "mlp_act", &a);
+                    }
+                    w2.apply(&a)
+                }
+            };
+            x.add_assign(&y);
+            if let Some(f) = obs.as_mut() {
+                f(li, "resid_out", &x);
+            }
+        }
+        let xf = self.final_norm.apply(&x, cfg.norm_eps, centered);
+        if let Some(f) = obs.as_mut() {
+            f(usize::MAX, "final_norm_out", &xf);
+        }
+        xf.matmul_bt(&self.embed)
+    }
+
+    /// Convenience: logits for the LAST position only (generation).
+    pub fn forward_last(&self, tokens: &[u16]) -> Vec<f32> {
+        let logits = self.forward_full(tokens, 0, None);
+        logits.row(logits.rows - 1).to_vec()
+    }
+}
+
+/// Load a model by name from the artifacts directory.
+pub fn load_model(artifacts: &std::path::Path, name: &str)
+    -> Result<FpModel> {
+    let w = weights::load_weights(
+        &artifacts.join(format!("{name}.weights.bin")),
+    )?;
+    let m = FpModel::from_weights(&w)?;
+    if m.cfg.name != name {
+        return Err(anyhow!("weights name mismatch: {} vs {name}",
+                           m.cfg.name));
+    }
+    Ok(m)
+}

@@ -1,0 +1,141 @@
+//! Weights container reader/writer — the JSON-header + raw-tensor format
+//! written by python/compile/train.py (`save_weights`).
+
+use crate::config::ModelConfig;
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+#[derive(Debug, Clone)]
+pub struct StoredTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl StoredTensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// View a 2-D f32 tensor as a Mat.
+    pub fn to_mat(&self) -> Result<Mat> {
+        let f = self.as_f32()?;
+        match self.shape.as_slice() {
+            [r, c] => Ok(Mat::from_vec(*r, *c, f.to_vec())),
+            [n] => Ok(Mat::from_vec(1, *n, f.to_vec())),
+            s => bail!("tensor rank {} not 1/2", s.len()),
+        }
+    }
+}
+
+pub struct WeightsFile {
+    pub tensors: BTreeMap<String, StoredTensor>,
+    pub meta: Json,
+}
+
+pub fn load_weights(path: &Path) -> Result<WeightsFile> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(
+        std::str::from_utf8(&hbuf).context("weights header not utf8")?,
+    )
+    .map_err(|e| anyhow!("weights header json: {e}"))?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+
+    let mut tensors = BTreeMap::new();
+    let mut meta = Json::Null;
+    let obj = header.as_obj().ok_or_else(|| anyhow!("header not object"))?;
+    for (name, info) in obj {
+        if name == "__meta__" {
+            meta = info.clone();
+            continue;
+        }
+        let dtype = info
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{name}: dtype"))?;
+        let shape: Vec<usize> = info
+            .get("shape")
+            .and_then(Json::i64_vec)
+            .ok_or_else(|| anyhow!("{name}: shape"))?
+            .iter()
+            .map(|&v| v as usize)
+            .collect();
+        let offset = info
+            .get("offset")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("{name}: offset"))? as usize;
+        let nbytes = info
+            .get("nbytes")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("{name}: nbytes"))? as usize;
+        let raw = data
+            .get(offset..offset + nbytes)
+            .ok_or_else(|| anyhow!("{name}: out of bounds"))?;
+        let td = match dtype {
+            "f32" => TensorData::F32(
+                raw.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            ),
+            "i32" => TensorData::I32(
+                raw.chunks_exact(4)
+                    .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            ),
+            "i64" => TensorData::I64(
+                raw.chunks_exact(8)
+                    .map(|b| i64::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            ),
+            d => bail!("{name}: unknown dtype {d}"),
+        };
+        tensors.insert(name.clone(), StoredTensor { shape, data: td });
+    }
+    Ok(WeightsFile { tensors, meta })
+}
+
+impl WeightsFile {
+    pub fn config(&self) -> Result<ModelConfig> {
+        let cfg = self
+            .meta
+            .get("config")
+            .ok_or_else(|| anyhow!("weights meta missing config"))?;
+        ModelConfig::from_json(cfg)
+    }
+
+    pub fn mat(&self, name: &str) -> Result<Mat> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing tensor {name}"))?
+            .to_mat()
+    }
+
+    pub fn vec_f32(&self, name: &str) -> Result<Vec<f32>> {
+        Ok(self
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing tensor {name}"))?
+            .as_f32()?
+            .to_vec())
+    }
+}

@@ -1,0 +1,68 @@
+//! Integer residual add: aligns two DynQ tensors to the max exponent
+//! (shift capped at 32) and requantizes per row. Mirrors intops.di_add.
+
+use super::{requant_rows, RawRows};
+use crate::quant::DynQ;
+
+pub fn di_add(a: &DynQ, b: &DynQ, out_bits: u32) -> DynQ {
+    let (t, n) = (a.rows(), a.cols());
+    assert_eq!(b.rows(), t);
+    assert_eq!(b.cols(), n);
+    let mut p = vec![0i64; t * n];
+    let mut m_in = vec![1i64; t];
+    let mut k_in = vec![0i32; t];
+    for r in 0..t {
+        let kc = a.k[r].max(b.k[r]);
+        let sa = (kc - a.k[r]).min(32);
+        let sb = (kc - b.k[r]).min(32);
+        let ma = (a.m[r] as i64) << sa;
+        let mb = (b.m[r] as i64) << sb;
+        let za = a.zp[r] as i64;
+        let zb = b.zp[r] as i64;
+        let arow = a.vals.row(r);
+        let brow = b.vals.row(r);
+        let prow = &mut p[r * n..(r + 1) * n];
+        for c in 0..n {
+            prow[c] = (arow[c] as i64 - za) * ma + (brow[c] as i64 - zb) * mb;
+        }
+        k_in[r] = kc;
+    }
+    let raw = RawRows { rows: t, cols: n, p, m_in: std::mem::take(&mut m_in),
+                        k_in };
+    requant_rows(&raw, out_bits, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_rows_f32;
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn add_matches_float_sum() {
+        let mut rng = Pcg64::new(6);
+        let av: Vec<f32> = (0..32).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let bv: Vec<f32> = (0..32).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let a = quantize_rows_f32(&Mat::from_vec(1, 32, av.clone()), 8);
+        let b = quantize_rows_f32(&Mat::from_vec(1, 32, bv.clone()), 8);
+        let y = di_add(&a, &b, 8);
+        let yd = y.dequant();
+        for i in 0..32 {
+            let want = av[i] + bv[i];
+            assert!((yd.row(0)[i] - want).abs() < 0.08, "{i}");
+        }
+    }
+
+    #[test]
+    fn widely_different_scales_align() {
+        // one tensor ~1000x larger: the small one must still contribute
+        let a = quantize_rows_f32(&Mat::from_vec(1, 4,
+            vec![1000.0, -1000.0, 500.0, 0.0]), 8);
+        let b = quantize_rows_f32(&Mat::from_vec(1, 4,
+            vec![1.0, 1.0, 1.0, 1.0]), 8);
+        let y = di_add(&a, &b, 8).dequant();
+        assert!((y.row(0)[3] - 1.0).abs() < 8.0); // within out quant step
+        assert!((y.row(0)[0] - 1001.0).abs() < 8.0);
+    }
+}

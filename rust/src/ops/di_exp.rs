@@ -1,0 +1,85 @@
+//! DI-Exp (paper Alg. 1): shift-only exponential.
+//!
+//! `m_f = m + (m>>1) - (m>>4)` approximates m*log2(e) (1.4375 vs 1.4427);
+//! the fractional part of the base-2 exponent is linearly interpolated
+//! and the integer part becomes a right shift. No multiplies beyond the
+//! per-row constant solve; the per-element work is shift/sub only.
+
+use super::{fdiv, rdiv};
+
+/// Per-row constant: t = -round(2^k / m_f) (always <= -1).
+#[inline]
+pub fn exp_t(m: i32, k: i32) -> i64 {
+    let m = m as i64;
+    let m_f = m + (m >> 1) - (m >> 4);
+    let two_k = 1i64 << k.min(62);
+    -(rdiv(two_k, m_f).max(1))
+}
+
+/// DI-Exp of a single value x <= 0 with per-row constant `t` from
+/// `exp_t`. Returns the "unshifted" integer exponential (conceptual
+/// scale 1/|t| — callers use ratios only, so it cancels).
+#[inline]
+pub fn di_exp_one(x: i64, t: i64) -> i64 {
+    debug_assert!(x <= 0 && t < 0);
+    let q = fdiv(x, t); // >= 0
+    let r = x - q * t; // in (t, 0]
+    let unshifted = (r >> 1) - t;
+    unshifted >> q.min(62)
+}
+
+/// DI-Exp over a row (values <= 0, scale m/2^k).
+pub fn di_exp_row(x: &[i64], m: i32, k: i32, out: &mut [i64]) {
+    let t = exp_t(m, k);
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = di_exp_one(v, t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Error bound vs exp(): the paper's linear interpolation of 2^f on
+    /// [-1,0] has ~6.2% max relative error plus the log2(e) mantissa
+    /// approximation (~0.4%); check we stay within ~8% relative.
+    #[test]
+    fn tracks_float_exp() {
+        let (m, k) = (200, 12); // s ~ 0.0488
+        let s = m as f64 / (k as f64).exp2();
+        let t = exp_t(m, k);
+        let scale = 1.0 / (-t) as f64;
+        for xi in (-400..=0).step_by(7) {
+            let x = xi as i64;
+            let want = (x as f64 * s).exp();
+            let got = di_exp_one(x, t) as f64 * scale;
+            let err = (want - got).abs();
+            assert!(
+                err <= want * 0.085 + scale * 1.5,
+                "x={x} want={want} got={got}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_near_one() {
+        let t = exp_t(180, 10);
+        let got = di_exp_one(0, t) as f64 / (-t) as f64;
+        assert!((got - 1.0).abs() < 0.01, "{got}");
+    }
+
+    #[test]
+    fn monotone_nonincreasing_as_x_decreases() {
+        let t = exp_t(150, 11);
+        let vals: Vec<i64> = (0..40).map(|i| di_exp_one(-i * 13, t)).collect();
+        for w in vals.windows(2) {
+            assert!(w[1] <= w[0], "not monotone: {:?}", w);
+        }
+    }
+
+    #[test]
+    fn deep_negative_underflows_to_zero() {
+        let t = exp_t(255, 8);
+        assert_eq!(di_exp_one(-1_000_000, t), 0);
+    }
+}

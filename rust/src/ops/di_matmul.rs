@@ -1,0 +1,135 @@
+//! DI-MatMul (paper §3.3, Eq. 2-8): dynamic integer-only matrix multiply.
+//!
+//! Accumulate phase: P = (X - zp) @ Wq in i32 (bounds: |x|<=255,
+//! |w|<=127, K<=4096 -> |P| < 2^27), then the per-channel mantissa fold
+//! in i64 and per-row dynamic requantization (ops::requant_row).
+//!
+//! This is the native mirror of the L1 pallas kernel
+//! (python/compile/kernels/di_matmul.py) — same fused structure: centered
+//! GEMM -> mantissa fold -> min/max -> dyadic solve -> requant.
+
+use super::{fdiv, requant_rows, RawRows};
+use crate::quant::{DynQ, QWeight, BIAS_Q};
+
+/// Accumulate phase: returns raw P rows with composite scales.
+pub fn di_linear_raw(x: &DynQ, w: &QWeight) -> RawRows {
+    let t = x.rows();
+    let kdim = x.cols();
+    let n = w.wq.cols;
+    assert_eq!(kdim, w.wq.rows, "di_linear dims");
+    let mut p = vec![0i64; t * n];
+    // centered i32 GEMM, i-k-j order (unit-stride inner over out row)
+    let mut acc = vec![0i32; n];
+    for r in 0..t {
+        acc.iter_mut().for_each(|a| *a = 0);
+        let zp = x.zp[r];
+        let xrow = x.vals.row(r);
+        for (kk, &xv) in xrow.iter().enumerate() {
+            let xc = xv - zp;
+            if xc == 0 {
+                continue;
+            }
+            let wrow = w.wq.row(kk);
+            for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+                *a += xc * wv;
+            }
+        }
+        let prow = &mut p[r * n..(r + 1) * n];
+        for c in 0..n {
+            prow[c] = acc[c] as i64 * w.mw[c] as i64;
+        }
+    }
+    let m_in: Vec<i64> = x.m.iter().map(|&m| m as i64).collect();
+    let k_in: Vec<i32> = x.k.iter().map(|&k| k + w.kw).collect();
+    // bias fold (Eq. 3 extended): p += fdiv(bq << (k_in - BIAS_Q), m_in)
+    if let Some(bq) = &w.bias_q {
+        for r in 0..t {
+            let sh = (k_in[r] - BIAS_Q).clamp(-40, 40);
+            let prow = &mut p[r * n..(r + 1) * n];
+            for c in 0..n {
+                let num = if sh >= 0 { bq[c] << sh } else { bq[c] >> -sh };
+                prow[c] += fdiv(num, m_in[r]);
+            }
+        }
+    }
+    RawRows { rows: t, cols: n, p, m_in, k_in }
+}
+
+/// Full dynamic integer-only linear: accumulate + per-row requantize.
+pub fn di_linear(x: &DynQ, w: &QWeight, out_bits: u32) -> DynQ {
+    let raw = di_linear_raw(x, w);
+    requant_rows(&raw, out_bits, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_rows_f32, quantize_weight};
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize, scale: f64) -> Mat {
+        let data = (0..r * c)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        Mat::from_vec(r, c, data)
+    }
+
+    #[test]
+    fn matches_float_linear_within_quant_noise() {
+        let mut rng = Pcg64::new(5);
+        let x = rand_mat(&mut rng, 7, 32, 2.0);
+        let w = rand_mat(&mut rng, 32, 16, 0.2);
+        let xq = quantize_rows_f32(&x, 8);
+        let wq = quantize_weight(&w, 8, 1.0, None);
+        let y = di_linear(&xq, &wq, 8);
+        let yd = y.dequant();
+        let yref = x.matmul(&w);
+        let amax = yref.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in yd.data.iter().zip(yref.data.iter()) {
+            assert!(
+                (a - b).abs() < amax * 0.03 + 0.02,
+                "{a} vs {b} (amax {amax})"
+            );
+        }
+    }
+
+    #[test]
+    fn bias_shifts_output() {
+        let mut rng = Pcg64::new(9);
+        let x = rand_mat(&mut rng, 4, 8, 1.0);
+        let w = rand_mat(&mut rng, 8, 4, 0.3);
+        let bias = vec![0.5f32, -0.5, 1.0, 0.0];
+        let xq = quantize_rows_f32(&x, 8);
+        let wq_nb = quantize_weight(&w, 8, 1.0, None);
+        let wq_b = quantize_weight(&w, 8, 1.0, Some(&bias));
+        let y0 = di_linear(&xq, &wq_nb, 8).dequant();
+        let y1 = di_linear(&xq, &wq_b, 8).dequant();
+        for r in 0..4 {
+            for c in 0..4 {
+                let delta = y1.at(r, c) - y0.at(r, c);
+                assert!(
+                    (delta - bias[c]).abs() < 0.08,
+                    "bias fold err {delta} vs {}",
+                    bias[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn w4_coarser_than_w8() {
+        let mut rng = Pcg64::new(11);
+        let x = rand_mat(&mut rng, 6, 24, 1.5);
+        let w = rand_mat(&mut rng, 24, 12, 0.25);
+        let yref = x.matmul(&w);
+        let mut errs = vec![];
+        for bits in [8u32, 4u32] {
+            let xq = quantize_rows_f32(&x, bits);
+            let wq = quantize_weight(&w, bits, 1.0, None);
+            let y = di_linear(&xq, &wq, bits).dequant();
+            errs.push(y.mse(&yref));
+        }
+        assert!(errs[1] > errs[0] * 4.0, "w4 {} vs w8 {}", errs[1], errs[0]);
+    }
+}

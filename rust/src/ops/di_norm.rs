@@ -1,0 +1,119 @@
+//! DI-Norm (paper Alg. 4): integer-only RMSNorm / LayerNorm with the
+//! bit-wise I-SQRT. gamma/beta are folded into the following linear
+//! offline (calib::fold), so this is pure normalization:
+//!   y = xc * sqrt(N) / sqrt(sum(xc^2))        (RMSNorm)
+//!   y = (xc - mu) * sqrt(N) / sqrt(var_sum)   (LayerNorm)
+//! The per-row input scale cancels in x/rms(x), so only centered
+//! integers matter. Output is a per-row dynamic requant of Q16 values.
+
+use super::{fdiv, isqrt, rdiv, requant_row};
+use crate::quant::DynQ;
+use crate::tensor::IMat;
+
+/// Output fixed-point exponent before requant (intops.NORM_FP_K).
+pub const NORM_FP_K: i32 = 16;
+
+pub fn di_norm(x: &DynQ, out_bits: u32, centered: bool) -> DynQ {
+    let (t, n) = (x.rows(), x.cols());
+    let mut vals = IMat::zeros(t, n);
+    let mut m = vec![0i32; t];
+    let mut k = vec![0i32; t];
+    let mut zp = vec![0i32; t];
+    let dsq = isqrt((n as i64) << 20); // sqrt(N) in Q10
+    let mut xc = vec![0i64; n];
+    let mut y = vec![0i64; n];
+    for r in 0..t {
+        let zpr = x.zp[r] as i64;
+        for (o, &v) in xc.iter_mut().zip(x.vals.row(r).iter()) {
+            *o = v as i64 - zpr;
+        }
+        if centered {
+            let sum: i64 = xc.iter().sum();
+            let mu = rdiv(sum, n as i64);
+            for v in xc.iter_mut() {
+                *v -= mu;
+            }
+        }
+        let var: i64 = xc.iter().map(|&v| v * v).sum();
+        let std = isqrt(var).max(1);
+        for (o, &v) in y.iter_mut().zip(xc.iter()) {
+            *o = fdiv(v * dsq << 6, std);
+        }
+        let (my, ky, z) =
+            requant_row(&y, 1, NORM_FP_K, out_bits, None, vals.row_mut(r));
+        m[r] = my;
+        k[r] = ky;
+        zp[r] = z;
+    }
+    DynQ { vals, m, k, zp, bits: out_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_rows_f32;
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn float_rmsnorm(x: &[f32]) -> Vec<f64> {
+        let n = x.len() as f64;
+        let ss: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let rms = (ss / n).sqrt();
+        x.iter().map(|&v| v as f64 / rms).collect()
+    }
+
+    fn float_layernorm(x: &[f32]) -> Vec<f64> {
+        let n = x.len() as f64;
+        let mu: f64 = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 =
+            x.iter().map(|&v| (v as f64 - mu).powi(2)).sum::<f64>() / n;
+        x.iter().map(|&v| (v as f64 - mu) / var.sqrt()).collect()
+    }
+
+    #[test]
+    fn rmsnorm_matches_float() {
+        let mut rng = Pcg64::new(2);
+        let data: Vec<f32> =
+            (0..64).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let x = Mat::from_vec(1, 64, data.clone());
+        let q = quantize_rows_f32(&x, 8);
+        let y = di_norm(&q, 8, false);
+        let yd = y.dequant();
+        // reference on the DEQUANTIZED input (isolates the norm error)
+        let want = float_rmsnorm(q.dequant().row(0));
+        for (a, b) in yd.row(0).iter().zip(want.iter()) {
+            assert!((*a as f64 - b).abs() < 0.06, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn layernorm_matches_float() {
+        let mut rng = Pcg64::new(3);
+        let data: Vec<f32> =
+            (0..48).map(|_| (rng.normal() * 2.0 + 1.0) as f32).collect();
+        let x = Mat::from_vec(1, 48, data);
+        let q = quantize_rows_f32(&x, 8);
+        let y = di_norm(&q, 8, true);
+        let yd = y.dequant();
+        let want = float_layernorm(q.dequant().row(0));
+        for (a, b) in yd.row(0).iter().zip(want.iter()) {
+            assert!((*a as f64 - b).abs() < 0.07, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn scale_invariance() {
+        // RMSNorm(s*x) == RMSNorm(x): the integer pipeline must preserve
+        // this because the row scale cancels.
+        let data: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.1).collect();
+        let x1 = Mat::from_vec(1, 32, data.clone());
+        let x2 = Mat::from_vec(1, 32, data.iter().map(|v| v * 37.0).collect());
+        let q1 = quantize_rows_f32(&x1, 8);
+        let q2 = quantize_rows_f32(&x2, 8);
+        let y1 = di_norm(&q1, 8, false).dequant();
+        let y2 = di_norm(&q2, 8, false).dequant();
+        for (a, b) in y1.data.iter().zip(y2.data.iter()) {
+            assert!((a - b).abs() < 0.03, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! DI-ClippedSoftmax (paper Alg. 2 + Eq. 10).
+//!
+//! Operates on raw i64 attention-score rows (scale m1*m2/2^(k1+k2) per
+//! row). The clipped floor bounds the 8-bit quantization window to the
+//! constant c regardless of score dynamic range — for c = 15 the max
+//! per-element quantization error is 15/255 ~ 0.059 in logit units,
+//! which is what lets an 8-bit softmax input survive LLM score outliers.
+//!
+//! Masked (non-causal) entries are excluded from the max and forced to
+//! probability zero; with `mask = None` the row is fully attended.
+
+use super::di_exp::{di_exp_one, exp_t};
+use super::{fdiv, ilog2, rdiv};
+use crate::quant::K_MAX;
+
+/// Softmax of one score row into `out` (i32 probabilities with scale
+/// 1/2^(p_out-1), zp = 0). `valid` = number of leading attendable
+/// entries (causal prefix); entries >= valid get probability 0.
+#[allow(clippy::too_many_arguments)]
+pub fn di_softmax_row(
+    p: &[i64],
+    m1: i32,
+    k1: i32,
+    m2: i32,
+    k2: i32,
+    p_out: u32,
+    clip: Option<(i32, i32)>,
+    valid: usize,
+    out: &mut [i32],
+    scratch: &mut Vec<i64>,
+) {
+    let n = valid.min(p.len());
+    let m_in = m1 as i64 * m2 as i64;
+    let k_in = k1 + k2;
+    debug_assert!(m_in >= 1 && k_in >= 0);
+    let mut pmax = i64::MIN;
+    for &v in &p[..n] {
+        if v > pmax {
+            pmax = v;
+        }
+    }
+    // clipped floor (Eq. 10): window never exceeds c in float units
+    let (cm, ck) = clip.unwrap_or((i32::MAX, 0));
+    let floor_v = if cm == i32::MAX {
+        let mut pmin = i64::MAX;
+        for &v in &p[..n] {
+            if v < pmin {
+                pmin = v;
+            }
+        }
+        pmin
+    } else {
+        let sh = (k_in - ck).clamp(0, 56);
+        let c_i = fdiv((cm as i64) << sh, m_in).max(1);
+        let mut pmin = i64::MAX;
+        for &v in &p[..n] {
+            if v < pmin {
+                pmin = v;
+            }
+        }
+        pmin.max(pmax - c_i)
+    };
+    let rng = (pmax - floor_v).max(1);
+    // 8-bit window requant (Eq. 6-8 on the clipped range)
+    let qmax = 255i64;
+    let num = qmax << (k_in + 8).min(56);
+    let k8 = ilog2((num / (rng * m_in)).max(1)).clamp(0, K_MAX);
+    let sh8 = k8 - k_in;
+    let prod = rng * m_in;
+    let m8 = if sh8 >= 0 {
+        (prod << sh8.min(62)) / qmax
+    } else {
+        (prod >> (-sh8).min(62)) / qmax
+    }
+    .clamp(1, 255) as i32;
+    // exp of (x8 - 255) at scale m8/2^k8
+    let t = exp_t(m8, k8);
+    scratch.clear();
+    scratch.reserve(n);
+    let mut denom: i64 = 0;
+    for &v in &p[..n] {
+        let vc = v.max(floor_v);
+        let x8 = rdiv((vc - floor_v) * qmax, rng);
+        let e = di_exp_one(x8 - 255, t);
+        scratch.push(e);
+        denom += e;
+    }
+    let denom = denom.max(1);
+    let pout_max = 1i64 << (p_out - 1);
+    for (o, &e) in out[..n].iter_mut().zip(scratch.iter()) {
+        *o = rdiv(e * pout_max, denom) as i32;
+    }
+    for o in out[n..].iter_mut() {
+        *o = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn float_softmax(x: &[f64]) -> Vec<f64> {
+        let mx = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = x.iter().map(|&v| (v - mx).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&v| v / s).collect()
+    }
+
+    #[test]
+    fn tracks_float_softmax_small_scores() {
+        let (m1, k1, m2, k2) = (200, 12, 180, 12);
+        let s = (m1 as f64 * m2 as f64) / (24f64).exp2();
+        let p: Vec<i64> = vec![100_000, -50_000, 0, 80_000, -120_000, 30_000];
+        let xf: Vec<f64> = p.iter().map(|&v| v as f64 * s).collect();
+        let want = float_softmax(&xf);
+        let mut out = vec![0i32; p.len()];
+        let mut scratch = vec![];
+        di_softmax_row(&p, m1, k1, m2, k2, 8, Some((240, 4)), p.len(),
+                       &mut out, &mut scratch);
+        for (o, w) in out.iter().zip(want.iter()) {
+            let got = *o as f64 / 128.0;
+            assert!((got - w).abs() < 0.05, "{got} vs {w}");
+        }
+        let total: i64 = out.iter().map(|&v| v as i64).sum();
+        assert!((total - 128).abs() <= 6, "prob mass {total}");
+    }
+
+    #[test]
+    fn huge_outlier_scores_survive_clipping() {
+        // one score dominating by +1000 in float units: clip keeps the
+        // window at c=15, softmax must be ~one-hot on the max.
+        let (m1, k1, m2, k2) = (128, 10, 128, 10);
+        let s = (m1 as f64 * m2 as f64) / (20f64).exp2();
+        let big = (1000.0 / s) as i64;
+        let p = vec![0, big, big / 2, -big];
+        let mut out = vec![0i32; 4];
+        let mut scratch = vec![];
+        di_softmax_row(&p, m1, k1, m2, k2, 8, Some((240, 4)), 4, &mut out,
+                       &mut scratch);
+        assert!(out[1] >= 126, "max prob {out:?}");
+        assert_eq!(out[0], 0);
+        assert_eq!(out[3], 0);
+    }
+
+    #[test]
+    fn causal_suffix_is_zero() {
+        // scores ~0.5 apart in float units: both prefix entries get mass
+        let p = vec![1_000i64, 2_000, 30_000, 40_000];
+        let mut out = vec![9i32; 4];
+        let mut scratch = vec![];
+        di_softmax_row(&p, 150, 12, 150, 12, 8, Some((240, 4)), 2, &mut out,
+                       &mut scratch);
+        assert_eq!(out[2], 0);
+        assert_eq!(out[3], 0);
+        assert!(out[0] > 0 && out[1] > 0, "{out:?}");
+        assert!(out[1] > out[0]);
+    }
+
+    #[test]
+    fn uniform_scores_uniform_probs() {
+        let p = vec![5_000i64; 8];
+        let mut out = vec![0i32; 8];
+        let mut scratch = vec![];
+        di_softmax_row(&p, 128, 12, 128, 12, 8, Some((240, 4)), 8, &mut out,
+                       &mut scratch);
+        for &o in &out {
+            assert!((o - 16).abs() <= 1, "{out:?}");
+        }
+    }
+}

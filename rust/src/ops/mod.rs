@@ -1,0 +1,320 @@
+//! Integer-only operator library (the DI-* operators of the paper),
+//! bit-exact with python/compile/intops.py.
+//!
+//! Conventions shared with the python spec:
+//!  * all divisions are FLOOR divisions (`fdiv`), including negative
+//!    operands — rust `/` truncates toward zero, so never use it here;
+//!  * "round" is `fdiv(num + den/2, den)` (round-half-up), never
+//!    banker's rounding;
+//!  * right shifts on negative ints are arithmetic (floor) shifts;
+//!  * i32 accumulation where bounds allow, i64 for requantization.
+
+pub mod di_add;
+pub mod di_exp;
+pub mod di_matmul;
+pub mod di_norm;
+pub mod di_softmax;
+pub mod di_swiglu;
+pub mod rope;
+
+use crate::quant::{DynQ, ACT_K_MAX};
+use crate::tensor::IMat;
+
+/// Floor division (numpy `//` semantics).
+#[inline]
+pub fn fdiv(a: i64, b: i64) -> i64 {
+    debug_assert!(b != 0);
+    let q = a / b;
+    let r = a % b;
+    if r != 0 && ((r < 0) != (b < 0)) {
+        q - 1
+    } else {
+        q
+    }
+}
+
+/// Round-half-up division for b > 0: floor((a + b/2) / b).
+#[inline]
+pub fn rdiv(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    fdiv(a + b / 2, b)
+}
+
+/// floor(log2(x)) for x >= 1 (MSB method, paper Eq. 6).
+#[inline]
+pub fn ilog2(x: i64) -> i32 {
+    debug_assert!(x >= 1);
+    63 - x.leading_zeros() as i32
+}
+
+/// Bit-wise integer square root (paper Alg. 4 I-SQRT): largest n with
+/// n*n <= x, non-restoring method over 31 bit pairs (covers x < 2^62).
+pub fn isqrt(x: i64) -> i64 {
+    debug_assert!(x >= 0);
+    let mut n: i64 = 0;
+    let mut rem = x;
+    for v in (0..=30).rev() {
+        let bit = 1i64 << v;
+        let temp = ((n << 1) + bit) << v;
+        if rem >= temp {
+            rem -= temp;
+            n += bit;
+        }
+    }
+    n
+}
+
+/// Integer division to a target bit precision (paper's IntDiv):
+/// round(a / b * 2^(p-1)), all-integer.
+#[inline]
+pub fn intdiv(a: i64, b: i64, p_bits: u32) -> i64 {
+    rdiv(a << (p_bits - 1), b)
+}
+
+/// Raw integer rows with a per-row dyadic scale — the intermediate
+/// P of DI-MatMul before requantization.
+pub struct RawRows {
+    pub rows: usize,
+    pub cols: usize,
+    pub p: Vec<i64>,
+    pub m_in: Vec<i64>,
+    pub k_in: Vec<i32>,
+}
+
+impl RawRows {
+    pub fn row(&self, r: usize) -> &[i64] {
+        &self.p[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Dynamically requantize one raw row to `bits` (paper Eq. 6-8).
+/// Returns (vals written into `out`, m_y, k_y, zp).
+/// `clip`: optional (cm, ck) dyadic clip constant (Eq. 10) bounding the
+/// quantization window to c = cm/2^ck in input float units.
+pub fn requant_row(
+    p: &[i64],
+    m_in: i64,
+    k_in: i32,
+    bits: u32,
+    clip: Option<(i32, i32)>,
+    out: &mut [i32],
+) -> (i32, i32, i32) {
+    debug_assert!(m_in >= 1 && k_in >= 0 && k_in <= 56);
+    let qmax = (1i64 << bits) - 1;
+    // include zero in the range (see quant::quantize_rows_f32)
+    let mut pmax = 0i64;
+    let mut pmin = 0i64;
+    for &v in p {
+        if v > pmax {
+            pmax = v;
+        }
+        if v < pmin {
+            pmin = v;
+        }
+    }
+    let mut clipped = false;
+    if let Some((cm, ck)) = clip {
+        let sh = (k_in - ck).clamp(0, 56);
+        let c_i = fdiv((cm as i64) << sh, m_in).max(1);
+        if pmax - c_i > pmin {
+            pmin = pmax - c_i;
+            clipped = true;
+        }
+    }
+    let rng = (pmax - pmin).max(1);
+
+    // Eq. 6: k_y via MSB of qmax * 2^(k_in+8) / (rng * m_in)
+    let num = qmax << (k_in + 8).min(56);
+    let k_y = ilog2((num / (rng * m_in)).max(1)).clamp(0, ACT_K_MAX);
+    // Eq. 7: m_y = floor(rng * m_in * 2^(k_y - k_in) / qmax)
+    let sh = k_y - k_in;
+    let prod = rng * m_in;
+    let m_y = if sh >= 0 {
+        (prod << sh.min(62)) / qmax
+    } else {
+        (prod >> (-sh).min(62)) / qmax
+    }
+    .clamp(1, 255) as i32;
+    // Eq. 8 (round-half-up)
+    let zp = rdiv(-pmin * qmax, rng) as i32;
+    if clipped {
+        for (o, &v) in out.iter_mut().zip(p.iter()) {
+            let vc = v.max(pmin);
+            *o = rdiv((vc - pmin) * qmax, rng) as i32;
+        }
+    } else {
+        for (o, &v) in out.iter_mut().zip(p.iter()) {
+            *o = rdiv((v - pmin) * qmax, rng) as i32;
+        }
+    }
+    (m_y, k_y, zp)
+}
+
+/// Requantize all rows of a RawRows to a DynQ (per-row scales).
+pub fn requant_rows(raw: &RawRows, bits: u32,
+                    clip: Option<(i32, i32)>) -> DynQ {
+    let mut vals = IMat::zeros(raw.rows, raw.cols);
+    let mut m = vec![0i32; raw.rows];
+    let mut k = vec![0i32; raw.rows];
+    let mut zp = vec![0i32; raw.rows];
+    for r in 0..raw.rows {
+        let (my, ky, z) = requant_row(
+            raw.row(r),
+            raw.m_in[r],
+            raw.k_in[r],
+            bits,
+            clip,
+            vals.row_mut(r),
+        );
+        m[r] = my;
+        k[r] = ky;
+        zp[r] = z;
+    }
+    DynQ { vals, m, k, zp, bits }
+}
+
+/// Requantize per-row-scaled values to ONE shared dyadic scale
+/// (intops.requant_common): align rows to the max exponent, then
+/// range-reduce jointly. Returns centered i64 values + scalar scale.
+pub struct CommonQ {
+    pub rows: usize,
+    pub cols: usize,
+    /// centered values (zp already subtracted)
+    pub vals: Vec<i64>,
+    pub m: i32,
+    pub k: i32,
+    pub zp: i32,
+}
+
+pub fn requant_common(
+    centered: &[i64],
+    rows: usize,
+    cols: usize,
+    m: &[i32],
+    k: &[i32],
+    bits: u32,
+) -> CommonQ {
+    debug_assert_eq!(centered.len(), rows * cols);
+    let kc = k.iter().copied().max().unwrap_or(0);
+    let mut aligned = vec![0i64; rows * cols];
+    for r in 0..rows {
+        let sh = (kc - k[r]).min(32);
+        let mult = (m[r] as i64) << sh;
+        for c in 0..cols {
+            aligned[r * cols + c] = centered[r * cols + c] * mult;
+        }
+    }
+    let mut out = vec![0i32; rows * cols];
+    let (my, ky, zp) = requant_row(&aligned, 1, kc, bits, None, &mut out);
+    let vals = out.iter().map(|&v| v as i64 - zp as i64).collect();
+    CommonQ { rows, cols, vals, m: my, k: ky, zp }
+}
+
+/// Integer ReLU on a DynQ (OPT-style MLP): max(v, zp), scale unchanged.
+pub fn di_relu(x: &mut DynQ) {
+    for r in 0..x.rows() {
+        let zp = x.zp[r];
+        for v in x.vals.row_mut(r) {
+            if *v < zp {
+                *v = zp;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fdiv_matches_python_floor() {
+        assert_eq!(fdiv(7, 2), 3);
+        assert_eq!(fdiv(-7, 2), -4);
+        assert_eq!(fdiv(7, -2), -4);
+        assert_eq!(fdiv(-7, -2), 3);
+        assert_eq!(fdiv(6, 3), 2);
+        assert_eq!(fdiv(-6, 3), -2);
+    }
+
+    #[test]
+    fn ilog2_exact_powers() {
+        assert_eq!(ilog2(1), 0);
+        assert_eq!(ilog2(2), 1);
+        assert_eq!(ilog2(3), 1);
+        assert_eq!(ilog2(1 << 40), 40);
+        assert_eq!(ilog2((1 << 40) + 12345), 40);
+    }
+
+    #[test]
+    fn isqrt_exhaustive_small() {
+        for x in 0i64..2000 {
+            let r = isqrt(x);
+            assert!(r * r <= x && (r + 1) * (r + 1) > x, "x={x} r={r}");
+        }
+    }
+
+    #[test]
+    fn isqrt_large() {
+        for &x in &[1i64 << 40, (1 << 60) - 1, 999_999_999_999] {
+            let r = isqrt(x);
+            assert!(r * r <= x && (r + 1) * (r + 1) > x);
+        }
+    }
+
+    #[test]
+    fn requant_roundtrip_accuracy() {
+        // values with a known float meaning requantize within 1/qmax
+        let p: Vec<i64> = (-8..8).map(|i| i * 1000).collect();
+        let mut out = vec![0i32; p.len()];
+        let (m, k, zp) = requant_row(&p, 200, 20, 8, None, &mut out);
+        let s_in = 200f64 / (20f64).exp2();
+        let s_out = m as f64 / (k as f64).exp2();
+        for (i, &v) in p.iter().enumerate() {
+            let want = v as f64 * s_in;
+            let got = (out[i] - zp) as f64 * s_out;
+            assert!(
+                (want - got).abs() <= s_out * 0.75 + 1e-9,
+                "i={i} want={want} got={got}"
+            );
+        }
+    }
+
+    #[test]
+    fn requant_clip_bounds_window() {
+        // huge outlier; clip c=15 must bound the quantized window
+        let mut p = vec![0i64; 16];
+        p[0] = 1 << 40;
+        let m_in = 128i64;
+        let k_in = 20i32;
+        let mut out = vec![0i32; 16];
+        let (m, k, _zp) = requant_row(&p, m_in, k_in, 8, Some((240, 4)),
+                                      &mut out);
+        let s_out = m as f64 / (k as f64).exp2();
+        // window length = 255 * s_out must be ~ 15 (the clip constant)
+        let window = 255.0 * s_out;
+        assert!((window - 15.0).abs() / 15.0 < 0.02, "window={window}");
+        assert_eq!(out[0], 255);
+        assert_eq!(out[1], 0);
+    }
+
+    #[test]
+    fn intdiv_probability() {
+        // 1/3 at 8 bits: round(1/3 * 128) = 43
+        assert_eq!(intdiv(1, 3, 8), 43);
+        assert_eq!(intdiv(2, 3, 8), 85);
+        assert_eq!(intdiv(3, 3, 8), 128);
+    }
+
+    #[test]
+    fn relu_clamps_below_zp() {
+        let mut q = DynQ {
+            vals: IMat::from_vec(1, 4, vec![10, 120, 128, 200]),
+            m: vec![128],
+            k: vec![10],
+            zp: vec![128],
+            bits: 8,
+        };
+        di_relu(&mut q);
+        assert_eq!(q.vals.data, vec![128, 128, 128, 200]);
+    }
+}

@@ -1,0 +1,103 @@
+//! Integer RoPE: rotation by precomputed Q14 cos/sin tables (constants —
+//! no runtime floating point). The rotation is scale-preserving, so the
+//! per-token dyadic scale of the input is unchanged; values come out
+//! CENTERED (zero point removed). Mirrors intops.di_rope / rope_tables.
+
+/// Q14 fixed-point exponent of the tables (intops.ROPE_Q).
+pub const ROPE_Q: i32 = 14;
+
+#[derive(Debug, Clone)]
+pub struct RopeTables {
+    /// (max_seq, head_dim/2) row-major
+    pub cos_q: Vec<i32>,
+    pub sin_q: Vec<i32>,
+    pub half: usize,
+    pub max_seq: usize,
+}
+
+impl RopeTables {
+    /// Offline table build (matches intops.rope_tables bit-for-bit).
+    pub fn new(head_dim: usize, max_seq: usize, theta: f64) -> Self {
+        let half = head_dim / 2;
+        let mut cos_q = Vec::with_capacity(max_seq * half);
+        let mut sin_q = Vec::with_capacity(max_seq * half);
+        let q = (1i64 << ROPE_Q) as f64;
+        for pos in 0..max_seq {
+            for j in 0..half {
+                let inv = 1.0 / theta.powf(j as f64 / half as f64);
+                let ang = pos as f64 * inv;
+                cos_q.push((ang.cos() * q + 0.5).floor() as i32);
+                sin_q.push((ang.sin() * q + 0.5).floor() as i32);
+            }
+        }
+        Self { cos_q, sin_q, half, max_seq }
+    }
+
+    /// From pre-built integer tables (e.g. artifact params).
+    pub fn from_raw(cos_q: Vec<i32>, sin_q: Vec<i32>, half: usize) -> Self {
+        let max_seq = cos_q.len() / half;
+        Self { cos_q, sin_q, half, max_seq }
+    }
+
+    /// Rotate one head-row in place: x is the CENTERED head vector
+    /// (len = 2*half, half-split layout), `pos` the absolute position.
+    pub fn rotate(&self, x: &mut [i64], pos: usize) {
+        debug_assert_eq!(x.len(), 2 * self.half);
+        debug_assert!(pos < self.max_seq, "pos {pos} >= {}", self.max_seq);
+        let base = pos * self.half;
+        let round = 1i64 << (ROPE_Q - 1);
+        for j in 0..self.half {
+            let c = self.cos_q[base + j] as i64;
+            let s = self.sin_q[base + j] as i64;
+            let x1 = x[j];
+            let x2 = x[self.half + j];
+            x[j] = (x1 * c - x2 * s + round) >> ROPE_Q;
+            x[self.half + j] = (x1 * s + x2 * c + round) >> ROPE_Q;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let t = RopeTables::new(8, 16, 10000.0);
+        let mut x: Vec<i64> = vec![100, -50, 30, 7, 0, 25, -125, 90];
+        let orig = x.clone();
+        t.rotate(&mut x, 0);
+        assert_eq!(x, orig); // cos=1, sin=0 at pos 0 (Q14 exact)
+    }
+
+    #[test]
+    fn norm_preserved_under_rotation() {
+        let t = RopeTables::new(8, 64, 10000.0);
+        let mut x: Vec<i64> = vec![120, -80, 45, 66, -12, 99, 3, -71];
+        let n0: i64 = x.iter().map(|v| v * v).sum();
+        t.rotate(&mut x, 37);
+        let n1: i64 = x.iter().map(|v| v * v).sum();
+        let rel = (n1 - n0).abs() as f64 / n0 as f64;
+        assert!(rel < 0.02, "norm drift {rel}");
+    }
+
+    #[test]
+    fn matches_float_rotation() {
+        let hd = 8;
+        let t = RopeTables::new(hd, 32, 10000.0);
+        let vals: Vec<i64> = vec![200, -150, 80, 40, -60, 110, -30, 90];
+        for pos in [1usize, 7, 31] {
+            let mut x = vals.clone();
+            t.rotate(&mut x, pos);
+            for j in 0..hd / 2 {
+                let inv = 1.0 / 10000f64.powf(j as f64 / (hd / 2) as f64);
+                let ang = pos as f64 * inv;
+                let (c, s) = (ang.cos(), ang.sin());
+                let w1 = vals[j] as f64 * c - vals[hd / 2 + j] as f64 * s;
+                let w2 = vals[j] as f64 * s + vals[hd / 2 + j] as f64 * c;
+                assert!((x[j] as f64 - w1).abs() < 1.5, "pos {pos} j {j}");
+                assert!((x[hd / 2 + j] as f64 - w2).abs() < 1.5);
+            }
+        }
+    }
+}

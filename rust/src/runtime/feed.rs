@@ -1,0 +1,207 @@
+//! Build PJRT input literals from rust-native engines following the
+//! manifest's parameter contract (python model.fp_param_spec /
+//! int_param_spec ordering). This is how the L3 coordinator feeds the
+//! AOT executables with ITS OWN quantized weights — quantization happens
+//! exactly once, in rust.
+
+use super::{lit_f32, lit_i32, lit_i64, HloEntry};
+use crate::int_model::{IntMlp, IntModel};
+use crate::nn::{FpModel, Mlp};
+use crate::quant::QWeight;
+use anyhow::{anyhow, bail, Result};
+
+/// Inputs for an fp_forward artifact: tokens + FP weights by name.
+pub fn fp_inputs(entry: &HloEntry, fp: &FpModel, tokens: &[u16])
+    -> Result<Vec<xla::Literal>> {
+    if tokens.len() != entry.seq {
+        bail!("tokens {} != artifact seq {}", tokens.len(), entry.seq);
+    }
+    let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    let mut out = vec![lit_i32(&toks, &[entry.seq])?];
+    for p in &entry.params {
+        let data = fp_tensor(fp, &p.name)?;
+        out.push(lit_f32(&data, &p.shape)?);
+    }
+    Ok(out)
+}
+
+fn fp_tensor(fp: &FpModel, name: &str) -> Result<Vec<f32>> {
+    let get_lin = |i: usize, kind: &str| -> Result<&crate::nn::Linear> {
+        let l = &fp.layers[i];
+        Ok(match kind {
+            "attn.wq" => &l.wq,
+            "attn.wk" => &l.wk,
+            "attn.wv" => &l.wv,
+            "attn.wo" => &l.wo,
+            "mlp.wg" => match &l.mlp {
+                Mlp::SwiGlu { wg, .. } => wg,
+                _ => bail!("no wg"),
+            },
+            "mlp.wu" => match &l.mlp {
+                Mlp::SwiGlu { wu, .. } => wu,
+                _ => bail!("no wu"),
+            },
+            "mlp.wd" => match &l.mlp {
+                Mlp::SwiGlu { wd, .. } => wd,
+                _ => bail!("no wd"),
+            },
+            "mlp.w1" => match &l.mlp {
+                Mlp::Relu { w1, .. } => w1,
+                _ => bail!("no w1"),
+            },
+            "mlp.w2" => match &l.mlp {
+                Mlp::Relu { w2, .. } => w2,
+                _ => bail!("no w2"),
+            },
+            k => bail!("unknown linear {k}"),
+        })
+    };
+    if name == "embed" {
+        return Ok(fp.embed.data.clone());
+    }
+    if name == "pos_embed" {
+        return Ok(fp.pos_embed.as_ref()
+            .ok_or_else(|| anyhow!("no pos_embed"))?.data.clone());
+    }
+    if name == "final_norm.g" {
+        return Ok(fp.final_norm.g.clone());
+    }
+    if name == "final_norm.b" {
+        return Ok(fp.final_norm.b.clone()
+            .ok_or_else(|| anyhow!("no final beta"))?);
+    }
+    if let Some(rest) = name.strip_prefix("layers.") {
+        let (idx, kind) = rest
+            .split_once('.')
+            .ok_or_else(|| anyhow!("bad name {name}"))?;
+        let i: usize = idx.parse()?;
+        return match kind {
+            "norm1.g" => Ok(fp.layers[i].norm1.g.clone()),
+            "norm2.g" => Ok(fp.layers[i].norm2.g.clone()),
+            "norm1.b" => Ok(fp.layers[i].norm1.b.clone()
+                .ok_or_else(|| anyhow!("no b"))?),
+            "norm2.b" => Ok(fp.layers[i].norm2.b.clone()
+                .ok_or_else(|| anyhow!("no b"))?),
+            k if k.ends_with(".b") => {
+                let lk = k.trim_end_matches(".b");
+                Ok(get_lin(i, lk)?
+                    .b
+                    .clone()
+                    .ok_or_else(|| anyhow!("no bias {name}"))?)
+            }
+            k => Ok(get_lin(i, k)?.w.data.clone()),
+        };
+    }
+    bail!("unknown fp tensor {name}")
+}
+
+/// Inputs for an int_block / int_forward artifact from an IntModel.
+/// The artifact may have fewer layers than the model (int_block uses
+/// n_layers = 1); layer j of the artifact takes the model's layer j.
+pub fn int_inputs(entry: &HloEntry, m: &IntModel, tokens: &[u16])
+    -> Result<Vec<xla::Literal>> {
+    if tokens.len() != entry.seq {
+        bail!("tokens {} != artifact seq {}", tokens.len(), entry.seq);
+    }
+    let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    let mut out = vec![lit_i32(&toks, &[entry.seq])?];
+    for p in &entry.params {
+        out.push(int_tensor(m, &p.name, &p.shape)?);
+    }
+    Ok(out)
+}
+
+fn qw_part(w: &QWeight, part: &str, shape: &[usize])
+    -> Result<xla::Literal> {
+    match part {
+        "wq" => lit_i32(&w.wq.data, shape),
+        "mw" => lit_i32(&w.mw, shape),
+        "kw" => lit_i32(&[w.kw], shape),
+        "bq" => lit_i64(
+            w.bias_q.as_ref().ok_or_else(|| anyhow!("no bias_q"))?,
+            shape,
+        ),
+        p => bail!("unknown weight part {p}"),
+    }
+}
+
+fn int_tensor(m: &IntModel, name: &str, shape: &[usize])
+    -> Result<xla::Literal> {
+    let emb = &m.embed.q;
+    match name {
+        "embed.vals" => return lit_i32(&emb.vals.data, shape),
+        "embed.m" => return lit_i32(&emb.m, shape),
+        "embed.k" => return lit_i32(&emb.k, shape),
+        "embed.zp" => return lit_i32(&emb.zp, shape),
+        _ => {}
+    }
+    if let Some(part) = name.strip_prefix("pos_embed.") {
+        let pe = &m.pos_embed.as_ref()
+            .ok_or_else(|| anyhow!("no pos_embed"))?.q;
+        return match part {
+            "vals" => lit_i32(&pe.vals.data, shape),
+            "m" => lit_i32(&pe.m, shape),
+            "k" => lit_i32(&pe.k, shape),
+            "zp" => lit_i32(&pe.zp, shape),
+            p => bail!("pos part {p}"),
+        };
+    }
+    if name == "rope.cos" || name == "rope.sin" {
+        let r = m.rope.as_ref().ok_or_else(|| anyhow!("no rope"))?;
+        // artifact wants (max_seq, half) of the BLOCK config; our table
+        // covers >= that — slice the leading rows
+        let need: usize = shape.iter().product();
+        let data = if name == "rope.cos" { &r.cos_q } else { &r.sin_q };
+        return lit_i32(&data[..need], shape);
+    }
+    if let Some(part) = name.strip_prefix("lm_head.") {
+        return qw_part(&m.lm_head, part, shape);
+    }
+    if let Some(rest) = name.strip_prefix("layers.") {
+        let (idx, kind) = rest
+            .split_once('.')
+            .ok_or_else(|| anyhow!("bad name {name}"))?;
+        let i: usize = idx.parse()?;
+        let l = &m.layers[i];
+        if kind == "alpha_m" || kind == "alpha_k" {
+            let alpha = match &l.mlp {
+                IntMlp::SwiGlu { alpha, .. } => alpha,
+                _ => bail!("no alpha on opt"),
+            };
+            let v = if kind == "alpha_m" { &alpha.am } else { &alpha.ak };
+            return lit_i32(v, shape);
+        }
+        let (lk, part) = kind
+            .rsplit_once('.')
+            .ok_or_else(|| anyhow!("bad kind {kind}"))?;
+        let w = match lk {
+            "attn.wq" => &l.wq,
+            "attn.wk" => &l.wk,
+            "attn.wv" => &l.wv,
+            "attn.wo" => &l.wo,
+            "mlp.wg" => match &l.mlp {
+                IntMlp::SwiGlu { wg, .. } => wg,
+                _ => bail!("no wg"),
+            },
+            "mlp.wu" => match &l.mlp {
+                IntMlp::SwiGlu { wu, .. } => wu,
+                _ => bail!("no wu"),
+            },
+            "mlp.wd" => match &l.mlp {
+                IntMlp::SwiGlu { wd, .. } => wd,
+                _ => bail!("no wd"),
+            },
+            "mlp.w1" => match &l.mlp {
+                IntMlp::Relu { w1, .. } => w1,
+                _ => bail!("no w1"),
+            },
+            "mlp.w2" => match &l.mlp {
+                IntMlp::Relu { w2, .. } => w2,
+                _ => bail!("no w2"),
+            },
+            k => bail!("unknown linear {k}"),
+        };
+        return qw_part(w, part, shape);
+    }
+    bail!("unknown int tensor {name}")
+}

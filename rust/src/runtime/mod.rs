@@ -1,0 +1,184 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from rust.
+//!
+//! Interchange format is HLO TEXT (see /opt/xla-example/README.md and
+//! python/compile/aot.py): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, avoiding the 64-bit-id protos that xla_extension
+//! 0.5.1 rejects. One compiled executable is cached per artifact file.
+
+pub mod feed;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct HloEntry {
+    pub kind: String,
+    pub model: String,
+    pub seq: usize,
+    pub scheme: Option<String>,
+    pub file: String,
+    pub params: Vec<ParamMeta>,
+}
+
+/// Parsed artifacts/manifest.json.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub raw: Json,
+    pub hlo: Vec<HloEntry>,
+}
+
+impl Manifest {
+    pub fn load(artifacts: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(artifacts.join("manifest.json"))
+            .context("read manifest.json (run `make artifacts`)")?;
+        let raw = Json::parse(&text)
+            .map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut hlo = Vec::new();
+        for e in raw.get("hlo").and_then(Json::as_arr).unwrap_or(&[]) {
+            let params = e
+                .get("params")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| ParamMeta {
+                    name: p.get("name").and_then(Json::as_str)
+                        .unwrap_or("").to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::i64_vec)
+                        .unwrap_or_default()
+                        .iter()
+                        .map(|&v| v as usize)
+                        .collect(),
+                    dtype: p.get("dtype").and_then(Json::as_str)
+                        .unwrap_or("f32").to_string(),
+                })
+                .collect();
+            hlo.push(HloEntry {
+                kind: e.get("kind").and_then(Json::as_str)
+                    .unwrap_or("").to_string(),
+                model: e.get("model").and_then(Json::as_str)
+                    .unwrap_or("").to_string(),
+                seq: e.get("seq").and_then(Json::as_i64).unwrap_or(0)
+                    as usize,
+                scheme: e.get("scheme").and_then(Json::as_str)
+                    .map(|s| s.to_string()),
+                file: e.get("file").and_then(Json::as_str)
+                    .unwrap_or("").to_string(),
+                params,
+            });
+        }
+        Ok(Manifest { dir: artifacts.to_path_buf(), raw, hlo })
+    }
+
+    pub fn find(&self, kind: &str, model: &str, scheme: Option<&str>,
+                seq: Option<usize>) -> Option<&HloEntry> {
+        self.hlo.iter().find(|e| {
+            e.kind == kind
+                && e.model == model
+                && scheme.map(|s| e.scheme.as_deref() == Some(s))
+                    .unwrap_or(true)
+                && seq.map(|s| e.seq == s).unwrap_or(true)
+        })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.raw
+            .get("models")
+            .and_then(Json::as_obj)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}
+
+/// PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    /// Load + compile an HLO text file (cached per path).
+    pub fn load(&mut self, path: &Path)
+        -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse hlo {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+            self.cache.insert(path.to_path_buf(), exe);
+        }
+        Ok(&self.cache[path])
+    }
+
+    /// Execute with literal inputs; unwraps the 1-tuple result and
+    /// returns its f32 contents.
+    pub fn execute_f32(&mut self, path: &Path, inputs: &[xla::Literal])
+        -> Result<Vec<f32>> {
+        let exe = self.load(path)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("tuple unwrap: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    /// Execute and decompose the result tuple (kernel artifacts with
+    /// multiple integer outputs).
+    pub fn execute_tuple(&mut self, path: &Path,
+                         inputs: &[xla::Literal])
+        -> Result<Vec<xla::Literal>> {
+        let exe = self.load(path)?;
+        let mut result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose: {e}"))
+    }
+}
+
+/// Literal constructors for the dtypes our artifacts use.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    reshape(xla::Literal::vec1(data), shape)
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    reshape(xla::Literal::vec1(data), shape)
+}
+
+pub fn lit_i64(data: &[i64], shape: &[usize]) -> Result<xla::Literal> {
+    reshape(xla::Literal::vec1(data), shape)
+}
+
+fn reshape(l: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    l.reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape {shape:?}: {e}"))
+}

@@ -1,0 +1,218 @@
+//! Minimal dense tensor types for the CPU substrate.
+//!
+//! The whole reproduction operates on 2-D row-major matrices (token-major
+//! activations, `in x out` weights) plus explicit head bookkeeping, so a
+//! small specialized `Mat`/`IMat` pair beats a general ndarray here.
+//! `matmul` uses the i-k-j loop order (unit-stride inner loop over the
+//! output row) which LLVM auto-vectorizes; this is the FP hot path for
+//! calibration and the FP baselines.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// self (T, K) @ w (K, N) -> (T, N). i-k-j order, unit stride inner.
+    pub fn matmul(&self, w: &Mat) -> Mat {
+        assert_eq!(self.cols, w.rows, "matmul dims");
+        let (t, k, n) = (self.rows, self.cols, w.cols);
+        let mut out = Mat::zeros(t, n);
+        for i in 0..t {
+            let xrow = self.row(i);
+            let orow = out.row_mut(i);
+            for (kk, &xv) in xrow.iter().enumerate().take(k) {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = w.row(kk);
+                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        out
+    }
+
+    /// self (T, K) @ w^T where w is (N, K) -> (T, N).
+    pub fn matmul_bt(&self, w: &Mat) -> Mat {
+        assert_eq!(self.cols, w.cols, "matmul_bt dims");
+        let (t, n) = (self.rows, w.rows);
+        let mut out = Mat::zeros(t, n);
+        for i in 0..t {
+            let xrow = self.row(i);
+            let orow = out.row_mut(i);
+            for (j, o) in orow.iter_mut().enumerate().take(n) {
+                let wrow = w.row(j);
+                let mut acc = 0.0f32;
+                for (a, b) in xrow.iter().zip(wrow.iter()) {
+                    acc += a * b;
+                }
+                *o = acc;
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Per-column absolute maximum (channel statistics for calibration).
+    pub fn col_amax(&self) -> Vec<f32> {
+        let mut amax = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (a, &v) in amax.iter_mut().zip(self.row(r)) {
+                let av = v.abs();
+                if av > *a {
+                    *a = av;
+                }
+            }
+        }
+        amax
+    }
+
+    /// Per-row absolute maximum (token statistics).
+    pub fn row_amax(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().fold(0.0f32, |m, v| m.max(v.abs())))
+            .collect()
+    }
+
+    /// Scale column c by s (used by smoothing folds).
+    pub fn scale_col(&mut self, c: usize, s: f32) {
+        for r in 0..self.rows {
+            *self.at_mut(r, c) *= s;
+        }
+    }
+
+    /// Scale row r by s.
+    pub fn scale_row(&mut self, r: usize, s: f32) {
+        for v in self.row_mut(r) {
+            *v *= s;
+        }
+    }
+
+    pub fn mse(&self, other: &Mat) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        let mut acc = 0.0f64;
+        for (a, b) in self.data.iter().zip(other.data.iter()) {
+            let d = (*a - *b) as f64;
+            acc += d * d;
+        }
+        acc / self.data.len() as f64
+    }
+}
+
+/// Integer matrix (quantized values or raw accumulators).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl IMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [i32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_bt(&b.transpose());
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn amax_rows_cols() {
+        let a = Mat::from_vec(2, 2, vec![1., -5., 3., 2.]);
+        assert_eq!(a.col_amax(), vec![3., 5.]);
+        assert_eq!(a.row_amax(), vec![5., 3.]);
+    }
+}

@@ -1,0 +1,99 @@
+//! Minimal criterion-style benchmark harness (criterion is not in the
+//! offline vendor set). Used by the `rust/benches/perf_*` targets;
+//! the table/figure benches print paper-style tables instead of timings.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+        );
+    }
+
+    /// Throughput helper: elements per second given per-iter elements.
+    pub fn throughput(&self, elems_per_iter: f64) -> f64 {
+        elems_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: warmup, then timed samples until `budget_s` of
+/// wall clock or `max_iters`, whichever first. A `black_box` guard is
+/// applied by the caller returning a value we consume volatilely.
+pub fn bench<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> Stats {
+    // warmup
+    let t0 = Instant::now();
+    let mut warm = 0usize;
+    while t0.elapsed().as_secs_f64() < budget_s * 0.2 && warm < 10_000 {
+        std::hint::black_box(f());
+        warm += 1;
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let t1 = Instant::now();
+    while t1.elapsed().as_secs_f64() < budget_s && samples.len() < 100_000 {
+        let s = Instant::now();
+        std::hint::black_box(f());
+        samples.push(s.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let pct = |p: f64| samples[(p * (n - 1) as f64) as usize];
+    let st = Stats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: if samples.is_empty() { 0.0 } else { pct(0.5) },
+        p99_ns: if samples.is_empty() { 0.0 } else { pct(0.99) },
+        min_ns: samples.first().copied().unwrap_or(0.0),
+    };
+    st.print();
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_percentiles() {
+        let s = bench("noop", 0.05, || 1 + 1);
+        assert!(s.iters > 10);
+        assert!(s.p50_ns <= s.p99_ns);
+        assert!(s.min_ns <= s.mean_ns * 2.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(10.0).ends_with("ns"));
+        assert!(fmt_ns(10_000.0).ends_with("us"));
+        assert!(fmt_ns(10_000_000.0).ends_with("ms"));
+    }
+}

@@ -1,0 +1,444 @@
+//! Minimal JSON parser/serializer (no serde in the offline vendor set).
+//!
+//! Supports the full JSON grammar we produce from python (objects, arrays,
+//! strings with escapes, numbers, bool, null). Numbers are kept as f64
+//! plus an i64 fast path so 64-bit integer golden vectors round-trip
+//! exactly.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Integer-valued number that fits i64 (exact).
+    Int(i64),
+    /// Any other number.
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let b = s.as_bytes();
+        let mut p = Parser { b, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != b.len() {
+            return Err(format!("trailing bytes at {}", p.i));
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn idx(&self, i: usize) -> Option<&Json> {
+        match self {
+            Json::Arr(a) => a.get(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            Json::Num(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Int(i) => Some(*i as f64),
+            Json::Num(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Array of i64 (errors collapsed to None).
+    pub fn i64_vec(&self) -> Option<Vec<i64>> {
+        self.as_arr()?.iter().map(|v| v.as_i64()).collect()
+    }
+
+    pub fn i32_vec(&self) -> Option<Vec<i32>> {
+        self.as_arr()?
+            .iter()
+            .map(|v| v.as_i64().map(|x| x as i32))
+            .collect()
+    }
+
+    pub fn f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    /// 2-D array of i64 rows.
+    pub fn i64_mat(&self) -> Option<Vec<Vec<i64>>> {
+        self.as_arr()?.iter().map(|r| r.i64_vec()).collect()
+    }
+
+    pub fn i32_mat(&self) -> Option<Vec<Vec<i32>>> {
+        self.as_arr()?.iter().map(|r| r.i32_vec()).collect()
+    }
+
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Num(f) => {
+                if f.is_finite() {
+                    let _ = write!(out, "{f}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(f: f64) -> Self {
+        Json::Num(f)
+    }
+}
+
+impl From<i64> for Json {
+    fn from(i: i64) -> Self {
+        Json::Int(i)
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or("eof")? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at {}", self.i))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => return Err(format!("bad object at {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut a = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            self.ws();
+            a.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                _ => return Err(format!("bad array at {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = *self.b.get(self.i).ok_or("eof in string")?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or("eof in escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or("eof in \\u")?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex)
+                                    .map_err(|e| e.to_string())?,
+                                16,
+                            )
+                            .map_err(|e| e.to_string())?;
+                            self.i += 4;
+                            s.push(
+                                char::from_u32(code).unwrap_or('\u{fffd}'),
+                            );
+                        }
+                        _ => return Err(format!("bad escape at {}", self.i)),
+                    }
+                }
+                c => {
+                    // collect the full UTF-8 sequence
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = utf8_len(c);
+                        let end = (start + len).min(self.b.len());
+                        let chunk = std::str::from_utf8(&self.b[start..end])
+                            .map_err(|e| e.to_string())?;
+                        s.push_str(chunk);
+                        self.i = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self
+            .peek()
+            .map(|c| {
+                c.is_ascii_digit()
+                    || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E')
+            })
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|e| e.to_string())?;
+        if !txt.contains(['.', 'e', 'E']) {
+            if let Ok(i) = txt.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        txt.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number {txt:?} at {start}"))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        0xF0..=0xF7 => 4,
+        _ => 1,
+    }
+}
+
+/// Builder helpers for emitting reports.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn arr<T: Into<Json>>(items: Vec<T>) -> Json {
+    Json::Arr(items.into_iter().map(Into::into).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let src = r#"{"a": [1, -2.5, "x\ny", true, null], "b": {"c": 3}}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_i64(), Some(3));
+        let dumped = v.dump();
+        let v2 = Json::parse(&dumped).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn big_ints_exact() {
+        let src = r#"[4611686018427387904, -9007199254740993]"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.idx(0).unwrap().as_i64(), Some(1 << 62));
+        assert_eq!(v.idx(1).unwrap().as_i64(), Some(-9007199254740993));
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = Json::parse("\"héllo → ok\"").unwrap();
+        assert_eq!(v.as_str(), Some("héllo → ok"));
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        assert!(Json::parse("{} x").is_err());
+        assert!(Json::parse("[1,]").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = Json::parse("[[1,2],[3,4]]").unwrap();
+        assert_eq!(
+            v.i64_mat(),
+            Some(vec![vec![1, 2], vec![3, 4]])
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! Support substrate built in-tree (the offline vendor set has no serde,
+//! clap, tokio or criterion): JSON, PRNGs, a bench harness and small
+//! timing helpers.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Measure wall time of a closure in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+/// Simple fixed-width table printer for bench outputs (paper tables).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        let total: usize = widths.iter().sum::<usize>() + 2 * ncol;
+        println!("{}", "-".repeat(total));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Format a f64 like the paper's tables (2 decimals, large values in
+/// scientific notation as e.g. "1.8e4").
+pub fn fmt_ppl(x: f64) -> String {
+    if !x.is_finite() {
+        "inf".into()
+    } else if x >= 10_000.0 {
+        format!("{:.1}e{}", x / 10f64.powi(x.log10() as i32),
+                x.log10() as i32)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_format() {
+        assert_eq!(fmt_ppl(5.684), "5.68");
+        assert_eq!(fmt_ppl(18_000.0), "1.8e4");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+}

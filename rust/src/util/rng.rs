@@ -1,0 +1,172 @@
+//! Deterministic PRNGs. `XorShift32` mirrors python/compile/corpus.py's
+//! generator bit-for-bit (used by the data substrate and workload
+//! generators); `Pcg64` is the general-purpose engine for calibration
+//! sampling and synthetic workloads.
+
+/// xorshift32 — identical sequence to corpus.py's `XorShift`.
+#[derive(Debug, Clone)]
+pub struct XorShift32 {
+    s: u32,
+}
+
+impl XorShift32 {
+    pub fn new(seed: u32) -> Self {
+        Self {
+            s: if seed == 0 { 0x9E37_79B9 } else { seed },
+        }
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let mut x = self.s;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        self.s = x;
+        x
+    }
+
+    pub fn randint(&mut self, n: u32) -> u32 {
+        self.next_u32() % n
+    }
+}
+
+/// PCG-XSH-RR 64/32 — small, fast, good statistical quality.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        let mut r = Self {
+            state: 0,
+            inc: (seed << 1) | 1,
+        };
+        r.next_u32();
+        r.state = r.state.wrapping_add(0x853c_49e6_748f_ea9b ^ seed);
+        r.next_u32();
+        r
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal (Box-Muller; one value per call, spare discarded
+    /// for simplicity/determinism of call sequences).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 1e-12 {
+                let v = self.f64();
+                return (-2.0 * u.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Exponential with rate lambda (inter-arrival times for workloads).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Sample k distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_matches_python_reference() {
+        // first values of corpus.XorShift(1234)
+        let mut r = XorShift32::new(1234);
+        let vals: Vec<u32> = (0..4).map(|_| r.next_u32()).collect();
+        // computed from the python definition
+        let mut s: u32 = 1234;
+        let mut expect = vec![];
+        for _ in 0..4 {
+            s ^= s << 13;
+            s ^= s >> 17;
+            s ^= s << 5;
+            expect.push(s);
+        }
+        assert_eq!(vals, expect);
+    }
+
+    #[test]
+    fn pcg_uniformity_rough() {
+        let mut r = Pcg64::new(7);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11);
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn choose_distinct() {
+        let mut r = Pcg64::new(3);
+        let c = r.choose(50, 10);
+        let mut s = c.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        assert!(c.iter().all(|&i| i < 50));
+    }
+}

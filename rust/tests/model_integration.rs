@@ -1,0 +1,214 @@
+//! Model-level integration tests over the trained artifacts: FP engine
+//! vs python goldens, integer engine fidelity, FSBR effectiveness, and
+//! decode-vs-prefill consistency of the KV-cache path.
+
+use illm::baselines::{self, fakequant::ActQuantMode};
+use illm::calib::{fold_smoothing, fsbr_calibrate, FsbrOptions};
+use illm::data::load_corpus;
+use illm::eval::{perplexity_opts, LogitsModel};
+use illm::int_model::kv_cache::IntKvCache;
+use illm::int_model::quantize::quantize_model;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::util::json::Json;
+
+fn artifacts() -> std::path::PathBuf {
+    illm::artifacts_dir()
+}
+
+#[test]
+fn fp_engine_matches_python_goldens() {
+    let dir = artifacts();
+    let g = Json::parse(
+        &std::fs::read_to_string(dir.join("goldens.json")).unwrap(),
+    )
+    .unwrap();
+    let models = g.get("models").unwrap().as_obj().unwrap();
+    assert!(!models.is_empty(), "no model goldens");
+    for (name, info) in models {
+        let fp = load_model(&dir, name).unwrap();
+        let tokens: Vec<u16> = info
+            .get("tokens")
+            .and_then(Json::i64_vec)
+            .unwrap()
+            .iter()
+            .map(|&t| t as u16)
+            .collect();
+        let logits = fp.forward_full(&tokens, 0, None);
+        let want_last = info
+            .get("fp_logits_last")
+            .and_then(Json::f64_vec)
+            .unwrap();
+        let last = logits.row(logits.rows - 1);
+        let scale = want_last.iter().fold(0f64, |a, &b| a.max(b.abs()));
+        for (i, w) in want_last.iter().enumerate() {
+            let got = last[i] as f64;
+            assert!(
+                (got - w).abs() < scale * 5e-3 + 5e-3,
+                "{name} logit {i}: {got} vs {w}"
+            );
+        }
+        // full-tensor checksum within loose float tolerance
+        let want_sum = info.get("fp_logits_sum").unwrap().as_f64().unwrap();
+        let got_sum: f64 =
+            logits.data.iter().map(|&v| v as f64).sum();
+        assert!(
+            (got_sum - want_sum).abs() / want_sum.abs().max(1.0) < 2e-2,
+            "{name} sum {got_sum} vs {want_sum}"
+        );
+    }
+}
+
+#[test]
+fn int_engine_w8a8_tracks_fp() {
+    let dir = artifacts();
+    let corpus = load_corpus(&dir).unwrap();
+    for name in ["tinyllama_s", "tinyopt_s"] {
+        let fp = load_model(&dir, name).unwrap();
+        let im = quantize_model(&fp, QuantScheme::W8A8, None, None);
+        let fp_ppl = perplexity_opts(&fp, &corpus, 64, 64, 10);
+        let int_ppl = perplexity_opts(&im, &corpus, 64, 64, 10);
+        // W8A8 without smoothing on an outlier-injected model degrades,
+        // but the integer pipeline must stay functional and ordered.
+        assert!(int_ppl.is_finite() && int_ppl >= fp_ppl * 0.95,
+                "{name}: fp {fp_ppl} int {int_ppl}");
+        assert!(int_ppl < fp_ppl * 1000.0,
+                "{name}: int pipeline collapsed ({fp_ppl} -> {int_ppl})");
+    }
+}
+
+#[test]
+fn fsbr_rescues_w4a4() {
+    let dir = artifacts();
+    let corpus = load_corpus(&dir).unwrap();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let scheme = QuantScheme::W4A4;
+    let fp_ppl = perplexity_opts(&fp, &corpus, 64, 64, 8);
+    // naive: no smoothing
+    let naive = quantize_model(&fp, scheme, None, None);
+    let naive_ppl = perplexity_opts(&naive, &corpus, 64, 64, 8);
+    // I-LLM: FSBR + integer pipeline
+    let windows = baselines::calib_windows(&corpus);
+    let params = fsbr_calibrate(&fp, &windows, scheme,
+                                FsbrOptions::default());
+    let folded = fold_smoothing(&fp, &params);
+    let alpha: Vec<Option<Vec<f64>>> =
+        params.layers.iter().map(|l| l.alpha.clone()).collect();
+    let im = quantize_model(&folded, scheme, Some(&alpha), None);
+    let illm_ppl = perplexity_opts(&im, &corpus, 64, 64, 8);
+    println!("fp {fp_ppl:.3} naive-w4a4 {naive_ppl:.3} illm-w4a4 \
+              {illm_ppl:.3}");
+    // the paper's central claim, qualitatively: FSBR + DI ops rescue
+    // W4A4 from the naive collapse
+    assert!(illm_ppl < naive_ppl * 0.5,
+            "FSBR did not help: naive {naive_ppl} illm {illm_ppl}");
+    assert!(illm_ppl < fp_ppl * 10.0,
+            "W4A4 too far from FP: {fp_ppl} -> {illm_ppl}");
+}
+
+#[test]
+fn smoothing_is_function_preserving_at_model_level() {
+    let dir = artifacts();
+    let corpus = load_corpus(&dir).unwrap();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let windows = corpus.calib_windows(4, 48, 3);
+    let params = fsbr_calibrate(&fp, &windows, QuantScheme::W8A8,
+                                FsbrOptions::default());
+    let folded = fold_smoothing(&fp, &params);
+    let toks: Vec<u16> = corpus.val[..48].to_vec();
+    let a = fp.forward_full(&toks, 0, None);
+    let b = folded.forward_full(&toks, 0, None);
+    let scale = a.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let mut max_err = 0f32;
+    for (x, y) in a.data.iter().zip(b.data.iter()) {
+        max_err = max_err.max((x - y).abs());
+    }
+    assert!(max_err < scale * 2e-2 + 1e-3,
+            "fold changed function: err {max_err} scale {scale}");
+}
+
+#[test]
+fn decode_path_consistent_with_prefill() {
+    let dir = artifacts();
+    let corpus = load_corpus(&dir).unwrap();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let im = quantize_model(&fp, QuantScheme::W8A8, None, None);
+    let toks: Vec<u16> = corpus.val[..24].to_vec();
+    // full forward logits at the last position
+    let full = im.forward_full(&toks, 0);
+    let full_last = full.row(full.rows - 1);
+    // token-by-token decode through the integer KV cache
+    let mut cache = IntKvCache::new(&im);
+    let mut last = Vec::new();
+    for &t in &toks {
+        last = im.decode_one(t, &mut cache);
+    }
+    assert_eq!(cache.pos, toks.len());
+    // same argmax and high correlation (cache requant differs slightly
+    // from full-sequence requant, so not bit-exact)
+    let argmax = |v: &[f32]| {
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    assert_eq!(argmax(full_last), argmax(&last),
+               "decode/prefill argmax diverged");
+    let corr = correlation(full_last, &last);
+    assert!(corr > 0.98, "decode/prefill corr {corr}");
+}
+
+#[test]
+fn static_quant_fails_where_dynamic_survives() {
+    // Fig. 4 mechanism: static per-tensor activation scales (I-BERT
+    // style) collapse on the outlier-injected model even at W8A8, while
+    // the dynamic integer pipeline stays usable.
+    let dir = artifacts();
+    let corpus = load_corpus(&dir).unwrap();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let scheme = QuantScheme::W8A8;
+    let stat = baselines::ibert_static(&fp, &corpus, scheme);
+    let stat_ppl = perplexity_opts(&stat, &corpus, 64, 64, 8);
+    let dynq = quantize_model(&fp, scheme, None, None);
+    let dyn_ppl = perplexity_opts(&dynq, &corpus, 64, 64, 8);
+    println!("static w8a8 {stat_ppl:.3} dynamic w8a8 {dyn_ppl:.3}");
+    assert!(dyn_ppl < stat_ppl,
+            "dynamic ({dyn_ppl}) must beat static ({stat_ppl})");
+}
+
+#[test]
+fn fakequant_baselines_rank_sanely_at_w4a4() {
+    let dir = artifacts();
+    let corpus = load_corpus(&dir).unwrap();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let scheme = QuantScheme::W4A4;
+    let rtn = baselines::rtn(&fp, &corpus, scheme);
+    let sq = baselines::smoothquant(&fp, &corpus, scheme);
+    let rtn_ppl = perplexity_opts(&rtn, &corpus, 64, 64, 6);
+    let sq_ppl = perplexity_opts(&sq, &corpus, 64, 64, 6);
+    let (fsbr, _) = baselines::fsbr_fakequant(&fp, &corpus, scheme,
+                                              ActQuantMode::PerToken);
+    let fsbr_ppl = perplexity_opts(&fsbr, &corpus, 64, 64, 6);
+    println!("w4a4 rtn {rtn_ppl:.2} sq {sq_ppl:.2} fsbr {fsbr_ppl:.2}");
+    // paper Table 4 ordering: FSBR < SmoothQuant <= RTN at W4A4
+    assert!(fsbr_ppl < sq_ppl, "fsbr {fsbr_ppl} !< sq {sq_ppl}");
+    assert!(fsbr_ppl < rtn_ppl * 0.8,
+            "fsbr {fsbr_ppl} !<< rtn {rtn_ppl}");
+}
+
+fn correlation(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let (x, y) = (x as f64 - ma, y as f64 - mb);
+        num += x * y;
+        da += x * x;
+        db += y * y;
+    }
+    num / (da.sqrt() * db.sqrt()).max(1e-12)
+}

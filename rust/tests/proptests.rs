@@ -1,0 +1,268 @@
+//! Property-based tests (seeded random sweeps — proptest itself is not
+//! in the offline vendor set, so a Pcg64-driven harness generates the
+//! cases). Invariants covered:
+//!
+//!  * coordinator: every request completes exactly once with the SAME
+//!    output regardless of batch size / prefill chunking / kv budget
+//!    (scheduling must not change results), occupancy <= max_batch;
+//!  * quantization: requant round-trip error bound holds across random
+//!    scales/ranges; dequant(quant(x)) within one step for random rows;
+//!  * ops: DI-ClippedSoftmax rows sum to ~1 and are permutation-
+//!    equivariant; DI-Exp is monotone; di_add commutes.
+
+use illm::coordinator::batcher::{Batcher, BatcherConfig};
+use illm::coordinator::engine::{Engine, SeqState};
+use illm::coordinator::metrics::ServeMetrics;
+use illm::coordinator::Request;
+use illm::ops::di_add::di_add;
+use illm::ops::di_exp::{di_exp_one, exp_t};
+use illm::ops::di_softmax::di_softmax_row;
+use illm::ops::requant_row;
+use illm::quant::quantize_rows_f32;
+use illm::tensor::Mat;
+use illm::util::rng::Pcg64;
+use std::time::Instant;
+
+/// Deterministic engine: next = (3 * last + 7) mod 125 + 1 (stays in
+/// ASCII so Response.text round-trips bytes exactly).
+struct Affine;
+
+impl Engine for Affine {
+    fn max_seq(&self) -> usize {
+        512
+    }
+
+    fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>) {
+        let last = *prompt.last().unwrap() as usize;
+        (SeqState::Fp { tokens: prompt.to_vec() }, one_hot(step(last)))
+    }
+
+    fn decode(&self, state: &mut SeqState, token: u16) -> Vec<f32> {
+        if let SeqState::Fp { tokens } = state {
+            tokens.push(token);
+        }
+        one_hot(step(token as usize))
+    }
+
+    fn kv_bytes(&self, state: &SeqState) -> usize {
+        match state {
+            SeqState::Fp { tokens } => tokens.len() * 8,
+            _ => 0,
+        }
+    }
+}
+
+fn step(x: usize) -> usize {
+    (3 * x + 7) % 125 + 1
+}
+
+fn one_hot(i: usize) -> Vec<f32> {
+    let mut v = vec![0f32; 256];
+    v[i] = 1.0;
+    v
+}
+
+fn expected_output(prompt: &str, n: usize) -> Vec<u16> {
+    let toks = illm::data::encode(prompt);
+    let mut cur = *toks.last().unwrap() as usize;
+    let mut out = Vec::new();
+    for _ in 0..n {
+        cur = step(cur);
+        out.push(cur as u16);
+    }
+    out
+}
+
+#[test]
+fn prop_scheduling_never_changes_results() {
+    let mut rng = Pcg64::new(0xC0FFEE);
+    for case in 0..8 {
+        let n_req = 3 + rng.below(10);
+        let reqs: Vec<(String, usize)> = (0..n_req)
+            .map(|i| {
+                let len = 1 + rng.below(30);
+                let prompt: String = (0..len)
+                    .map(|j| ((b'a' + ((i * 7 + j) % 26) as u8) as char))
+                    .collect();
+                (prompt, 1 + rng.below(12))
+            })
+            .collect();
+        let mut reference: Option<Vec<Vec<u16>>> = None;
+        for (max_batch, chunk, budget) in [
+            (1usize, 64usize, usize::MAX),
+            (4, 64, usize::MAX),
+            (8, 3, usize::MAX),
+            (4, 64, 4_000),
+        ] {
+            let mut b = Batcher::new(BatcherConfig {
+                max_batch,
+                prefill_chunk: chunk,
+                kv_budget: budget,
+                stop_token: None,
+            });
+            let mut m = ServeMetrics::default();
+            for (i, (p, n)) in reqs.iter().enumerate() {
+                b.enqueue(Request {
+                    id: i as u64,
+                    prompt: p.clone(),
+                    max_new: *n,
+                    submitted: Instant::now(),
+                });
+            }
+            let mut outs: Vec<Vec<u16>> = vec![vec![]; n_req];
+            let mut guard = 0;
+            while !b.is_idle() {
+                for r in b.step(&Affine, &mut m) {
+                    assert!(outs[r.id as usize].is_empty(),
+                            "request {} completed twice", r.id);
+                    outs[r.id as usize] = illm::data::encode(&r.text);
+                }
+                guard += 1;
+                assert!(guard < 10_000, "no convergence");
+            }
+            // every request completed, with the deterministic stream
+            for (i, (p, n)) in reqs.iter().enumerate() {
+                assert_eq!(outs[i], expected_output(p, *n),
+                           "case {case} cfg ({max_batch},{chunk}) req {i}");
+            }
+            match &reference {
+                None => reference = Some(outs),
+                Some(r) => assert_eq!(r, &outs,
+                    "case {case}: scheduling changed outputs"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_requant_error_bound() {
+    let mut rng = Pcg64::new(42);
+    for _ in 0..200 {
+        let n = 2 + rng.below(40);
+        let k_in = 14 + rng.below(5) as i32;
+        let m_in = 128 + rng.below(128) as i64;
+        let bits = [4u32, 6, 8][rng.below(3)];
+        // keep float range representable: see python test_requant_roundtrip
+        let mag = 1i64 << (10 + rng.below(7));
+        let p: Vec<i64> = (0..n)
+            .map(|_| rng.below(2 * mag as usize) as i64 - mag)
+            .collect();
+        let mut out = vec![0i32; n];
+        let (m, k, zp) = requant_row(&p, m_in, k_in, bits, None, &mut out);
+        let s_in = m_in as f64 / (k_in as f64).exp2();
+        let s_out = m as f64 / (k as f64).exp2();
+        for (i, &v) in p.iter().enumerate() {
+            let want = v as f64 * s_in;
+            let got = (out[i] - zp) as f64 * s_out;
+            assert!(
+                (want - got).abs() <= s_out * 1.05 + want.abs() * 0.02,
+                "bits {bits} want {want} got {got} step {s_out}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_quantize_rows_roundtrip() {
+    let mut rng = Pcg64::new(7);
+    for _ in 0..100 {
+        let n = 2 + rng.below(60);
+        let scale = (10f64).powf(rng.range_f64(-2.0, 2.0));
+        let data: Vec<f32> =
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+        let x = Mat::from_vec(1, n, data.clone());
+        for bits in [4u32, 8] {
+            let q = quantize_rows_f32(&x, bits);
+            let d = q.dequant();
+            let rng_f = {
+                let mx = data.iter().cloned().fold(0f32, f32::max).max(0.0);
+                let mn = data.iter().cloned().fold(0f32, f32::min).min(0.0);
+                (mx - mn) as f64
+            };
+            let step = rng_f / ((1 << bits) - 1) as f64;
+            for (a, b) in data.iter().zip(d.row(0).iter()) {
+                // one step of value rounding + ~1/255 relative from
+                // the dyadic mantissa rounding of the scale
+                assert!(
+                    ((*a - *b) as f64).abs()
+                        <= step * 1.05 + (*a as f64).abs() * 0.005 + 1e-6,
+                    "bits {bits} {a} vs {b} step {step}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_softmax_mass_and_equivariance() {
+    let mut rng = Pcg64::new(99);
+    for _ in 0..60 {
+        let n = 2 + rng.below(60);
+        let p: Vec<i64> =
+            (0..n).map(|_| (rng.normal() * 2e5) as i64).collect();
+        let (m1, k1, m2, k2) = (128 + rng.below(128) as i32,
+                                10 + rng.below(6) as i32,
+                                128 + rng.below(128) as i32,
+                                10 + rng.below(6) as i32);
+        let mut out = vec![0i32; n];
+        let mut scratch = Vec::new();
+        di_softmax_row(&p, m1, k1, m2, k2, 8, Some((240, 4)), n,
+                       &mut out, &mut scratch);
+        let total: i64 = out.iter().map(|&v| v as i64).sum();
+        assert!((total - 128).abs() <= n as i64 / 2 + 4,
+                "mass {total} n {n}");
+        // permutation equivariance
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in 0..n {
+            let j = i + rng.below(n - i);
+            perm.swap(i, j);
+        }
+        let pp: Vec<i64> = perm.iter().map(|&i| p[i]).collect();
+        let mut out2 = vec![0i32; n];
+        di_softmax_row(&pp, m1, k1, m2, k2, 8, Some((240, 4)), n,
+                       &mut out2, &mut scratch);
+        for (pos, &src) in perm.iter().enumerate() {
+            assert_eq!(out2[pos], out[src], "not equivariant");
+        }
+    }
+}
+
+#[test]
+fn prop_exp_monotone_random_scales() {
+    let mut rng = Pcg64::new(5);
+    for _ in 0..50 {
+        let m = 128 + rng.below(128) as i32;
+        let k = 4 + rng.below(14) as i32;
+        let t = exp_t(m, k);
+        let mut xs: Vec<i64> =
+            (0..80).map(|_| -(rng.below(1 << 16) as i64)).collect();
+        xs.sort_unstable();
+        let ys: Vec<i64> = xs.iter().map(|&x| di_exp_one(x, t)).collect();
+        for w in ys.windows(2) {
+            assert!(w[0] <= w[1], "exp not monotone (m={m},k={k})");
+        }
+    }
+}
+
+#[test]
+fn prop_add_commutes() {
+    let mut rng = Pcg64::new(12);
+    for _ in 0..50 {
+        let n = 2 + rng.below(30);
+        let mk = |rng: &mut Pcg64| {
+            let data: Vec<f32> = (0..n)
+                .map(|_| (rng.normal()
+                    * (10f64).powf(rng.range_f64(-1.0, 1.5))) as f32)
+                .collect();
+            quantize_rows_f32(&Mat::from_vec(1, n, data), 8)
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let ab = di_add(&a, &b, 8);
+        let ba = di_add(&b, &a, 8);
+        assert_eq!(ab.vals.data, ba.vals.data);
+        assert_eq!(ab.m, ba.m);
+        assert_eq!(ab.k, ba.k);
+        assert_eq!(ab.zp, ba.zp);
+    }
+}

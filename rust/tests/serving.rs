@@ -1,0 +1,108 @@
+//! Serving-path integration: coordinator + integer engine end to end.
+
+use illm::coordinator::batcher::BatcherConfig;
+use illm::coordinator::engine::{greedy, Engine, FpEngine, IntEngine};
+use illm::coordinator::{run_workload, workload};
+use illm::data::load_corpus;
+use illm::int_model::quantize::quantize_model;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use std::sync::Arc;
+
+fn int_engine(name: &str, scheme: QuantScheme) -> IntEngine {
+    let dir = illm::artifacts_dir();
+    let fp = load_model(&dir, name).unwrap();
+    IntEngine {
+        model: Arc::new(quantize_model(&fp, scheme, None, None)),
+    }
+}
+
+#[test]
+fn coordinator_completes_workload() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let engine = int_engine("tinyllama_s", QuantScheme::W8A8);
+    let spec = workload::WorkloadSpec {
+        n_requests: 8,
+        prompt_len: (8, 24),
+        max_new: (4, 10),
+        ..Default::default()
+    };
+    let reqs = workload::generate(&spec, &corpus);
+    let (responses, metrics) = run_workload(
+        engine,
+        BatcherConfig { max_batch: 4, ..Default::default() },
+        reqs,
+        0.0,
+    );
+    assert_eq!(responses.len(), 8);
+    assert!(metrics.decode_tokens > 0);
+    assert!(metrics.mean_occupancy() > 1.0,
+            "continuous batching never overlapped: {}",
+            metrics.mean_occupancy());
+    for r in &responses {
+        assert!(r.n_generated >= 1);
+        assert!(r.ttft <= r.latency + 1e-9);
+    }
+}
+
+#[test]
+fn int_generation_agrees_with_fp_on_easy_text() {
+    // On the heavily-learned corpus patterns, the DEPLOYMENT pipeline
+    // (FSBR-smoothed W8A8 integer engine) should mostly agree with FP
+    // greedy generation. (The unsmoothed engine legitimately diverges
+    // on the outlier-injected models — that is the paper's premise.)
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let (im, _) = illm::eval::methods::build_illm(&fp, &corpus,
+                                                  QuantScheme::W8A8);
+    let ie = IntEngine { model: Arc::new(im) };
+    let fe = FpEngine { model: Arc::new(fp) };
+    let prompt = illm::data::encode("the engineer builds a small ");
+    let gen = |e: &dyn Engine| -> Vec<u16> {
+        let (mut st, mut logits) = e.prefill(&prompt);
+        let mut out = Vec::new();
+        for _ in 0..12 {
+            let next = greedy(&logits);
+            out.push(next);
+            logits = e.decode(&mut st, next);
+        }
+        out
+    };
+    let a = gen(&ie);
+    let b = gen(&fe);
+    let agree = a.iter().zip(b.iter()).filter(|(x, y)| x == y).count();
+    assert!(agree >= 8, "int vs fp generation agree {agree}/12:\n  \
+            int: {:?}\n  fp:  {:?}",
+            illm::data::decode(&a), illm::data::decode(&b));
+    // and the output must be corpus-grammatical ascii
+    assert!(a.iter().all(|&t| t < 128));
+}
+
+#[test]
+fn kv_budget_admission_control_engages() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let engine = int_engine("tinyllama_s", QuantScheme::W8A8);
+    let spec = workload::WorkloadSpec {
+        n_requests: 6,
+        prompt_len: (30, 60),
+        max_new: (4, 6),
+        ..Default::default()
+    };
+    let reqs = workload::generate(&spec, &corpus);
+    let (responses, metrics) = run_workload(
+        engine,
+        BatcherConfig {
+            max_batch: 6,
+            kv_budget: 6_000, // tiny budget forces blocking
+            ..Default::default()
+        },
+        reqs,
+        0.0,
+    );
+    assert_eq!(responses.len(), 6, "all requests must still complete");
+    assert!(metrics.admission_blocks > 0,
+            "tiny kv budget never blocked admission");
+}
