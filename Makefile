@@ -1,0 +1,18 @@
+# Build-time artifacts (trained tiny models, HLO text, golden vectors).
+# The generated artifacts/ tree is committed so the rust tier-1 tests
+# run without a python environment; regenerate after changing the
+# python spec (quantization rounding, ops, model presets).
+
+PYTHON ?= python3
+
+.PHONY: artifacts artifacts-full test
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts --fast
+
+# all presets, full training steps (slow)
+artifacts-full:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+test:
+	cd rust && cargo build --release && cargo test -q

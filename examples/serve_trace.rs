@@ -21,8 +21,50 @@ use illm::eval::perplexity;
 use illm::int_model::quantize::quantize_model;
 use illm::nn::load_model;
 use illm::quant::QuantScheme;
-use illm::runtime::{feed, Manifest, Runtime};
 use std::sync::Arc;
+
+/// Phase 1: prove the AOT path composes (PJRT vs native). Needs the
+/// `pjrt` cargo feature (xla bindings outside the offline vendor set).
+#[cfg(feature = "pjrt")]
+fn phase1_pjrt_compose(
+    dir: &std::path::Path,
+    fp: &illm::nn::FpModel,
+    corpus: &illm::data::Corpus,
+    model_name: &str,
+) -> anyhow::Result<()> {
+    use illm::runtime::{feed, Manifest, Runtime};
+    let manifest = Manifest::load(dir)?;
+    let mut rt = Runtime::cpu()?;
+    let tokens: Vec<u16> = corpus.val[..64].to_vec();
+    let entry = manifest
+        .find("fp_forward", model_name, None, Some(64))
+        .expect("fp artifact");
+    let inputs = feed::fp_inputs(entry, fp, &tokens)?;
+    let (out, secs) = illm::util::time_it(|| {
+        rt.execute_f32(&dir.join(&entry.file), &inputs)
+    });
+    let out = out?;
+    let native = fp.forward_full(&tokens, 0, None);
+    let mut err = 0f32;
+    for (a, b) in out.iter().zip(native.data.iter()) {
+        err = err.max((a - b).abs());
+    }
+    println!("  fp_forward artifact: compile+run {secs:.2}s, \
+              max |PJRT - native| = {err:.2e}");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn phase1_pjrt_compose(
+    _dir: &std::path::Path,
+    _fp: &illm::nn::FpModel,
+    _corpus: &illm::data::Corpus,
+    _model_name: &str,
+) -> anyhow::Result<()> {
+    println!("  skipped (needs the xla bindings wired into rust/Cargo.toml \
+              + --features pjrt; see the feature comment there)");
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -36,24 +78,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- phase 1: prove the AOT path composes (PJRT vs native) ----
     println!("== phase 1: AOT compose checks (PJRT) ==");
-    let manifest = Manifest::load(&dir)?;
-    let mut rt = Runtime::cpu()?;
-    let tokens: Vec<u16> = corpus.val[..64].to_vec();
-    let entry = manifest
-        .find("fp_forward", model_name, None, Some(64))
-        .expect("fp artifact");
-    let inputs = feed::fp_inputs(entry, &fp, &tokens)?;
-    let (out, secs) = illm::util::time_it(|| {
-        rt.execute_f32(&dir.join(&entry.file), &inputs)
-    });
-    let out = out?;
-    let native = fp.forward_full(&tokens, 0, None);
-    let mut err = 0f32;
-    for (a, b) in out.iter().zip(native.data.iter()) {
-        err = err.max((a - b).abs());
-    }
-    println!("  fp_forward artifact: compile+run {secs:.2}s, \
-              max |PJRT - native| = {err:.2e}");
+    phase1_pjrt_compose(&dir, &fp, &corpus, model_name)?;
 
     // ---- phase 2: PTQ pipeline (FSBR + integer-only quantization) ----
     println!("== phase 2: FSBR calibration + W4A4 quantization ==");

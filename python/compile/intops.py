@@ -62,6 +62,16 @@ def rdiv(a, b):
     return (a + b // 2) // b
 
 
+def round_half_away(x):
+    """Round float values half AWAY from zero (offline value rounding).
+
+    jnp.floor(x + 0.5) rounds negative halves toward +inf (-1.5 -> -1),
+    which biases symmetric weight quantization upward; rounding the
+    magnitude keeps q(-x) == -q(x). Mirrors rust quant::round_half_away.
+    """
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
 def ilog2(x):
     """floor(log2(x)) for x >= 1, via bit counting (MSB method, Eq. 6)."""
     x = jnp.asarray(x, I64)
@@ -110,7 +120,8 @@ def quantize_f32(x, bits):
     s_d = m.astype(jnp.float64) / (jnp.asarray(1, I64) << k).astype(jnp.float64)
     zp = jnp.clip(jnp.floor(-xmin / s_d + 0.5), 0, qmax).astype(I32)
     vals = jnp.clip(
-        jnp.floor(x / s_d[..., None] + 0.5).astype(I64) + zp[..., None].astype(I64),
+        round_half_away(x / s_d[..., None]).astype(I64)
+        + zp[..., None].astype(I64),
         0,
         qmax,
     ).astype(I32)

@@ -309,7 +309,8 @@ def int_params_from_fp(cfg: ModelConfig, params: dict,
         mw, kw = intops.align_channel_scales(jnp.asarray(sc))
         s_d = np.asarray(mw, np.float64) / np.exp2(float(kw))
         wq = jnp.clip(
-            jnp.floor(jnp.asarray(w, jnp.float64) / s_d[None, :] + 0.5),
+            intops.round_half_away(jnp.asarray(w, jnp.float64)
+                                   / s_d[None, :]),
             -qmax, qmax).astype(I32)
         out[prefix + ".wq"] = wq
         out[prefix + ".mw"] = mw

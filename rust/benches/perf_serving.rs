@@ -10,10 +10,37 @@ use illm::coordinator::engine::{FpEngine, IntEngine};
 use illm::coordinator::{run_workload, workload};
 use illm::data::load_corpus;
 use illm::eval::methods;
+use illm::int_model::kv_cache::IntKvCache;
+use illm::int_model::IntModel;
 use illm::nn::load_model;
 use illm::quant::QuantScheme;
 use illm::util::Table;
 use std::sync::Arc;
+
+/// Prefill-path comparison: batched prefill (one GEMM per linear, bulk
+/// KV append) vs the old token-by-token `decode_one` replay.
+fn bench_prefill(im: &IntModel, prompt: &[u16], reps: usize) {
+    let n = prompt.len() as f64;
+    let mut t_replay = f64::MAX;
+    let mut t_batch = f64::MAX;
+    for _ in 0..reps {
+        let mut cache = IntKvCache::new(im);
+        let (_, s) =
+            illm::util::time_it(|| im.prefill_replay(prompt, &mut cache));
+        t_replay = t_replay.min(s);
+        let mut cache = IntKvCache::new(im);
+        let (_, s) =
+            illm::util::time_it(|| im.prefill_batch(prompt, &mut cache));
+        t_batch = t_batch.min(s);
+    }
+    println!("\n== perf: prefill path ({} tokens, {}) ==",
+             prompt.len(), im.scheme.tag());
+    println!("  replay (decode_one per token): {:>9.0} tok/s",
+             n / t_replay);
+    println!("  batched prefill:               {:>9.0} tok/s  \
+              ({:.2}x speedup)",
+             n / t_batch, t_replay / t_batch);
+}
 
 fn main() {
     let dir = illm::artifacts_dir();
@@ -65,6 +92,12 @@ fn main() {
         }
     }
     t.print();
+
+    // ---- prefill: batched vs replay (the PR-2 tentpole) ----
+    let prompt_len = im.cfg.max_seq.min(256).min(corpus.val.len());
+    let prompt: Vec<u16> = corpus.val[..prompt_len].to_vec();
+    bench_prefill(&im, &prompt, if fast { 1 } else { 3 });
+
     println!("\ntargets (DESIGN.md §8): coordinator overhead < 10%; \
               note the FP engine recomputes the prefix each step (no \
               FP KV cache) — the integer engine's KV path is the \

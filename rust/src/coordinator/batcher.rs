@@ -5,10 +5,18 @@
 //!    per wave, with immediate eviction on completion;
 //!  * admissions happen between waves: a waiting request is admitted
 //!    when (a) there is an active slot and (b) the KV budget admits its
-//!    prompt + generation headroom (admission control prevents cache
-//!    thrash);
+//!    prompt + generation headroom, estimated with the engine's real
+//!    per-token KV footprint (`Engine::kv_bytes_per_token`) so
+//!    admission control tracks actual model dimensions;
 //!  * prefill is chunked so a long prompt cannot stall decode waves
-//!    beyond `prefill_chunk` tokens.
+//!    beyond `prefill_chunk` tokens. Both the first chunk
+//!    (`Engine::prefill`) and every continuation chunk
+//!    (`Engine::prefill_chunk`) go through the engine's BATCHED prefill
+//!    — one forward over the whole chunk, not a decode per token (see
+//!    int_model::kv_cache for the batched-prefill design);
+//!  * a request admitted with `max_new == 0` completes with zero
+//!    generated tokens — the generation budget is checked before
+//!    sampling, never after.
 
 use super::engine::{greedy, Engine, SeqState};
 use super::metrics::ServeMetrics;
@@ -57,6 +65,33 @@ pub struct Batcher {
     active: Vec<Active>,
 }
 
+/// Token count of a prompt as it will be admitted: truncated to the
+/// context budget (`max_seq - max_new - 1`), floored at the 1-token
+/// pad. The byte-level tokenizer is length-preserving (data::encode),
+/// so this is computable from the byte length without allocating;
+/// `normalize_prompt` asserts it stays in sync.
+fn admitted_len(prompt: &str, max_seq: usize, max_new: usize) -> usize {
+    let max_ctx = max_seq.saturating_sub(max_new + 1);
+    prompt.len().min(max_ctx).max(1)
+}
+
+/// Tokenize + clamp a prompt exactly as admission estimates it:
+/// truncate to the context budget, pad empty prompts with a single
+/// space.
+fn normalize_prompt(prompt: &str, max_seq: usize, max_new: usize)
+    -> Vec<u16> {
+    let mut toks = data::encode(prompt);
+    let max_ctx = max_seq.saturating_sub(max_new + 1);
+    if toks.len() > max_ctx {
+        toks.truncate(max_ctx);
+    }
+    if toks.is_empty() {
+        toks.push(b' ' as u16);
+    }
+    debug_assert_eq!(toks.len(), admitted_len(prompt, max_seq, max_new));
+    toks
+}
+
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Batcher {
         Batcher { cfg, queue: VecDeque::new(), active: Vec::new() }
@@ -78,16 +113,46 @@ impl Batcher {
     pub fn step<E: Engine>(&mut self, engine: &E,
                            metrics: &mut ServeMetrics) -> Vec<Response> {
         let step_t0 = Instant::now();
+        let mut out = Vec::new();
         // ---- admission ----
-        while self.active.len() < self.cfg.max_batch {
+        loop {
+            let Some(front) = self.queue.front() else { break };
+            // a zero-budget request at the queue front needs no engine
+            // work, batch slot or KV: complete it immediately with zero
+            // generated tokens (checked before the slot gate, so a full
+            // batch cannot delay it once it reaches the front; FIFO
+            // order is preserved behind blocked requests)
+            if front.max_new == 0 {
+                let req = self.queue.pop_front().unwrap();
+                let plen = admitted_len(&req.prompt, engine.max_seq(), 0);
+                let latency = req.submitted.elapsed().as_secs_f64();
+                metrics.record_request(latency, latency);
+                out.push(Response {
+                    id: req.id,
+                    text: String::new(),
+                    n_prompt: plen,
+                    n_generated: 0,
+                    ttft: latency,
+                    latency,
+                });
+                continue;
+            }
+            if self.active.len() >= self.cfg.max_batch {
+                break;
+            }
+            // admission estimate from the engine's real per-token KV
+            // footprint, over the prompt AS ADMITTED (allocation-free:
+            // a blocked front is re-estimated every step)
             let kv_used: usize = self
                 .active
                 .iter()
                 .map(|a| engine.kv_bytes(&a.state))
                 .sum();
-            let Some(front) = self.queue.front() else { break };
-            // rough admission estimate: prompt + max_new tokens of KV
-            let est = (front.prompt.len() + front.max_new) * 64;
+            let adm_len =
+                admitted_len(&front.prompt, engine.max_seq(),
+                             front.max_new);
+            let est = (adm_len + front.max_new)
+                * engine.kv_bytes_per_token();
             if kv_used + est > self.cfg.kv_budget
                 && !self.active.is_empty()
             {
@@ -95,14 +160,8 @@ impl Batcher {
                 break;
             }
             let req = self.queue.pop_front().unwrap();
-            let mut prompt = data::encode(&req.prompt);
-            let max_ctx = engine.max_seq().saturating_sub(req.max_new + 1);
-            if prompt.len() > max_ctx {
-                prompt.truncate(max_ctx);
-            }
-            if prompt.is_empty() {
-                prompt.push(b' ' as u16);
-            }
+            let prompt = normalize_prompt(&req.prompt, engine.max_seq(),
+                                          req.max_new);
             let prompt_len = prompt.len();
             // chunked prefill: first chunk now, rest in later steps
             let first = prompt
@@ -126,16 +185,22 @@ impl Batcher {
         // ---- one decode/prefill wave over active sequences ----
         let mut finished_idx: Vec<usize> = Vec::new();
         for (i, a) in self.active.iter_mut().enumerate() {
+            // defensive: a request whose generation budget is already
+            // exhausted needs no logits — finish before burning prefill
+            // waves (admission short-circuits max_new == 0, so this
+            // only guards future paths into the active set)
+            if a.generated.len() >= a.req.max_new {
+                finished_idx.push(i);
+                continue;
+            }
             if !a.pending_prompt.is_empty() {
-                // continue chunked prefill
+                // continue chunked prefill through the engine's batched
+                // prefill path (one forward per chunk, not per token)
                 let n = a.pending_prompt.len().min(self.cfg.prefill_chunk);
                 let chunk: Vec<u16> =
                     a.pending_prompt.drain(..n).collect();
                 let t0 = Instant::now();
-                let mut logits = a.last_logits.take().unwrap();
-                for &t in &chunk {
-                    logits = engine.decode(&mut a.state, t);
-                }
+                let logits = engine.prefill_chunk(&mut a.state, &chunk);
                 metrics.prefill_tokens += chunk.len() as u64;
                 metrics.prefill_time_s += t0.elapsed().as_secs_f64();
                 a.last_logits = Some(logits);
@@ -167,7 +232,6 @@ impl Batcher {
         metrics.batch_occupancy_sum += self.active.len() as u64;
         metrics.step_time_s += step_t0.elapsed().as_secs_f64();
         // ---- evict finished ----
-        let mut out = Vec::new();
         for i in finished_idx.into_iter().rev() {
             let a = self.active.swap_remove(i);
             let latency = a.req.submitted.elapsed().as_secs_f64();
@@ -212,6 +276,10 @@ mod tests {
         }
 
         fn kv_bytes(&self, _state: &SeqState) -> usize {
+            64
+        }
+
+        fn kv_bytes_per_token(&self) -> usize {
             64
         }
     }
@@ -271,6 +339,36 @@ mod tests {
         assert_eq!(done.len(), 7);
         // occupancy must have exceeded 1 (real batching happened)
         assert!(m.batch_occupancy_sum > m.steps);
+    }
+
+    #[test]
+    fn zero_budget_requests_complete_without_engine_work() {
+        let mut b = Batcher::new(BatcherConfig {
+            stop_token: None,
+            ..Default::default()
+        });
+        let mut m = ServeMetrics::default();
+        for (id, max_new) in [(1u64, 0usize), (2, 2)] {
+            b.enqueue(Request {
+                id,
+                prompt: "abc".into(),
+                max_new,
+                submitted: Instant::now(),
+            });
+        }
+        let mut done = Vec::new();
+        while !b.is_idle() {
+            done.extend(b.step(&Echo, &mut m));
+        }
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].n_generated, 0, "zero budget must stay zero");
+        assert_eq!(done[0].text, "");
+        assert_eq!(done[0].n_prompt, 3);
+        assert_eq!(done[1].n_generated, 2);
+        // the zero-budget request never reached the engine: only
+        // request 2's prompt was prefilled
+        assert_eq!(m.prefill_tokens, 3);
     }
 
     #[test]

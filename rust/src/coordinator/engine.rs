@@ -22,11 +22,29 @@ pub trait Engine: Send {
     /// logits of the last prompt position).
     fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>);
 
+    /// Continue prefilling `tokens` into an existing state (the
+    /// batcher's chunked-prefill continuation); returns logits at the
+    /// last fed position. The default replays through `decode`;
+    /// engines with a true batched prefill override it.
+    fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16])
+        -> Vec<f32> {
+        let mut logits = Vec::new();
+        for &t in tokens {
+            logits = self.decode(state, t);
+        }
+        logits
+    }
+
     /// One decode step: feed `token`, return next-token logits.
     fn decode(&self, state: &mut SeqState, token: u16) -> Vec<f32>;
 
     /// Logical KV bytes held by a state (admission control input).
     fn kv_bytes(&self, state: &SeqState) -> usize;
+
+    /// Logical KV bytes ONE token adds to a state — the admission
+    /// controller's estimate of a request's footprint is
+    /// `(prompt + max_new) * kv_bytes_per_token()`.
+    fn kv_bytes_per_token(&self) -> usize;
 }
 
 /// Greedy sampling at the model boundary (argmax over f32 logits).
@@ -52,8 +70,18 @@ impl Engine for IntEngine {
 
     fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>) {
         let mut cache = IntKvCache::new(&self.model);
-        let logits = self.model.prefill(prompt, &mut cache);
+        let logits = self.model.prefill_batch(prompt, &mut cache);
         (SeqState::Int { cache }, logits)
+    }
+
+    fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16])
+        -> Vec<f32> {
+        match state {
+            SeqState::Int { cache } => {
+                self.model.prefill_batch(tokens, cache)
+            }
+            _ => panic!("wrong state kind"),
+        }
     }
 
     fn decode(&self, state: &mut SeqState, token: u16) -> Vec<f32> {
@@ -68,6 +96,10 @@ impl Engine for IntEngine {
             SeqState::Int { cache } => cache.logical_bytes(),
             _ => 0,
         }
+    }
+
+    fn kv_bytes_per_token(&self) -> usize {
+        self.model.kv_bytes_per_token()
     }
 }
 
@@ -88,6 +120,19 @@ impl Engine for FpEngine {
         (SeqState::Fp { tokens: prompt.to_vec() }, logits)
     }
 
+    fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16])
+        -> Vec<f32> {
+        // one forward over the extended prefix — identical logits to
+        // replaying the chunk through decode at 1/C the cost
+        match state {
+            SeqState::Fp { tokens: prefix } => {
+                prefix.extend_from_slice(tokens);
+                self.model.forward_last(prefix)
+            }
+            _ => panic!("wrong state kind"),
+        }
+    }
+
     fn decode(&self, state: &mut SeqState, token: u16) -> Vec<f32> {
         match state {
             SeqState::Fp { tokens } => {
@@ -103,5 +148,9 @@ impl Engine for FpEngine {
             SeqState::Fp { tokens } => tokens.len() * 4,
             _ => 0,
         }
+    }
+
+    fn kv_bytes_per_token(&self) -> usize {
+        4
     }
 }

@@ -1,25 +1,73 @@
-//! Integer KV cache + single-token decode path (the serving hot loop).
+//! Integer KV cache + the serving forward paths: single-token decode
+//! (the hot loop) and multi-token batched prefill.
 //!
 //! The cache stores CENTERED key/value vectors per (layer, head) at one
 //! shared dyadic scale per head — the decode-time analogue of the
-//! prefill path's per-head `requant_common`. Because decode streams
-//! tokens, the shared scale must adapt: the cache uses a GROW-ONLY
-//! policy — when an incoming vector overflows the current 8-bit range,
-//! all cached values are right-shifted to a coarser scale (an integer
-//! rescale; never a float op). Growing never loses more than 1 bit of
-//! precision per doubling, matching dynamic-range behaviour of the
-//! paper's per-token quantization.
+//! full-sequence path's per-head `requant_common`. Because decode
+//! streams tokens, the shared scale must adapt: the cache uses a
+//! GROW-ONLY policy — when an incoming vector overflows the current
+//! 8-bit range, all cached values are right-shifted to a coarser scale
+//! (an integer rescale; never a float op). Growing never loses more
+//! than 1 bit of precision per doubling, matching dynamic-range
+//! behaviour of the paper's per-token quantization.
+//!
+//! # Batched prefill design
+//!
+//! `prefill_batch` runs each block's `di_linear` over all T prompt rows
+//! at once (one row-blocked GEMM instead of T GEMVs), applies RoPE per
+//! position, computes causal attention per head with
+//! `di_softmax_row(valid = pos0 + i + 1)`, merges heads with the same
+//! per-token requant as decode, and bulk-appends K/V into the cache
+//! lanes with a SINGLE scale-resolution pass: the lane scale is derived
+//! once from the chunk's extrema (`Lane::append_chunk`) instead of the
+//! per-vector grow loop. Because the rescale into lane units is
+//! monotone in the value, probing a row's min/max is exactly
+//! equivalent to probing every element, so the bulk path picks the
+//! same lane scale the token-by-token path would; appended VALUES can
+//! differ from the incremental path by one rounding step (incremental
+//! appends quantize at the then-current scale and re-round on each
+//! grow). The equivalence contract — same lane lengths/scales, same
+//! next-token argmax, logits within a requant step — is enforced by
+//! `tests/serving.rs::batched_prefill_matches_decode_replay`.
 
-use super::{dequant_logits, IntMlp, IntModel, NL_BITS};
+use super::{dequant_logits, IntModel, NL_BITS};
 use crate::config::Arch;
 use crate::ops::di_add::di_add;
 use crate::ops::di_matmul::{di_linear, di_linear_raw};
 use crate::ops::di_norm::di_norm;
 use crate::ops::di_softmax::di_softmax_row;
-use crate::ops::di_swiglu::di_swiglu;
-use crate::ops::{di_relu, rdiv, requant_row};
+use crate::ops::{rdiv, requant_row};
 use crate::quant::DynQ;
 use crate::tensor::IMat;
+
+/// Largest meaningful exponent gap when rescaling into lane units;
+/// beyond it the value either saturates (finer -> coarser by > 2^40:
+/// forces another grow instead of silently truncating the shift) or is
+/// exactly zero (coarser -> finer: the product is < 2^17, so 2^-41
+/// of it rounds to 0).
+const LANE_SH_MAX: i32 = 40;
+
+/// Rescale the numerator of a lane conversion: v * mt * 2^sh with
+/// saturation instead of shifting past [`LANE_SH_MAX`].
+#[inline]
+fn lane_scaled(v: i64, mt: i64, sh: i32) -> i64 {
+    let num = v * mt;
+    if sh >= 0 {
+        if sh > LANE_SH_MAX {
+            match num.cmp(&0) {
+                std::cmp::Ordering::Greater => i64::MAX >> 9,
+                std::cmp::Ordering::Less => -(i64::MAX >> 9),
+                std::cmp::Ordering::Equal => 0,
+            }
+        } else {
+            num << sh
+        }
+    } else if -sh > LANE_SH_MAX {
+        0
+    } else {
+        num >> -sh
+    }
+}
 
 /// One head's cache lane: centered values at scale m/2^k.
 #[derive(Debug, Clone)]
@@ -39,8 +87,52 @@ impl Lane {
         }
     }
 
+    /// Value `v` (centered, mantissa `mt`, exponent gap `sh = k - kt`)
+    /// expressed in lane units.
+    #[inline]
+    fn to_lane(&self, v: i64, mt: i64, sh: i32) -> i64 {
+        rdiv(lane_scaled(v, mt, sh), self.m as i64)
+    }
+
+    /// Number of grow (halving) steps needed so every incoming row —
+    /// given as (min, max, mt, kt) — fits the 8-bit lane range. The
+    /// rescale is monotone in the value, so probing the extrema is
+    /// exactly equivalent to probing every element of the row.
+    fn grows_needed(&self, rows: &[(i64, i64, i32, i32)]) -> i32 {
+        let mut grows = 0;
+        loop {
+            let kk = self.k - grows;
+            let fits = rows.iter().all(|&(lo, hi, mt, kt)| {
+                let sh = kk - kt;
+                self.to_lane(lo, mt as i64, sh).abs() <= 127
+                    && self.to_lane(hi, mt as i64, sh).abs() <= 127
+            });
+            if fits {
+                return grows;
+            }
+            grows += 1;
+        }
+    }
+
+    /// Coarsen the lane scale by 2^n. Cached values are halved one
+    /// step at a time (one rounding per doubling) so a bulk grow is
+    /// bit-identical to n incremental `grow` calls on the decode path.
+    fn grow_by(&mut self, n: i32) {
+        if n <= 0 {
+            return;
+        }
+        for v in self.vals.iter_mut() {
+            let mut x = *v as i64;
+            for _ in 0..n {
+                x = rdiv(x, 2);
+            }
+            *v = x as i32;
+        }
+        self.k -= n;
+    }
+
     /// Append a centered vector with scale mt/2^kt, requantizing into
-    /// the lane scale (growing the lane scale if needed).
+    /// the lane scale (growing the lane scale first if needed).
     fn append(&mut self, x: &[i64], mt: i32, kt: i32, hd: usize) {
         if self.vals.is_empty() {
             // adopt the first vector's scale directly — avoids a long
@@ -49,45 +141,48 @@ impl Lane {
             self.m = mt;
             self.k = kt;
         }
-        // incoming value in lane units: v * mt * 2^(k - kt) / m
-        loop {
-            let mut ok = true;
-            let sh = self.k - kt;
-            for &v in x {
-                let num = if sh >= 0 {
-                    (v * mt as i64) << sh.min(40)
-                } else {
-                    (v * mt as i64) >> (-sh).min(40)
-                };
-                let q = rdiv(num, self.m as i64);
-                if q.abs() > 127 {
-                    ok = false;
-                    break;
-                }
-            }
-            if ok {
-                break;
-            }
-            self.grow();
-        }
+        let lo = x.iter().copied().min().unwrap_or(0);
+        let hi = x.iter().copied().max().unwrap_or(0);
+        let grows = self.grows_needed(&[(lo, hi, mt, kt)]);
+        self.grow_by(grows);
         let sh = self.k - kt;
         for &v in x {
-            let num = if sh >= 0 {
-                (v * mt as i64) << sh.min(40)
-            } else {
-                (v * mt as i64) >> (-sh).min(40)
-            };
-            self.vals.push(rdiv(num, self.m as i64) as i32);
+            self.vals.push(self.to_lane(v, mt as i64, sh) as i32);
         }
         debug_assert_eq!(self.vals.len() % hd, 0);
     }
 
-    /// Coarsen the lane scale by 2x: halve cached values, k -= 1.
-    fn grow(&mut self) {
-        for v in self.vals.iter_mut() {
-            *v = rdiv(*v as i64, 2) as i32;
+    /// Bulk-append one head's (T, hd) block of centered vectors with
+    /// per-row scales (ms[r], ks[r]): resolve the lane scale ONCE from
+    /// the chunk extrema, then write every row at the final scale.
+    fn append_chunk(&mut self, heads: &super::Heads, head: usize,
+                    ms: &[i32], ks: &[i32]) {
+        let (t, hd) = (heads.t, heads.hd);
+        if t == 0 {
+            return;
         }
-        self.k -= 1;
+        if self.vals.is_empty() {
+            self.m = ms[0];
+            self.k = ks[0];
+        }
+        let rows: Vec<(i64, i64, i32, i32)> = (0..t)
+            .map(|r| {
+                let row = heads.head_row(r, head);
+                let lo = row.iter().copied().min().unwrap();
+                let hi = row.iter().copied().max().unwrap();
+                (lo, hi, ms[r], ks[r])
+            })
+            .collect();
+        let grows = self.grows_needed(&rows);
+        self.grow_by(grows);
+        self.vals.reserve(t * hd);
+        for r in 0..t {
+            let sh = self.k - ks[r];
+            let mt = ms[r] as i64;
+            for &v in heads.head_row(r, head) {
+                self.vals.push(self.to_lane(v, mt, sh) as i32);
+            }
+        }
     }
 
     fn len(&self, hd: usize) -> usize {
@@ -131,6 +226,19 @@ impl IntKvCache {
         }
     }
 
+    /// (len, m, k) of a K ('k') or V ('v') lane — equivalence tests and
+    /// diagnostics introspect cache scales through this.
+    pub fn lane_state(&self, which: char, layer: usize, head: usize)
+        -> (usize, i32, i32) {
+        let idx = layer * self.n_heads + head;
+        let lane = match which {
+            'k' => &self.k[idx],
+            'v' => &self.v[idx],
+            other => panic!("lane selector must be 'k' or 'v': {other:?}"),
+        };
+        (lane.len(self.hd), lane.m, lane.k)
+    }
+
     /// Memory footprint of the cached values in bytes if stored as i8
     /// (what a deployment would allocate; we hold i32 for simplicity).
     pub fn logical_bytes(&self) -> usize {
@@ -139,19 +247,225 @@ impl IntKvCache {
 }
 
 impl IntModel {
-    /// Prefill: run the full integer forward and populate the cache;
-    /// returns last-position logits.
+    /// One attention row over the cache lanes: integer scores of `qrow`
+    /// against the first `valid` K entries, DI-ClippedSoftmax, then
+    /// probability-weighted V accumulation into `orow` (raw, at scale
+    /// lane_v.m / 2^(lane_v.k + softmax_bits - 1)). Shared by decode
+    /// and batched prefill so their attention semantics cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_row(
+        &self,
+        lane_k: &Lane,
+        lane_v: &Lane,
+        qrow: &[i64],
+        qm: i32,
+        qk: i32,
+        valid: usize,
+        hd: usize,
+        orow: &mut [i64],
+        scores: &mut Vec<i64>,
+        probs: &mut Vec<i32>,
+        scratch: &mut Vec<i64>,
+    ) {
+        scores.resize(valid, 0);
+        for (j, s) in scores.iter_mut().enumerate() {
+            let krow = &lane_k.vals[j * hd..(j + 1) * hd];
+            let mut acc = 0i64;
+            for (a, &b) in qrow.iter().zip(krow.iter()) {
+                acc += a * b as i64;
+            }
+            *s = acc;
+        }
+        probs.resize(valid, 0);
+        di_softmax_row(
+            scores,
+            qm,
+            qk,
+            lane_k.m,
+            lane_k.k,
+            self.scheme.softmax_bits,
+            self.scheme.clip,
+            valid,
+            probs,
+            scratch,
+        );
+        for (j, &p) in probs.iter().enumerate() {
+            if p == 0 {
+                continue;
+            }
+            let vrow = &lane_v.vals[j * hd..(j + 1) * hd];
+            for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                *o += p as i64 * vv as i64;
+            }
+        }
+    }
+
+    /// Merge per-head raw PV outputs `o_raw` (T, H*hd) into one DynQ:
+    /// align each head to the max V exponent `kcom`, then requantize
+    /// every token row to a_bits. Shared by decode, batched prefill and
+    /// the full-sequence attention so the merge semantics cannot drift.
+    /// The 32-bit shift cap keeps mult * o_raw inside i64 (o_raw <=
+    /// 2^22 for max_seq <= 256); V scales of one layer see similar
+    /// dynamic ranges, so a > 32 exponent gap across heads does not
+    /// occur in practice.
+    pub(crate) fn merge_heads(&self, o_raw: &[i64], t: usize,
+                              vms: &[i32], vks: &[i32]) -> DynQ {
+        let h = vms.len();
+        let hd = o_raw.len() / (t * h);
+        let a_bits = self.scheme.a_bits;
+        let kcom = vks.iter().copied().max().unwrap();
+        let mut merged = IMat::zeros(t, h * hd);
+        let mut m_out = vec![0i32; t];
+        let mut k_out = vec![0i32; t];
+        let mut zp_out = vec![0i32; t];
+        let mut aligned = vec![0i64; h * hd];
+        for i in 0..t {
+            for head in 0..h {
+                let sh = (kcom - vks[head]).min(32);
+                let mult = (vms[head] as i64) << sh;
+                let src = &o_raw[i * h * hd + head * hd
+                    ..i * h * hd + (head + 1) * hd];
+                let dst = &mut aligned[head * hd..(head + 1) * hd];
+                for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                    *d = s * mult;
+                }
+            }
+            let (mm, mk, mz) = requant_row(
+                &aligned,
+                1,
+                kcom + (self.scheme.softmax_bits as i32 - 1),
+                a_bits,
+                None,
+                merged.row_mut(i),
+            );
+            m_out[i] = mm;
+            k_out[i] = mk;
+            zp_out[i] = mz;
+        }
+        DynQ { vals: merged, m: m_out, k: k_out, zp: zp_out, bits: a_bits }
+    }
+
+    /// Logical KV bytes ONE cached token occupies (i8 storage): K and V
+    /// vectors across all layers. The batcher's admission control uses
+    /// this instead of a hardcoded estimate.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.cfg.n_layers * self.cfg.n_heads * self.cfg.head_dim() * 2
+    }
+
+    /// Prefill: run the integer forward over the whole prompt and
+    /// populate the cache; returns last-position logits. Delegates to
+    /// the batched path — one GEMM per linear instead of a per-token
+    /// `decode_one` replay.
     pub fn prefill(&self, tokens: &[u16], cache: &mut IntKvCache)
         -> Vec<f32> {
-        // simple + exact: replay tokens through decode one by one.
-        // (kept deliberately straightforward; the batched decode loop in
-        // coordinator::engine amortizes weights across sequences, which
-        // is where the serving throughput comes from.)
+        self.prefill_batch(tokens, cache)
+    }
+
+    /// Reference prefill: replay tokens through `decode_one` one by
+    /// one. Kept as the equivalence oracle for the batched path (and
+    /// as the "before" side of the prefill benchmark).
+    pub fn prefill_replay(&self, tokens: &[u16], cache: &mut IntKvCache)
+        -> Vec<f32> {
         let mut last = Vec::new();
         for &t in tokens {
             last = self.decode_one(t, cache);
         }
         last
+    }
+
+    /// Batched prefill: one forward over all T prompt rows, appending
+    /// K/V per head in bulk. Returns last-position logits.
+    pub fn prefill_batch(&self, tokens: &[u16], cache: &mut IntKvCache)
+        -> Vec<f32> {
+        if tokens.is_empty() {
+            return Vec::new();
+        }
+        let raw = self.prefill_raw(tokens, cache);
+        let logits = dequant_logits(&raw);
+        logits.row(logits.rows - 1).to_vec()
+    }
+
+    /// Integer part of the batched prefill: advances the cache by
+    /// `tokens.len()` positions and returns the raw lm_head
+    /// accumulators of the LAST position only (prefill never needs the
+    /// other rows' logits, and the vocab matmul dominates short-prompt
+    /// cost).
+    fn prefill_raw(&self, tokens: &[u16], cache: &mut IntKvCache)
+        -> crate::ops::RawRows {
+        let cfg = &self.cfg;
+        let centered = cfg.arch == Arch::Opt;
+        let a_bits = self.scheme.a_bits;
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let t = tokens.len();
+        let pos0 = cache.pos;
+        assert!(pos0 + t <= cfg.max_seq, "sequence exceeds max_seq");
+        let ids: Vec<usize> = tokens.iter().map(|&tk| tk as usize).collect();
+        let mut x = self.embed.gather(&ids);
+        if let Some(pe) = &self.pos_embed {
+            let pos_ids: Vec<usize> = (0..t).map(|i| i + pos0).collect();
+            let p = pe.gather(&pos_ids);
+            x = di_add(&x, &p, NL_BITS);
+        }
+        let rotate = cfg.arch == Arch::Llama;
+        let mut scores: Vec<i64> = Vec::new();
+        let mut probs: Vec<i32> = Vec::new();
+        let mut scratch: Vec<i64> = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let hh = di_norm(&x, a_bits, centered);
+            let q = di_linear(&hh, &layer.wq, a_bits);
+            let k = di_linear(&hh, &layer.wk, a_bits);
+            let v = di_linear(&hh, &layer.wv, a_bits);
+            let qh = self.center_rope(&q, pos0, rotate);
+            let kh = self.center_rope(&k, pos0, rotate);
+            let vh = self.center_rope(&v, 0, false);
+            // per-head: bulk K/V append, then causal attention rows
+            let mut o_raw = vec![0i64; t * h * hd];
+            let mut vks = vec![0i32; h];
+            let mut vms = vec![0i32; h];
+            for head in 0..h {
+                cache.lane('k', li, head).append_chunk(&kh, head,
+                                                       &k.m, &k.k);
+                cache.lane('v', li, head).append_chunk(&vh, head,
+                                                       &v.m, &v.k);
+                let idx = li * h + head;
+                let lane_k = &cache.k[idx];
+                let lane_v = &cache.v[idx];
+                vms[head] = lane_v.m;
+                vks[head] = lane_v.k;
+                for i in 0..t {
+                    let valid = pos0 + i + 1;
+                    let orow = &mut o_raw
+                        [i * h * hd + head * hd
+                            ..i * h * hd + (head + 1) * hd];
+                    self.attend_row(
+                        lane_k,
+                        lane_v,
+                        qh.head_row(i, head),
+                        q.m[i],
+                        q.k[i],
+                        valid,
+                        hd,
+                        orow,
+                        &mut scores,
+                        &mut probs,
+                        &mut scratch,
+                    );
+                }
+            }
+            let att = self.merge_heads(&o_raw, t, &vms, &vks);
+            x = self.layer_tail(&x, &att, layer);
+        }
+        cache.pos += t;
+        // final norm + lm_head on the LAST row only
+        let last = DynQ {
+            vals: IMat::from_vec(1, x.cols(), x.vals.row(t - 1).to_vec()),
+            m: vec![x.m[t - 1]],
+            k: vec![x.k[t - 1]],
+            zp: vec![x.zp[t - 1]],
+            bits: x.bits,
+        };
+        let hf = di_norm(&last, NL_BITS, centered);
+        di_linear_raw(&hf, &self.lm_head)
     }
 
     /// Decode one token given the cache; appends K/V and returns logits.
@@ -193,98 +507,35 @@ impl IntModel {
             let mut vks = vec![0i32; h];
             let mut vms = vec![0i32; h];
             for head in 0..h {
-                let lane_k = cache.lane('k', li, head);
-                lane_k.append(&kh[head * hd..(head + 1) * hd], k.m[0],
-                              k.k[0], hd);
-                let (lkm, lkk) = (lane_k.m, lane_k.k);
+                // append K and V first (appending V before the softmax
+                // is equivalent: scores never read the V lane, and the
+                // PV loop already covered the new entry)
+                cache.lane('k', li, head).append(
+                    &kh[head * hd..(head + 1) * hd], k.m[0], k.k[0], hd);
+                cache.lane('v', li, head).append(
+                    &vh[head * hd..(head + 1) * hd], v.m[0], v.k[0], hd);
+                let idx = li * h + head;
+                let lane_k = &cache.k[idx];
+                let lane_v = &cache.v[idx];
+                vms[head] = lane_v.m;
+                vks[head] = lane_v.k;
                 let len = lane_k.len(hd);
-                scores.resize(len, 0);
-                {
-                    let lane_k = &cache.k[li * h + head];
-                    let qrow = &qh[head * hd..(head + 1) * hd];
-                    for (j, s) in scores.iter_mut().enumerate() {
-                        let krow = &lane_k.vals[j * hd..(j + 1) * hd];
-                        let mut acc = 0i64;
-                        for (a, &b) in qrow.iter().zip(krow.iter()) {
-                            acc += a * b as i64;
-                        }
-                        *s = acc;
-                    }
-                }
-                probs.resize(len, 0);
-                di_softmax_row(
-                    &scores,
+                self.attend_row(
+                    lane_k,
+                    lane_v,
+                    &qh[head * hd..(head + 1) * hd],
                     q.m[0],
                     q.k[0],
-                    lkm,
-                    lkk,
-                    self.scheme.softmax_bits,
-                    self.scheme.clip,
                     len,
+                    hd,
+                    &mut o_raw[head * hd..(head + 1) * hd],
+                    &mut scores,
                     &mut probs,
                     &mut scratch,
                 );
-                let lane_v = cache.lane('v', li, head);
-                lane_v.append(&vh[head * hd..(head + 1) * hd], v.m[0],
-                              v.k[0], hd);
-                vms[head] = lane_v.m;
-                vks[head] = lane_v.k;
-                let lane_v = &cache.v[li * h + head];
-                let orow = &mut o_raw[head * hd..(head + 1) * hd];
-                for (j, &p) in probs.iter().enumerate() {
-                    if p == 0 {
-                        continue;
-                    }
-                    let vrow = &lane_v.vals[j * hd..(j + 1) * hd];
-                    for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
-                        *o += p as i64 * vv as i64;
-                    }
-                }
             }
-            // merge heads (single token)
-            let kcom = vks.iter().copied().max().unwrap();
-            let mut aligned = vec![0i64; h * hd];
-            for head in 0..h {
-                let sh = (kcom - vks[head]).min(32);
-                let mult = (vms[head] as i64) << sh;
-                for c in 0..hd {
-                    aligned[head * hd + c] = o_raw[head * hd + c] * mult;
-                }
-            }
-            let mut merged = IMat::zeros(1, h * hd);
-            let (mm, mk, mz) = requant_row(
-                &aligned,
-                1,
-                kcom + (self.scheme.softmax_bits as i32 - 1),
-                a_bits,
-                None,
-                merged.row_mut(0),
-            );
-            let att = DynQ {
-                vals: merged,
-                m: vec![mm],
-                k: vec![mk],
-                zp: vec![mz],
-                bits: a_bits,
-            };
-            let o = di_linear(&att, &layer.wo, a_bits);
-            x = di_add(&x, &o, NL_BITS);
-            let h2 = di_norm(&x, a_bits, centered);
-            let y = match &layer.mlp {
-                IntMlp::SwiGlu { wg, wu, wd, alpha } => {
-                    let gate = di_linear(&h2, wg, NL_BITS);
-                    let up = di_linear(&h2, wu, NL_BITS);
-                    let sw = di_swiglu(&gate, &up, alpha,
-                                       self.scheme.sig_bits, a_bits);
-                    di_linear(&sw, wd, a_bits)
-                }
-                IntMlp::Relu { w1, w2 } => {
-                    let mut a = di_linear(&h2, w1, a_bits);
-                    di_relu(&mut a);
-                    di_linear(&a, w2, a_bits)
-                }
-            };
-            x = di_add(&x, &y, NL_BITS);
+            let att = self.merge_heads(&o_raw, 1, &vms, &vks);
+            x = self.layer_tail(&x, &att, layer);
         }
         cache.pos += 1;
         let hf = di_norm(&x, NL_BITS, centered);
@@ -311,7 +562,9 @@ impl IntModel {
 
 #[cfg(test)]
 mod tests {
+    use super::super::Heads;
     use super::*;
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn lane_append_and_dequant_roundtrip() {
@@ -372,5 +625,69 @@ mod tests {
         assert!(lane.vals.iter().all(|&v| v.abs() <= 127),
                 "cache lane exceeded 8-bit range");
         assert_eq!(lane.len(hd), 20);
+    }
+
+    #[test]
+    fn lane_handles_extreme_exponent_gaps() {
+        let hd = 2;
+        let mut lane = Lane::new(4, hd);
+        // adopt a very fine scale, then append at a much coarser one:
+        // the saturating probe must keep growing rather than silently
+        // truncating the shift, and values must stay in range
+        lane.append(&[50, -50], 200, 60, hd);
+        lane.append(&[100, -100], 200, 2, hd);
+        assert!(lane.vals.iter().all(|&v| v.abs() <= 127),
+                "gap append escaped 8-bit range: {:?}", lane.vals);
+        // and the coarse vector survived (did not collapse to zero)
+        assert!(lane.vals[hd..].iter().any(|&v| v != 0));
+        // reverse direction: much finer than the lane rounds to zero
+        lane.append(&[3, -3], 200, 62, hd);
+        assert_eq!(&lane.vals[2 * hd..], &[0, 0]);
+    }
+
+    /// The bulk scale resolution must land on exactly the lane scale
+    /// the per-vector grow loop would pick, for the same data.
+    #[test]
+    fn chunk_append_matches_sequential_scale_and_length() {
+        let mut rng = Pcg64::new(0xBEEF);
+        let hd = 8usize;
+        let h = 1usize;
+        for case in 0..40 {
+            let t = 1 + rng.below(12);
+            let mut vals = vec![0i64; t * h * hd];
+            let mut ms = Vec::with_capacity(t);
+            let mut ks = Vec::with_capacity(t);
+            for r in 0..t {
+                let mag = 1i64 << rng.below(14);
+                for c in 0..hd {
+                    let sign = if rng.below(2) == 0 { 1 } else { -1 };
+                    vals[r * hd + c] =
+                        sign * rng.below(mag as usize + 1) as i64;
+                }
+                ms.push(128 + rng.below(128) as i32);
+                ks.push(8 + rng.below(10) as i32);
+            }
+            let heads = Heads { t, h, hd, vals };
+            // sequential reference
+            let mut seq = Lane::new(t, hd);
+            for r in 0..t {
+                seq.append(heads.head_row(r, 0), ms[r], ks[r], hd);
+            }
+            // bulk
+            let mut bulk = Lane::new(t, hd);
+            bulk.append_chunk(&heads, 0, &ms, &ks);
+            assert_eq!(bulk.len(hd), seq.len(hd), "case {case} length");
+            assert_eq!((bulk.m, bulk.k), (seq.m, seq.k),
+                       "case {case} lane scale");
+            assert!(bulk.vals.iter().all(|&v| v.abs() <= 127),
+                    "case {case} escaped 8-bit range");
+            // values agree within one rounding step of the lane unit
+            for (i, (a, b)) in
+                bulk.vals.iter().zip(seq.vals.iter()).enumerate()
+            {
+                assert!((a - b).abs() <= 1,
+                        "case {case} val {i}: bulk {a} vs seq {b}");
+            }
+        }
     }
 }

@@ -17,7 +17,7 @@ use crate::ops::di_norm::di_norm;
 use crate::ops::di_softmax::di_softmax_row;
 use crate::ops::di_swiglu::{di_swiglu, AlphaSmooth};
 use crate::ops::rope::RopeTables;
-use crate::ops::{di_relu, requant_common, requant_row, CommonQ};
+use crate::ops::{di_relu, requant_common, CommonQ};
 use crate::quant::{DynQ, Dyadic, QWeight, QuantScheme};
 use crate::tensor::{IMat, Mat};
 
@@ -101,8 +101,36 @@ impl Heads {
 }
 
 impl IntModel {
+    /// Shared per-layer tail: output projection + residual + MLP +
+    /// residual. Row-independent, so the full-sequence forward, the
+    /// single-token decode and the batched prefill all reuse it.
+    pub(crate) fn layer_tail(&self, x: &DynQ, att: &DynQ,
+                             layer: &IntLayer) -> DynQ {
+        let centered = self.cfg.arch == Arch::Opt;
+        let a_bits = self.scheme.a_bits;
+        let o = di_linear(att, &layer.wo, a_bits);
+        let x = di_add(x, &o, NL_BITS);
+        let h2 = di_norm(&x, a_bits, centered);
+        let y = match &layer.mlp {
+            IntMlp::SwiGlu { wg, wu, wd, alpha } => {
+                let gate = di_linear(&h2, wg, NL_BITS);
+                let up = di_linear(&h2, wu, NL_BITS);
+                let sw = di_swiglu(&gate, &up, alpha,
+                                   self.scheme.sig_bits, a_bits);
+                di_linear(&sw, wd, a_bits)
+            }
+            IntMlp::Relu { w1, w2 } => {
+                let mut a = di_linear(&h2, w1, a_bits);
+                di_relu(&mut a);
+                di_linear(&a, w2, a_bits)
+            }
+        };
+        di_add(&x, &y, NL_BITS)
+    }
+
     /// Center a qkv linear output and (for llama) apply integer RoPE.
-    fn center_rope(&self, x: &DynQ, pos0: usize, rotate: bool) -> Heads {
+    pub(crate) fn center_rope(&self, x: &DynQ, pos0: usize,
+                              rotate: bool) -> Heads {
         let t = x.rows();
         let h = self.cfg.n_heads;
         let hd = self.cfg.head_dim();
@@ -209,37 +237,11 @@ impl IntModel {
             }
         }
         // head merge: align per-head scales to the max exponent, then a
-        // per-token dynamic requant (mirrors _heads_merge_requant)
-        let kcom = vc.iter().map(|c| c.k).max().unwrap_or(0);
-        let mut merged = IMat::zeros(t, h * hd);
-        let mut m_out = vec![0i32; t];
-        let mut k_out = vec![0i32; t];
-        let mut zp_out = vec![0i32; t];
-        let mut aligned = vec![0i64; h * hd];
-        for i in 0..t {
-            for head in 0..h {
-                let sh = (kcom - vc[head].k).min(32);
-                let mult = (vc[head].m as i64) << sh;
-                let src = &o_raw
-                    [i * h * hd + head * hd..i * h * hd + (head + 1) * hd];
-                let dst = &mut aligned[head * hd..(head + 1) * hd];
-                for (d, &s) in dst.iter_mut().zip(src.iter()) {
-                    *d = s * mult;
-                }
-            }
-            let (my, ky, z) = requant_row(
-                &aligned,
-                1,
-                kcom + (p_bits as i32 - 1),
-                a_bits,
-                None,
-                merged.row_mut(i),
-            );
-            m_out[i] = my;
-            k_out[i] = ky;
-            zp_out[i] = z;
-        }
-        DynQ { vals: merged, m: m_out, k: k_out, zp: zp_out, bits: a_bits }
+        // per-token dynamic requant (mirrors _heads_merge_requant;
+        // shared with the decode/prefill paths)
+        let vms: Vec<i32> = vc.iter().map(|c| c.m).collect();
+        let vks: Vec<i32> = vc.iter().map(|c| c.k).collect();
+        self.merge_heads(&o_raw, t, &vms, &vks)
     }
 
     /// Full integer-only forward: tokens -> (T, V) f32 logits.
@@ -265,31 +267,13 @@ impl IntModel {
             x = di_add(&x, &p, NL_BITS);
         }
         for layer in &self.layers {
-            // ---- attention ----
+            // ---- attention + mlp (shared tail) ----
             let h = di_norm(&x, a_bits, centered);
             let q = di_linear(&h, &layer.wq, a_bits);
             let k = di_linear(&h, &layer.wk, a_bits);
             let v = di_linear(&h, &layer.wv, a_bits);
             let att = self.attention(&q, &k, &v, pos0);
-            let o = di_linear(&att, &layer.wo, a_bits);
-            x = di_add(&x, &o, NL_BITS);
-            // ---- mlp ----
-            let h2 = di_norm(&x, a_bits, centered);
-            let y = match &layer.mlp {
-                IntMlp::SwiGlu { wg, wu, wd, alpha } => {
-                    let gate = di_linear(&h2, wg, NL_BITS);
-                    let up = di_linear(&h2, wu, NL_BITS);
-                    let sw = di_swiglu(&gate, &up, alpha,
-                                       self.scheme.sig_bits, a_bits);
-                    di_linear(&sw, wd, a_bits)
-                }
-                IntMlp::Relu { w1, w2 } => {
-                    let mut a = di_linear(&h2, w1, a_bits);
-                    di_relu(&mut a);
-                    di_linear(&a, w2, a_bits)
-                }
-            };
-            x = di_add(&x, &y, NL_BITS);
+            x = self.layer_tail(&x, &att, layer);
         }
         let hf = di_norm(&x, NL_BITS, centered);
         di_linear_raw(&hf, &self.lm_head)

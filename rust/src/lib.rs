@@ -31,9 +31,20 @@ pub mod util;
 
 use std::path::PathBuf;
 
-/// Resolve the artifacts directory: $ILLM_ARTIFACTS or ./artifacts.
+/// Resolve the artifacts directory: $ILLM_ARTIFACTS, ./artifacts, or
+/// ../artifacts (cargo runs tests from `rust/`; the generated artifacts
+/// live at the repo root).
 pub fn artifacts_dir() -> PathBuf {
-    std::env::var_os("ILLM_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from("artifacts"))
+    if let Some(dir) = std::env::var_os("ILLM_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.is_dir() {
+        return local;
+    }
+    let parent = PathBuf::from("../artifacts");
+    if parent.is_dir() {
+        return parent;
+    }
+    local
 }

@@ -325,6 +325,16 @@ fn cmd_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_selftest(_args: &Args) -> Result<()> {
+    bail!(
+        "selftest needs the PJRT runtime: add the `xla` bindings as a \
+         path dependency in rust/Cargo.toml (see the `pjrt` feature \
+         comment there), then rebuild with `--features pjrt`"
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_selftest(args: &Args) -> Result<()> {
     let dir = illm::artifacts_dir();
     let manifest = illm::runtime::Manifest::load(&dir)?;

@@ -11,6 +11,11 @@
 use super::{fdiv, requant_rows, RawRows};
 use crate::quant::{DynQ, QWeight, BIAS_Q};
 
+/// Row-block size of the GEMM: each streamed weight row is reused
+/// across RB activation rows (multi-token prefill); 1-row decode calls
+/// degenerate to the plain GEMV.
+const RB: usize = 8;
+
 /// Accumulate phase: returns raw P rows with composite scales.
 pub fn di_linear_raw(x: &DynQ, w: &QWeight) -> RawRows {
     let t = x.rows();
@@ -18,26 +23,48 @@ pub fn di_linear_raw(x: &DynQ, w: &QWeight) -> RawRows {
     let n = w.wq.cols;
     assert_eq!(kdim, w.wq.rows, "di_linear dims");
     let mut p = vec![0i64; t * n];
-    // centered i32 GEMM, i-k-j order (unit-stride inner over out row)
-    let mut acc = vec![0i32; n];
-    for r in 0..t {
-        acc.iter_mut().for_each(|a| *a = 0);
-        let zp = x.zp[r];
-        let xrow = x.vals.row(r);
-        for (kk, &xv) in xrow.iter().enumerate() {
-            let xc = xv - zp;
-            if xc == 0 {
-                continue;
+    // Centered i32 GEMM, k-outer within a block of RB rows: the weight
+    // row loaded for k is applied to every row of the block while hot
+    // in L1, and the inner loop stays unit-stride over the output row
+    // (LLVM vectorizes it). Integer accumulation is exact under
+    // reordering, so blocking is bit-identical to row-at-a-time GEMV.
+    let rb_cap = RB.min(t);
+    let mut acc = vec![0i32; rb_cap * n];
+    let mut xc_blk = vec![0i32; rb_cap * kdim];
+    let mut r = 0;
+    while r < t {
+        let rb = RB.min(t - r);
+        acc[..rb * n].iter_mut().for_each(|a| *a = 0);
+        for j in 0..rb {
+            let zp = x.zp[r + j];
+            for (d, &v) in xc_blk[j * kdim..(j + 1) * kdim]
+                .iter_mut()
+                .zip(x.vals.row(r + j).iter())
+            {
+                *d = v - zp;
             }
+        }
+        for kk in 0..kdim {
             let wrow = w.wq.row(kk);
-            for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
-                *a += xc * wv;
+            for j in 0..rb {
+                let xc = xc_blk[j * kdim + kk];
+                if xc == 0 {
+                    continue;
+                }
+                let arow = &mut acc[j * n..(j + 1) * n];
+                for (a, &wv) in arow.iter_mut().zip(wrow.iter()) {
+                    *a += xc * wv;
+                }
             }
         }
-        let prow = &mut p[r * n..(r + 1) * n];
-        for c in 0..n {
-            prow[c] = acc[c] as i64 * w.mw[c] as i64;
+        for j in 0..rb {
+            let prow = &mut p[(r + j) * n..(r + j + 1) * n];
+            let arow = &acc[j * n..(j + 1) * n];
+            for c in 0..n {
+                prow[c] = arow[c] as i64 * w.mw[c] as i64;
+            }
         }
+        r += rb;
     }
     let m_in: Vec<i64> = x.m.iter().map(|&m| m as i64).collect();
     let k_in: Vec<i32> = x.k.iter().map(|&k| k + w.kw).collect();

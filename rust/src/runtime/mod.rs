@@ -4,11 +4,18 @@
 //! python/compile/aot.py): `HloModuleProto::from_text_file` reassigns
 //! instruction ids, avoiding the 64-bit-id protos that xla_extension
 //! 0.5.1 rejects. One compiled executable is cached per artifact file.
+//!
+//! The manifest parsing below is dependency-free; the executor half
+//! (`Runtime`, literal constructors, `feed`) needs the `xla` bindings,
+//! which are not part of the offline vendor set — it is gated behind
+//! the off-by-default `pjrt` cargo feature (see Cargo.toml).
 
+#[cfg(feature = "pjrt")]
 pub mod feed;
 
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -101,11 +108,13 @@ impl Manifest {
 }
 
 /// PJRT CPU runtime with an executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub client: xla::PjRtClient,
     cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu()
@@ -165,18 +174,22 @@ impl Runtime {
 }
 
 /// Literal constructors for the dtypes our artifacts use.
+#[cfg(feature = "pjrt")]
 pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     reshape(xla::Literal::vec1(data), shape)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     reshape(xla::Literal::vec1(data), shape)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn lit_i64(data: &[i64], shape: &[usize]) -> Result<xla::Literal> {
     reshape(xla::Literal::vec1(data), shape)
 }
 
+#[cfg(feature = "pjrt")]
 fn reshape(l: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     l.reshape(&dims)

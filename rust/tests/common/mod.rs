@@ -1,0 +1,16 @@
+//! Helpers shared across the integration-test binaries.
+
+/// Pearson correlation of two logit vectors.
+pub fn correlation(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let (x, y) = (x as f64 - ma, y as f64 - mb);
+        num += x * y;
+        da += x * x;
+        db += y * y;
+    }
+    num / (da.sqrt() * db.sqrt()).max(1e-12)
+}

@@ -12,6 +12,9 @@ use illm::nn::load_model;
 use illm::quant::QuantScheme;
 use illm::util::json::Json;
 
+mod common;
+use common::correlation;
+
 fn artifacts() -> std::path::PathBuf {
     illm::artifacts_dir()
 }
@@ -195,20 +198,4 @@ fn fakequant_baselines_rank_sanely_at_w4a4() {
     assert!(fsbr_ppl < sq_ppl, "fsbr {fsbr_ppl} !< sq {sq_ppl}");
     assert!(fsbr_ppl < rtn_ppl * 0.8,
             "fsbr {fsbr_ppl} !<< rtn {rtn_ppl}");
-}
-
-fn correlation(a: &[f32], b: &[f32]) -> f64 {
-    let n = a.len() as f64;
-    let ma = a.iter().map(|&v| v as f64).sum::<f64>() / n;
-    let mb = b.iter().map(|&v| v as f64).sum::<f64>() / n;
-    let mut num = 0.0;
-    let mut da = 0.0;
-    let mut db = 0.0;
-    for (&x, &y) in a.iter().zip(b.iter()) {
-        let (x, y) = (x as f64 - ma, y as f64 - mb);
-        num += x * y;
-        da += x * x;
-        db += y * y;
-    }
-    num / (da.sqrt() * db.sqrt()).max(1e-12)
 }

@@ -2,10 +2,15 @@
 //! by the python build path and their outputs match the rust-native
 //! engines fed with the SAME weights.
 //!
+//! Requires the `pjrt` cargo feature (xla bindings, not in the offline
+//! vendor set) — without it this whole test file compiles to nothing.
+//!
 //!  * fp_forward artifacts: every model, fast compile (<1s each)
 //!  * L1 pallas di_matmul kernel artifact: bit-exact vs ops::di_linear
 //!  * int_block artifacts (1-layer integer graph, the full DI-* pipeline
 //!    through XLA): slower compile (~20s) — the deepest check.
+
+#![cfg(feature = "pjrt")]
 
 use illm::int_model::quantize::quantize_model;
 use illm::nn::load_model;

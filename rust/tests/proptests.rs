@@ -18,7 +18,7 @@ use illm::ops::di_add::di_add;
 use illm::ops::di_exp::{di_exp_one, exp_t};
 use illm::ops::di_softmax::di_softmax_row;
 use illm::ops::requant_row;
-use illm::quant::quantize_rows_f32;
+use illm::quant::{quantize_rows_f32, quantize_weight, round_half_away};
 use illm::tensor::Mat;
 use illm::util::rng::Pcg64;
 use std::time::Instant;
@@ -49,6 +49,10 @@ impl Engine for Affine {
             SeqState::Fp { tokens } => tokens.len() * 8,
             _ => 0,
         }
+    }
+
+    fn kv_bytes_per_token(&self) -> usize {
+        8
     }
 }
 
@@ -191,6 +195,47 @@ fn prop_quantize_rows_roundtrip() {
             }
         }
     }
+}
+
+#[test]
+fn prop_weight_quant_rounds_half_away_from_zero() {
+    // the rounding-bias fix: q(-w) == -q(w) for symmetric per-channel
+    // weight quantization, across random shapes/scales/bit widths
+    let mut rng = Pcg64::new(31);
+    for case in 0..60 {
+        let (k, n) = (1 + rng.below(24), 1 + rng.below(12));
+        let scale = (10f64).powf(rng.range_f64(-2.0, 1.0));
+        let data: Vec<f32> =
+            (0..k * n).map(|_| (rng.normal() * scale) as f32).collect();
+        let w = Mat::from_vec(k, n, data);
+        let mut neg = w.clone();
+        for v in neg.data.iter_mut() {
+            *v = -*v;
+        }
+        let bits = [4u32, 6, 8][rng.below(3)];
+        let clip = [1.0, 0.9][rng.below(2)];
+        let qp = quantize_weight(&w, bits, clip, None);
+        let qn = quantize_weight(&neg, bits, clip, None);
+        assert_eq!(qp.mw, qn.mw, "case {case}: channel scales differ");
+        assert_eq!(qp.kw, qn.kw);
+        for (i, (a, b)) in
+            qp.wq.data.iter().zip(qn.wq.data.iter()).enumerate()
+        {
+            assert_eq!(*a, -*b,
+                       "case {case} w{bits} [{i}]: {a} vs -({b})");
+        }
+    }
+    // scalar rounding: halves go away from zero, everything else to
+    // nearest
+    let mut rng = Pcg64::new(77);
+    for _ in 0..500 {
+        let x = rng.range_f64(-100.0, 100.0);
+        let r = round_half_away(x);
+        assert_eq!(r, -round_half_away(-x), "odd symmetry at {x}");
+        assert!((r - x).abs() <= 0.5 + 1e-12, "not nearest at {x}");
+    }
+    assert_eq!(round_half_away(2.5), 3.0);
+    assert_eq!(round_half_away(-2.5), -3.0);
 }
 
 #[test]

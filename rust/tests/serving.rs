@@ -1,13 +1,20 @@
-//! Serving-path integration: coordinator + integer engine end to end.
+//! Serving-path integration: coordinator + integer engine end to end,
+//! plus the batched-prefill / decode-replay equivalence contract.
 
-use illm::coordinator::batcher::BatcherConfig;
+use illm::coordinator::batcher::{Batcher, BatcherConfig};
 use illm::coordinator::engine::{greedy, Engine, FpEngine, IntEngine};
-use illm::coordinator::{run_workload, workload};
+use illm::coordinator::metrics::ServeMetrics;
+use illm::coordinator::{run_workload, workload, Request};
 use illm::data::load_corpus;
+use illm::int_model::kv_cache::IntKvCache;
 use illm::int_model::quantize::quantize_model;
 use illm::nn::load_model;
 use illm::quant::QuantScheme;
 use std::sync::Arc;
+use std::time::Instant;
+
+mod common;
+use common::correlation;
 
 fn int_engine(name: &str, scheme: QuantScheme) -> IntEngine {
     let dir = illm::artifacts_dir();
@@ -78,6 +85,122 @@ fn int_generation_agrees_with_fp_on_easy_text() {
             illm::data::decode(&a), illm::data::decode(&b));
     // and the output must be corpus-grammatical ascii
     assert!(a.iter().all(|&t| t < 128));
+}
+
+/// The tentpole contract: batched prefill and token-by-token decode
+/// replay fill the cache to the same lengths with scales within one
+/// requant step (exactly equal at layer 0, where the two paths see
+/// bit-identical inputs) and agree on the next token.
+#[test]
+fn batched_prefill_matches_decode_replay() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let argmax = |v: &[f32]| greedy(v);
+    for scheme in [QuantScheme::W8A8, QuantScheme::W4A4] {
+        let im = quantize_model(&fp, scheme, None, None);
+        let toks: Vec<u16> = corpus.val[..48].to_vec();
+        let mut c_replay = IntKvCache::new(&im);
+        let l_replay = im.prefill_replay(&toks, &mut c_replay);
+        let mut c_batch = IntKvCache::new(&im);
+        let l_batch = im.prefill_batch(&toks, &mut c_batch);
+        assert_eq!(c_batch.pos, c_replay.pos, "cache positions");
+        for li in 0..im.cfg.n_layers {
+            for head in 0..im.cfg.n_heads {
+                for which in ['k', 'v'] {
+                    let (len_r, m_r, k_r) =
+                        c_replay.lane_state(which, li, head);
+                    let (len_b, m_b, k_b) =
+                        c_batch.lane_state(which, li, head);
+                    let tag = format!("{} lane {which} l{li} h{head}",
+                                      scheme.tag());
+                    assert_eq!(len_b, len_r, "{tag} length");
+                    let s_r = m_r as f64 / (k_r as f64).exp2();
+                    let s_b = m_b as f64 / (k_b as f64).exp2();
+                    if li == 0 {
+                        assert_eq!((m_b, k_b), (m_r, k_r),
+                                   "{tag} scale must be identical");
+                    } else {
+                        // deeper layers may drift by one requant step
+                        let ratio = s_b / s_r;
+                        assert!((0.4..=2.5).contains(&ratio),
+                                "{tag} scale drift: {s_b} vs {s_r}");
+                    }
+                }
+            }
+        }
+        assert_eq!(argmax(&l_batch), argmax(&l_replay),
+                   "{} next-token argmax diverged", scheme.tag());
+        let corr = correlation(&l_batch, &l_replay);
+        assert!(corr > 0.98, "{} logits corr {corr}", scheme.tag());
+        // and decode continues seamlessly from a batched-prefill cache
+        let next = argmax(&l_batch);
+        let d_batch = im.decode_one(next, &mut c_batch);
+        let d_replay = im.decode_one(next, &mut c_replay);
+        assert_eq!(argmax(&d_batch), argmax(&d_replay),
+                   "{} post-prefill decode diverged", scheme.tag());
+    }
+}
+
+/// Chunked continuation (`Engine::prefill_chunk`) must land in the
+/// same place as a one-shot batched prefill of the full prompt.
+#[test]
+fn chunked_prefill_continuation_is_consistent() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let engine = int_engine("tinyllama_s", QuantScheme::W8A8);
+    let prompt: Vec<u16> = corpus.val[..40].to_vec();
+    let argmax = |v: &[f32]| greedy(v);
+    // one-shot
+    let (_state, logits_full) = engine.prefill(&prompt);
+    // chunked: 16 + 16 + 8
+    let (mut state, _) = engine.prefill(&prompt[..16]);
+    let _ = engine.prefill_chunk(&mut state, &prompt[16..32]);
+    let logits_chunked = engine.prefill_chunk(&mut state, &prompt[32..]);
+    match &state {
+        illm::coordinator::engine::SeqState::Int { cache } => {
+            assert_eq!(cache.pos, prompt.len());
+        }
+        _ => panic!("wrong state kind"),
+    }
+    assert_eq!(argmax(&logits_full), argmax(&logits_chunked),
+               "chunked prefill diverged from one-shot");
+}
+
+#[test]
+fn max_new_budgets_zero_and_one_are_exact() {
+    let dir = illm::artifacts_dir();
+    let _ = load_corpus(&dir).unwrap();
+    let engine = int_engine("tinyllama_s", QuantScheme::W8A8);
+    let mut b = Batcher::new(BatcherConfig {
+        stop_token: None,
+        ..Default::default()
+    });
+    let mut m = ServeMetrics::default();
+    let budgets = [0usize, 1, 0, 1, 3];
+    for (i, &max_new) in budgets.iter().enumerate() {
+        b.enqueue(Request {
+            id: i as u64,
+            prompt: "the engineer ".into(),
+            max_new,
+            submitted: Instant::now(),
+        });
+    }
+    let mut done = vec![None; budgets.len()];
+    let mut guard = 0;
+    while !b.is_idle() {
+        for r in b.step(&engine, &mut m) {
+            done[r.id as usize] = Some(r);
+        }
+        guard += 1;
+        assert!(guard < 1000, "batcher did not converge");
+    }
+    for (i, &max_new) in budgets.iter().enumerate() {
+        let r = done[i].as_ref().expect("request completed");
+        assert_eq!(r.n_generated, max_new,
+                   "request {i}: budget {max_new}, got {}", r.n_generated);
+        assert!(r.ttft <= r.latency + 1e-9);
+    }
 }
 
 #[test]
