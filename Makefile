@@ -5,7 +5,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-full test
+.PHONY: artifacts artifacts-full test smoke
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../artifacts --fast
@@ -16,3 +16,7 @@ artifacts-full:
 
 test:
 	cd rust && cargo build --release && cargo test -q
+
+# fast asserting serving bench: paging + admission regressions (CI)
+smoke:
+	cd rust && cargo bench --bench perf_serving -- --smoke

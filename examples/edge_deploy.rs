@@ -11,6 +11,7 @@
 
 use illm::coordinator::engine::{greedy, Engine, IntEngine};
 use illm::data::load_corpus;
+use illm::int_model::kv_cache::PAGE_TOKENS;
 use illm::int_model::quantize::quantize_model;
 use illm::int_model::IntMlp;
 use illm::nn::load_model;
@@ -24,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     let corpus = load_corpus(&dir)?;
     let mut table = Table::new(&[
         "model", "fp32 KiB", "w8 KiB", "w4 KiB", "ratio", "decode tok/s",
-        "kv KiB/seq",
+        "kv pages/seq", "kv KiB/seq",
     ]);
     for name in ["tinyllama_s", "tinyllama_m", "tinyopt_s"] {
         let fp = load_model(&dir, name)?;
@@ -35,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         let w4_bytes = model_int_bytes(&w4, 4);
 
         // decode throughput through the integer KV path
-        let engine = IntEngine { model: Arc::new(w8) };
+        let engine = IntEngine::new(Arc::new(w8));
         let prompt = illm::data::encode("the engineer builds ");
         let (mut st, mut logits) = engine.prefill(&prompt);
         let n = 64usize;
@@ -45,7 +46,10 @@ fn main() -> anyhow::Result<()> {
             logits = engine.decode(&mut st, next);
         }
         let tok_s = n as f64 / t0.elapsed().as_secs_f64();
-        let kv_bytes = engine.kv_bytes(&st);
+        // page-denominated KV footprint: pages * PAGE_TOKENS * head_dim
+        // bytes at i8 lane storage
+        let kv_pages = engine.kv_pages(&st);
+        let page_bytes = PAGE_TOKENS * engine.model.cfg.head_dim();
         table.row(vec![
             name.to_string(),
             format!("{}", fp_bytes / 1024),
@@ -53,14 +57,16 @@ fn main() -> anyhow::Result<()> {
             format!("{}", w4_bytes / 1024),
             format!("{:.1}x", fp_bytes as f64 / w4_bytes as f64),
             format!("{tok_s:.0}"),
-            format!("{:.1}", kv_bytes as f64 / 1024.0),
+            format!("{kv_pages}"),
+            format!("{:.1}", (kv_pages * page_bytes) as f64 / 1024.0),
         ]);
     }
     table.print();
     let _ = corpus;
     println!("\nnote: integer engine stores weights as packed n-bit + \
-              per-channel i16 mantissas;\nKV lanes are 8-bit integer with \
-              per-head dyadic scales (grow-only rescale).");
+              per-channel i16 mantissas;\nKV lanes are 8-bit integer, \
+              paged ({PAGE_TOKENS} tokens/page) with per-head dyadic \
+              scales (grow-only rescale).");
     Ok(())
 }
 

@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // generation through the integer KV-cache decode path
-    let engine = IntEngine { model: Arc::new(illm) };
+    let engine = IntEngine::new(Arc::new(illm));
     let prompt = "the engineer ";
     let toks = illm::data::encode(prompt);
     let (mut state, mut logits) = engine.prefill(&toks);

@@ -7,7 +7,11 @@
 //!                                cross-checked against the native engine
 //!   rust L3 coordinator        — FSBR-quantized W4A4 integer engine
 //!                                serving a Poisson workload with
-//!                                continuous batching + integer KV cache
+//!                                continuous batching + PAGED integer
+//!                                KV cache (page-budget admission,
+//!                                free-list reuse, prefix sharing —
+//!                                the metrics summary prints the pool
+//!                                stats line)
 //!
 //! Run: `cargo run --release --example serve_trace [n_requests] [rate]`
 
@@ -100,7 +104,7 @@ fn main() -> anyhow::Result<()> {
     // ---- phase 3: serve a batched workload (the request path) ----
     println!("== phase 3: serving {n_requests} requests \
               (Poisson rate {rate}/s, continuous batching) ==");
-    let engine = IntEngine { model: Arc::new(im) };
+    let engine = IntEngine::new(Arc::new(im));
     let spec = workload::WorkloadSpec {
         n_requests,
         prompt_len: (12, 48),

@@ -1,14 +1,21 @@
 //! §Perf end-to-end serving benchmark: throughput/latency of the
-//! coordinator + integer engine, vs the FP engine, across batch sizes.
+//! coordinator + integer engine, vs the FP engine, across batch sizes,
+//! plus the paged-KV admission study.
 //!
 //! The paper's deployment claim: the integer-only pipeline serves LLMs
 //! on integer hardware; here we verify the coordinator adds negligible
-//! overhead (<10% of step time) and show continuous-batching scaling.
+//! overhead (<10% of step time), show continuous-batching scaling, and
+//! measure what paging buys under a prompt-heavy workload: pool
+//! high-water vs the sum of per-request peaks (what per-sequence
+//! contiguous allocation would have pinned), prefix sharing, CoW.
+//!
+//! `cargo bench --bench perf_serving -- --smoke` runs a fast, asserting
+//! subset (CI uses it to catch admission/paging regressions).
 
 use illm::coordinator::batcher::BatcherConfig;
-use illm::coordinator::engine::{FpEngine, IntEngine};
+use illm::coordinator::engine::{Engine, FpEngine, IntEngine};
 use illm::coordinator::{run_workload, workload};
-use illm::data::load_corpus;
+use illm::data::{load_corpus, Corpus};
 use illm::eval::methods;
 use illm::int_model::kv_cache::IntKvCache;
 use illm::int_model::IntModel;
@@ -42,64 +49,155 @@ fn bench_prefill(im: &IntModel, prompt: &[u16], reps: usize) {
              n / t_batch, t_replay / t_batch);
 }
 
+/// Admission behaviour under a prompt-heavy workload with duplicate
+/// prompts: compares the paged pool's allocation high-water mark
+/// against the sum of per-request peak pages — what the pre-paging
+/// per-sequence contiguous layout would have pinned until drop — and
+/// reports prefix sharing + CoW activity. In smoke mode the
+/// comparisons are ASSERTED so paging regressions fail CI.
+fn bench_paging(im: &Arc<IntModel>, corpus: &Corpus, smoke: bool) {
+    let n_requests = if smoke { 8 } else { 24 };
+    // ~2 requests' worth of pages: admission must block while slots
+    // remain. Prompts fit one prefill chunk (so the whole prefix is
+    // shared) and are mostly page-UNALIGNED, so the first divergent
+    // decode append lands in a shared tail page and CoWs.
+    let budget = 200usize;
+    let spec = workload::WorkloadSpec {
+        n_requests,
+        prompt_len: (40, 60),
+        max_new: (2, 6),
+        ..Default::default()
+    };
+    let mut reqs = workload::generate(&spec, corpus);
+    // duplicate every second prompt so prefix sharing engages
+    for i in (1..reqs.len()).step_by(2) {
+        reqs[i].0 = reqs[i - 1].0.clone();
+    }
+    let engine = IntEngine::new(im.clone());
+    let cfg = BatcherConfig {
+        max_batch: 2,
+        kv_page_budget: budget,
+        stop_token: None,
+        ..Default::default()
+    };
+    let (responses, m) = run_workload(engine, cfg, reqs, 0.0);
+    // per-request peak = pages for prompt + generated tokens; the sum
+    // is the "no reuse, no sharing" footprint of this workload
+    let sum_peaks: usize = responses
+        .iter()
+        .map(|r| im.pages_for_tokens(r.n_prompt + r.n_generated))
+        .sum();
+    let pool = m.pool_last.expect("integer engine reports pool stats");
+    println!("\n== perf: paged-KV admission (prompt-heavy, \
+              {n_requests} reqs, budget {budget} pages) ==");
+    println!("  sum of per-request peaks (contiguous equiv): {:>6} pages",
+             sum_peaks);
+    println!("  pool allocation high-water (paged):          {:>6} pages \
+              ({:.2}x less)",
+             pool.high_water, sum_peaks as f64 / pool.high_water as f64);
+    println!("  admission blocks {} | shared pages peak {} | \
+              CoW copies {}",
+             m.admission_blocks, m.pool_shared_peak, pool.cow_copies);
+    if smoke {
+        assert_eq!(responses.len(), n_requests,
+                   "requests lost under page-budget admission");
+        assert!(pool.high_water < sum_peaks,
+                "paging shows no reuse: high-water {} vs sum {}",
+                pool.high_water, sum_peaks);
+        assert!(m.pool_shared_peak > 0,
+                "no page sharing observed during the workload");
+        assert!(pool.cow_copies > 0,
+                "shared pages never diverged via CoW");
+        assert!(m.admission_blocks > 0,
+                "page budget never engaged admission control");
+        // direct cross-request sharing probe (the workload-level
+        // counters above are also satisfied by the per-prefill
+        // snapshot fork alone): an identical prompt admitted twice
+        // must allocate NOTHING and return identical logits
+        let probe = IntEngine::new(im.clone());
+        let toks: Vec<u16> = corpus.val[..40].to_vec();
+        let (_s1, l1) = probe.prefill(&toks);
+        let used_one = probe.pool_stats().unwrap().used;
+        let (_s2, l2) = probe.prefill(&toks);
+        let after = probe.pool_stats().unwrap();
+        assert_eq!(after.used, used_one,
+                   "duplicate prompt allocated pages — cross-request \
+                    prefix sharing regressed");
+        assert!(after.shared > 0, "duplicate prompt shares no pages");
+        assert_eq!(l1, l2, "shared prefill changed the logits");
+        println!("  smoke assertions passed");
+    }
+}
+
 fn main() {
     let dir = illm::artifacts_dir();
     let corpus = load_corpus(&dir).expect("run `make artifacts`");
-    let fast = std::env::var_os("ILLM_BENCH_FAST").is_some();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let fast = smoke || std::env::var_os("ILLM_BENCH_FAST").is_some();
     let model = "tinyllama_s";
     let fp = load_model(&dir, model).expect("model");
     let (im, _) = methods::build_illm(&fp, &corpus, QuantScheme::W8A8);
     let im = Arc::new(im);
     let fpa = Arc::new(fp);
-    let n_requests = if fast { 12 } else { 32 };
-    println!("== perf: serving throughput ({model}, {n_requests} \
-              requests, closed loop) ==\n");
-    let mut t = Table::new(&["engine", "batch", "decode tok/s",
-                             "prefill tok/s", "p50 lat (s)",
-                             "p99 lat (s)", "occupancy", "coord ovh %"]);
-    for batch in [1usize, 2, 4, 8] {
-        for engine_name in ["int-w8a8", "fp32"] {
-            let spec = workload::WorkloadSpec {
-                n_requests,
-                prompt_len: (12, 40),
-                max_new: (8, 24),
-                ..Default::default()
-            };
-            let reqs = workload::generate(&spec, &corpus);
-            let cfg = BatcherConfig { max_batch: batch,
-                                      ..Default::default() };
-            let (_resp, m) = match engine_name {
-                "int-w8a8" => run_workload(
-                    IntEngine { model: im.clone() }, cfg, reqs, 0.0),
-                _ => run_workload(
-                    FpEngine { model: fpa.clone() }, cfg, reqs, 0.0),
-            };
-            let engine_time = m.decode_time_s + m.prefill_time_s;
-            let ovh = 100.0 * (m.step_time_s - engine_time)
-                / m.step_time_s.max(1e-9);
-            t.row(vec![
-                engine_name.into(),
-                batch.to_string(),
-                format!("{:.0}", m.decode_tok_per_s()),
-                format!("{:.0}", m.prefill_tok_per_s()),
-                format!("{:.3}", m.latency_p50()),
-                format!("{:.3}", m.latency_p99()),
-                format!("{:.2}", m.mean_occupancy()),
-                format!("{ovh:.1}"),
-            ]);
-            eprintln!("  {engine_name} batch {batch}: {:.0} decode tok/s",
-                      m.decode_tok_per_s());
+
+    if !smoke {
+        let n_requests = if fast { 12 } else { 32 };
+        println!("== perf: serving throughput ({model}, {n_requests} \
+                  requests, closed loop) ==\n");
+        let mut t = Table::new(&["engine", "batch", "decode tok/s",
+                                 "prefill tok/s", "p50 lat (s)",
+                                 "p99 lat (s)", "occupancy",
+                                 "coord ovh %"]);
+        for batch in [1usize, 2, 4, 8] {
+            for engine_name in ["int-w8a8", "fp32"] {
+                let spec = workload::WorkloadSpec {
+                    n_requests,
+                    prompt_len: (12, 40),
+                    max_new: (8, 24),
+                    ..Default::default()
+                };
+                let reqs = workload::generate(&spec, &corpus);
+                let cfg = BatcherConfig { max_batch: batch,
+                                          ..Default::default() };
+                let (_resp, m) = match engine_name {
+                    "int-w8a8" => run_workload(
+                        IntEngine::new(im.clone()), cfg, reqs, 0.0),
+                    _ => run_workload(
+                        FpEngine { model: fpa.clone() }, cfg, reqs, 0.0),
+                };
+                let engine_time = m.decode_time_s + m.prefill_time_s;
+                let ovh = 100.0 * (m.step_time_s - engine_time)
+                    / m.step_time_s.max(1e-9);
+                t.row(vec![
+                    engine_name.into(),
+                    batch.to_string(),
+                    format!("{:.0}", m.decode_tok_per_s()),
+                    format!("{:.0}", m.prefill_tok_per_s()),
+                    format!("{:.3}", m.latency_p50()),
+                    format!("{:.3}", m.latency_p99()),
+                    format!("{:.2}", m.mean_occupancy()),
+                    format!("{ovh:.1}"),
+                ]);
+                eprintln!("  {engine_name} batch {batch}: {:.0} decode \
+                           tok/s", m.decode_tok_per_s());
+            }
         }
+        t.print();
     }
-    t.print();
 
     // ---- prefill: batched vs replay (the PR-2 tentpole) ----
-    let prompt_len = im.cfg.max_seq.min(256).min(corpus.val.len());
+    let prompt_len = im.cfg.max_seq.min(if fast { 96 } else { 256 })
+        .min(corpus.val.len());
     let prompt: Vec<u16> = corpus.val[..prompt_len].to_vec();
     bench_prefill(&im, &prompt, if fast { 1 } else { 3 });
 
-    println!("\ntargets (DESIGN.md §8): coordinator overhead < 10%; \
-              note the FP engine recomputes the prefix each step (no \
-              FP KV cache) — the integer engine's KV path is the \
-              deployment design.");
+    // ---- paged KV: admission behaviour before/after paging ----
+    bench_paging(&im, &corpus, smoke);
+
+    if !smoke {
+        println!("\ntargets (DESIGN.md §8): coordinator overhead < 10%; \
+                  note the FP engine recomputes the prefix each step (no \
+                  FP KV cache) — the integer engine's KV path is the \
+                  deployment design.");
+    }
 }

@@ -2,21 +2,26 @@
 //!
 //! Policy (vLLM-style continuous batching scaled to this testbed):
 //!  * a bounded number of ACTIVE sequences decode together, one token
-//!    per wave, with immediate eviction on completion;
+//!    per wave, with immediate eviction on completion — dropping a
+//!    finished sequence returns its KV pages straight to the engine's
+//!    page-pool free list;
 //!  * admissions happen between waves: a waiting request is admitted
-//!    when (a) there is an active slot and (b) the KV budget admits its
-//!    prompt + generation headroom, estimated with the engine's real
-//!    per-token KV footprint (`Engine::kv_bytes_per_token`) so
-//!    admission control tracks actual model dimensions;
+//!    when (a) there is an active slot and (b) the KV PAGE budget
+//!    admits its prompt + generation headroom, estimated with the
+//!    engine's real per-request page footprint
+//!    (`Engine::pages_for_tokens`) so admission control reasons in the
+//!    same unit the pool allocates;
 //!  * prefill is chunked so a long prompt cannot stall decode waves
 //!    beyond `prefill_chunk` tokens. Both the first chunk
 //!    (`Engine::prefill`) and every continuation chunk
 //!    (`Engine::prefill_chunk`) go through the engine's BATCHED prefill
 //!    — one forward over the whole chunk, not a decode per token (see
-//!    int_model::kv_cache for the batched-prefill design);
+//!    int_model::kv_cache for the batched-prefill and paging design);
 //!  * a request admitted with `max_new == 0` completes with zero
 //!    generated tokens — the generation budget is checked before
-//!    sampling, never after.
+//!    sampling, never after;
+//!  * the stop token TERMINATES a response, it is never part of it:
+//!    sampling the stop byte finishes the request without emitting it.
 
 use super::engine::{greedy, Engine, SeqState};
 use super::metrics::ServeMetrics;
@@ -29,8 +34,9 @@ use std::time::Instant;
 pub struct BatcherConfig {
     /// max concurrently-decoding sequences
     pub max_batch: usize,
-    /// max total logical KV bytes across active sequences
-    pub kv_budget: usize,
+    /// max total KV pool pages across active sequences (the admission
+    /// budget, in the same unit `Engine::pages_for_tokens` estimates)
+    pub kv_page_budget: usize,
     /// max prompt tokens prefetched per scheduling step
     pub prefill_chunk: usize,
     /// stop token (byte); generation also stops at max_new
@@ -41,7 +47,7 @@ impl Default for BatcherConfig {
     fn default() -> Self {
         Self {
             max_batch: 8,
-            kv_budget: 64 << 20,
+            kv_page_budget: 1 << 16,
             prefill_chunk: 64,
             stop_token: Some(b'\n' as u16),
         }
@@ -140,20 +146,26 @@ impl Batcher {
             if self.active.len() >= self.cfg.max_batch {
                 break;
             }
-            // admission estimate from the engine's real per-token KV
-            // footprint, over the prompt AS ADMITTED (allocation-free:
-            // a blocked front is re-estimated every step)
-            let kv_used: usize = self
-                .active
-                .iter()
-                .map(|a| engine.kv_bytes(&a.state))
-                .sum();
+            // admission estimate in POOL PAGES, over the prompt AS
+            // ADMITTED (allocation-free: a blocked front is
+            // re-estimated every step). Engines with a pool report
+            // REAL occupancy in O(1) — that counts the prefix
+            // snapshot and CoW copies, and de-dupes pages shared
+            // between forks — others fall back to summing per-state
+            // page tables.
+            let kv_used: usize = match engine.kv_pages_used() {
+                Some(used) => used,
+                None => self
+                    .active
+                    .iter()
+                    .map(|a| engine.kv_pages(&a.state))
+                    .sum(),
+            };
             let adm_len =
                 admitted_len(&front.prompt, engine.max_seq(),
                              front.max_new);
-            let est = (adm_len + front.max_new)
-                * engine.kv_bytes_per_token();
-            if kv_used + est > self.cfg.kv_budget
+            let est = engine.pages_for_tokens(adm_len + front.max_new);
+            if kv_used + est > self.cfg.kv_page_budget
                 && !self.active.is_empty()
             {
                 metrics.admission_blocks += 1;
@@ -209,16 +221,21 @@ impl Batcher {
             // decode one token
             let logits = a.last_logits.as_ref().expect("logits");
             let next = greedy(logits);
-            let stop = Some(next) == self.cfg.stop_token
-                || a.generated.len() + 1 >= a.req.max_new
-                || a.prompt_len + a.generated.len() + 1
-                    >= engine.max_seq();
-            a.generated.push(next);
             if a.ttft.is_none() {
                 a.ttft =
                     Some(a.req.submitted.elapsed().as_secs_f64());
             }
+            if Some(next) == self.cfg.stop_token {
+                // the stop byte terminates the response WITHOUT being
+                // emitted: it appears in neither `text` nor
+                // `n_generated`
+                finished_idx.push(i);
+                continue;
+            }
+            a.generated.push(next);
             metrics.decode_tokens += 1;
+            let stop = a.generated.len() >= a.req.max_new
+                || a.prompt_len + a.generated.len() >= engine.max_seq();
             if stop {
                 finished_idx.push(i);
             } else {
@@ -244,6 +261,12 @@ impl Batcher {
                 ttft: a.ttft.unwrap_or(latency),
                 latency,
             });
+            // dropping the state here releases the sequence's pages to
+            // the pool free list — the next admission reuses them
+            drop(a.state);
+        }
+        if let Some(ps) = engine.pool_stats() {
+            metrics.observe_pool(&ps);
         }
         out
     }
@@ -275,12 +298,12 @@ mod tests {
             one_hot(((token as usize) + 1) % 256)
         }
 
-        fn kv_bytes(&self, _state: &SeqState) -> usize {
-            64
+        fn kv_pages(&self, _state: &SeqState) -> usize {
+            1
         }
 
-        fn kv_bytes_per_token(&self) -> usize {
-            64
+        fn pages_for_tokens(&self, _n_tokens: usize) -> usize {
+            1
         }
     }
 
@@ -311,6 +334,57 @@ mod tests {
         assert_eq!(done[0].text, "bcde");
         assert_eq!(done[0].n_generated, 4);
         assert!(m.decode_tokens >= 4);
+    }
+
+    #[test]
+    fn stop_token_is_not_emitted() {
+        // prompt "a" generates b, c, ...; with stop byte 'd' the
+        // response must end at "bc" — the stop token itself appears in
+        // neither text nor n_generated
+        let mut b = Batcher::new(BatcherConfig {
+            stop_token: Some(b'd' as u16),
+            ..Default::default()
+        });
+        let mut m = ServeMetrics::default();
+        b.enqueue(Request {
+            id: 1,
+            prompt: "a".into(),
+            max_new: 10,
+            submitted: Instant::now(),
+        });
+        let mut done = Vec::new();
+        while !b.is_idle() {
+            done.extend(b.step(&Echo, &mut m));
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].text, "bc");
+        assert_eq!(done[0].n_generated, 2);
+        assert_eq!(m.decode_tokens, 2, "stop token must not be counted");
+    }
+
+    #[test]
+    fn immediate_stop_token_yields_empty_response() {
+        // first sampled token IS the stop byte: the response is empty
+        // but still completes (ttft falls back to completion time)
+        let mut b = Batcher::new(BatcherConfig {
+            stop_token: Some(b'b' as u16),
+            ..Default::default()
+        });
+        let mut m = ServeMetrics::default();
+        b.enqueue(Request {
+            id: 1,
+            prompt: "a".into(),
+            max_new: 5,
+            submitted: Instant::now(),
+        });
+        let mut done = Vec::new();
+        while !b.is_idle() {
+            done.extend(b.step(&Echo, &mut m));
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].text, "");
+        assert_eq!(done[0].n_generated, 0);
+        assert!(done[0].ttft <= done[0].latency + 1e-9);
     }
 
     #[test]

@@ -1,12 +1,21 @@
 //! Inference engine abstraction + implementations. The coordinator only
-//! sees `Engine`; the integer engine (IntModel + IntKvCache) is the
-//! deployment path, the FP engine exists for baseline comparisons in
-//! the serving benches.
+//! sees `Engine`; the integer engine (IntModel + paged IntKvCache) is
+//! the deployment path, the FP engine exists for baseline comparisons
+//! in the serving benches.
+//!
+//! The integer engine owns ONE [`PagePool`] shared by every sequence
+//! it serves: admission control reasons in pages, eviction returns a
+//! sequence's pages to the pool free list the moment its state drops,
+//! and a prompt identical to the last admitted one forks the snapshot
+//! cache instead of recomputing — refcounted page sharing with
+//! copy-on-write at the first divergent append.
 
-use crate::int_model::kv_cache::IntKvCache;
+use crate::int_model::kv_cache::{
+    IntKvCache, PagePool, PoolStats, SharedPagePool,
+};
 use crate::int_model::IntModel;
 use crate::nn::FpModel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Per-sequence decoding state owned by the coordinator.
 pub enum SeqState {
@@ -38,29 +47,70 @@ pub trait Engine: Send {
     /// One decode step: feed `token`, return next-token logits.
     fn decode(&self, state: &mut SeqState, token: u16) -> Vec<f32>;
 
-    /// Logical KV bytes held by a state (admission control input).
-    fn kv_bytes(&self, state: &SeqState) -> usize;
+    /// KV pages a state currently holds (page-denominated admission
+    /// accounting; pages shared between forked states are counted by
+    /// every holder, so summing over states is conservative).
+    fn kv_pages(&self, state: &SeqState) -> usize;
 
-    /// Logical KV bytes ONE token adds to a state — the admission
-    /// controller's estimate of a request's footprint is
-    /// `(prompt + max_new) * kv_bytes_per_token()`.
-    fn kv_bytes_per_token(&self) -> usize;
+    /// Pages a request totalling `n_tokens` (prompt + generation
+    /// budget) occupies at its peak — the admission controller's
+    /// estimate of a request's footprint.
+    fn pages_for_tokens(&self, n_tokens: usize) -> usize;
+
+    /// Pages currently allocated from the engine's pool — the O(1)
+    /// occupancy admission control compares against the page budget.
+    /// Counts the prefix snapshot and CoW copies, de-dupes pages
+    /// shared between forks. None for engines without a pool.
+    fn kv_pages_used(&self) -> Option<usize> {
+        None
+    }
+
+    /// Live page-pool counters, for engines that serve from a paged KV
+    /// pool (None for the stateless FP baseline). O(pages) — sampled
+    /// once per scheduling step for metrics, not on the admission path.
+    fn pool_stats(&self) -> Option<PoolStats> {
+        None
+    }
 }
 
-/// Greedy sampling at the model boundary (argmax over f32 logits).
+/// Greedy sampling at the model boundary: NaN-safe argmax over f32
+/// logits. NaN entries never win (a NaN logit is a poisoned lane, not
+/// a candidate); all-NaN or empty logits fall back to token 0.
 pub fn greedy(logits: &[f32]) -> u16 {
-    let mut best = (f32::NEG_INFINITY, 0usize);
+    let mut best: Option<(f32, usize)> = None;
     for (i, &v) in logits.iter().enumerate() {
-        if v > best.0 {
-            best = (v, i);
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((b, _)) if v <= b => {}
+            _ => best = Some((v, i)),
         }
     }
-    best.1 as u16
+    best.map_or(0, |(_, i)| i as u16)
 }
 
-/// The integer-only serving engine.
+/// Snapshot of the last prefilled prompt: an identical prompt admitted
+/// next forks `cache` (sharing every page) instead of recomputing.
+struct PrefixEntry {
+    tokens: Vec<u16>,
+    cache: IntKvCache,
+    logits: Vec<f32>,
+}
+
+/// The integer-only serving engine: model + shared page pool + the
+/// prefix-sharing snapshot.
 pub struct IntEngine {
     pub model: Arc<IntModel>,
+    pool: SharedPagePool,
+    prefix: Mutex<Option<PrefixEntry>>,
+}
+
+impl IntEngine {
+    pub fn new(model: Arc<IntModel>) -> IntEngine {
+        let pool = PagePool::shared(model.cfg.head_dim());
+        IntEngine { model, pool, prefix: Mutex::new(None) }
+    }
 }
 
 impl Engine for IntEngine {
@@ -69,8 +119,32 @@ impl Engine for IntEngine {
     }
 
     fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>) {
-        let mut cache = IntKvCache::new(&self.model);
+        let mut reg = self.prefix.lock().expect("prefix registry");
+        if let Some(entry) = reg.as_ref() {
+            if !prompt.is_empty() && entry.tokens == prompt {
+                // identical prompt admitted back-to-back: fork the
+                // snapshot (refcounted page sharing, CoW on the first
+                // divergent append) — zero prefill compute, and the
+                // fork is bit-identical to a recomputation because the
+                // integer prefill is deterministic
+                let cache = entry.cache.fork();
+                let logits = entry.logits.clone();
+                return (SeqState::Int { cache }, logits);
+            }
+        }
+        let mut cache =
+            IntKvCache::with_pool(&self.model, self.pool.clone());
         let logits = self.model.prefill_batch(prompt, &mut cache);
+        if !prompt.is_empty() {
+            // keep a forked snapshot (shares pages with the state we
+            // hand out; the snapshot replaces — and thereby frees —
+            // the previous prompt's snapshot)
+            *reg = Some(PrefixEntry {
+                tokens: prompt.to_vec(),
+                cache: cache.fork(),
+                logits: logits.clone(),
+            });
+        }
         (SeqState::Int { cache }, logits)
     }
 
@@ -91,21 +165,30 @@ impl Engine for IntEngine {
         }
     }
 
-    fn kv_bytes(&self, state: &SeqState) -> usize {
+    fn kv_pages(&self, state: &SeqState) -> usize {
         match state {
-            SeqState::Int { cache } => cache.logical_bytes(),
+            SeqState::Int { cache } => cache.pages(),
             _ => 0,
         }
     }
 
-    fn kv_bytes_per_token(&self) -> usize {
-        self.model.kv_bytes_per_token()
+    fn pages_for_tokens(&self, n_tokens: usize) -> usize {
+        self.model.pages_for_tokens(n_tokens)
+    }
+
+    fn kv_pages_used(&self) -> Option<usize> {
+        Some(self.pool.lock().expect("kv page pool").used())
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.pool.lock().expect("kv page pool").stats())
     }
 }
 
 /// FP baseline engine (recomputes the full prefix each step — the
 /// "no KV cache, float" strawman used in perf comparisons, and also a
-/// correctness oracle for the integer decode path).
+/// correctness oracle for the integer decode path). Page accounting is
+/// nominal: one "page" per token keeps the admission math defined.
 pub struct FpEngine {
     pub model: Arc<FpModel>,
 }
@@ -143,14 +226,38 @@ impl Engine for FpEngine {
         }
     }
 
-    fn kv_bytes(&self, state: &SeqState) -> usize {
+    fn kv_pages(&self, state: &SeqState) -> usize {
         match state {
-            SeqState::Fp { tokens } => tokens.len() * 4,
+            SeqState::Fp { tokens } => tokens.len(),
             _ => 0,
         }
     }
 
-    fn kv_bytes_per_token(&self) -> usize {
-        4
+    fn pages_for_tokens(&self, n_tokens: usize) -> usize {
+        n_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::greedy;
+
+    #[test]
+    fn greedy_picks_argmax_and_first_on_ties() {
+        assert_eq!(greedy(&[0.0, 2.0, 1.0]), 1);
+        assert_eq!(greedy(&[1.0, 1.0, 1.0]), 0);
+        assert_eq!(greedy(&[-3.0, -1.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn greedy_is_nan_safe() {
+        // NaN never compares greater — the old fold returned token 0
+        // whenever logits held only NaN/-inf, even if a real candidate
+        // sat elsewhere
+        assert_eq!(greedy(&[f32::NAN, 3.0, f32::NAN, 5.0]), 3);
+        assert_eq!(greedy(&[f32::NAN, f32::NEG_INFINITY]), 1);
+        assert_eq!(greedy(&[f32::NEG_INFINITY; 4]), 0);
+        assert_eq!(greedy(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(greedy(&[]), 0);
     }
 }

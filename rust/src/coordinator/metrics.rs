@@ -1,4 +1,7 @@
-//! Serving metrics: throughput, latency percentiles, batching behaviour.
+//! Serving metrics: throughput, latency percentiles, batching and
+//! page-pool behaviour.
+
+use crate::int_model::kv_cache::PoolStats;
 
 #[derive(Debug, Default, Clone)]
 pub struct ServeMetrics {
@@ -12,12 +15,26 @@ pub struct ServeMetrics {
     pub admission_blocks: u64,
     pub latencies: Vec<f64>,
     pub ttfts: Vec<f64>,
+    /// latest page-pool sample (None until an engine reports one)
+    pub pool_last: Option<PoolStats>,
+    /// peak pages in use across samples
+    pub pool_used_peak: usize,
+    /// peak shared (refcount > 1) pages across samples
+    pub pool_shared_peak: usize,
 }
 
 impl ServeMetrics {
     pub fn record_request(&mut self, latency: f64, ttft: f64) {
         self.latencies.push(latency);
         self.ttfts.push(ttft);
+    }
+
+    /// Fold a page-pool sample into the running peaks (called by the
+    /// batcher once per scheduling step).
+    pub fn observe_pool(&mut self, s: &PoolStats) {
+        self.pool_used_peak = self.pool_used_peak.max(s.used);
+        self.pool_shared_peak = self.pool_shared_peak.max(s.shared);
+        self.pool_last = Some(*s);
     }
 
     pub fn requests(&self) -> usize {
@@ -57,13 +74,18 @@ impl ServeMetrics {
         }
     }
 
+    /// Nearest-rank percentile: the smallest sample such that at least
+    /// `p * n` samples are <= it (rank `ceil(p * n)`, 1-based). The
+    /// former `round()` on an interpolated rank was off by one — the
+    /// p50 of 1..=100 came out 51.
     pub fn pct(xs: &[f64], p: f64) -> f64 {
         if xs.is_empty() {
             return 0.0;
         }
         let mut s = xs.to_vec();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        s[((p * (s.len() - 1) as f64).round() as usize).min(s.len() - 1)]
+        let rank = (p * s.len() as f64).ceil() as usize;
+        s[rank.saturating_sub(1).min(s.len() - 1)]
     }
 
     pub fn latency_p50(&self) -> f64 {
@@ -98,6 +120,18 @@ impl ServeMetrics {
             self.mean_occupancy(),
             self.admission_blocks,
         );
+        if let Some(p) = &self.pool_last {
+            println!(
+                "pool stats  pages used {} (peak {}) / free {} / \
+                 shared peak {} / CoW copies {} / high-water {}",
+                p.used,
+                self.pool_used_peak,
+                p.free,
+                self.pool_shared_peak,
+                p.cow_copies,
+                p.high_water,
+            );
+        }
     }
 }
 
@@ -106,11 +140,19 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentiles() {
+    fn percentiles_nearest_rank() {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(ServeMetrics::pct(&xs, 0.5), 51.0); // round(49.5)=50 -> xs[50]
+        // nearest rank: ceil(0.5 * 100) = 50 -> the 50th sample
+        assert_eq!(ServeMetrics::pct(&xs, 0.5), 50.0);
         assert_eq!(ServeMetrics::pct(&xs, 0.99), 99.0);
+        assert_eq!(ServeMetrics::pct(&xs, 1.0), 100.0);
+        assert_eq!(ServeMetrics::pct(&xs, 0.0), 1.0);
         assert_eq!(ServeMetrics::pct(&[], 0.5), 0.0);
+        // odd n: p50 of {1,2,3} is the 2nd sample
+        assert_eq!(ServeMetrics::pct(&[3.0, 1.0, 2.0], 0.5), 2.0);
+        // single sample is every percentile
+        assert_eq!(ServeMetrics::pct(&[7.0], 0.5), 7.0);
+        assert_eq!(ServeMetrics::pct(&[7.0], 0.99), 7.0);
     }
 
     #[test]
@@ -119,5 +161,22 @@ mod tests {
         m.decode_tokens = 100;
         m.decode_time_s = 2.0;
         assert!((m.decode_tok_per_s() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_observation_tracks_peaks() {
+        let mut m = ServeMetrics::default();
+        assert!(m.pool_last.is_none());
+        m.observe_pool(&PoolStats {
+            used: 10, free: 0, shared: 4, cow_copies: 1, high_water: 10,
+        });
+        m.observe_pool(&PoolStats {
+            used: 6, free: 4, shared: 0, cow_copies: 3, high_water: 10,
+        });
+        assert_eq!(m.pool_used_peak, 10);
+        assert_eq!(m.pool_shared_peak, 4);
+        let last = m.pool_last.unwrap();
+        assert_eq!(last.used, 6);
+        assert_eq!(last.cow_copies, 3);
     }
 }

@@ -1,8 +1,13 @@
-//! Serving coordinator: request router, continuous batcher, integer
-//! KV-cache manager and prefill/decode scheduler over the integer-only
-//! engine. Python never appears on this path — the engine is the rust
-//! `IntModel` (quantized offline) and, for the compose-proof, AOT PJRT
-//! executables loaded by `runtime`.
+//! Serving coordinator: request router, continuous batcher, paged
+//! integer KV-cache manager and prefill/decode scheduler over the
+//! integer-only engine. Admission control, eviction and prefix sharing
+//! all reason in POOL PAGES (see int_model::kv_cache): a request is
+//! admitted when the page budget covers its prompt + generation
+//! headroom, finished sequences return pages to the free list at
+//! eviction, and identical prompts fork the last prefill's pages
+//! copy-on-write. Python never appears on this path — the engine is
+//! the rust `IntModel` (quantized offline) and, for the compose-proof,
+//! AOT PJRT executables loaded by `runtime`.
 //!
 //! Concurrency is std::thread + mpsc (the offline vendor set has no
 //! tokio); the coordinator loop owns the engine and serializes model

@@ -1,15 +1,31 @@
-//! Integer KV cache + the serving forward paths: single-token decode
-//! (the hot loop) and multi-token batched prefill.
+//! Paged integer KV cache + the serving forward paths: single-token
+//! decode (the hot loop) and multi-token batched prefill.
+//!
+//! # Storage layout (vLLM-style paging over integer lanes)
 //!
 //! The cache stores CENTERED key/value vectors per (layer, head) at one
-//! shared dyadic scale per head — the decode-time analogue of the
-//! full-sequence path's per-head `requant_common`. Because decode
-//! streams tokens, the shared scale must adapt: the cache uses a
-//! GROW-ONLY policy — when an incoming vector overflows the current
-//! 8-bit range, all cached values are right-shifted to a coarser scale
-//! (an integer rescale; never a float op). Growing never loses more
-//! than 1 bit of precision per doubling, matching dynamic-range
-//! behaviour of the paper's per-token quantization.
+//! shared dyadic scale per head. Storage is no longer a contiguous
+//! per-sequence `Vec`: a [`PagePool`] owns fixed-size pages of
+//! [`PAGE_TOKENS`] token-slots (each slot is one `head_dim` row), and a
+//! [`Lane`] is a page TABLE — a list of page ids plus a token count.
+//! Appends write into the tail page and take fresh pages from the
+//! pool's free list; dropping a cache returns its pages immediately, so
+//! an evicted sequence's memory is reusable before any allocator gets
+//! involved. Pages are REFCOUNTED: forking a cache (`IntKvCache::fork`)
+//! shares every page, which is how identical prompt prefixes admitted
+//! back-to-back share memory. A shared page is copied on the first
+//! write — either a divergent append into the tail page or a lane-scale
+//! grow that must rescale cached values in place (copy-on-write).
+//!
+//! Because the grow-only dyadic scale is per-LANE metadata (not
+//! per-value), paging does not disturb the quantization semantics: the
+//! decode-time analogue of the full-sequence path's per-head
+//! `requant_common` is unchanged. When an incoming vector overflows the
+//! current 8-bit range, all cached values are right-shifted page by
+//! page to a coarser scale (an integer rescale; never a float op).
+//! Growing never loses more than 1 bit of precision per doubling,
+//! matching the dynamic-range behaviour of the paper's per-token
+//! quantization.
 //!
 //! # Batched prefill design
 //!
@@ -28,7 +44,8 @@
 //! appends quantize at the then-current scale and re-round on each
 //! grow). The equivalence contract — same lane lengths/scales, same
 //! next-token argmax, logits within a requant step — is enforced by
-//! `tests/serving.rs::batched_prefill_matches_decode_replay`.
+//! `tests/serving.rs::batched_prefill_matches_decode_replay`, which
+//! also proves paging preserves the pre-paging lane scales.
 
 use super::{dequant_logits, IntModel, NL_BITS};
 use crate::config::Arch;
@@ -39,6 +56,11 @@ use crate::ops::di_softmax::di_softmax_row;
 use crate::ops::{rdiv, requant_row};
 use crate::quant::DynQ;
 use crate::tensor::IMat;
+use std::sync::{Arc, Mutex};
+
+/// Token-slots per page per lane. A page holds `PAGE_TOKENS * head_dim`
+/// values; sequences occupy `ceil(len / PAGE_TOKENS)` pages per lane.
+pub const PAGE_TOKENS: usize = 16;
 
 /// Largest meaningful exponent gap when rescaling into lane units;
 /// beyond it the value either saturates (finer -> coarser by > 2^40:
@@ -46,6 +68,23 @@ use crate::tensor::IMat;
 /// exactly zero (coarser -> finer: the product is < 2^17, so 2^-41
 /// of it rounds to 0).
 const LANE_SH_MAX: i32 = 40;
+
+/// Cross-head exponent gap cap in `merge_heads`'s exact fast path.
+/// Integer softmax probs can round-up to a row sum of ~2^(p-1) + n/2,
+/// so one PV element is bounded by |o_raw| <= 260 * 127 < 2^15.01
+/// (softmax_bits = 8, max_seq <= 256); with vm <= 2^8 the fast path
+/// stays under [`ALIGN_SAT`] = 2^54-ish only for sh <= 30
+/// (2^15.01 * 2^8 * 2^30 < 2^53.1). Past the cap the alignment widens
+/// to i128 and CLAMPS at [`ALIGN_SAT`] — exact wherever the product
+/// is representable, saturating (mirroring [`LANE_SH_MAX`]) where it
+/// is not — instead of the former silently truncated shift, which
+/// mis-weighted a head whenever its gap exceeded the cap.
+const MERGE_SH_MAX: i32 = 30;
+
+/// Saturation magnitude for lane/merge alignment: leaves 9 bits of
+/// headroom so `requant_row`'s `(v - pmin) * qmax` stays inside i64
+/// even when both range ends are saturated.
+const ALIGN_SAT: i64 = i64::MAX >> 9;
 
 /// Rescale the numerator of a lane conversion: v * mt * 2^sh with
 /// saturation instead of shifting past [`LANE_SH_MAX`].
@@ -55,8 +94,8 @@ fn lane_scaled(v: i64, mt: i64, sh: i32) -> i64 {
     if sh >= 0 {
         if sh > LANE_SH_MAX {
             match num.cmp(&0) {
-                std::cmp::Ordering::Greater => i64::MAX >> 9,
-                std::cmp::Ordering::Less => -(i64::MAX >> 9),
+                std::cmp::Ordering::Greater => ALIGN_SAT,
+                std::cmp::Ordering::Less => -ALIGN_SAT,
                 std::cmp::Ordering::Equal => 0,
             }
         } else {
@@ -69,22 +108,235 @@ fn lane_scaled(v: i64, mt: i64, sh: i32) -> i64 {
     }
 }
 
-/// One head's cache lane: centered values at scale m/2^k.
-#[derive(Debug, Clone)]
+/// Align one head's raw PV row to the common (max) V exponent:
+/// `dst = src * vm * 2^sh`. Below [`MERGE_SH_MAX`] this is the exact
+/// i64 shift (unchanged hot path). Past it the product may overflow
+/// i64, so it is computed in i128 and clamped to ±[`ALIGN_SAT`]:
+/// exact wherever representable, saturating where not — the pre-fix
+/// `sh.min(32)` silently truncated the shift and mis-weighted the
+/// head (an sh=45 head could land BELOW an sh=35 head purely because
+/// both clamped to 32 and only the mantissas differed).
+#[inline]
+pub(crate) fn merge_align(dst: &mut [i64], src: &[i64], vm: i32, sh: i32) {
+    debug_assert!(sh >= 0, "kcom is the max exponent, so sh >= 0");
+    if sh <= MERGE_SH_MAX {
+        let mult = (vm as i64) << sh;
+        for (d, &s) in dst.iter_mut().zip(src.iter()) {
+            *d = s * mult;
+            // fast-path products stay under the clamp by construction
+            // (see MERGE_SH_MAX): they cannot out-range a clamped far
+            // head or overflow requant_row's (v - pmin) * qmax
+            debug_assert!(d.abs() <= ALIGN_SAT,
+                          "merge fast path exceeded ALIGN_SAT");
+        }
+        return;
+    }
+    // largest |src * vm| whose shifted value still fits the clamp
+    let lim = (ALIGN_SAT as i128) >> sh.min(63);
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        let num = s as i128 * vm as i128;
+        *d = if num > lim {
+            ALIGN_SAT
+        } else if num < -lim {
+            -ALIGN_SAT
+        } else {
+            // |num| <= ALIGN_SAT >> sh, so the shift is exact (and 0
+            // stays 0 when sh was clamped above)
+            (num << sh.min(63)) as i64
+        };
+    }
+}
+
+/// Aggregate pool counters for metrics / admission diagnostics.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// pages currently allocated to some lane
+    pub used: usize,
+    /// pages sitting on the free list, reusable without allocation
+    pub free: usize,
+    /// pages referenced by more than one lane (prefix sharing)
+    pub shared: usize,
+    /// copy-on-write page copies performed since pool creation
+    pub cow_copies: u64,
+    /// max `used` ever observed (allocation high-water mark)
+    pub high_water: usize,
+}
+
+/// Fixed-size-page allocator backing every lane of every sequence on
+/// an engine. Pages are refcounted so forked caches can share a
+/// prompt prefix; a free list recycles pages the moment a sequence is
+/// dropped.
+#[derive(Debug)]
+pub struct PagePool {
+    /// values per page (= PAGE_TOKENS * head_dim)
+    page_elems: usize,
+    /// page storage, page `id` at `id * page_elems ..`
+    data: Vec<i32>,
+    /// per-page refcount; 0 = on the free list
+    refcnt: Vec<u32>,
+    free: Vec<u32>,
+    cow_copies: u64,
+    high_water: usize,
+}
+
+/// Handle shared by an engine and every cache it creates.
+pub type SharedPagePool = Arc<Mutex<PagePool>>;
+
+impl PagePool {
+    pub fn new(hd: usize) -> PagePool {
+        PagePool {
+            page_elems: PAGE_TOKENS * hd,
+            data: Vec::new(),
+            refcnt: Vec::new(),
+            free: Vec::new(),
+            cow_copies: 0,
+            high_water: 0,
+        }
+    }
+
+    pub fn shared(hd: usize) -> SharedPagePool {
+        Arc::new(Mutex::new(PagePool::new(hd)))
+    }
+
+    pub fn page_elems(&self) -> usize {
+        self.page_elems
+    }
+
+    /// Pages currently held by lanes (not on the free list).
+    pub fn used(&self) -> usize {
+        self.refcnt.len() - self.free.len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            used: self.used(),
+            free: self.free.len(),
+            shared: self.refcnt.iter().filter(|&&c| c > 1).count(),
+            cow_copies: self.cow_copies,
+            high_water: self.high_water,
+        }
+    }
+
+    /// Take a zeroed page: off the free list if possible, freshly
+    /// allocated otherwise. Refcount starts at 1.
+    fn alloc(&mut self) -> u32 {
+        self.alloc_impl(true)
+    }
+
+    fn alloc_impl(&mut self, zero: bool) -> u32 {
+        let id = match self.free.pop() {
+            Some(id) => {
+                if zero {
+                    let base = id as usize * self.page_elems;
+                    self.data[base..base + self.page_elems].fill(0);
+                }
+                self.refcnt[id as usize] = 1;
+                id
+            }
+            None => {
+                let id = self.refcnt.len() as u32;
+                self.refcnt.push(1);
+                self.data.resize(self.data.len() + self.page_elems, 0);
+                id
+            }
+        };
+        self.high_water = self.high_water.max(self.used());
+        id
+    }
+
+    fn retain(&mut self, id: u32) {
+        self.refcnt[id as usize] += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list at zero.
+    fn release(&mut self, id: u32) {
+        let rc = &mut self.refcnt[id as usize];
+        debug_assert!(*rc > 0, "release of a free page");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+        }
+    }
+
+    fn refcount(&self, id: u32) -> u32 {
+        self.refcnt[id as usize]
+    }
+
+    /// Copy-on-write: copy `id`'s contents to a fresh page, drop one
+    /// reference on `id`, return the private copy. Skips the zero
+    /// fill — `copy_page` overwrites every element.
+    fn cow(&mut self, id: u32) -> u32 {
+        debug_assert!(self.refcount(id) > 1, "cow of an unshared page");
+        let new = self.alloc_impl(false);
+        self.copy_page(id, new);
+        self.release(id);
+        self.cow_copies += 1;
+        new
+    }
+
+    fn copy_page(&mut self, src: u32, dst: u32) {
+        debug_assert!(src != dst);
+        let pe = self.page_elems;
+        let (s, d) = (src as usize * pe, dst as usize * pe);
+        if s < d {
+            let (lo, hi) = self.data.split_at_mut(d);
+            hi[..pe].copy_from_slice(&lo[s..s + pe]);
+        } else {
+            let (lo, hi) = self.data.split_at_mut(s);
+            lo[d..d + pe].copy_from_slice(&hi[..pe]);
+        }
+    }
+
+    fn page(&self, id: u32) -> &[i32] {
+        let base = id as usize * self.page_elems;
+        &self.data[base..base + self.page_elems]
+    }
+
+    fn page_mut(&mut self, id: u32) -> &mut [i32] {
+        let base = id as usize * self.page_elems;
+        &mut self.data[base..base + self.page_elems]
+    }
+}
+
+/// One head's cache lane: a page table over centered values at scale
+/// m/2^k. The scale is lane metadata, so rescales walk the pages but
+/// never move them.
+#[derive(Debug)]
 struct Lane {
-    /// (len, head_dim) row-major centered values
-    vals: Vec<i32>,
+    /// pool page ids, in token order; `ceil(len / PAGE_TOKENS)` entries
+    pages: Vec<u32>,
+    /// tokens appended so far
+    len: usize,
     m: i32,
     k: i32,
 }
 
 impl Lane {
-    fn new(cap_hint: usize, hd: usize) -> Self {
-        Self {
-            vals: Vec::with_capacity(cap_hint * hd),
+    fn new() -> Self {
+        Lane {
+            pages: Vec::new(),
+            len: 0,
             m: 128,
             k: 30, // placeholder; the first append adopts its input scale
         }
+    }
+
+    /// Share every page with a new lane (refcount++); writes on either
+    /// side copy-on-write.
+    fn fork(&self, pool: &mut PagePool) -> Lane {
+        for &id in &self.pages {
+            pool.retain(id);
+        }
+        Lane { pages: self.pages.clone(), len: self.len, m: self.m, k: self.k }
+    }
+
+    /// Return every page reference to the pool.
+    fn release(&mut self, pool: &mut PagePool) {
+        for &id in &self.pages {
+            pool.release(id);
+        }
+        self.pages.clear();
+        self.len = 0;
     }
 
     /// Value `v` (centered, mantissa `mt`, exponent gap `sh = k - kt`)
@@ -117,24 +369,61 @@ impl Lane {
     /// Coarsen the lane scale by 2^n. Cached values are halved one
     /// step at a time (one rounding per doubling) so a bulk grow is
     /// bit-identical to n incremental `grow` calls on the decode path.
-    fn grow_by(&mut self, n: i32) {
+    /// Rescaling writes in place, so a page shared with a forked lane
+    /// is copied first (the fork keeps the values at ITS scale).
+    fn grow_by(&mut self, pool: &mut PagePool, n: i32, hd: usize) {
         if n <= 0 {
             return;
         }
-        for v in self.vals.iter_mut() {
-            let mut x = *v as i64;
-            for _ in 0..n {
-                x = rdiv(x, 2);
+        let mut remaining = self.len * hd;
+        for slot in self.pages.iter_mut() {
+            if remaining == 0 {
+                break;
             }
-            *v = x as i32;
+            let mut id = *slot;
+            if pool.refcount(id) > 1 {
+                id = pool.cow(id);
+                *slot = id;
+            }
+            let used = remaining.min(pool.page_elems);
+            for v in &mut pool.page_mut(id)[..used] {
+                let mut x = *v as i64;
+                for _ in 0..n {
+                    x = rdiv(x, 2);
+                }
+                *v = x as i32;
+            }
+            remaining -= used;
         }
         self.k -= n;
     }
 
+    /// Page id + token slot the next append writes into: a fresh pool
+    /// page at page boundaries, a CoW copy if the tail page is shared
+    /// (the first divergent append after a fork lands here).
+    fn writable_tail(&mut self, pool: &mut PagePool) -> (u32, usize) {
+        let slot = self.len % PAGE_TOKENS;
+        if slot == 0 {
+            debug_assert_eq!(self.pages.len(), self.len / PAGE_TOKENS);
+            let id = pool.alloc();
+            self.pages.push(id);
+            (id, 0)
+        } else {
+            let pi = self.len / PAGE_TOKENS;
+            let mut id = self.pages[pi];
+            if pool.refcount(id) > 1 {
+                id = pool.cow(id);
+                self.pages[pi] = id;
+            }
+            (id, slot)
+        }
+    }
+
     /// Append a centered vector with scale mt/2^kt, requantizing into
     /// the lane scale (growing the lane scale first if needed).
-    fn append(&mut self, x: &[i64], mt: i32, kt: i32, hd: usize) {
-        if self.vals.is_empty() {
+    fn append(&mut self, pool: &mut PagePool, x: &[i64], mt: i32, kt: i32,
+              hd: usize) {
+        if self.len == 0 {
             // adopt the first vector's scale directly — avoids a long
             // halving chain (each halving rounds, and tens of them bias
             // cached values measurably)
@@ -144,24 +433,26 @@ impl Lane {
         let lo = x.iter().copied().min().unwrap_or(0);
         let hi = x.iter().copied().max().unwrap_or(0);
         let grows = self.grows_needed(&[(lo, hi, mt, kt)]);
-        self.grow_by(grows);
+        self.grow_by(pool, grows, hd);
         let sh = self.k - kt;
-        for &v in x {
-            self.vals.push(self.to_lane(v, mt as i64, sh) as i32);
+        let (id, slot) = self.writable_tail(pool);
+        let dst = &mut pool.page_mut(id)[slot * hd..(slot + 1) * hd];
+        for (d, &v) in dst.iter_mut().zip(x.iter()) {
+            *d = self.to_lane(v, mt as i64, sh) as i32;
         }
-        debug_assert_eq!(self.vals.len() % hd, 0);
+        self.len += 1;
     }
 
     /// Bulk-append one head's (T, hd) block of centered vectors with
     /// per-row scales (ms[r], ks[r]): resolve the lane scale ONCE from
     /// the chunk extrema, then write every row at the final scale.
-    fn append_chunk(&mut self, heads: &super::Heads, head: usize,
-                    ms: &[i32], ks: &[i32]) {
+    fn append_chunk(&mut self, pool: &mut PagePool, heads: &super::Heads,
+                    head: usize, ms: &[i32], ks: &[i32]) {
         let (t, hd) = (heads.t, heads.hd);
         if t == 0 {
             return;
         }
-        if self.vals.is_empty() {
+        if self.len == 0 {
             self.m = ms[0];
             self.k = ks[0];
         }
@@ -174,55 +465,93 @@ impl Lane {
             })
             .collect();
         let grows = self.grows_needed(&rows);
-        self.grow_by(grows);
-        self.vals.reserve(t * hd);
+        self.grow_by(pool, grows, hd);
         for r in 0..t {
             let sh = self.k - ks[r];
             let mt = ms[r] as i64;
-            for &v in heads.head_row(r, head) {
-                self.vals.push(self.to_lane(v, mt, sh) as i32);
+            let (id, slot) = self.writable_tail(pool);
+            let dst = &mut pool.page_mut(id)[slot * hd..(slot + 1) * hd];
+            for (d, &v) in dst.iter_mut().zip(heads.head_row(r, head)) {
+                *d = self.to_lane(v, mt, sh) as i32;
             }
+            self.len += 1;
         }
     }
 
-    fn len(&self, hd: usize) -> usize {
-        self.vals.len() / hd
+    fn n_tokens(&self) -> usize {
+        self.len
+    }
+
+    /// Gather the used token rows into one contiguous Vec (tests
+    /// compare paged contents against the flat reference).
+    #[cfg(test)]
+    fn used_vals(&self, pool: &PagePool, hd: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.len * hd);
+        let mut remaining = self.len * hd;
+        for &id in &self.pages {
+            let take = remaining.min(pool.page_elems);
+            out.extend_from_slice(&pool.page(id)[..take]);
+            remaining -= take;
+        }
+        out
     }
 }
 
-/// Integer KV cache for one sequence.
-#[derive(Debug, Clone)]
+/// Integer KV cache for one sequence: page tables per (layer, head)
+/// lane over a pool shared with the engine (or private, when built
+/// with [`IntKvCache::new`]).
+#[derive(Debug)]
 pub struct IntKvCache {
     k: Vec<Lane>,
     v: Vec<Lane>,
+    pool: SharedPagePool,
     n_heads: usize,
     hd: usize,
     pub pos: usize,
 }
 
 impl IntKvCache {
+    /// Standalone cache over a private pool (tests, examples, direct
+    /// `prefill`/`decode_one` use). Serving goes through
+    /// [`IntKvCache::with_pool`] so sequences share one free list.
     pub fn new(model: &IntModel) -> Self {
+        Self::with_pool(model, PagePool::shared(model.cfg.head_dim()))
+    }
+
+    /// Cache whose pages come from (and return to) `pool`.
+    pub fn with_pool(model: &IntModel, pool: SharedPagePool) -> Self {
         let cfg = &model.cfg;
         let lanes = cfg.n_layers * cfg.n_heads;
+        {
+            let p = pool.lock().expect("kv page pool");
+            assert_eq!(p.page_elems(), PAGE_TOKENS * cfg.head_dim(),
+                       "pool page size does not match model head_dim");
+        }
         IntKvCache {
-            k: (0..lanes)
-                .map(|_| Lane::new(cfg.max_seq, cfg.head_dim()))
-                .collect(),
-            v: (0..lanes)
-                .map(|_| Lane::new(cfg.max_seq, cfg.head_dim()))
-                .collect(),
+            k: (0..lanes).map(|_| Lane::new()).collect(),
+            v: (0..lanes).map(|_| Lane::new()).collect(),
+            pool,
             n_heads: cfg.n_heads,
             hd: cfg.head_dim(),
             pos: 0,
         }
     }
 
-    fn lane(&mut self, which: char, layer: usize, head: usize)
-        -> &mut Lane {
-        let idx = layer * self.n_heads + head;
-        match which {
-            'k' => &mut self.k[idx],
-            _ => &mut self.v[idx],
+    /// Share every page with a new cache (refcounted, copy-on-write):
+    /// the prefix-sharing primitive. O(pages) bookkeeping, no copies.
+    pub fn fork(&self) -> IntKvCache {
+        let pool = self.pool.clone();
+        let mut guard = pool.lock().expect("kv page pool");
+        let k = self.k.iter().map(|l| l.fork(&mut guard)).collect();
+        let v = self.v.iter().map(|l| l.fork(&mut guard)).collect();
+        drop(guard);
+        IntKvCache {
+            k,
+            v,
+            pool,
+            n_heads: self.n_heads,
+            hd: self.hd,
+            pos: self.pos,
         }
     }
 
@@ -236,13 +565,43 @@ impl IntKvCache {
             'v' => &self.v[idx],
             other => panic!("lane selector must be 'k' or 'v': {other:?}"),
         };
-        (lane.len(self.hd), lane.m, lane.k)
+        (lane.n_tokens(), lane.m, lane.k)
     }
 
-    /// Memory footprint of the cached values in bytes if stored as i8
-    /// (what a deployment would allocate; we hold i32 for simplicity).
-    pub fn logical_bytes(&self) -> usize {
-        self.k.iter().chain(self.v.iter()).map(|l| l.vals.len()).sum()
+    /// Pool pages this sequence's page tables reference (admission
+    /// accounting; pages shared with a fork are counted by each
+    /// holder, so summing over sequences is conservative).
+    pub fn pages(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|l| l.pages.len()).sum()
+    }
+
+    /// Stats of the pool backing this cache.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.lock().expect("kv page pool").stats()
+    }
+}
+
+impl Clone for IntKvCache {
+    /// Cloning is a fork: pages are shared refcounted and copied on
+    /// first write, so the clone is value-equivalent at O(1) memory.
+    fn clone(&self) -> Self {
+        self.fork()
+    }
+}
+
+impl Drop for IntKvCache {
+    /// Pages return to the pool free list the moment a sequence is
+    /// dropped — eviction frees memory immediately, not at allocator
+    /// whim.
+    fn drop(&mut self) {
+        let pool = self.pool.clone();
+        let mut guard = match pool.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for lane in self.k.iter_mut().chain(self.v.iter_mut()) {
+            lane.release(&mut guard);
+        }
     }
 }
 
@@ -252,9 +611,11 @@ impl IntModel {
     /// probability-weighted V accumulation into `orow` (raw, at scale
     /// lane_v.m / 2^(lane_v.k + softmax_bits - 1)). Shared by decode
     /// and batched prefill so their attention semantics cannot drift.
+    /// Walks the K and V page tables page-wise for locality.
     #[allow(clippy::too_many_arguments)]
     fn attend_row(
         &self,
+        pool: &PagePool,
         lane_k: &Lane,
         lane_v: &Lane,
         qrow: &[i64],
@@ -268,13 +629,21 @@ impl IntModel {
         scratch: &mut Vec<i64>,
     ) {
         scores.resize(valid, 0);
-        for (j, s) in scores.iter_mut().enumerate() {
-            let krow = &lane_k.vals[j * hd..(j + 1) * hd];
-            let mut acc = 0i64;
-            for (a, &b) in qrow.iter().zip(krow.iter()) {
-                acc += a * b as i64;
+        let mut j = 0;
+        'k_pages: for &pid in &lane_k.pages {
+            let pdata = pool.page(pid);
+            for slot in 0..PAGE_TOKENS {
+                if j >= valid {
+                    break 'k_pages;
+                }
+                let krow = &pdata[slot * hd..(slot + 1) * hd];
+                let mut acc = 0i64;
+                for (a, &b) in qrow.iter().zip(krow.iter()) {
+                    acc += a * b as i64;
+                }
+                scores[j] = acc;
+                j += 1;
             }
-            *s = acc;
         }
         probs.resize(valid, 0);
         di_softmax_row(
@@ -289,13 +658,22 @@ impl IntModel {
             probs,
             scratch,
         );
-        for (j, &p) in probs.iter().enumerate() {
-            if p == 0 {
-                continue;
-            }
-            let vrow = &lane_v.vals[j * hd..(j + 1) * hd];
-            for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
-                *o += p as i64 * vv as i64;
+        let mut j = 0;
+        'v_pages: for &pid in &lane_v.pages {
+            let pdata = pool.page(pid);
+            for slot in 0..PAGE_TOKENS {
+                if j >= valid {
+                    break 'v_pages;
+                }
+                let p = probs[j];
+                j += 1;
+                if p == 0 {
+                    continue;
+                }
+                let vrow = &pdata[slot * hd..(slot + 1) * hd];
+                for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                    *o += p as i64 * vv as i64;
+                }
             }
         }
     }
@@ -304,10 +682,10 @@ impl IntModel {
     /// align each head to the max V exponent `kcom`, then requantize
     /// every token row to a_bits. Shared by decode, batched prefill and
     /// the full-sequence attention so the merge semantics cannot drift.
-    /// The 32-bit shift cap keeps mult * o_raw inside i64 (o_raw <=
-    /// 2^22 for max_seq <= 256); V scales of one layer see similar
-    /// dynamic ranges, so a > 32 exponent gap across heads does not
-    /// occur in practice.
+    /// Exponent gaps past [`MERGE_SH_MAX`] widen to i128 and clamp at
+    /// [`ALIGN_SAT`] (see `merge_align`) instead of the former
+    /// silently-truncated shift, which mis-weighted a head whenever
+    /// the cross-head V-scale spread exceeded the cap.
     pub(crate) fn merge_heads(&self, o_raw: &[i64], t: usize,
                               vms: &[i32], vks: &[i32]) -> DynQ {
         let h = vms.len();
@@ -321,14 +699,10 @@ impl IntModel {
         let mut aligned = vec![0i64; h * hd];
         for i in 0..t {
             for head in 0..h {
-                let sh = (kcom - vks[head]).min(32);
-                let mult = (vms[head] as i64) << sh;
                 let src = &o_raw[i * h * hd + head * hd
                     ..i * h * hd + (head + 1) * hd];
                 let dst = &mut aligned[head * hd..(head + 1) * hd];
-                for (d, &s) in dst.iter_mut().zip(src.iter()) {
-                    *d = s * mult;
-                }
+                merge_align(dst, src, vms[head], kcom - vks[head]);
             }
             let (mm, mk, mz) = requant_row(
                 &aligned,
@@ -345,11 +719,13 @@ impl IntModel {
         DynQ { vals: merged, m: m_out, k: k_out, zp: zp_out, bits: a_bits }
     }
 
-    /// Logical KV bytes ONE cached token occupies (i8 storage): K and V
-    /// vectors across all layers. The batcher's admission control uses
-    /// this instead of a hardcoded estimate.
-    pub fn kv_bytes_per_token(&self) -> usize {
-        self.cfg.n_layers * self.cfg.n_heads * self.cfg.head_dim() * 2
+    /// Pool pages a sequence of `n_tokens` occupies at its peak: every
+    /// (layer, head) K and V lane fills `ceil(n / PAGE_TOKENS)` pages.
+    /// The batcher's admission control estimates a request's footprint
+    /// with this (page-denominated, replacing the old byte estimate).
+    pub fn pages_for_tokens(&self, n_tokens: usize) -> usize {
+        let lanes = 2 * self.cfg.n_layers * self.cfg.n_heads;
+        lanes * n_tokens.div_ceil(PAGE_TOKENS)
     }
 
     /// Prefill: run the integer forward over the whole prompt and
@@ -407,6 +783,8 @@ impl IntModel {
             x = di_add(&x, &p, NL_BITS);
         }
         let rotate = cfg.arch == Arch::Llama;
+        let pool_arc = cache.pool.clone();
+        let mut pool = pool_arc.lock().expect("kv page pool");
         let mut scores: Vec<i64> = Vec::new();
         let mut probs: Vec<i32> = Vec::new();
         let mut scratch: Vec<i64> = Vec::new();
@@ -423,11 +801,11 @@ impl IntModel {
             let mut vks = vec![0i32; h];
             let mut vms = vec![0i32; h];
             for head in 0..h {
-                cache.lane('k', li, head).append_chunk(&kh, head,
-                                                       &k.m, &k.k);
-                cache.lane('v', li, head).append_chunk(&vh, head,
-                                                       &v.m, &v.k);
                 let idx = li * h + head;
+                cache.k[idx].append_chunk(&mut pool, &kh, head,
+                                          &k.m, &k.k);
+                cache.v[idx].append_chunk(&mut pool, &vh, head,
+                                          &v.m, &v.k);
                 let lane_k = &cache.k[idx];
                 let lane_v = &cache.v[idx];
                 vms[head] = lane_v.m;
@@ -438,6 +816,7 @@ impl IntModel {
                         [i * h * hd + head * hd
                             ..i * h * hd + (head + 1) * hd];
                     self.attend_row(
+                        &pool,
                         lane_k,
                         lane_v,
                         qh.head_row(i, head),
@@ -455,6 +834,7 @@ impl IntModel {
             let att = self.merge_heads(&o_raw, t, &vms, &vks);
             x = self.layer_tail(&x, &att, layer);
         }
+        drop(pool);
         cache.pos += t;
         // final norm + lm_head on the LAST row only
         let last = DynQ {
@@ -489,6 +869,8 @@ impl IntModel {
             let p = pe.gather(&[pos]);
             x = di_add(&x, &p, NL_BITS);
         }
+        let pool_arc = cache.pool.clone();
+        let mut pool = pool_arc.lock().expect("kv page pool");
         let mut scores: Vec<i64> = Vec::new();
         let mut probs: Vec<i32> = Vec::new();
         let mut scratch: Vec<i64> = Vec::new();
@@ -510,17 +892,20 @@ impl IntModel {
                 // append K and V first (appending V before the softmax
                 // is equivalent: scores never read the V lane, and the
                 // PV loop already covered the new entry)
-                cache.lane('k', li, head).append(
-                    &kh[head * hd..(head + 1) * hd], k.m[0], k.k[0], hd);
-                cache.lane('v', li, head).append(
-                    &vh[head * hd..(head + 1) * hd], v.m[0], v.k[0], hd);
                 let idx = li * h + head;
+                cache.k[idx].append(
+                    &mut pool,
+                    &kh[head * hd..(head + 1) * hd], k.m[0], k.k[0], hd);
+                cache.v[idx].append(
+                    &mut pool,
+                    &vh[head * hd..(head + 1) * hd], v.m[0], v.k[0], hd);
                 let lane_k = &cache.k[idx];
                 let lane_v = &cache.v[idx];
                 vms[head] = lane_v.m;
                 vks[head] = lane_v.k;
-                let len = lane_k.len(hd);
+                let len = lane_k.n_tokens();
                 self.attend_row(
+                    &pool,
                     lane_k,
                     lane_v,
                     &qh[head * hd..(head + 1) * hd],
@@ -537,6 +922,7 @@ impl IntModel {
             let att = self.merge_heads(&o_raw, 1, &vms, &vks);
             x = self.layer_tail(&x, &att, layer);
         }
+        drop(pool);
         cache.pos += 1;
         let hf = di_norm(&x, NL_BITS, centered);
         di_linear_raw(&hf, &self.lm_head)
@@ -567,25 +953,55 @@ mod tests {
     use crate::util::rng::Pcg64;
 
     #[test]
+    fn pool_free_list_reuse_and_high_water() {
+        let mut pool = PagePool::new(4);
+        let a = pool.alloc();
+        let b = pool.alloc();
+        let c = pool.alloc();
+        assert_eq!(pool.used(), 3);
+        assert_eq!(pool.stats().high_water, 3);
+        pool.page_mut(b)[0] = 42;
+        pool.release(b);
+        pool.release(c);
+        assert_eq!(pool.used(), 1);
+        assert_eq!(pool.stats().free, 2);
+        // reuse comes off the free list (zeroed), no fresh allocation
+        let d = pool.alloc();
+        assert!(d == b || d == c, "free list not reused");
+        assert_eq!(pool.page(d), &[0; 4 * PAGE_TOKENS][..],
+                   "reused page not zeroed");
+        assert_eq!(pool.stats().high_water, 3,
+                   "reuse must not raise the high-water mark");
+        pool.retain(a);
+        assert_eq!(pool.stats().shared, 1);
+        pool.release(a);
+        pool.release(a);
+        pool.release(d);
+        assert_eq!(pool.used(), 0);
+    }
+
+    #[test]
     fn lane_append_and_dequant_roundtrip() {
         let hd = 4;
-        let mut lane = Lane::new(8, hd);
+        let mut pool = PagePool::new(hd);
+        let mut lane = Lane::new();
         // two vectors at different incoming scales
         let v1 = vec![100i64, -50, 25, 0]; // scale 200/2^12
-        lane.append(&v1, 200, 12, hd);
+        lane.append(&mut pool, &v1, 200, 12, hd);
         let v2 = vec![10i64, -120, 60, 90]; // scale 150/2^10
-        lane.append(&v2, 150, 10, hd);
-        assert_eq!(lane.len(hd), 2);
+        lane.append(&mut pool, &v2, 150, 10, hd);
+        assert_eq!(lane.n_tokens(), 2);
+        let vals = lane.used_vals(&pool, hd);
         let s_lane = lane.m as f64 / (lane.k as f64).exp2();
         let s1 = 200f64 / (12f64).exp2();
         let s2 = 150f64 / (10f64).exp2();
         for c in 0..hd {
             let want1 = v1[c] as f64 * s1;
-            let got1 = lane.vals[c] as f64 * s_lane;
+            let got1 = vals[c] as f64 * s_lane;
             assert!((want1 - got1).abs() <= s_lane * 0.75 + 1e-9,
                     "v1[{c}] {want1} vs {got1}");
             let want2 = v2[c] as f64 * s2;
-            let got2 = lane.vals[hd + c] as f64 * s_lane;
+            let got2 = vals[hd + c] as f64 * s_lane;
             assert!((want2 - got2).abs() <= s_lane * 0.75 + 1e-9,
                     "v2[{c}] {want2} vs {got2}");
         }
@@ -594,59 +1010,68 @@ mod tests {
     #[test]
     fn lane_grows_scale_on_overflow_and_preserves_old_values() {
         let hd = 2;
-        let mut lane = Lane::new(8, hd);
-        lane.append(&[100, -100], 128, 10, hd); // small values
+        let mut pool = PagePool::new(hd);
+        let mut lane = Lane::new();
+        lane.append(&mut pool, &[100, -100], 128, 10, hd); // small values
         let s_before = lane.m as f64 / (lane.k as f64).exp2();
         let want_old = 100f64 * 128.0 / (10f64).exp2();
         // a vector 100x larger forces grow-only rescaling
-        lane.append(&[10_000, -10_000], 128, 10, hd);
+        lane.append(&mut pool, &[10_000, -10_000], 128, 10, hd);
         let s_after = lane.m as f64 / (lane.k as f64).exp2();
         assert!(s_after > s_before, "lane scale must coarsen");
+        let vals = lane.used_vals(&pool, hd);
         // old entry still dequantizes to ~the same float value
-        let got_old = lane.vals[0] as f64 * s_after;
+        let got_old = vals[0] as f64 * s_after;
         assert!(
             (got_old - want_old).abs() <= want_old * 0.05 + s_after,
             "old value drifted: {got_old} vs {want_old}"
         );
         // new entry fits in 8-bit range
-        assert!(lane.vals[hd..].iter().all(|&v| v.abs() <= 127));
+        assert!(vals[hd..].iter().all(|&v| v.abs() <= 127));
     }
 
     #[test]
-    fn lane_values_stay_within_i8_range() {
+    fn lane_values_stay_within_i8_range_across_pages() {
         let hd = 3;
-        let mut lane = Lane::new(8, hd);
+        let mut pool = PagePool::new(hd);
+        let mut lane = Lane::new();
         let mut mag = 1i64;
+        // 20 appends cross a PAGE_TOKENS=16 page boundary
         for step in 0..20 {
             let v = vec![mag, -mag / 2, mag / 3];
-            lane.append(&v, 128 + (step % 100) as i32, 12, hd);
+            lane.append(&mut pool, &v, 128 + (step % 100) as i32, 12, hd);
             mag = (mag * 3).min(1 << 40);
         }
-        assert!(lane.vals.iter().all(|&v| v.abs() <= 127),
+        assert!(lane.used_vals(&pool, hd).iter().all(|&v| v.abs() <= 127),
                 "cache lane exceeded 8-bit range");
-        assert_eq!(lane.len(hd), 20);
+        assert_eq!(lane.n_tokens(), 20);
+        assert_eq!(lane.pages.len(), 2, "20 tokens must span 2 pages");
     }
 
     #[test]
     fn lane_handles_extreme_exponent_gaps() {
         let hd = 2;
-        let mut lane = Lane::new(4, hd);
+        let mut pool = PagePool::new(hd);
+        let mut lane = Lane::new();
         // adopt a very fine scale, then append at a much coarser one:
         // the saturating probe must keep growing rather than silently
         // truncating the shift, and values must stay in range
-        lane.append(&[50, -50], 200, 60, hd);
-        lane.append(&[100, -100], 200, 2, hd);
-        assert!(lane.vals.iter().all(|&v| v.abs() <= 127),
-                "gap append escaped 8-bit range: {:?}", lane.vals);
+        lane.append(&mut pool, &[50, -50], 200, 60, hd);
+        lane.append(&mut pool, &[100, -100], 200, 2, hd);
+        let vals = lane.used_vals(&pool, hd);
+        assert!(vals.iter().all(|&v| v.abs() <= 127),
+                "gap append escaped 8-bit range: {vals:?}");
         // and the coarse vector survived (did not collapse to zero)
-        assert!(lane.vals[hd..].iter().any(|&v| v != 0));
+        assert!(vals[hd..].iter().any(|&v| v != 0));
         // reverse direction: much finer than the lane rounds to zero
-        lane.append(&[3, -3], 200, 62, hd);
-        assert_eq!(&lane.vals[2 * hd..], &[0, 0]);
+        lane.append(&mut pool, &[3, -3], 200, 62, hd);
+        let vals = lane.used_vals(&pool, hd);
+        assert_eq!(&vals[2 * hd..], &[0, 0]);
     }
 
     /// The bulk scale resolution must land on exactly the lane scale
-    /// the per-vector grow loop would pick, for the same data.
+    /// the per-vector grow loop would pick, for the same data — and
+    /// paging must not disturb either path.
     #[test]
     fn chunk_append_matches_sequential_scale_and_length() {
         let mut rng = Pcg64::new(0xBEEF);
@@ -669,25 +1094,130 @@ mod tests {
             }
             let heads = Heads { t, h, hd, vals };
             // sequential reference
-            let mut seq = Lane::new(t, hd);
+            let mut pool_s = PagePool::new(hd);
+            let mut seq = Lane::new();
             for r in 0..t {
-                seq.append(heads.head_row(r, 0), ms[r], ks[r], hd);
+                seq.append(&mut pool_s, heads.head_row(r, 0),
+                           ms[r], ks[r], hd);
             }
             // bulk
-            let mut bulk = Lane::new(t, hd);
-            bulk.append_chunk(&heads, 0, &ms, &ks);
-            assert_eq!(bulk.len(hd), seq.len(hd), "case {case} length");
+            let mut pool_b = PagePool::new(hd);
+            let mut bulk = Lane::new();
+            bulk.append_chunk(&mut pool_b, &heads, 0, &ms, &ks);
+            assert_eq!(bulk.n_tokens(), seq.n_tokens(), "case {case} length");
             assert_eq!((bulk.m, bulk.k), (seq.m, seq.k),
                        "case {case} lane scale");
-            assert!(bulk.vals.iter().all(|&v| v.abs() <= 127),
+            let bv = bulk.used_vals(&pool_b, hd);
+            let sv = seq.used_vals(&pool_s, hd);
+            assert!(bv.iter().all(|&v| v.abs() <= 127),
                     "case {case} escaped 8-bit range");
             // values agree within one rounding step of the lane unit
-            for (i, (a, b)) in
-                bulk.vals.iter().zip(seq.vals.iter()).enumerate()
-            {
+            for (i, (a, b)) in bv.iter().zip(sv.iter()).enumerate() {
                 assert!((a - b).abs() <= 1,
                         "case {case} val {i}: bulk {a} vs seq {b}");
             }
         }
+    }
+
+    /// Forked lanes share pages until one side writes: a divergent
+    /// append CoWs the tail page, a lane-scale grow CoWs every shared
+    /// page it rescales — and the fork's values never move.
+    #[test]
+    fn fork_shares_pages_and_cows_on_divergence() {
+        let hd = 2;
+        let mut pool = PagePool::new(hd);
+        let mut lane = Lane::new();
+        // 18 tokens: one full page + a 2-token tail page
+        for i in 0..18i64 {
+            lane.append(&mut pool, &[i, -i], 128, 12, hd);
+        }
+        assert_eq!(pool.used(), 2);
+        let fork = lane.fork(&mut pool);
+        assert_eq!(pool.used(), 2, "fork must not allocate");
+        assert_eq!(pool.stats().shared, 2);
+        let before = fork.used_vals(&pool, hd);
+
+        // divergent append on the original: tail page CoWs, the full
+        // page stays shared
+        lane.append(&mut pool, &[5, -5], 128, 12, hd);
+        let s1 = pool.stats();
+        assert_eq!(s1.cow_copies, 1, "tail append must CoW once");
+        assert_eq!(s1.used, 3);
+        assert_eq!(s1.shared, 1, "full prefix page must stay shared");
+        assert_eq!(fork.used_vals(&pool, hd), before,
+                   "fork values moved on divergent append");
+
+        // a grow on the original rescales in place -> must CoW the
+        // still-shared page; the fork keeps its scale AND its values
+        let (fm, fk) = (fork.m, fork.k);
+        lane.append(&mut pool, &[1 << 20, -(1 << 20)], 128, 12, hd);
+        assert!(lane.k < fk, "big append must have grown the lane");
+        let s2 = pool.stats();
+        assert!(s2.cow_copies >= 2, "grow on shared page must CoW");
+        assert_eq!(s2.shared, 0);
+        assert_eq!((fork.m, fork.k), (fm, fk));
+        assert_eq!(fork.used_vals(&pool, hd), before,
+                   "fork values moved on grow");
+
+        // releasing the original returns its private pages only
+        let lane_pages = lane.pages.len();
+        lane.release(&mut pool);
+        assert_eq!(pool.stats().free, lane_pages);
+        assert_eq!(fork.used_vals(&pool, hd), before);
+        let mut fork = fork;
+        fork.release(&mut pool);
+        assert_eq!(pool.used(), 0);
+    }
+
+    /// Regression for the merge_heads exponent-gap cap: past
+    /// MERGE_SH_MAX the alignment must be EXACT (i128-widened)
+    /// wherever the product fits the clamp, and saturate where it
+    /// does not. With the old `(kcom - vk).min(32)` an sh=45 head
+    /// landed BELOW an sh=35 head purely because both shifts clamped
+    /// to 32 and only the mantissas differed (100 * 1<<32 < 1 *
+    /// 255<<32, against a true ratio of ~2^8.6 the other way).
+    #[test]
+    fn merge_aligns_extreme_cross_head_scale_gaps_exactly() {
+        let hd = 4;
+        // three heads; kcom = 45. gaps: 45, 35, 0 — two past the cap.
+        let vks = [0i32, 10, 45];
+        let vms = [1i32, 255, 200];
+        let kcom = 45;
+        let o0 = [100i64, -100, 0, 7];
+        let o1 = [1i64, -1, 3, 2];
+        let o2 = [1000i64, -1000, 500, 2];
+        let mut aligned = vec![0i64; 3 * hd];
+        merge_align(&mut aligned[..hd], &o0, vms[0], kcom - vks[0]);
+        merge_align(&mut aligned[hd..2 * hd], &o1, vms[1], kcom - vks[1]);
+        merge_align(&mut aligned[2 * hd..], &o2, vms[2], kcom - vks[2]);
+        // past-the-cap products that fit the clamp are EXACT
+        assert_eq!(aligned[0], 100i64 << 45);
+        assert_eq!(aligned[1], -(100i64 << 45));
+        assert_eq!(aligned[2], 0);
+        assert_eq!(aligned[hd], 255i64 << 35);
+        // true cross-head ordering restored, strictly
+        assert!(aligned[0] > aligned[hd],
+                "far head mis-weighted below a nearer head");
+        // the in-range head is untouched by the cap
+        assert_eq!(aligned[2 * hd], 1000 * 200);
+        // requantizing the merged row: the dominant head hits the
+        // range ends, the ~2^9-smaller heads collapse to ~zp
+        let mut out = vec![0i32; 3 * hd];
+        let (_m, _k, zp) =
+            requant_row(&aligned, 1, kcom + 7, 8, None, &mut out);
+        assert_eq!(out[0], 255);
+        assert_eq!(out[1], 0);
+        for (c, &v) in out.iter().enumerate().skip(hd) {
+            assert!((v - zp).abs() <= 1,
+                    "smaller head [{c}] not near zp: {v} vs {zp}");
+        }
+        // products past the clamp saturate sign-preserving, and huge
+        // shifts cannot overflow (zero stays zero)
+        let mut sat = vec![0i64; hd];
+        merge_align(&mut sat, &[1 << 22, -(1 << 22), 0, 1], 255, 50);
+        assert_eq!(sat, vec![ALIGN_SAT, -ALIGN_SAT, 0, ALIGN_SAT]);
+        let mut huge = vec![0i64; hd];
+        merge_align(&mut huge, &[0, 5, -5, 0], 3, 200);
+        assert_eq!(huge, vec![0, ALIGN_SAT, -ALIGN_SAT, 0]);
     }
 }

@@ -251,7 +251,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let alpha: Vec<Option<Vec<f64>>> =
         params.layers.iter().map(|l| l.alpha.clone()).collect();
     let im = quantize_model(&folded, scheme, Some(&alpha), None);
-    let engine = IntEngine { model: Arc::new(im) };
+    let engine = IntEngine::new(Arc::new(im));
     use illm::coordinator::engine::{greedy, Engine};
     let toks = illm::coordinator::tokenize(&prompt);
     let (mut state, mut logits) = engine.prefill(&toks);
@@ -278,7 +278,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let alpha: Vec<Option<Vec<f64>>> =
         params.layers.iter().map(|l| l.alpha.clone()).collect();
     let im = quantize_model(&folded, scheme, Some(&alpha), None);
-    let engine = IntEngine { model: Arc::new(im) };
+    let engine = IntEngine::new(Arc::new(im));
     let spec = workload::WorkloadSpec {
         n_requests: args.get_usize("requests", 24),
         rate: args.get_f64("rate", 0.0),

@@ -44,15 +44,15 @@ impl Engine for Affine {
         one_hot(step(token as usize))
     }
 
-    fn kv_bytes(&self, state: &SeqState) -> usize {
+    fn kv_pages(&self, state: &SeqState) -> usize {
         match state {
-            SeqState::Fp { tokens } => tokens.len() * 8,
+            SeqState::Fp { tokens } => tokens.len(),
             _ => 0,
         }
     }
 
-    fn kv_bytes_per_token(&self) -> usize {
-        8
+    fn pages_for_tokens(&self, n_tokens: usize) -> usize {
+        n_tokens
     }
 }
 
@@ -96,12 +96,14 @@ fn prop_scheduling_never_changes_results() {
             (1usize, 64usize, usize::MAX),
             (4, 64, usize::MAX),
             (8, 3, usize::MAX),
-            (4, 64, 4_000),
+            // ~1 page/token for Affine: 60 pages forces admission
+            // blocking, which must not change any output
+            (4, 64, 60),
         ] {
             let mut b = Batcher::new(BatcherConfig {
                 max_batch,
                 prefill_chunk: chunk,
-                kv_budget: budget,
+                kv_page_budget: budget,
                 stop_token: None,
             });
             let mut m = ServeMetrics::default();

@@ -19,9 +19,7 @@ use common::correlation;
 fn int_engine(name: &str, scheme: QuantScheme) -> IntEngine {
     let dir = illm::artifacts_dir();
     let fp = load_model(&dir, name).unwrap();
-    IntEngine {
-        model: Arc::new(quantize_model(&fp, scheme, None, None)),
-    }
+    IntEngine::new(Arc::new(quantize_model(&fp, scheme, None, None)))
 }
 
 #[test]
@@ -48,7 +46,10 @@ fn coordinator_completes_workload() {
             "continuous batching never overlapped: {}",
             metrics.mean_occupancy());
     for r in &responses {
-        assert!(r.n_generated >= 1);
+        // the stop byte terminates a response without being emitted,
+        // so n_generated may be 0 but '\n' never appears in the text
+        assert!(!r.text.contains('\n'),
+                "stop byte leaked into response: {:?}", r.text);
         assert!(r.ttft <= r.latency + 1e-9);
     }
 }
@@ -64,7 +65,7 @@ fn int_generation_agrees_with_fp_on_easy_text() {
     let fp = load_model(&dir, "tinyllama_s").unwrap();
     let (im, _) = illm::eval::methods::build_illm(&fp, &corpus,
                                                   QuantScheme::W8A8);
-    let ie = IntEngine { model: Arc::new(im) };
+    let ie = IntEngine::new(Arc::new(im));
     let fe = FpEngine { model: Arc::new(fp) };
     let prompt = illm::data::encode("the engineer builds a small ");
     let gen = |e: &dyn Engine| -> Vec<u16> {
@@ -215,11 +216,13 @@ fn kv_budget_admission_control_engages() {
         ..Default::default()
     };
     let reqs = workload::generate(&spec, &corpus);
+    // each request needs ~96..160 pages (32 lanes * ceil(tokens/16));
+    // 200 pages admits one but blocks a second while the first is live
     let (responses, metrics) = run_workload(
         engine,
         BatcherConfig {
             max_batch: 6,
-            kv_budget: 6_000, // tiny budget forces blocking
+            kv_page_budget: 200,
             ..Default::default()
         },
         reqs,
@@ -227,5 +230,79 @@ fn kv_budget_admission_control_engages() {
     );
     assert_eq!(responses.len(), 6, "all requests must still complete");
     assert!(metrics.admission_blocks > 0,
-            "tiny kv budget never blocked admission");
+            "tiny kv page budget never blocked admission");
+    assert!(metrics.pool_used_peak > 0, "pool stats never sampled");
+}
+
+/// Eviction churn must REUSE pages: running N sequential requests
+/// through one engine keeps the pool's allocation high-water mark near
+/// a single request's footprint, far below the sum of per-request
+/// peaks (what per-sequence contiguous allocation would have used).
+#[test]
+fn page_pool_reuses_freed_pages_across_requests() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let engine = int_engine("tinyllama_s", QuantScheme::W8A8);
+    let mut sum_peaks = 0usize;
+    let mut per_peak = 0usize;
+    for i in 0..6 {
+        // distinct prompts so prefix sharing does not kick in
+        let toks: Vec<u16> = corpus.val[i * 30..i * 30 + 24].to_vec();
+        let (mut st, mut logits) = engine.prefill(&toks);
+        for _ in 0..4 {
+            let next = greedy(&logits);
+            logits = engine.decode(&mut st, next);
+        }
+        let pages = engine.kv_pages(&st);
+        assert!(pages > 0);
+        sum_peaks += pages;
+        per_peak = per_peak.max(pages);
+        drop(st); // eviction: pages return to the free list here
+    }
+    let stats = engine.pool_stats().expect("int engine has a pool");
+    assert!(stats.high_water < sum_peaks,
+            "no page reuse: high-water {} vs sum of peaks {}",
+            stats.high_water, sum_peaks);
+    // flat high-water: one live request + the prefix snapshot + CoW
+    // slack, never proportional to the number of requests served
+    assert!(stats.high_water <= 3 * per_peak,
+            "high-water {} not flat (per-request peak {})",
+            stats.high_water, per_peak);
+    assert!(stats.free > 0, "freed pages must sit on the free list");
+}
+
+/// Identical prompts admitted back-to-back share refcounted pages
+/// (the second prefill allocates NOTHING), and the first divergent
+/// append copies-on-write — with the fork bit-identical to a fresh
+/// recomputation at every step.
+#[test]
+fn prefix_sharing_refcounts_pages_and_cows_on_divergence() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let engine = int_engine("tinyllama_s", QuantScheme::W8A8);
+    let toks: Vec<u16> = corpus.val[..24].to_vec();
+    let (mut st1, l1) = engine.prefill(&toks);
+    let base = engine.pool_stats().unwrap();
+    let (mut st2, l2) = engine.prefill(&toks);
+    let shared = engine.pool_stats().unwrap();
+    assert_eq!(l1, l2, "shared prefill must return identical logits");
+    assert_eq!(shared.used, base.used,
+               "identical prompt must not allocate new pages");
+    assert!(shared.shared > 0, "no pages marked shared after refill");
+    // first divergent append: copy-on-write, not in-place corruption
+    let d1 = engine.decode(&mut st1, 10);
+    let after = engine.pool_stats().unwrap();
+    assert!(after.cow_copies > shared.cow_copies,
+            "divergent append did not CoW");
+    let d2 = engine.decode(&mut st2, 99);
+    // the forked caches must behave exactly like freshly-computed
+    // ones: compare against an engine that never shared anything
+    let fresh = int_engine("tinyllama_s", QuantScheme::W8A8);
+    let (mut stf, lf) = fresh.prefill(&toks);
+    assert_eq!(lf, l1, "integer prefill must be deterministic");
+    let df = fresh.decode(&mut stf, 10);
+    assert_eq!(d1, df, "CoW fork diverged from fresh compute");
+    let (mut stg, _) = fresh.prefill(&toks);
+    let dg = fresh.decode(&mut stg, 99);
+    assert_eq!(d2, dg, "second fork diverged from fresh compute");
 }
