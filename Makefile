@@ -5,7 +5,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-full test smoke
+.PHONY: artifacts artifacts-full test smoke bench-json
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../artifacts --fast
@@ -20,3 +20,10 @@ test:
 # fast asserting serving bench: paging + admission regressions (CI)
 smoke:
 	cd rust && cargo bench --bench perf_serving -- --smoke
+
+# serving bench + machine-readable rust/BENCH_serving.json (decode and
+# prefill tok/s, latency percentiles, pool high-water, thread count);
+# ILLM_THREADS=4 so the tracked numbers exercise the parallel decode
+# wave; drop ILLM_BENCH_FAST for the full-length run
+bench-json:
+	cd rust && ILLM_BENCH_FAST=1 ILLM_THREADS=4 cargo bench --bench perf_serving

@@ -1,6 +1,7 @@
 //! §Perf end-to-end serving benchmark: throughput/latency of the
 //! coordinator + integer engine, vs the FP engine, across batch sizes,
-//! plus the paged-KV admission study.
+//! plus the paged-KV admission study and the prefill-kernel comparison
+//! (replay vs row-at-a-time vs page-tiled vs tiled+threads).
 //!
 //! The paper's deployment claim: the integer-only pipeline serves LLMs
 //! on integer hardware; here we verify the coordinator adds negligible
@@ -9,8 +10,15 @@
 //! high-water vs the sum of per-request peaks (what per-sequence
 //! contiguous allocation would have pinned), prefix sharing, CoW.
 //!
+//! Every run also writes `BENCH_serving.json` (machine-readable
+//! throughput/latency/pool/thread-count snapshot) next to the human
+//! tables, so the perf trajectory is trackable across commits —
+//! `make bench-json` is the shortcut.
+//!
 //! `cargo bench --bench perf_serving -- --smoke` runs a fast, asserting
-//! subset (CI uses it to catch admission/paging regressions).
+//! subset (CI runs it under ILLM_THREADS=1 AND =4 to catch
+//! thread-count-dependent nondeterminism in the parallel decode wave
+//! and the head-parallel tiled prefill).
 
 use illm::coordinator::batcher::BatcherConfig;
 use illm::coordinator::engine::{Engine, FpEngine, IntEngine};
@@ -21,32 +29,136 @@ use illm::int_model::kv_cache::IntKvCache;
 use illm::int_model::IntModel;
 use illm::nn::load_model;
 use illm::quant::QuantScheme;
+use illm::util::json::Json;
 use illm::util::Table;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
-/// Prefill-path comparison: batched prefill (one GEMM per linear, bulk
-/// KV append) vs the old token-by-token `decode_one` replay.
-fn bench_prefill(im: &IntModel, prompt: &[u16], reps: usize) {
+fn jobj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, Json>>(),
+    )
+}
+
+/// Prefill-path comparison: the old token-by-token `decode_one` replay,
+/// the row-at-a-time batched kernel (pre-tiling reference, reads every
+/// K/V page once per score row), the page-tiled kernel (each page read
+/// once per head), and the tiled kernel under `ILLM_THREADS` workers.
+fn bench_prefill(im: &IntModel, prompt: &[u16], reps: usize) -> Json {
     let n = prompt.len() as f64;
+    // measure the threaded row at >= 4 workers even when ILLM_THREADS
+    // is unset — otherwise the tracked JSON would duplicate the
+    // 1-thread tiled number and never show the parallel win
+    let threads = illm::util::illm_threads().max(4);
     let mut t_replay = f64::MAX;
-    let mut t_batch = f64::MAX;
+    let mut t_row = f64::MAX;
+    let mut t_tile = f64::MAX;
+    let mut t_thr = f64::MAX;
     for _ in 0..reps {
         let mut cache = IntKvCache::new(im);
         let (_, s) =
             illm::util::time_it(|| im.prefill_replay(prompt, &mut cache));
         t_replay = t_replay.min(s);
         let mut cache = IntKvCache::new(im);
-        let (_, s) =
-            illm::util::time_it(|| im.prefill_batch(prompt, &mut cache));
-        t_batch = t_batch.min(s);
+        let (_, s) = illm::util::time_it(|| {
+            im.prefill_batch_rowwise(prompt, &mut cache)
+        });
+        t_row = t_row.min(s);
+        let mut cache = IntKvCache::new(im);
+        let (_, s) = illm::util::time_it(|| {
+            im.prefill_batch_threads(prompt, &mut cache, 1)
+        });
+        t_tile = t_tile.min(s);
+        let mut cache = IntKvCache::new(im);
+        let (_, s) = illm::util::time_it(|| {
+            im.prefill_batch_threads(prompt, &mut cache, threads)
+        });
+        t_thr = t_thr.min(s);
     }
     println!("\n== perf: prefill path ({} tokens, {}) ==",
              prompt.len(), im.scheme.tag());
-    println!("  replay (decode_one per token): {:>9.0} tok/s",
+    println!("  replay (decode_one per token):   {:>9.0} tok/s",
              n / t_replay);
-    println!("  batched prefill:               {:>9.0} tok/s  \
-              ({:.2}x speedup)",
-             n / t_batch, t_replay / t_batch);
+    println!("  batched, row-at-a-time (pre-PR): {:>9.0} tok/s  \
+              ({:.2}x vs replay)",
+             n / t_row, t_replay / t_row);
+    println!("  batched, page-tiled:             {:>9.0} tok/s  \
+              ({:.2}x vs row-at-a-time)",
+             n / t_tile, t_row / t_tile);
+    println!("  page-tiled, {threads} attn thread(s):   {:>9.0} tok/s",
+             n / t_thr);
+    jobj(vec![
+        ("prompt_tokens", Json::Int(prompt.len() as i64)),
+        ("replay_tok_per_s", Json::Num(n / t_replay)),
+        ("rowwise_tok_per_s", Json::Num(n / t_row)),
+        ("tiled_tok_per_s", Json::Num(n / t_tile)),
+        ("threaded_attn_workers", Json::Int(threads as i64)),
+        ("tiled_threaded_tok_per_s", Json::Num(n / t_thr)),
+        ("tiled_speedup_vs_rowwise", Json::Num(t_row / t_tile)),
+    ])
+}
+
+/// Smoke-mode kernel equivalence: tiled and threaded prefill must be
+/// BIT-identical to the row-at-a-time reference (logits and lane
+/// scales). The deep sweep lives in tests/; this cheap re-check runs
+/// under both CI thread counts.
+fn assert_prefill_equivalence(im: &IntModel, prompt: &[u16]) {
+    let mut c_row = IntKvCache::new(im);
+    let l_row = im.prefill_batch_rowwise(prompt, &mut c_row);
+    let mut c_tile = IntKvCache::new(im);
+    let l_tile = im.prefill_batch_threads(prompt, &mut c_tile, 1);
+    let mut c_thr = IntKvCache::new(im);
+    let l_thr = im.prefill_batch_threads(prompt, &mut c_thr, 4);
+    assert_eq!(l_tile, l_row, "tiled prefill diverged from rowwise");
+    assert_eq!(l_thr, l_row, "threaded prefill diverged from rowwise");
+    for li in 0..im.cfg.n_layers {
+        for head in 0..im.cfg.n_heads {
+            for which in ['k', 'v'] {
+                let a = c_row.lane_state(which, li, head);
+                assert_eq!(c_tile.lane_state(which, li, head), a,
+                           "lane {which} l{li} h{head} scale (tiled)");
+                assert_eq!(c_thr.lane_state(which, li, head), a,
+                           "lane {which} l{li} h{head} scale (threads)");
+            }
+        }
+    }
+    println!("  prefill equivalence: tiled == rowwise == threaded \
+              (bit-identical)");
+}
+
+/// Smoke-mode wave determinism: the same workload must produce
+/// identical responses with 1 and 4 decode-wave workers.
+fn assert_thread_determinism(im: &Arc<IntModel>, corpus: &Corpus) {
+    let spec = workload::WorkloadSpec {
+        n_requests: 6,
+        prompt_len: (20, 40),
+        max_new: (3, 6),
+        ..Default::default()
+    };
+    let run = |threads: usize| {
+        let reqs = workload::generate(&spec, corpus);
+        let engine = IntEngine::new(im.clone());
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            threads,
+            stop_token: None,
+            ..Default::default()
+        };
+        let (mut resp, _m) = run_workload(engine, cfg, reqs, 0.0);
+        resp.sort_by_key(|r| r.id);
+        resp.into_iter()
+            .map(|r| (r.id, r.text, r.n_generated))
+            .collect::<Vec<_>>()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(parallel, serial,
+               "decode wave results depend on thread count");
+    println!("  wave determinism: 1 vs 4 workers identical \
+              ({} responses)", serial.len());
 }
 
 /// Admission behaviour under a prompt-heavy workload with duplicate
@@ -55,7 +167,8 @@ fn bench_prefill(im: &IntModel, prompt: &[u16], reps: usize) {
 /// per-sequence contiguous layout would have pinned until drop — and
 /// reports prefix sharing + CoW activity. In smoke mode the
 /// comparisons are ASSERTED so paging regressions fail CI.
-fn bench_paging(im: &Arc<IntModel>, corpus: &Corpus, smoke: bool) {
+fn bench_paging(im: &Arc<IntModel>, corpus: &Corpus, smoke: bool)
+    -> Json {
     let n_requests = if smoke { 8 } else { 24 };
     // ~2 requests' worth of pages: admission must block while slots
     // remain. Prompts fit one prefill chunk (so the whole prefix is
@@ -127,6 +240,10 @@ fn bench_paging(im: &Arc<IntModel>, corpus: &Corpus, smoke: bool) {
         assert_eq!(l1, l2, "shared prefill changed the logits");
         println!("  smoke assertions passed");
     }
+    jobj(vec![
+        ("sum_peak_pages", Json::Int(sum_peaks as i64)),
+        ("metrics", m.to_json()),
+    ])
 }
 
 fn main() {
@@ -139,11 +256,18 @@ fn main() {
     let (im, _) = methods::build_illm(&fp, &corpus, QuantScheme::W8A8);
     let im = Arc::new(im);
     let fpa = Arc::new(fp);
+    let threads = illm::util::illm_threads();
+    let mut report: Vec<(&str, Json)> = vec![
+        ("model", Json::Str(model.to_string())),
+        ("threads", Json::Int(threads as i64)),
+        ("smoke", Json::Bool(smoke)),
+    ];
 
+    let mut serving_json: Option<Json> = None;
     if !smoke {
         let n_requests = if fast { 12 } else { 32 };
         println!("== perf: serving throughput ({model}, {n_requests} \
-                  requests, closed loop) ==\n");
+                  requests, closed loop, {threads} wave thread(s)) ==\n");
         let mut t = Table::new(&["engine", "batch", "decode tok/s",
                                  "prefill tok/s", "p50 lat (s)",
                                  "p99 lat (s)", "occupancy",
@@ -180,19 +304,41 @@ fn main() {
                 ]);
                 eprintln!("  {engine_name} batch {batch}: {:.0} decode \
                            tok/s", m.decode_tok_per_s());
+                if engine_name == "int-w8a8" && batch == 8 {
+                    serving_json = Some(m.to_json());
+                }
             }
         }
         t.print();
     }
 
-    // ---- prefill: batched vs replay (the PR-2 tentpole) ----
+    // ---- prefill: replay vs rowwise vs page-tiled vs threaded ----
     let prompt_len = im.cfg.max_seq.min(if fast { 96 } else { 256 })
         .min(corpus.val.len());
     let prompt: Vec<u16> = corpus.val[..prompt_len].to_vec();
-    bench_prefill(&im, &prompt, if fast { 1 } else { 3 });
+    let prefill_json =
+        bench_prefill(&im, &prompt, if fast { 1 } else { 3 });
+    report.push(("prefill", prefill_json));
+    if let Some(sj) = serving_json {
+        report.push(("serving_int_w8a8_batch8", sj));
+    }
 
     // ---- paged KV: admission behaviour before/after paging ----
-    bench_paging(&im, &corpus, smoke);
+    let paging_json = bench_paging(&im, &corpus, smoke);
+    report.push(("paging", paging_json));
+
+    if smoke {
+        // kernel + scheduling determinism under the CI thread matrix
+        assert_prefill_equivalence(
+            &im, &corpus.val[..48.min(corpus.val.len())]);
+        assert_thread_determinism(&im, &corpus);
+    }
+
+    let json = jobj(report);
+    let out = "BENCH_serving.json";
+    std::fs::write(out, json.dump() + "\n")
+        .expect("write BENCH_serving.json");
+    println!("\nwrote {out}");
 
     if !smoke {
         println!("\ntargets (DESIGN.md §8): coordinator overhead < 10%; \

@@ -21,7 +21,21 @@
 //!    generated tokens — the generation budget is checked before
 //!    sampling, never after;
 //!  * the stop token TERMINATES a response, it is never part of it:
-//!    sampling the stop byte finishes the request without emitting it.
+//!    sampling the stop byte finishes the request without emitting it;
+//!  * with `threads > 1` (or `ILLM_THREADS` when the config leaves it
+//!    0) the decode/prefill WAVE fans sequences out across
+//!    `std::thread::scope` workers. This is what the engine's
+//!    lock-narrowed page pool buys: each sequence's forward locks the
+//!    pool only for its short per-layer K/V appends, so concurrent
+//!    decodes overlap their attention compute. Each worker owns a
+//!    disjoint slice of the active set and does that slice's per-token
+//!    work (including the deterministic greedy sampling); admission,
+//!    eviction and metrics folding stay on the scheduler thread.
+//!    Results are bit-identical at every thread count. The thread
+//!    budget is SPLIT across wave workers: each worker's
+//!    `prefill_chunk` gets `threads / workers` attention threads, so
+//!    a parallel wave never multiplies into
+//!    wave-workers × attention-workers threads.
 
 use super::engine::{greedy, Engine, SeqState};
 use super::metrics::ServeMetrics;
@@ -41,6 +55,9 @@ pub struct BatcherConfig {
     pub prefill_chunk: usize,
     /// stop token (byte); generation also stops at max_new
     pub stop_token: Option<u16>,
+    /// decode-wave worker threads; 0 (default) reads `ILLM_THREADS`.
+    /// Results are bit-identical at every count.
+    pub threads: usize,
 }
 
 impl Default for BatcherConfig {
@@ -50,6 +67,19 @@ impl Default for BatcherConfig {
             kv_page_budget: 1 << 16,
             prefill_chunk: 64,
             stop_token: Some(b'\n' as u16),
+            threads: 0,
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// Worker threads for the decode/prefill wave: the explicit
+    /// `threads` setting, or `ILLM_THREADS` (default 1) when 0.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::illm_threads()
+        } else {
+            self.threads.max(1)
         }
     }
 }
@@ -63,6 +93,91 @@ struct Active {
     last_logits: Option<Vec<f32>>,
     ttft: Option<f64>,
     prompt_len: usize,
+}
+
+/// Engine-time counters accumulated by one wave worker and folded
+/// into [`ServeMetrics`] after the join. Token counts SUM across
+/// workers; engine times fold as the MAX across workers (`merge_max`)
+/// — a parallel wave's wall time is bounded by its slowest worker, so
+/// the folded time approximates the critical path and
+/// `decode_tok_per_s` stays wall-clock-meaningful (and shows the
+/// parallel speedup) instead of flatlining on summed CPU time.
+#[derive(Debug, Default)]
+struct WaveStats {
+    prefill_tokens: u64,
+    prefill_time_s: f64,
+    decode_tokens: u64,
+    decode_time_s: f64,
+}
+
+impl WaveStats {
+    /// Combine a worker's stats: tokens add, times take the critical
+    /// path (max).
+    fn merge_max(&mut self, w: &WaveStats) {
+        self.prefill_tokens += w.prefill_tokens;
+        self.decode_tokens += w.decode_tokens;
+        self.prefill_time_s = self.prefill_time_s.max(w.prefill_time_s);
+        self.decode_time_s = self.decode_time_s.max(w.decode_time_s);
+    }
+
+    fn fold_into(self, m: &mut ServeMetrics) {
+        m.prefill_tokens += self.prefill_tokens;
+        m.prefill_time_s += self.prefill_time_s;
+        m.decode_tokens += self.decode_tokens;
+        m.decode_time_s += self.decode_time_s;
+    }
+}
+
+/// One decode/prefill wave step for one active sequence; returns true
+/// when the sequence is finished. Runs on the scheduler thread or a
+/// wave worker — it touches only its own `Active` and the (internally
+/// synchronized) engine, never the batcher or global metrics.
+fn wave_one<E: Engine>(cfg: &BatcherConfig, engine: &E, a: &mut Active,
+                       attn_threads: usize, ws: &mut WaveStats) -> bool {
+    // defensive: a request whose generation budget is already
+    // exhausted needs no logits — finish before burning prefill
+    // waves (admission short-circuits max_new == 0, so this only
+    // guards future paths into the active set)
+    if a.generated.len() >= a.req.max_new {
+        return true;
+    }
+    if !a.pending_prompt.is_empty() {
+        // continue chunked prefill through the engine's batched
+        // prefill path (one forward per chunk, not per token);
+        // attn_threads is this worker's share of the thread budget
+        let n = a.pending_prompt.len().min(cfg.prefill_chunk);
+        let chunk: Vec<u16> = a.pending_prompt.drain(..n).collect();
+        let t0 = Instant::now();
+        let logits = engine.prefill_chunk(&mut a.state, &chunk,
+                                          attn_threads);
+        ws.prefill_tokens += chunk.len() as u64;
+        ws.prefill_time_s += t0.elapsed().as_secs_f64();
+        a.last_logits = Some(logits);
+        return false;
+    }
+    // decode one token
+    let logits = a.last_logits.as_ref().expect("logits");
+    let next = greedy(logits);
+    if a.ttft.is_none() {
+        a.ttft = Some(a.req.submitted.elapsed().as_secs_f64());
+    }
+    if Some(next) == cfg.stop_token {
+        // the stop byte terminates the response WITHOUT being
+        // emitted: it appears in neither `text` nor `n_generated`
+        return true;
+    }
+    a.generated.push(next);
+    ws.decode_tokens += 1;
+    let stop = a.generated.len() >= a.req.max_new
+        || a.prompt_len + a.generated.len() >= engine.max_seq();
+    if stop {
+        return true;
+    }
+    let t0 = Instant::now();
+    let logits = engine.decode(&mut a.state, next);
+    ws.decode_time_s += t0.elapsed().as_secs_f64();
+    a.last_logits = Some(logits);
+    false
 }
 
 pub struct Batcher {
@@ -181,7 +296,11 @@ impl Batcher {
                 .to_vec();
             let rest = prompt[first.len()..].to_vec();
             let t0 = Instant::now();
-            let (state, logits) = engine.prefill(&first);
+            // admission runs serially on this thread, so the first
+            // chunk's prefill gets the FULL attention thread budget
+            let (state, logits) = engine
+                .prefill_with_threads(&first,
+                                      self.cfg.effective_threads());
             metrics.prefill_tokens += first.len() as u64;
             metrics.prefill_time_s += t0.elapsed().as_secs_f64();
             self.active.push(Active {
@@ -195,56 +314,62 @@ impl Batcher {
             });
         }
         // ---- one decode/prefill wave over active sequences ----
-        let mut finished_idx: Vec<usize> = Vec::new();
-        for (i, a) in self.active.iter_mut().enumerate() {
-            // defensive: a request whose generation budget is already
-            // exhausted needs no logits — finish before burning prefill
-            // waves (admission short-circuits max_new == 0, so this
-            // only guards future paths into the active set)
-            if a.generated.len() >= a.req.max_new {
-                finished_idx.push(i);
-                continue;
+        // sequences are independent within a wave, so the wave fans
+        // out across scoped workers when configured; bookkeeping
+        // (finished flags, metrics folds, eviction) stays serial and
+        // in index order — results are bit-identical at every count
+        let mut finished = vec![false; self.active.len()];
+        let budget = self.cfg.effective_threads();
+        let nt = budget.min(self.active.len()).max(1);
+        // split the thread budget: nt wave workers × attn_share
+        // engine-internal attention threads never exceeds the budget
+        let attn_share = (budget / nt).max(1);
+        if nt <= 1 {
+            let mut ws = WaveStats::default();
+            for (a, f) in self.active.iter_mut().zip(finished.iter_mut())
+            {
+                *f = wave_one(&self.cfg, engine, a, attn_share, &mut ws);
             }
-            if !a.pending_prompt.is_empty() {
-                // continue chunked prefill through the engine's batched
-                // prefill path (one forward per chunk, not per token)
-                let n = a.pending_prompt.len().min(self.cfg.prefill_chunk);
-                let chunk: Vec<u16> =
-                    a.pending_prompt.drain(..n).collect();
-                let t0 = Instant::now();
-                let logits = engine.prefill_chunk(&mut a.state, &chunk);
-                metrics.prefill_tokens += chunk.len() as u64;
-                metrics.prefill_time_s += t0.elapsed().as_secs_f64();
-                a.last_logits = Some(logits);
-                continue;
+            ws.fold_into(metrics);
+        } else {
+            let chunk = self.active.len().div_ceil(nt);
+            let cfg = &self.cfg;
+            let stats: Vec<WaveStats> = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for (ach, fch) in self
+                    .active
+                    .chunks_mut(chunk)
+                    .zip(finished.chunks_mut(chunk))
+                {
+                    handles.push(s.spawn(move || {
+                        let mut ws = WaveStats::default();
+                        for (a, f) in
+                            ach.iter_mut().zip(fch.iter_mut())
+                        {
+                            *f = wave_one(cfg, engine, a, attn_share,
+                                          &mut ws);
+                        }
+                        ws
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("decode wave worker"))
+                    .collect()
+            });
+            // tokens sum; times fold as the slowest worker (critical
+            // path), keeping the tok/s metrics wall-clock-meaningful
+            let mut agg = WaveStats::default();
+            for ws in &stats {
+                agg.merge_max(ws);
             }
-            // decode one token
-            let logits = a.last_logits.as_ref().expect("logits");
-            let next = greedy(logits);
-            if a.ttft.is_none() {
-                a.ttft =
-                    Some(a.req.submitted.elapsed().as_secs_f64());
-            }
-            if Some(next) == self.cfg.stop_token {
-                // the stop byte terminates the response WITHOUT being
-                // emitted: it appears in neither `text` nor
-                // `n_generated`
-                finished_idx.push(i);
-                continue;
-            }
-            a.generated.push(next);
-            metrics.decode_tokens += 1;
-            let stop = a.generated.len() >= a.req.max_new
-                || a.prompt_len + a.generated.len() >= engine.max_seq();
-            if stop {
-                finished_idx.push(i);
-            } else {
-                let t0 = Instant::now();
-                let logits = engine.decode(&mut a.state, next);
-                metrics.decode_time_s += t0.elapsed().as_secs_f64();
-                a.last_logits = Some(logits);
-            }
+            agg.fold_into(metrics);
         }
+        let finished_idx: Vec<usize> = finished
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &f)| f.then_some(i))
+            .collect();
         metrics.steps += 1;
         metrics.batch_occupancy_sum += self.active.len() as u64;
         metrics.step_time_s += step_t0.elapsed().as_secs_f64();
@@ -443,6 +568,48 @@ mod tests {
         // the zero-budget request never reached the engine: only
         // request 2's prompt was prefilled
         assert_eq!(m.prefill_tokens, 3);
+    }
+
+    /// The parallel decode wave must be pure scheduling: identical
+    /// responses (ids, texts, token counts) at every worker count.
+    #[test]
+    fn parallel_wave_matches_serial() {
+        let run = |threads: usize| {
+            let mut b = Batcher::new(BatcherConfig {
+                max_batch: 4,
+                prefill_chunk: 5,
+                stop_token: None,
+                threads,
+                ..Default::default()
+            });
+            let mut m = ServeMetrics::default();
+            for i in 0..9u64 {
+                b.enqueue(Request {
+                    id: i,
+                    prompt: format!("req{i:02}xyz"),
+                    max_new: 2 + (i as usize % 4),
+                    submitted: Instant::now(),
+                });
+            }
+            let mut done = Vec::new();
+            let mut guard = 0;
+            while !b.is_idle() {
+                done.extend(b.step(&Echo, &mut m));
+                guard += 1;
+                assert!(guard < 200, "batcher did not converge");
+            }
+            done.sort_by_key(|r| r.id);
+            let texts: Vec<(u64, String, usize)> = done
+                .into_iter()
+                .map(|r| (r.id, r.text, r.n_generated))
+                .collect();
+            (texts, m.decode_tokens, m.prefill_tokens)
+        };
+        let serial = run(1);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(run(threads), serial,
+                       "wave with {threads} workers diverged");
+        }
     }
 
     #[test]

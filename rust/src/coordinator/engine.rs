@@ -11,10 +11,11 @@
 //! copy-on-write at the first divergent append.
 
 use crate::int_model::kv_cache::{
-    IntKvCache, PagePool, PoolStats, SharedPagePool,
+    lock_pool, IntKvCache, PagePool, PoolStats, SharedPagePool,
 };
 use crate::int_model::IntModel;
 use crate::nn::FpModel;
+use crate::util::lock_recover;
 use std::sync::{Arc, Mutex};
 
 /// Per-sequence decoding state owned by the coordinator.
@@ -23,7 +24,11 @@ pub enum SeqState {
     Fp { tokens: Vec<u16> },
 }
 
-pub trait Engine: Send {
+/// `Send + Sync` because the batcher's decode wave shares one engine
+/// reference across its worker threads (per-sequence state stays
+/// exclusive to one worker; engines only share immutable weights and
+/// internally-locked pools).
+pub trait Engine: Send + Sync {
     /// Max context length.
     fn max_seq(&self) -> usize;
 
@@ -31,12 +36,29 @@ pub trait Engine: Send {
     /// logits of the last prompt position).
     fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>);
 
+    /// Admission-path prefill with an explicit engine-internal
+    /// attention thread budget. Admission runs serially on the
+    /// scheduler thread, so the batcher hands it the FULL wave budget
+    /// (unlike `prefill_chunk`, which gets a per-worker share).
+    /// Defaults to `prefill` for engines without internal parallelism.
+    fn prefill_with_threads(&self, prompt: &[u16], attn_threads: usize)
+        -> (SeqState, Vec<f32>) {
+        let _ = attn_threads;
+        self.prefill(prompt)
+    }
+
     /// Continue prefilling `tokens` into an existing state (the
     /// batcher's chunked-prefill continuation); returns logits at the
-    /// last fed position. The default replays through `decode`;
-    /// engines with a true batched prefill override it.
-    fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16])
-        -> Vec<f32> {
+    /// last fed position. `attn_threads` caps the engine-INTERNAL
+    /// attention parallelism for this call: the batcher passes each
+    /// wave worker its share of the thread budget so a parallel wave
+    /// cannot multiply into wave-workers × attention-workers threads.
+    /// Engines without internal parallelism ignore it. The default
+    /// replays through `decode`; engines with a true batched prefill
+    /// override it.
+    fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16],
+                     attn_threads: usize) -> Vec<f32> {
+        let _ = attn_threads;
         let mut logits = Vec::new();
         for &t in tokens {
             logits = self.decode(state, t);
@@ -119,7 +141,14 @@ impl Engine for IntEngine {
     }
 
     fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>) {
-        let mut reg = self.prefix.lock().expect("prefix registry");
+        self.prefill_with_threads(prompt, crate::util::illm_threads())
+    }
+
+    fn prefill_with_threads(&self, prompt: &[u16], attn_threads: usize)
+        -> (SeqState, Vec<f32>) {
+        // poison-robust like the page pool: the registry only ever
+        // holds a complete snapshot or None
+        let mut reg = lock_recover(&self.prefix);
         if let Some(entry) = reg.as_ref() {
             if !prompt.is_empty() && entry.tokens == prompt {
                 // identical prompt admitted back-to-back: fork the
@@ -134,7 +163,8 @@ impl Engine for IntEngine {
         }
         let mut cache =
             IntKvCache::with_pool(&self.model, self.pool.clone());
-        let logits = self.model.prefill_batch(prompt, &mut cache);
+        let logits = self.model.prefill_batch_threads(
+            prompt, &mut cache, attn_threads.max(1));
         if !prompt.is_empty() {
             // keep a forked snapshot (shares pages with the state we
             // hand out; the snapshot replaces — and thereby frees —
@@ -148,12 +178,13 @@ impl Engine for IntEngine {
         (SeqState::Int { cache }, logits)
     }
 
-    fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16])
-        -> Vec<f32> {
+    fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16],
+                     attn_threads: usize) -> Vec<f32> {
         match state {
-            SeqState::Int { cache } => {
-                self.model.prefill_batch(tokens, cache)
-            }
+            SeqState::Int { cache } => self
+                .model
+                .prefill_batch_threads(tokens, cache,
+                                       attn_threads.max(1)),
             _ => panic!("wrong state kind"),
         }
     }
@@ -177,11 +208,11 @@ impl Engine for IntEngine {
     }
 
     fn kv_pages_used(&self) -> Option<usize> {
-        Some(self.pool.lock().expect("kv page pool").used())
+        Some(lock_pool(&self.pool).used())
     }
 
     fn pool_stats(&self) -> Option<PoolStats> {
-        Some(self.pool.lock().expect("kv page pool").stats())
+        Some(lock_pool(&self.pool).stats())
     }
 }
 
@@ -203,8 +234,8 @@ impl Engine for FpEngine {
         (SeqState::Fp { tokens: prompt.to_vec() }, logits)
     }
 
-    fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16])
-        -> Vec<f32> {
+    fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16],
+                     _attn_threads: usize) -> Vec<f32> {
         // one forward over the extended prefix — identical logits to
         // replaying the chunk through decode at 1/C the cost
         match state {

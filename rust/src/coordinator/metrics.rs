@@ -1,7 +1,11 @@
 //! Serving metrics: throughput, latency percentiles, batching and
-//! page-pool behaviour.
+//! page-pool behaviour — printable for humans (`print_summary`) and
+//! serializable for tooling (`to_json`, the payload of the benches'
+//! `BENCH_serving.json`).
 
 use crate::int_model::kv_cache::PoolStats;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 
 #[derive(Debug, Default, Clone)]
 pub struct ServeMetrics {
@@ -92,12 +96,61 @@ impl ServeMetrics {
         Self::pct(&self.latencies, 0.5)
     }
 
+    pub fn latency_p95(&self) -> f64 {
+        Self::pct(&self.latencies, 0.95)
+    }
+
     pub fn latency_p99(&self) -> f64 {
         Self::pct(&self.latencies, 0.99)
     }
 
     pub fn ttft_p50(&self) -> f64 {
         Self::pct(&self.ttfts, 0.5)
+    }
+
+    pub fn ttft_p95(&self) -> f64 {
+        Self::pct(&self.ttfts, 0.95)
+    }
+
+    /// Machine-readable snapshot of the run — throughput, latency
+    /// percentiles, batching and page-pool peaks. The serving bench
+    /// writes this (plus context like the thread count) to
+    /// `BENCH_serving.json` next to the human-readable table so the
+    /// perf trajectory can be tracked across commits.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            o.insert(k.to_string(), v);
+        };
+        put("requests", Json::Int(self.requests() as i64));
+        put("decode_tokens", Json::Int(self.decode_tokens as i64));
+        put("prefill_tokens", Json::Int(self.prefill_tokens as i64));
+        put("decode_tok_per_s", Json::Num(self.decode_tok_per_s()));
+        put("prefill_tok_per_s", Json::Num(self.prefill_tok_per_s()));
+        put("total_tok_per_s", Json::Num(self.total_tok_per_s()));
+        put("latency_p50_s", Json::Num(self.latency_p50()));
+        put("latency_p95_s", Json::Num(self.latency_p95()));
+        put("latency_p99_s", Json::Num(self.latency_p99()));
+        put("ttft_p50_s", Json::Num(self.ttft_p50()));
+        put("ttft_p95_s", Json::Num(self.ttft_p95()));
+        put("mean_occupancy", Json::Num(self.mean_occupancy()));
+        put("admission_blocks", Json::Int(self.admission_blocks as i64));
+        put("steps", Json::Int(self.steps as i64));
+        if let Some(p) = &self.pool_last {
+            let mut pj = BTreeMap::new();
+            pj.insert("used".to_string(), Json::Int(p.used as i64));
+            pj.insert("free".to_string(), Json::Int(p.free as i64));
+            pj.insert("used_peak".to_string(),
+                      Json::Int(self.pool_used_peak as i64));
+            pj.insert("shared_peak".to_string(),
+                      Json::Int(self.pool_shared_peak as i64));
+            pj.insert("cow_copies".to_string(),
+                      Json::Int(p.cow_copies as i64));
+            pj.insert("high_water".to_string(),
+                      Json::Int(p.high_water as i64));
+            put("pool", Json::Obj(pj));
+        }
+        Json::Obj(o)
     }
 
     pub fn print_summary(&self, label: &str) {
@@ -161,6 +214,32 @@ mod tests {
         m.decode_tokens = 100;
         m.decode_time_s = 2.0;
         assert!((m.decode_tok_per_s() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_snapshot_round_trips() {
+        let mut m = ServeMetrics::default();
+        m.decode_tokens = 100;
+        m.decode_time_s = 2.0;
+        m.prefill_tokens = 40;
+        m.prefill_time_s = 0.5;
+        for i in 1..=20 {
+            m.record_request(i as f64, i as f64 * 0.5);
+        }
+        m.observe_pool(&PoolStats {
+            used: 6, free: 4, shared: 2, cow_copies: 3, high_water: 10,
+        });
+        let j = m.to_json();
+        let parsed = Json::parse(&j.dump()).expect("valid json");
+        assert_eq!(parsed.get("requests").unwrap().as_i64(), Some(20));
+        let d = parsed.get("decode_tok_per_s").unwrap().as_f64().unwrap();
+        assert!((d - 50.0).abs() < 1e-9);
+        // nearest-rank p95 of 1..=20 is the 19th sample
+        let p95 = parsed.get("latency_p95_s").unwrap().as_f64().unwrap();
+        assert!((p95 - 19.0).abs() < 1e-9);
+        let pool = parsed.get("pool").expect("pool section");
+        assert_eq!(pool.get("high_water").unwrap().as_i64(), Some(10));
+        assert_eq!(pool.get("used_peak").unwrap().as_i64(), Some(6));
     }
 
     #[test]

@@ -10,9 +10,14 @@
 //! AOT PJRT executables loaded by `runtime`.
 //!
 //! Concurrency is std::thread + mpsc (the offline vendor set has no
-//! tokio); the coordinator loop owns the engine and serializes model
-//! access — on a 1-core testbed that IS the throughput-optimal design,
-//! and the batching policy (continuous batching with prefill admission
+//! tokio or rayon). The coordinator loop owns scheduling — admission,
+//! eviction, metrics — while the decode/prefill WAVE fans sequences out
+//! across `std::thread::scope` workers (`BatcherConfig::threads` /
+//! `ILLM_THREADS`): the engine's page pool narrows its lock to the
+//! per-layer K/V append phase, so concurrent sequence forwards overlap
+//! their attention compute and only interleave on short append
+//! critical sections. Results are bit-identical at every thread count;
+//! the batching policy (continuous batching with prefill admission
 //! control) is where the scheduling contribution lives.
 
 pub mod batcher;

@@ -1,5 +1,6 @@
 //! Paged integer KV cache + the serving forward paths: single-token
-//! decode (the hot loop) and multi-token batched prefill.
+//! decode (the hot loop) and multi-token batched prefill with a
+//! page-tiled, head-parallel attention kernel.
 //!
 //! # Storage layout (vLLM-style paging over integer lanes)
 //!
@@ -17,6 +18,12 @@
 //! write — either a divergent append into the tail page or a lane-scale
 //! grow that must rescale cached values in place (copy-on-write).
 //!
+//! Page DATA lives in fixed-size slabs ([`SLAB_PAGES`] pages each) that
+//! never move once created; the pool keeps them behind `Arc`s so
+//! readers can hold a [`PageSnapshot`] — a clone of the slab list —
+//! and read page contents without the pool lock (see the locking
+//! discipline below).
+//!
 //! Because the grow-only dyadic scale is per-LANE metadata (not
 //! per-value), paging does not disturb the quantization semantics: the
 //! decode-time analogue of the full-sequence path's per-head
@@ -27,40 +34,93 @@
 //! matching the dynamic-range behaviour of the paper's per-token
 //! quantization.
 //!
-//! # Batched prefill design
+//! # Tiled prefill attention
 //!
 //! `prefill_batch` runs each block's `di_linear` over all T prompt rows
 //! at once (one row-blocked GEMM instead of T GEMVs), applies RoPE per
-//! position, computes causal attention per head with
-//! `di_softmax_row(valid = pos0 + i + 1)`, merges heads with the same
-//! per-token requant as decode, and bulk-appends K/V into the cache
-//! lanes with a SINGLE scale-resolution pass: the lane scale is derived
-//! once from the chunk's extrema (`Lane::append_chunk`) instead of the
-//! per-vector grow loop. Because the rescale into lane units is
-//! monotone in the value, probing a row's min/max is exactly
-//! equivalent to probing every element, so the bulk path picks the
-//! same lane scale the token-by-token path would; appended VALUES can
-//! differ from the incremental path by one rounding step (incremental
-//! appends quantize at the then-current scale and re-round on each
-//! grow). The equivalence contract — same lane lengths/scales, same
-//! next-token argmax, logits within a requant step — is enforced by
-//! `tests/serving.rs::batched_prefill_matches_decode_replay`, which
-//! also proves paging preserves the pre-paging lane scales.
+//! position, bulk-appends K/V into the cache lanes with a SINGLE
+//! scale-resolution pass (`Lane::append_chunk`; the lane scale derives
+//! from the chunk extrema — monotone, so probing row min/max equals
+//! probing every element), and then attends with the PAGE-TILED kernel
+//! in `attend_head`: the tile is one 16-token K/V page crossed with the
+//! chunk's score rows. Pages iterate OUTERMOST and rows innermost, so
+//! each page is read once per head instead of once per score row — the
+//! row-at-a-time path streamed the whole K (then V) lane through cache
+//! for every row, `O(T)` passes over `O(S·hd)` bytes; the tiled path
+//! makes one pass. Scores and probabilities live in a (T, S) scratch
+//! matrix and the causal softmax runs batched (`di_softmax_rows`, one
+//! exact `di_softmax_row` per score row). Integer accumulation is
+//! exact under reordering, so the tiled kernel is BIT-IDENTICAL to the
+//! row-at-a-time reference (`prefill_batch_rowwise`, kept as the
+//! equivalence oracle and enforced by `tests/proptests.rs` and
+//! `tests/serving.rs`). Attention scratch ([`AttnScratch`]) is owned
+//! by the cache, so repeated prefill/decode calls reuse buffers
+//! instead of reallocating per call.
+//!
+//! With `ILLM_THREADS > 1` (or an explicit count through
+//! `prefill_batch_threads`) the attend phase fans heads out across
+//! `std::thread::scope` workers — each worker owns a contiguous head
+//! range and a private output block, merged after the join, so the
+//! threaded path is also bit-identical. Decode keeps its single-row
+//! attention serial per sequence (one row of work cannot amortize a
+//! spawn); decode parallelism is per-SEQUENCE, in the coordinator's
+//! batcher wave.
+//!
+//! # Locking discipline (who may hold the pool lock, and for how long)
+//!
+//! The `Mutex` in [`SharedPagePool`] guards allocation METADATA
+//! (refcounts, the free list, the slab list) and all page WRITES. The
+//! rules:
+//!
+//!  * The lock is held only for O(pages-touched) bookkeeping: lane
+//!    appends (including their grow/CoW page writes), fork/retain,
+//!    release-on-drop, and `stats()`. Nothing holds it across a
+//!    layer's attention, a linear, or any other O(T·S) compute —
+//!    `prefill_raw`/`decode_raw` lock once per layer for the append
+//!    phase, take a [`PageSnapshot`], and UNLOCK before attending.
+//!  * Attend phases read page data lock-free through the snapshot.
+//!    This is sound because a page is only ever written while
+//!    EXCLUSIVELY owned: writers hold both the pool lock and `&mut` on
+//!    the owning cache, and a page whose refcount exceeds 1 is never
+//!    written in place (copy-on-write first). A snapshot reader only
+//!    dereferences page ids found in its own cache's lanes, so every
+//!    page it reads is either private to it (no concurrent writer can
+//!    exist without `&mut` on the same cache) or refcount-shared (and
+//!    therefore immutable until un-shared). Cross-thread visibility of
+//!    page contents is given by the lock: all writes happen under it,
+//!    and a reader acquired it after the writes (append phase or fork)
+//!    before reading.
+//!  * Locks are acquired through [`lock_pool`], which recovers from a
+//!    poisoned mutex (critical sections restore invariants before
+//!    unlocking) — one panicked worker must not wedge every other
+//!    sequence.
+//!
+//! Narrow locks are what let different sequences run forwards
+//! concurrently: the batcher's decode wave dispatches sequences across
+//! worker threads and their per-layer append phases interleave on the
+//! lock while their attend phases overlap.
 
-use super::{dequant_logits, IntModel, NL_BITS};
+use super::{dequant_logits, Heads, IntModel, NL_BITS};
 use crate::config::Arch;
 use crate::ops::di_add::di_add;
 use crate::ops::di_matmul::{di_linear, di_linear_raw};
 use crate::ops::di_norm::di_norm;
-use crate::ops::di_softmax::di_softmax_row;
+use crate::ops::di_softmax::{di_softmax_row, di_softmax_rows};
 use crate::ops::{rdiv, requant_row};
 use crate::quant::DynQ;
 use crate::tensor::IMat;
-use std::sync::{Arc, Mutex};
+use std::cell::UnsafeCell;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Token-slots per page per lane. A page holds `PAGE_TOKENS * head_dim`
 /// values; sequences occupy `ceil(len / PAGE_TOKENS)` pages per lane.
 pub const PAGE_TOKENS: usize = 16;
+
+/// Pages per storage slab. Page data is allocated in fixed-size slabs
+/// whose addresses never move once created, so a [`PageSnapshot`] can
+/// read page contents lock-free while the pool grows new slabs
+/// underneath it.
+const SLAB_PAGES: usize = 64;
 
 /// Largest meaningful exponent gap when rescaling into lane units;
 /// beyond it the value either saturates (finer -> coarser by > 2^40:
@@ -162,16 +222,72 @@ pub struct PoolStats {
     pub high_water: usize,
 }
 
+/// One fixed-size block of page storage. Cells are `UnsafeCell` so the
+/// pool can hand out `&mut` page slices through a shared slab `Arc`.
+///
+/// # Safety
+///
+/// `Sync` is sound under the module's locking discipline: every write
+/// to a cell happens while holding the pool mutex AND `&mut` on the
+/// cache whose lane exclusively (refcount == 1) owns the page;
+/// lock-free readers ([`PageSnapshot`]) only read pages referenced by
+/// a cache they hold, which are either private to that holder or
+/// refcount-shared and therefore never written in place. Writers and
+/// readers of the same page are thus never concurrent, and the mutex
+/// (acquired by the reader after the writes) orders visibility.
+struct Slab {
+    cells: Box<[UnsafeCell<i32>]>,
+}
+
+unsafe impl Sync for Slab {}
+
+impl Slab {
+    fn new(elems: usize) -> Arc<Slab> {
+        let v: Vec<UnsafeCell<i32>> =
+            (0..elems).map(|_| UnsafeCell::new(0)).collect();
+        Arc::new(Slab { cells: v.into_boxed_slice() })
+    }
+
+    /// # Safety
+    /// Caller must guarantee no concurrent writer of `[off, off+len)`
+    /// (see the locking discipline in the module docs).
+    #[inline]
+    unsafe fn slice(&self, off: usize, len: usize) -> &[i32] {
+        debug_assert!(off + len <= self.cells.len());
+        std::slice::from_raw_parts(self.cells[off].get() as *const i32, len)
+    }
+
+    /// # Safety
+    /// Caller must guarantee exclusive access to `[off, off+len)`:
+    /// pool lock held and the page exclusively owned by the caller's
+    /// cache (refcount 1 or freshly allocated).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self, off: usize, len: usize) -> &mut [i32] {
+        debug_assert!(off + len <= self.cells.len());
+        std::slice::from_raw_parts_mut(self.cells[off].get(), len)
+    }
+}
+
+impl std::fmt::Debug for Slab {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Slab({} elems)", self.cells.len())
+    }
+}
+
 /// Fixed-size-page allocator backing every lane of every sequence on
 /// an engine. Pages are refcounted so forked caches can share a
 /// prompt prefix; a free list recycles pages the moment a sequence is
-/// dropped.
+/// dropped. Page data lives in [`Slab`]s shared with [`PageSnapshot`]
+/// readers; the pool itself (metadata + writes) sits behind the
+/// [`SharedPagePool`] mutex.
 #[derive(Debug)]
 pub struct PagePool {
     /// values per page (= PAGE_TOKENS * head_dim)
     page_elems: usize,
-    /// page storage, page `id` at `id * page_elems ..`
-    data: Vec<i32>,
+    /// page storage; page `id` lives in slab `id / SLAB_PAGES` at
+    /// element offset `(id % SLAB_PAGES) * page_elems`
+    slabs: Vec<Arc<Slab>>,
     /// per-page refcount; 0 = on the free list
     refcnt: Vec<u32>,
     free: Vec<u32>,
@@ -182,11 +298,18 @@ pub struct PagePool {
 /// Handle shared by an engine and every cache it creates.
 pub type SharedPagePool = Arc<Mutex<PagePool>>;
 
+/// Poison-robust pool lock: every pool critical section restores its
+/// invariants before unlocking, so recovering a poisoned guard is safe
+/// — and one panicked worker must not wedge every other sequence.
+pub(crate) fn lock_pool(pool: &SharedPagePool) -> MutexGuard<'_, PagePool> {
+    crate::util::lock_recover(&**pool)
+}
+
 impl PagePool {
     pub fn new(hd: usize) -> PagePool {
         PagePool {
             page_elems: PAGE_TOKENS * hd,
-            data: Vec::new(),
+            slabs: Vec::new(),
             refcnt: Vec::new(),
             free: Vec::new(),
             cow_copies: 0,
@@ -217,6 +340,22 @@ impl PagePool {
         }
     }
 
+    /// Refresh a cached snapshot in place. Slabs are append-only and
+    /// never replaced, so only the new tail needs cloning — O(1) when
+    /// the pool did not grow, which makes per-layer refreshes in the
+    /// decode hot loop free instead of re-cloning the whole slab list.
+    /// The snapshot must always track the SAME pool (a cache's scratch
+    /// snapshot does: caches never change pools).
+    pub(crate) fn refresh_snapshot(&self, snap: &mut PageSnapshot) {
+        debug_assert!(snap.slabs.is_empty()
+                          || snap.page_elems == self.page_elems,
+                      "snapshot refreshed against a different pool");
+        snap.page_elems = self.page_elems;
+        for s in &self.slabs[snap.slabs.len()..] {
+            snap.slabs.push(s.clone());
+        }
+    }
+
     /// Take a zeroed page: off the free list if possible, freshly
     /// allocated otherwise. Refcount starts at 1.
     fn alloc(&mut self) -> u32 {
@@ -227,16 +366,20 @@ impl PagePool {
         let id = match self.free.pop() {
             Some(id) => {
                 if zero {
-                    let base = id as usize * self.page_elems;
-                    self.data[base..base + self.page_elems].fill(0);
+                    self.page_mut(id).fill(0);
                 }
                 self.refcnt[id as usize] = 1;
                 id
             }
             None => {
                 let id = self.refcnt.len() as u32;
+                if id as usize >= self.slabs.len() * SLAB_PAGES {
+                    self.slabs
+                        .push(Slab::new(SLAB_PAGES * self.page_elems));
+                }
+                // a never-allocated id points into zero-initialized
+                // slab storage — no fill needed
                 self.refcnt.push(1);
-                self.data.resize(self.data.len() + self.page_elems, 0);
                 id
             }
         };
@@ -277,24 +420,57 @@ impl PagePool {
     fn copy_page(&mut self, src: u32, dst: u32) {
         debug_assert!(src != dst);
         let pe = self.page_elems;
-        let (s, d) = (src as usize * pe, dst as usize * pe);
-        if s < d {
-            let (lo, hi) = self.data.split_at_mut(d);
-            hi[..pe].copy_from_slice(&lo[s..s + pe]);
-        } else {
-            let (lo, hi) = self.data.split_at_mut(s);
-            lo[d..d + pe].copy_from_slice(&hi[..pe]);
+        // distinct page ids never overlap, even within one slab, so
+        // the paired shared/mut slices are disjoint
+        unsafe {
+            let s = self.slabs[src as usize / SLAB_PAGES]
+                .slice(src as usize % SLAB_PAGES * pe, pe);
+            let d = self.slabs[dst as usize / SLAB_PAGES]
+                .slice_mut(dst as usize % SLAB_PAGES * pe, pe);
+            d.copy_from_slice(s);
         }
     }
 
+    /// Read a page through the pool itself (tests and diagnostics;
+    /// the hot paths read through [`PageSnapshot`] instead).
+    #[cfg(test)]
     fn page(&self, id: u32) -> &[i32] {
-        let base = id as usize * self.page_elems;
-        &self.data[base..base + self.page_elems]
+        let pe = self.page_elems;
+        unsafe {
+            self.slabs[id as usize / SLAB_PAGES]
+                .slice(id as usize % SLAB_PAGES * pe, pe)
+        }
     }
 
     fn page_mut(&mut self, id: u32) -> &mut [i32] {
-        let base = id as usize * self.page_elems;
-        &mut self.data[base..base + self.page_elems]
+        let pe = self.page_elems;
+        unsafe {
+            self.slabs[id as usize / SLAB_PAGES]
+                .slice_mut(id as usize % SLAB_PAGES * pe, pe)
+        }
+    }
+}
+
+/// Lock-free read view of the pool's page storage (a clone of the
+/// `Arc`'d slab list). Taken under the pool lock at the end of a
+/// layer's append phase; the attend phase then reads K/V pages through
+/// it without holding any lock. A holder may only read pages whose
+/// ids it found in a cache it holds a reference to — those pages are
+/// never written concurrently (see the module docs).
+#[derive(Debug, Default)]
+pub(crate) struct PageSnapshot {
+    slabs: Vec<Arc<Slab>>,
+    page_elems: usize,
+}
+
+impl PageSnapshot {
+    #[inline]
+    fn page(&self, id: u32) -> &[i32] {
+        let pe = self.page_elems;
+        unsafe {
+            self.slabs[id as usize / SLAB_PAGES]
+                .slice(id as usize % SLAB_PAGES * pe, pe)
+        }
     }
 }
 
@@ -446,7 +622,7 @@ impl Lane {
     /// Bulk-append one head's (T, hd) block of centered vectors with
     /// per-row scales (ms[r], ks[r]): resolve the lane scale ONCE from
     /// the chunk extrema, then write every row at the final scale.
-    fn append_chunk(&mut self, pool: &mut PagePool, heads: &super::Heads,
+    fn append_chunk(&mut self, pool: &mut PagePool, heads: &Heads,
                     head: usize, ms: &[i32], ks: &[i32]) {
         let (t, hd) = (heads.t, heads.hd);
         if t == 0 {
@@ -497,9 +673,32 @@ impl Lane {
     }
 }
 
+/// Reusable attention scratch owned by a cache: score/probability
+/// tiles, the softmax exp buffer, per-layer PV accumulators and the
+/// decode-path centered q/k/v rows. Keeping it in the cache means
+/// repeated `prefill_raw`/`decode_raw` calls reuse capacity instead of
+/// reallocating per call (threaded attend workers keep private
+/// per-spawn buffers instead — their lifetime is one layer).
+#[derive(Debug, Default)]
+struct AttnScratch {
+    scores: Vec<i64>,
+    probs: Vec<i32>,
+    exp: Vec<i64>,
+    o_raw: Vec<i64>,
+    vms: Vec<i32>,
+    vks: Vec<i32>,
+    qrow: Vec<i64>,
+    krow: Vec<i64>,
+    vrow: Vec<i64>,
+    /// cached storage snapshot, refreshed incrementally under the
+    /// pool lock each append phase (slabs are append-only, so the
+    /// refresh is O(1) when the pool did not grow)
+    snap: PageSnapshot,
+}
+
 /// Integer KV cache for one sequence: page tables per (layer, head)
 /// lane over a pool shared with the engine (or private, when built
-/// with [`IntKvCache::new`]).
+/// with [`IntKvCache::new`]), plus the sequence's attention scratch.
 #[derive(Debug)]
 pub struct IntKvCache {
     k: Vec<Lane>,
@@ -507,6 +706,7 @@ pub struct IntKvCache {
     pool: SharedPagePool,
     n_heads: usize,
     hd: usize,
+    scratch: AttnScratch,
     pub pos: usize,
 }
 
@@ -523,7 +723,7 @@ impl IntKvCache {
         let cfg = &model.cfg;
         let lanes = cfg.n_layers * cfg.n_heads;
         {
-            let p = pool.lock().expect("kv page pool");
+            let p = lock_pool(&pool);
             assert_eq!(p.page_elems(), PAGE_TOKENS * cfg.head_dim(),
                        "pool page size does not match model head_dim");
         }
@@ -533,6 +733,7 @@ impl IntKvCache {
             pool,
             n_heads: cfg.n_heads,
             hd: cfg.head_dim(),
+            scratch: AttnScratch::default(),
             pos: 0,
         }
     }
@@ -541,7 +742,7 @@ impl IntKvCache {
     /// the prefix-sharing primitive. O(pages) bookkeeping, no copies.
     pub fn fork(&self) -> IntKvCache {
         let pool = self.pool.clone();
-        let mut guard = pool.lock().expect("kv page pool");
+        let mut guard = lock_pool(&pool);
         let k = self.k.iter().map(|l| l.fork(&mut guard)).collect();
         let v = self.v.iter().map(|l| l.fork(&mut guard)).collect();
         drop(guard);
@@ -551,6 +752,7 @@ impl IntKvCache {
             pool,
             n_heads: self.n_heads,
             hd: self.hd,
+            scratch: AttnScratch::default(),
             pos: self.pos,
         }
     }
@@ -577,7 +779,7 @@ impl IntKvCache {
 
     /// Stats of the pool backing this cache.
     pub fn pool_stats(&self) -> PoolStats {
-        self.pool.lock().expect("kv page pool").stats()
+        lock_pool(&self.pool).stats()
     }
 }
 
@@ -595,10 +797,7 @@ impl Drop for IntKvCache {
     /// whim.
     fn drop(&mut self) {
         let pool = self.pool.clone();
-        let mut guard = match pool.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
+        let mut guard = lock_pool(&pool);
         for lane in self.k.iter_mut().chain(self.v.iter_mut()) {
             lane.release(&mut guard);
         }
@@ -610,12 +809,13 @@ impl IntModel {
     /// against the first `valid` K entries, DI-ClippedSoftmax, then
     /// probability-weighted V accumulation into `orow` (raw, at scale
     /// lane_v.m / 2^(lane_v.k + softmax_bits - 1)). Shared by decode
-    /// and batched prefill so their attention semantics cannot drift.
-    /// Walks the K and V page tables page-wise for locality.
+    /// and the row-at-a-time prefill reference so their attention
+    /// semantics cannot drift. Walks the K and V page tables page-wise
+    /// through the lock-free snapshot.
     #[allow(clippy::too_many_arguments)]
     fn attend_row(
         &self,
-        pool: &PagePool,
+        snap: &PageSnapshot,
         lane_k: &Lane,
         lane_v: &Lane,
         qrow: &[i64],
@@ -631,7 +831,7 @@ impl IntModel {
         scores.resize(valid, 0);
         let mut j = 0;
         'k_pages: for &pid in &lane_k.pages {
-            let pdata = pool.page(pid);
+            let pdata = snap.page(pid);
             for slot in 0..PAGE_TOKENS {
                 if j >= valid {
                     break 'k_pages;
@@ -660,7 +860,7 @@ impl IntModel {
         );
         let mut j = 0;
         'v_pages: for &pid in &lane_v.pages {
-            let pdata = pool.page(pid);
+            let pdata = snap.page(pid);
             for slot in 0..PAGE_TOKENS {
                 if j >= valid {
                     break 'v_pages;
@@ -675,6 +875,131 @@ impl IntModel {
                     *o += p as i64 * vv as i64;
                 }
             }
+        }
+    }
+
+    /// One head's attention over a prefill chunk of `qh.t` rows at
+    /// positions `pos0..pos0+t`, into `out` — row `i`'s hd-wide slice
+    /// starts at `out[i * stride]` (stride lets the serial path write
+    /// the head-interleaved `o_raw` directly and workers write compact
+    /// private blocks). `rowwise` selects the pre-tiling reference
+    /// kernel; both paths are bit-identical (integer accumulation is
+    /// exact under reordering).
+    ///
+    /// The tiled kernel is the whole point of this module's layout:
+    /// pages iterate OUTERMOST, so every 16-token K/V page is read
+    /// once per head instead of once per score row.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_head(
+        &self,
+        snap: &PageSnapshot,
+        lane_k: &Lane,
+        lane_v: &Lane,
+        qh: &Heads,
+        head: usize,
+        qm: &[i32],
+        qk: &[i32],
+        pos0: usize,
+        rowwise: bool,
+        out: &mut [i64],
+        stride: usize,
+        scores: &mut Vec<i64>,
+        probs: &mut Vec<i32>,
+        exp: &mut Vec<i64>,
+    ) {
+        let (t, hd) = (qh.t, qh.hd);
+        if rowwise {
+            for i in 0..t {
+                let valid = pos0 + i + 1;
+                self.attend_row(
+                    snap,
+                    lane_k,
+                    lane_v,
+                    qh.head_row(i, head),
+                    qm[i],
+                    qk[i],
+                    valid,
+                    hd,
+                    &mut out[i * stride..i * stride + hd],
+                    scores,
+                    probs,
+                    exp,
+                );
+            }
+            return;
+        }
+        // ---- page-tiled kernel: pages outermost, rows innermost ----
+        let s_total = pos0 + t;
+        debug_assert_eq!(lane_k.n_tokens(), s_total);
+        debug_assert_eq!(lane_v.n_tokens(), s_total);
+        // (t, s_total) tiles; cells past a row's causal prefix are
+        // never read (the softmax zeroes the probs tail), so a plain
+        // resize without a refill is enough
+        scores.resize(t * s_total, 0);
+        probs.resize(t * s_total, 0);
+        let mut j0 = 0usize;
+        for &pid in &lane_k.pages {
+            if j0 >= s_total {
+                break;
+            }
+            let pdata = snap.page(pid);
+            let page_toks = (s_total - j0).min(PAGE_TOKENS);
+            // rows attending any of this page's tokens: causal row i
+            // attends token j iff j < pos0 + i + 1, so i >= j0 - pos0;
+            // the page stays hot across all of them and each row's
+            // scores land contiguously
+            for i in j0.saturating_sub(pos0)..t {
+                let in_page = page_toks.min(pos0 + i + 1 - j0);
+                let qrow = qh.head_row(i, head);
+                let srow = &mut scores
+                    [i * s_total + j0..i * s_total + j0 + in_page];
+                for (slot, sj) in srow.iter_mut().enumerate() {
+                    let krow = &pdata[slot * hd..(slot + 1) * hd];
+                    let mut acc = 0i64;
+                    for (a, &b) in qrow.iter().zip(krow.iter()) {
+                        acc += a * b as i64;
+                    }
+                    *sj = acc;
+                }
+            }
+            j0 += page_toks;
+        }
+        di_softmax_rows(
+            scores,
+            s_total,
+            qm,
+            qk,
+            lane_k.m,
+            lane_k.k,
+            self.scheme.softmax_bits,
+            self.scheme.clip,
+            pos0 + 1,
+            probs,
+            exp,
+        );
+        let mut j0 = 0usize;
+        for &pid in &lane_v.pages {
+            if j0 >= s_total {
+                break;
+            }
+            let pdata = snap.page(pid);
+            let page_toks = (s_total - j0).min(PAGE_TOKENS);
+            for i in j0.saturating_sub(pos0)..t {
+                let in_page = page_toks.min(pos0 + i + 1 - j0);
+                let prow = &probs
+                    [i * s_total + j0..i * s_total + j0 + in_page];
+                let orow = &mut out[i * stride..i * stride + hd];
+                for (slot, &p) in prow.iter().enumerate() {
+                    if p == 0 {
+                        continue;
+                    }
+                    let vrow = &pdata[slot * hd..(slot + 1) * hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                        *o += p as i64 * vv as i64;
+                    }
+                }
+            }
+            j0 += page_toks;
         }
     }
 
@@ -730,8 +1055,8 @@ impl IntModel {
 
     /// Prefill: run the integer forward over the whole prompt and
     /// populate the cache; returns last-position logits. Delegates to
-    /// the batched path — one GEMM per linear instead of a per-token
-    /// `decode_one` replay.
+    /// the batched tiled path — one GEMM per linear instead of a
+    /// per-token `decode_one` replay.
     pub fn prefill(&self, tokens: &[u16], cache: &mut IntKvCache)
         -> Vec<f32> {
         self.prefill_batch(tokens, cache)
@@ -749,14 +1074,40 @@ impl IntModel {
         last
     }
 
-    /// Batched prefill: one forward over all T prompt rows, appending
-    /// K/V per head in bulk. Returns last-position logits.
+    /// Batched prefill (page-tiled attention; `ILLM_THREADS` attend
+    /// workers): one forward over all T prompt rows, appending K/V per
+    /// head in bulk. Returns last-position logits.
     pub fn prefill_batch(&self, tokens: &[u16], cache: &mut IntKvCache)
         -> Vec<f32> {
+        self.prefill_batch_opts(tokens, cache,
+                                crate::util::illm_threads(), false)
+    }
+
+    /// Tiled batched prefill with an explicit attention-worker count.
+    /// Bit-identical at every count (threads change scheduling, never
+    /// arithmetic) — equivalence tests pin 1 vs N without touching the
+    /// `ILLM_THREADS` environment.
+    pub fn prefill_batch_threads(&self, tokens: &[u16],
+                                 cache: &mut IntKvCache, threads: usize)
+        -> Vec<f32> {
+        self.prefill_batch_opts(tokens, cache, threads, false)
+    }
+
+    /// Row-at-a-time reference prefill (the pre-tiling kernel, reading
+    /// every K/V page once per score row): the bit-exactness oracle
+    /// for the tiled kernel and the "before" side of the locality
+    /// benchmarks.
+    pub fn prefill_batch_rowwise(&self, tokens: &[u16],
+                                 cache: &mut IntKvCache) -> Vec<f32> {
+        self.prefill_batch_opts(tokens, cache, 1, true)
+    }
+
+    fn prefill_batch_opts(&self, tokens: &[u16], cache: &mut IntKvCache,
+                          threads: usize, rowwise: bool) -> Vec<f32> {
         if tokens.is_empty() {
             return Vec::new();
         }
-        let raw = self.prefill_raw(tokens, cache);
+        let raw = self.prefill_raw(tokens, cache, threads, rowwise);
         let logits = dequant_logits(&raw);
         logits.row(logits.rows - 1).to_vec()
     }
@@ -766,8 +1117,13 @@ impl IntModel {
     /// accumulators of the LAST position only (prefill never needs the
     /// other rows' logits, and the vocab matmul dominates short-prompt
     /// cost).
-    fn prefill_raw(&self, tokens: &[u16], cache: &mut IntKvCache)
-        -> crate::ops::RawRows {
+    ///
+    /// Per layer: a SHORT locked append phase (bulk K/V append for all
+    /// heads + a storage snapshot), then a lock-free attend phase over
+    /// the snapshot — tiled by default, optionally fanned out over
+    /// `threads` head-parallel scoped workers.
+    fn prefill_raw(&self, tokens: &[u16], cache: &mut IntKvCache,
+                   threads: usize, rowwise: bool) -> crate::ops::RawRows {
         let cfg = &self.cfg;
         let centered = cfg.arch == Arch::Opt;
         let a_bits = self.scheme.a_bits;
@@ -783,11 +1139,11 @@ impl IntModel {
             x = di_add(&x, &p, NL_BITS);
         }
         let rotate = cfg.arch == Arch::Llama;
-        let pool_arc = cache.pool.clone();
-        let mut pool = pool_arc.lock().expect("kv page pool");
-        let mut scores: Vec<i64> = Vec::new();
-        let mut probs: Vec<i32> = Vec::new();
-        let mut scratch: Vec<i64> = Vec::new();
+        let nt = threads.clamp(1, h);
+        let IntKvCache { k: k_lanes, v: v_lanes, pool, scratch, .. } =
+            &mut *cache;
+        let AttnScratch { scores, probs, exp, o_raw, vms, vks, snap, .. } =
+            scratch;
         for (li, layer) in self.layers.iter().enumerate() {
             let hh = di_norm(&x, a_bits, centered);
             let q = di_linear(&hh, &layer.wq, a_bits);
@@ -796,45 +1152,119 @@ impl IntModel {
             let qh = self.center_rope(&q, pos0, rotate);
             let kh = self.center_rope(&k, pos0, rotate);
             let vh = self.center_rope(&v, 0, false);
-            // per-head: bulk K/V append, then causal attention rows
-            let mut o_raw = vec![0i64; t * h * hd];
-            let mut vks = vec![0i32; h];
-            let mut vms = vec![0i32; h];
+            // ---- short locked phase: bulk K/V append + snapshot
+            // refresh; the pool lock is never held across attention ----
+            {
+                let mut guard = lock_pool(pool);
+                for head in 0..h {
+                    let idx = li * h + head;
+                    k_lanes[idx].append_chunk(&mut guard, &kh, head,
+                                              &k.m, &k.k);
+                    v_lanes[idx].append_chunk(&mut guard, &vh, head,
+                                              &v.m, &v.k);
+                }
+                guard.refresh_snapshot(snap);
+            }
+            let snap: &PageSnapshot = snap;
+            // lane metadata for the merge (cache-owned, no lock needed)
+            vms.clear();
+            vks.clear();
             for head in 0..h {
-                let idx = li * h + head;
-                cache.k[idx].append_chunk(&mut pool, &kh, head,
-                                          &k.m, &k.k);
-                cache.v[idx].append_chunk(&mut pool, &vh, head,
-                                          &v.m, &v.k);
-                let lane_k = &cache.k[idx];
-                let lane_v = &cache.v[idx];
-                vms[head] = lane_v.m;
-                vks[head] = lane_v.k;
-                for i in 0..t {
-                    let valid = pos0 + i + 1;
-                    let orow = &mut o_raw
-                        [i * h * hd + head * hd
-                            ..i * h * hd + (head + 1) * hd];
-                    self.attend_row(
-                        &pool,
-                        lane_k,
-                        lane_v,
-                        qh.head_row(i, head),
-                        q.m[i],
-                        q.k[i],
-                        valid,
-                        hd,
-                        orow,
-                        &mut scores,
-                        &mut probs,
-                        &mut scratch,
+                let lane_v = &v_lanes[li * h + head];
+                vms.push(lane_v.m);
+                vks.push(lane_v.k);
+            }
+            // ---- lock-free attend phase over the snapshot ----
+            o_raw.clear();
+            o_raw.resize(t * h * hd, 0);
+            if nt <= 1 {
+                for head in 0..h {
+                    let idx = li * h + head;
+                    self.attend_head(
+                        snap,
+                        &k_lanes[idx],
+                        &v_lanes[idx],
+                        &qh,
+                        head,
+                        &q.m,
+                        &q.k,
+                        pos0,
+                        rowwise,
+                        &mut o_raw[head * hd..],
+                        h * hd,
+                        scores,
+                        probs,
+                        exp,
                     );
                 }
+            } else {
+                // head-parallel attend: each worker owns a contiguous
+                // head range and a private compact output block,
+                // scattered into the head-interleaved o_raw after the
+                // join — bit-identical to the serial loop
+                let k_ref: &[Lane] = k_lanes;
+                let v_ref: &[Lane] = v_lanes;
+                let qh_ref = &qh;
+                let snap_ref: &PageSnapshot = snap;
+                let (qm, qk) = (&q.m[..], &q.k[..]);
+                let hc = h.div_ceil(nt);
+                let parts: Vec<(usize, usize, Vec<i64>)> =
+                    std::thread::scope(|s| {
+                        let mut handles = Vec::new();
+                        let mut h0 = 0usize;
+                        while h0 < h {
+                            let h1 = (h0 + hc).min(h);
+                            handles.push(s.spawn(move || {
+                                let mut out =
+                                    vec![0i64; (h1 - h0) * t * hd];
+                                let mut sc: Vec<i64> = Vec::new();
+                                let mut pr: Vec<i32> = Vec::new();
+                                let mut ex: Vec<i64> = Vec::new();
+                                for head in h0..h1 {
+                                    let idx = li * h + head;
+                                    self.attend_head(
+                                        snap_ref,
+                                        &k_ref[idx],
+                                        &v_ref[idx],
+                                        qh_ref,
+                                        head,
+                                        qm,
+                                        qk,
+                                        pos0,
+                                        rowwise,
+                                        &mut out[(head - h0) * t * hd..],
+                                        hd,
+                                        &mut sc,
+                                        &mut pr,
+                                        &mut ex,
+                                    );
+                                }
+                                (h0, h1, out)
+                            }));
+                            h0 = h1;
+                        }
+                        handles
+                            .into_iter()
+                            .map(|w| w.join().expect("attention worker"))
+                            .collect()
+                    });
+                for (h0, h1, part) in parts {
+                    for head in h0..h1 {
+                        let base = (head - h0) * t * hd;
+                        for i in 0..t {
+                            o_raw[i * h * hd + head * hd
+                                ..i * h * hd + (head + 1) * hd]
+                                .copy_from_slice(
+                                    &part[base + i * hd
+                                        ..base + (i + 1) * hd],
+                                );
+                        }
+                    }
+                }
             }
-            let att = self.merge_heads(&o_raw, t, &vms, &vks);
+            let att = self.merge_heads(o_raw, t, vms, vks);
             x = self.layer_tail(&x, &att, layer);
         }
-        drop(pool);
         cache.pos += t;
         // final norm + lm_head on the LAST row only
         let last = DynQ {
@@ -856,6 +1286,12 @@ impl IntModel {
         logits.row(0).to_vec()
     }
 
+    /// Single-token forward. Same locking shape as `prefill_raw`: per
+    /// layer, a short locked append phase (one K and V row per head)
+    /// and a lock-free attend phase over a storage snapshot. The
+    /// attention itself stays serial per sequence — one score row per
+    /// head cannot amortize a thread spawn; decode parallelism is per
+    /// SEQUENCE in the batcher's wave.
     fn decode_raw(&self, token: u16, cache: &mut IntKvCache)
         -> crate::ops::RawRows {
         let cfg = &self.cfg;
@@ -869,80 +1305,90 @@ impl IntModel {
             let p = pe.gather(&[pos]);
             x = di_add(&x, &p, NL_BITS);
         }
-        let pool_arc = cache.pool.clone();
-        let mut pool = pool_arc.lock().expect("kv page pool");
-        let mut scores: Vec<i64> = Vec::new();
-        let mut probs: Vec<i32> = Vec::new();
-        let mut scratch: Vec<i64> = Vec::new();
+        let rotate = cfg.arch == Arch::Llama;
+        let IntKvCache { k: k_lanes, v: v_lanes, pool, scratch, .. } =
+            &mut *cache;
+        let AttnScratch { scores, probs, exp, o_raw, vms, vks, qrow,
+                          krow, vrow, snap } = scratch;
         for (li, layer) in self.layers.iter().enumerate() {
             let hh = di_norm(&x, a_bits, centered);
             let q = di_linear(&hh, &layer.wq, a_bits);
             let k = di_linear(&hh, &layer.wk, a_bits);
             let v = di_linear(&hh, &layer.wv, a_bits);
-            // center + rope (single row)
-            let rotate = cfg.arch == Arch::Llama;
-            let qh = self.center_rope_row(&q, pos, rotate);
-            let kh = self.center_rope_row(&k, pos, rotate);
-            let vh = self.center_rope_row(&v, 0, false);
-            // append to cache, then attend over the lane
-            let mut o_raw = vec![0i64; h * hd];
-            let mut vks = vec![0i32; h];
-            let mut vms = vec![0i32; h];
+            // center + rope (single row, into reusable scratch)
+            self.center_rope_row_into(&q, pos, rotate, qrow);
+            self.center_rope_row_into(&k, pos, rotate, krow);
+            self.center_rope_row_into(&v, 0, false, vrow);
+            // ---- short locked phase: append K/V, refresh the cached
+            // storage snapshot (O(1) unless the pool grew a slab).
+            // Appending V before the softmax is equivalent: scores
+            // never read the V lane, and the PV loop covers the new
+            // entry either way. ----
+            {
+                let mut guard = lock_pool(pool);
+                for head in 0..h {
+                    let idx = li * h + head;
+                    k_lanes[idx].append(
+                        &mut guard,
+                        &krow[head * hd..(head + 1) * hd],
+                        k.m[0], k.k[0], hd);
+                    v_lanes[idx].append(
+                        &mut guard,
+                        &vrow[head * hd..(head + 1) * hd],
+                        v.m[0], v.k[0], hd);
+                }
+                guard.refresh_snapshot(snap);
+            }
+            // ---- lock-free attend over the snapshot ----
+            o_raw.clear();
+            o_raw.resize(h * hd, 0);
+            vms.clear();
+            vks.clear();
             for head in 0..h {
-                // append K and V first (appending V before the softmax
-                // is equivalent: scores never read the V lane, and the
-                // PV loop already covered the new entry)
                 let idx = li * h + head;
-                cache.k[idx].append(
-                    &mut pool,
-                    &kh[head * hd..(head + 1) * hd], k.m[0], k.k[0], hd);
-                cache.v[idx].append(
-                    &mut pool,
-                    &vh[head * hd..(head + 1) * hd], v.m[0], v.k[0], hd);
-                let lane_k = &cache.k[idx];
-                let lane_v = &cache.v[idx];
-                vms[head] = lane_v.m;
-                vks[head] = lane_v.k;
+                let lane_k = &k_lanes[idx];
+                let lane_v = &v_lanes[idx];
+                vms.push(lane_v.m);
+                vks.push(lane_v.k);
                 let len = lane_k.n_tokens();
                 self.attend_row(
-                    &pool,
+                    snap,
                     lane_k,
                     lane_v,
-                    &qh[head * hd..(head + 1) * hd],
+                    &qrow[head * hd..(head + 1) * hd],
                     q.m[0],
                     q.k[0],
                     len,
                     hd,
                     &mut o_raw[head * hd..(head + 1) * hd],
-                    &mut scores,
-                    &mut probs,
-                    &mut scratch,
+                    scores,
+                    probs,
+                    exp,
                 );
             }
-            let att = self.merge_heads(&o_raw, 1, &vms, &vks);
+            let att = self.merge_heads(o_raw, 1, vms, vks);
             x = self.layer_tail(&x, &att, layer);
         }
-        drop(pool);
         cache.pos += 1;
         let hf = di_norm(&x, NL_BITS, centered);
         di_linear_raw(&hf, &self.lm_head)
     }
 
-    /// Center + rotate a single-row qkv output; returns (H*hd,) i64.
-    fn center_rope_row(&self, x: &DynQ, pos: usize, rotate: bool)
-        -> Vec<i64> {
+    /// Center + rotate a single-row qkv output into `out` (H*hd,) i64,
+    /// reusing the buffer's capacity.
+    fn center_rope_row_into(&self, x: &DynQ, pos: usize, rotate: bool,
+                            out: &mut Vec<i64>) {
         let h = self.cfg.n_heads;
         let hd = self.cfg.head_dim();
         let zp = x.zp[0] as i64;
-        let mut out: Vec<i64> =
-            x.vals.row(0).iter().map(|&v| v as i64 - zp).collect();
+        out.clear();
+        out.extend(x.vals.row(0).iter().map(|&v| v as i64 - zp));
         if rotate {
             let tables = self.rope.as_ref().expect("rope tables");
             for head in 0..h {
                 tables.rotate(&mut out[head * hd..(head + 1) * hd], pos);
             }
         }
-        out
     }
 }
 
@@ -978,6 +1424,63 @@ mod tests {
         pool.release(a);
         pool.release(d);
         assert_eq!(pool.used(), 0);
+    }
+
+    /// Slab-backed storage: page contents read through a snapshot (the
+    /// lock-free attend view) match pool reads, across slab
+    /// boundaries; the incremental refresh picks up new slabs and is
+    /// a no-op (no re-cloning) when the pool did not grow.
+    #[test]
+    fn snapshot_reads_match_pool_reads_across_slabs() {
+        let mut pool = PagePool::new(2);
+        let n = SLAB_PAGES + 3; // forces a second slab
+        let ids: Vec<u32> = (0..n).map(|_| pool.alloc()).collect();
+        for (i, &id) in ids.iter().enumerate() {
+            for (c, v) in pool.page_mut(id).iter_mut().enumerate() {
+                *v = (i * 1000 + c) as i32;
+            }
+        }
+        assert_eq!(pool.slabs.len(), 2);
+        let mut snap = PageSnapshot::default();
+        pool.refresh_snapshot(&mut snap);
+        assert_eq!(snap.slabs.len(), 2);
+        // growing the pool after the refresh must not disturb the view
+        let extra: Vec<u32> =
+            (0..SLAB_PAGES).map(|_| pool.alloc()).collect();
+        assert_eq!(pool.slabs.len(), 3);
+        for (i, &id) in ids.iter().enumerate() {
+            assert_eq!(snap.page(id), pool.page(id), "page {id}");
+            assert_eq!(snap.page(id)[0], (i * 1000) as i32);
+        }
+        // incremental refresh: only the new tail slab is cloned, and
+        // the refreshed view covers the new pages
+        pool.refresh_snapshot(&mut snap);
+        assert_eq!(snap.slabs.len(), 3);
+        assert_eq!(snap.page(extra[0]), pool.page(extra[0]));
+        for id in ids.into_iter().chain(extra) {
+            pool.release(id);
+        }
+        assert_eq!(pool.used(), 0);
+    }
+
+    /// The poison satellite: a worker that panics while holding the
+    /// pool lock must not wedge every other sequence — `lock_pool`
+    /// recovers the guard and the pool keeps functioning.
+    #[test]
+    fn pool_lock_recovers_from_poison() {
+        let pool = PagePool::shared(4);
+        let p2 = pool.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = p2.lock().unwrap();
+            panic!("poison the kv pool lock");
+        })
+        .join();
+        assert!(pool.lock().is_err(), "lock must be poisoned");
+        let mut g = lock_pool(&pool);
+        let id = g.alloc();
+        assert_eq!(g.used(), 1);
+        g.release(id);
+        assert_eq!(g.used(), 0);
     }
 
     #[test]

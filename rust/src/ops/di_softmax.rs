@@ -95,6 +95,50 @@ pub fn di_softmax_row(
     }
 }
 
+/// Causal batched variant of [`di_softmax_row`] for the page-tiled
+/// prefill kernel: row `r` of `scores` (row stride `stride`) carries
+/// its own per-token input scale `(m1[r], k1[r])` and a causal valid
+/// prefix of `valid0 + r` entries (row 0 attends `valid0` tokens, each
+/// later row one more); all rows share the K-side lane scale
+/// `(m2, k2)`. Probabilities land at the same stride in `out`, with
+/// every entry past a row's valid prefix forced to zero. Each row is
+/// the exact [`di_softmax_row`] computation — the batched form exists
+/// so the tiled kernel stays bit-identical to the row-at-a-time path —
+/// and one scratch buffer serves all rows (no per-row allocation).
+#[allow(clippy::too_many_arguments)]
+pub fn di_softmax_rows(
+    scores: &[i64],
+    stride: usize,
+    m1: &[i32],
+    k1: &[i32],
+    m2: i32,
+    k2: i32,
+    p_out: u32,
+    clip: Option<(i32, i32)>,
+    valid0: usize,
+    out: &mut [i32],
+    scratch: &mut Vec<i64>,
+) {
+    let t = m1.len();
+    debug_assert_eq!(k1.len(), t);
+    debug_assert!(scores.len() >= t * stride, "scores too small");
+    debug_assert!(out.len() >= t * stride, "out too small");
+    for r in 0..t {
+        di_softmax_row(
+            &scores[r * stride..(r + 1) * stride],
+            m1[r],
+            k1[r],
+            m2,
+            k2,
+            p_out,
+            clip,
+            (valid0 + r).min(stride),
+            &mut out[r * stride..(r + 1) * stride],
+            scratch,
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +198,38 @@ mod tests {
         assert_eq!(out[3], 0);
         assert!(out[0] > 0 && out[1] > 0, "{out:?}");
         assert!(out[1] > out[0]);
+    }
+
+    /// The batched causal variant must be the per-row kernel applied
+    /// row by row — bit for bit, including the zeroed causal suffix.
+    #[test]
+    fn batched_rows_match_per_row_calls() {
+        let (t, stride) = (5usize, 12usize);
+        let valid0 = 3usize; // row r attends 3 + r tokens
+        let mut scores = vec![0i64; t * stride];
+        for (i, s) in scores.iter_mut().enumerate() {
+            *s = ((i as i64 * 7919) % 40_001) - 20_000;
+        }
+        let m1: Vec<i32> = (0..t as i32).map(|r| 130 + 9 * r).collect();
+        let k1: Vec<i32> = (0..t as i32).map(|r| 11 + (r % 3)).collect();
+        let (m2, k2) = (171, 12);
+        let mut batched = vec![9i32; t * stride];
+        let mut scratch = Vec::new();
+        di_softmax_rows(&scores, stride, &m1, &k1, m2, k2, 8,
+                        Some((240, 4)), valid0, &mut batched,
+                        &mut scratch);
+        for r in 0..t {
+            let mut want = vec![0i32; stride];
+            di_softmax_row(&scores[r * stride..(r + 1) * stride], m1[r],
+                           k1[r], m2, k2, 8, Some((240, 4)), valid0 + r,
+                           &mut want, &mut scratch);
+            assert_eq!(&batched[r * stride..(r + 1) * stride], &want[..],
+                       "row {r} diverged");
+            // suffix past the causal prefix is hard zero
+            assert!(batched[r * stride + valid0 + r..(r + 1) * stride]
+                        .iter()
+                        .all(|&p| p == 0));
+        }
     }
 
     #[test]

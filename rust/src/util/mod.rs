@@ -15,6 +15,30 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (v, t0.elapsed().as_secs_f64())
 }
 
+/// Worker-thread count for the parallel attention / decode-wave paths:
+/// `ILLM_THREADS`, default 1 (serial), clamped to [1, 64]. Every thread
+/// count computes bit-identical results — threads change scheduling,
+/// never arithmetic — so this is purely a throughput knob.
+pub fn illm_threads() -> usize {
+    std::env::var("ILLM_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map_or(1, |n| n.clamp(1, 64))
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// Every critical section in this crate is short and restores its
+/// invariants before unlocking (page appends, free-list pops, registry
+/// swaps), so re-entering a poisoned lock is safe — and one crashed
+/// worker must not wedge every other sequence behind a permanent
+/// `PoisonError`.
+pub fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 /// Simple fixed-width table printer for bench outputs (paper tables).
 pub struct Table {
     header: Vec<String>,
@@ -80,5 +104,21 @@ mod tests {
         assert_eq!(fmt_ppl(5.684), "5.68");
         assert_eq!(fmt_ppl(18_000.0), "1.8e4");
         assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(7i32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock must be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
     }
 }

@@ -3,8 +3,12 @@
 //! cases). Invariants covered:
 //!
 //!  * coordinator: every request completes exactly once with the SAME
-//!    output regardless of batch size / prefill chunking / kv budget
-//!    (scheduling must not change results), occupancy <= max_batch;
+//!    output regardless of batch size / prefill chunking / kv budget /
+//!    decode-wave thread count (scheduling must not change results),
+//!    occupancy <= max_batch;
+//!  * attention kernels: the page-tiled prefill (serial and threaded)
+//!    is BIT-identical to the row-at-a-time reference across page
+//!    boundaries, at nonzero pos0, at w8a8 and w4a4;
 //!  * quantization: requant round-trip error bound holds across random
 //!    scales/ranges; dequant(quant(x)) within one step for random rows;
 //!  * ops: DI-ClippedSoftmax rows sum to ~1 and are permutation-
@@ -92,19 +96,21 @@ fn prop_scheduling_never_changes_results() {
             })
             .collect();
         let mut reference: Option<Vec<Vec<u16>>> = None;
-        for (max_batch, chunk, budget) in [
-            (1usize, 64usize, usize::MAX),
-            (4, 64, usize::MAX),
-            (8, 3, usize::MAX),
+        for (max_batch, chunk, budget, threads) in [
+            (1usize, 64usize, usize::MAX, 1usize),
+            (4, 64, usize::MAX, 1),
+            (8, 3, usize::MAX, 4),
             // ~1 page/token for Affine: 60 pages forces admission
-            // blocking, which must not change any output
-            (4, 64, 60),
+            // blocking, which must not change any output — nor may
+            // the parallel decode wave
+            (4, 64, 60, 3),
         ] {
             let mut b = Batcher::new(BatcherConfig {
                 max_batch,
                 prefill_chunk: chunk,
                 kv_page_budget: budget,
                 stop_token: None,
+                threads,
             });
             let mut m = ServeMetrics::default();
             for (i, (p, n)) in reqs.iter().enumerate() {
@@ -136,6 +142,74 @@ fn prop_scheduling_never_changes_results() {
                 Some(r) => assert_eq!(r, &outs,
                     "case {case}: scheduling changed outputs"),
             }
+        }
+    }
+}
+
+/// The tentpole equivalence contract, swept over page boundaries:
+/// page-tiled prefill (serial AND head-parallel) is bit-identical to
+/// the row-at-a-time reference — logits, lane lengths and lane scales
+/// — for chunk sizes straddling the 16-token page size, at nonzero
+/// pos0, at both bit widths. Integer accumulation is exact under
+/// reordering, so "close" is not accepted: only equality.
+#[test]
+fn prop_tiled_prefill_bit_identical_at_page_boundaries() {
+    use illm::coordinator::engine::greedy;
+    use illm::data::load_corpus;
+    use illm::int_model::kv_cache::IntKvCache;
+    use illm::int_model::quantize::quantize_model;
+    use illm::nn::load_model;
+    use illm::quant::QuantScheme;
+
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let mut rng = Pcg64::new(0x711E);
+    for scheme in [QuantScheme::W8A8, QuantScheme::W4A4] {
+        let im = quantize_model(&fp, scheme, None, None);
+        for &t in &[1usize, 15, 16, 17, 31, 32, 33] {
+            // nonzero pos0 lands the chunk mid-page more often than not
+            let pos0 = 1 + rng.below(24);
+            let threads = 2 + rng.below(3);
+            let toks: Vec<u16> = corpus.val[..pos0 + t].to_vec();
+            let tag = format!("{} t={t} pos0={pos0}", scheme.tag());
+            // identical pos0-token prefix via the same rowwise path in
+            // every cache, then the three kernels diverge on the chunk
+            let mut c_row = IntKvCache::new(&im);
+            im.prefill_batch_rowwise(&toks[..pos0], &mut c_row);
+            let l_row = im.prefill_batch_rowwise(&toks[pos0..], &mut c_row);
+            let mut c_tile = IntKvCache::new(&im);
+            im.prefill_batch_rowwise(&toks[..pos0], &mut c_tile);
+            let l_tile =
+                im.prefill_batch_threads(&toks[pos0..], &mut c_tile, 1);
+            let mut c_thr = IntKvCache::new(&im);
+            im.prefill_batch_rowwise(&toks[..pos0], &mut c_thr);
+            let l_thr = im.prefill_batch_threads(&toks[pos0..], &mut c_thr,
+                                                 threads);
+            assert_eq!(l_tile, l_row, "{tag}: tiled logits diverged");
+            assert_eq!(l_thr, l_row,
+                       "{tag}: threaded ({threads}) logits diverged");
+            assert_eq!(c_tile.pos, c_row.pos, "{tag}: cache pos");
+            for li in 0..im.cfg.n_layers {
+                for head in 0..im.cfg.n_heads {
+                    for which in ['k', 'v'] {
+                        let a = c_row.lane_state(which, li, head);
+                        assert_eq!(
+                            c_tile.lane_state(which, li, head), a,
+                            "{tag}: lane {which} l{li} h{head} (tiled)");
+                        assert_eq!(
+                            c_thr.lane_state(which, li, head), a,
+                            "{tag}: lane {which} l{li} h{head} (thr)");
+                    }
+                }
+            }
+            // decode must continue identically off all three caches
+            let next = greedy(&l_row);
+            let d_row = im.decode_one(next, &mut c_row);
+            assert_eq!(im.decode_one(next, &mut c_tile), d_row,
+                       "{tag}: decode after tiled prefill diverged");
+            assert_eq!(im.decode_one(next, &mut c_thr), d_row,
+                       "{tag}: decode after threaded prefill diverged");
         }
     }
 }

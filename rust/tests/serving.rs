@@ -156,8 +156,8 @@ fn chunked_prefill_continuation_is_consistent() {
     let (_state, logits_full) = engine.prefill(&prompt);
     // chunked: 16 + 16 + 8
     let (mut state, _) = engine.prefill(&prompt[..16]);
-    let _ = engine.prefill_chunk(&mut state, &prompt[16..32]);
-    let logits_chunked = engine.prefill_chunk(&mut state, &prompt[32..]);
+    let _ = engine.prefill_chunk(&mut state, &prompt[16..32], 1);
+    let logits_chunked = engine.prefill_chunk(&mut state, &prompt[32..], 2);
     match &state {
         illm::coordinator::engine::SeqState::Int { cache } => {
             assert_eq!(cache.pos, prompt.len());
@@ -166,6 +166,43 @@ fn chunked_prefill_continuation_is_consistent() {
     }
     assert_eq!(argmax(&logits_full), argmax(&logits_chunked),
                "chunked prefill diverged from one-shot");
+}
+
+/// The parallel decode wave over the REAL integer engine (shared page
+/// pool, lock-narrowed appends, concurrent per-sequence forwards) must
+/// produce responses identical to the serial wave — thread count is
+/// scheduling, never arithmetic.
+#[test]
+fn parallel_decode_wave_is_deterministic_on_int_engine() {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let spec = workload::WorkloadSpec {
+        n_requests: 6,
+        prompt_len: (10, 30),
+        max_new: (3, 6),
+        ..Default::default()
+    };
+    let run = |threads: usize| {
+        let engine = int_engine("tinyllama_s", QuantScheme::W8A8);
+        let reqs = workload::generate(&spec, &corpus);
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            threads,
+            stop_token: None,
+            ..Default::default()
+        };
+        let (mut resp, metrics) = run_workload(engine, cfg, reqs, 0.0);
+        resp.sort_by_key(|r| r.id);
+        let texts: Vec<(u64, String, usize)> = resp
+            .into_iter()
+            .map(|r| (r.id, r.text, r.n_generated))
+            .collect();
+        (texts, metrics.decode_tokens)
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(parallel, serial,
+               "int-engine decode wave diverged across thread counts");
 }
 
 #[test]
