@@ -17,9 +17,12 @@ artifacts-full:
 test:
 	cd rust && cargo build --release && cargo test -q
 
-# fast asserting serving bench: paging + admission regressions (CI)
+# fast asserting serving bench: paging + admission + radix prefix
+# reuse regressions, at BOTH wave/attention thread counts so
+# thread-count-dependent nondeterminism fails locally like in CI
 smoke:
-	cd rust && cargo bench --bench perf_serving -- --smoke
+	cd rust && ILLM_THREADS=1 cargo bench --bench perf_serving -- --smoke
+	cd rust && ILLM_THREADS=4 cargo bench --bench perf_serving -- --smoke
 
 # serving bench + machine-readable rust/BENCH_serving.json (decode and
 # prefill tok/s, latency percentiles, pool high-water, thread count);

@@ -1,7 +1,9 @@
 //! §Perf end-to-end serving benchmark: throughput/latency of the
 //! coordinator + integer engine, vs the FP engine, across batch sizes,
 //! plus the paged-KV admission study and the prefill-kernel comparison
-//! (replay vs row-at-a-time vs page-tiled vs tiled+threads).
+//! (replay vs row-at-a-time vs page-tiled vs tiled+threads vs
+//! radix-hit — the cached-prefix column measures engine prefill of a
+//! prompt whose shared prefix sits in the radix prefix tree).
 //!
 //! The paper's deployment claim: the integer-only pipeline serves LLMs
 //! on integer hardware; here we verify the coordinator adds negligible
@@ -101,6 +103,65 @@ fn bench_prefill(im: &IntModel, prompt: &[u16], reps: usize) -> Json {
     ])
 }
 
+/// The shared radix scenario: warm and hit prompts share `pre` tokens
+/// of "system prompt"; the unrelated prompt is served between them so
+/// the reuse is cross-request, not a back-to-back duplicate. One
+/// fixture feeds both the tracked bench column and the smoke asserts
+/// so they cannot drift apart.
+fn radix_prompts(corpus: &Corpus)
+    -> (Vec<u16>, Vec<u16>, Vec<u16>, usize) {
+    let pre = 48usize;
+    let take = |at: usize, n: usize| -> Vec<u16> {
+        corpus.val[at..at + n].to_vec()
+    };
+    let mut warm = take(0, pre);
+    warm.extend(take(300, 12));
+    let unrelated = take(600, 40);
+    let mut hit = take(0, pre);
+    hit.extend(take(700, 14));
+    (warm, unrelated, hit, pre)
+}
+
+/// The cached-prefix column of the prefill bench: engine-level prefill
+/// of a prompt whose first pages sit in the radix prefix tree (same
+/// system prefix as an earlier prompt, different suffix, an unrelated
+/// prompt served in between) vs the same prompt on a cold engine.
+/// A radix hit pays only the divergent-suffix compute, so its tok/s
+/// over the WHOLE prompt is the reuse win BENCH_serving.json tracks.
+fn bench_radix(im: &Arc<IntModel>, corpus: &Corpus, reps: usize) -> Json {
+    let (warm_prompt, unrelated, hit_prompt, pre) =
+        radix_prompts(corpus);
+    let n = hit_prompt.len() as f64;
+    let mut t_hit = f64::MAX;
+    let mut t_cold = f64::MAX;
+    for _ in 0..reps {
+        let warm = IntEngine::new(im.clone());
+        let (_sa, _) = warm.prefill(&warm_prompt);
+        let (_su, _) = warm.prefill(&unrelated);
+        let ((_sh, _), s) =
+            illm::util::time_it(|| warm.prefill(&hit_prompt));
+        t_hit = t_hit.min(s);
+        let cold = IntEngine::new(im.clone());
+        let ((_sc, _), s) =
+            illm::util::time_it(|| cold.prefill(&hit_prompt));
+        t_cold = t_cold.min(s);
+    }
+    println!("\n== perf: radix prefix reuse ({} tokens, {} shared) ==",
+             hit_prompt.len(), pre);
+    println!("  engine prefill, cold:            {:>9.0} tok/s",
+             n / t_cold);
+    println!("  engine prefill, radix hit:       {:>9.0} tok/s  \
+              ({:.2}x vs cold)",
+             n / t_hit, t_cold / t_hit);
+    jobj(vec![
+        ("prompt_tokens", Json::Int(hit_prompt.len() as i64)),
+        ("shared_prefix_tokens", Json::Int(pre as i64)),
+        ("engine_cold_tok_per_s", Json::Num(n / t_cold)),
+        ("radix_hit_tok_per_s", Json::Num(n / t_hit)),
+        ("radix_hit_speedup", Json::Num(t_cold / t_hit)),
+    ])
+}
+
 /// Smoke-mode kernel equivalence: tiled and threaded prefill must be
 /// BIT-identical to the row-at-a-time reference (logits and lane
 /// scales). The deep sweep lives in tests/; this cheap re-check runs
@@ -127,6 +188,103 @@ fn assert_prefill_equivalence(im: &IntModel, prompt: &[u16]) {
     }
     println!("  prefill equivalence: tiled == rowwise == threaded \
               (bit-identical)");
+}
+
+/// Smoke-mode radix-reuse assertions (the PR-5 acceptance criterion,
+/// run under both CI thread counts): two prompts sharing a >= 32-token
+/// prefix, submitted NON-adjacently (an unrelated prompt between
+/// them), must (a) allocate pages only for their divergent suffixes,
+/// (b) produce logits bit-identical to fresh compute, (c) keep the
+/// pool high-water below the sum of independent peaks, and (d) beat
+/// fresh-prefill token throughput.
+fn assert_radix_reuse(im: &Arc<IntModel>, corpus: &Corpus) {
+    let (prompt_x, unrelated, prompt_y, pre) = radix_prompts(corpus);
+
+    let engine = IntEngine::new(im.clone());
+    let (_st_x, _) = engine.prefill(&prompt_x);
+    let (_st_u, _) = engine.prefill(&unrelated);
+    let before = engine.pool_stats().unwrap();
+    let ((_st_y, l_y), mut t_hit) =
+        illm::util::time_it(|| engine.prefill(&prompt_y));
+    let after = engine.pool_stats().unwrap();
+    // exact allocation accounting: the hit may allocate only the
+    // divergent suffix's pages plus CoW copies made when a lane-scale
+    // grow must preserve the trie's shared copy
+    let delta = after.used - before.used;
+    let full = im.pages_for_tokens(prompt_y.len());
+    let suffix_pages = full - im.pages_for_tokens(pre);
+    let cow_delta = (after.cow_copies - before.cow_copies) as usize;
+    assert!(delta <= suffix_pages + cow_delta,
+            "radix hit allocated {delta} pages; suffix needs only \
+             {suffix_pages} (+{cow_delta} CoW) of the {full} total — \
+             suffix-only allocation regressed");
+    assert!(after.shared > 0, "no pages shared after a radix hit");
+    assert!(after.prefix_pages > 0, "prefix tree pins no pages");
+
+    // throughput: min over the SAME rep count on both sides (a
+    // single-shot hit sample against a min-of-3 cold sample would be
+    // a flake hazard on noisy CI runners); re-measuring the partial
+    // hit needs a fresh warmed engine each rep, since the first
+    // measurement caches prompt_y exactly
+    for _ in 0..2 {
+        let e = IntEngine::new(im.clone());
+        let (_sa, _) = e.prefill(&prompt_x);
+        let (_sb, _) = e.prefill(&unrelated);
+        let ((_sc, _), s) = illm::util::time_it(|| e.prefill(&prompt_y));
+        t_hit = t_hit.min(s);
+    }
+    // bit-identity + cold baseline (the hit skips ~3/4 of the compute)
+    let mut t_cold = f64::MAX;
+    let mut l_f = Vec::new();
+    for _ in 0..3 {
+        let fresh = IntEngine::new(im.clone());
+        let ((_st_f, lf), s) =
+            illm::util::time_it(|| fresh.prefill(&prompt_y));
+        t_cold = t_cold.min(s);
+        l_f = lf;
+    }
+    assert_eq!(l_y, l_f,
+               "radix hit logits diverged from fresh compute");
+    // all three sequences live: occupancy stays below the sum of
+    // independent footprints because prefix pages are shared
+    let sum_independent = im.pages_for_tokens(prompt_x.len())
+        + im.pages_for_tokens(unrelated.len())
+        + im.pages_for_tokens(prompt_y.len());
+    assert!(after.high_water < sum_independent,
+            "no sharing: high-water {} vs independent sum {}",
+            after.high_water, sum_independent);
+    assert!(t_hit < t_cold,
+            "radix hit ({t_hit:.6}s) not faster than fresh prefill \
+             ({t_cold:.6}s)");
+    let ps = engine.prefix_stats().unwrap();
+    assert!(ps.hits >= 1, "prefix tree recorded no hits");
+    assert!(ps.tokens_reused >= pre as u64,
+            "tokens reused {} < shared prefix {}",
+            ps.tokens_reused, pre);
+    println!("  radix reuse: {delta}/{full} pages allocated on hit, \
+              logits bit-identical, {:.2}x vs cold prefill",
+             t_cold / t_hit);
+
+    // and through the coordinator: a shared-prefix workload must show
+    // hits and saved prefill tokens in the serving metrics
+    let spec = workload::SharedPrefixSpec::default();
+    let reqs = workload::generate_shared_prefix(&spec, corpus);
+    let engine = IntEngine::new(im.clone());
+    let cfg = BatcherConfig {
+        max_batch: 3,
+        stop_token: None,
+        ..Default::default()
+    };
+    let (responses, m) = run_workload(engine, cfg, reqs, 0.0);
+    assert_eq!(responses.len(), spec.n_groups * spec.group_size,
+               "shared-prefix workload lost requests");
+    let pf = m.prefix_last.expect("prefix stats sampled");
+    assert!(pf.hits > 0, "no prefix hits across the workload");
+    assert!(m.prefill_tokens_saved() > 0,
+            "no prefill tokens saved across the workload");
+    println!("  shared-prefix workload: {} hits / {:.0}% rate / {} \
+              prefill tokens saved",
+             pf.hits, 100.0 * pf.hit_rate(), pf.tokens_reused);
 }
 
 /// Smoke-mode wave determinism: the same workload must produce
@@ -319,6 +477,9 @@ fn main() {
     let prefill_json =
         bench_prefill(&im, &prompt, if fast { 1 } else { 3 });
     report.push(("prefill", prefill_json));
+    // cached-prefix column: radix-hit vs cold engine prefill
+    let radix_json = bench_radix(&im, &corpus, if fast { 2 } else { 3 });
+    report.push(("radix", radix_json));
     if let Some(sj) = serving_json {
         report.push(("serving_int_w8a8_batch8", sj));
     }
@@ -332,6 +493,8 @@ fn main() {
         assert_prefill_equivalence(
             &im, &corpus.val[..48.min(corpus.val.len())]);
         assert_thread_determinism(&im, &corpus);
+        // radix prefix reuse: the shared-prefix acceptance criterion
+        assert_radix_reuse(&im, &corpus);
     }
 
     let json = jobj(report);

@@ -10,7 +10,12 @@
 //!    admits its prompt + generation headroom, estimated with the
 //!    engine's real per-request page footprint
 //!    (`Engine::pages_for_tokens`) so admission control reasons in the
-//!    same unit the pool allocates;
+//!    same unit the pool allocates. Pages the engine's prefix cache
+//!    already holds for the prompt are DISCOUNTED from the estimate
+//!    (they are pool-resident and will be forked, not allocated), and
+//!    when the budget would still starve the request, the batcher asks
+//!    the engine to reclaim cold prefix-cache pages (LRU trie leaves)
+//!    before counting an admission block;
 //!  * prefill is chunked so a long prompt cannot stall decode waves
 //!    beyond `prefill_chunk` tokens. Both the first chunk
 //!    (`Engine::prefill`) and every continuation chunk
@@ -268,7 +273,7 @@ impl Batcher {
             // snapshot and CoW copies, and de-dupes pages shared
             // between forks — others fall back to summing per-state
             // page tables.
-            let kv_used: usize = match engine.kv_pages_used() {
+            let mut kv_used: usize = match engine.kv_pages_used() {
                 Some(used) => used,
                 None => self
                     .active
@@ -279,7 +284,43 @@ impl Batcher {
             let adm_len =
                 admitted_len(&front.prompt, engine.max_seq(),
                              front.max_new);
-            let est = engine.pages_for_tokens(adm_len + front.max_new);
+            let est_total =
+                engine.pages_for_tokens(adm_len + front.max_new);
+            let mut est = est_total;
+            if kv_used + est > self.cfg.kv_page_budget {
+                // over budget at face value: discount the pages the
+                // engine's prefix cache already holds for this prompt
+                // (they are counted in kv_used and will be forked,
+                // not allocated). Tokenizing here — only on the
+                // would-block path — keeps the common admission check
+                // allocation-free.
+                let toks = normalize_prompt(&front.prompt,
+                                            engine.max_seq(),
+                                            front.max_new);
+                let first =
+                    &toks[..toks.len().min(self.cfg.prefill_chunk)];
+                est = est_total
+                    .saturating_sub(engine.cached_prefix_pages(first));
+                if kv_used + est > self.cfg.kv_page_budget {
+                    // pool pressure: shed cold prefix-cache pages
+                    // before blocking (trie leaves release pages to
+                    // the free list), then re-read occupancy — AND
+                    // re-probe the discount: reclaim may have evicted
+                    // this very prefix once colder entries ran out,
+                    // and admitting on a stale discount would let the
+                    // prefill overshoot the budget by exactly the
+                    // discounted pages
+                    let need =
+                        kv_used + est - self.cfg.kv_page_budget;
+                    if engine.reclaim_prefix_pages(need) > 0 {
+                        if let Some(used) = engine.kv_pages_used() {
+                            kv_used = used;
+                        }
+                        est = est_total.saturating_sub(
+                            engine.cached_prefix_pages(first));
+                    }
+                }
+            }
             if kv_used + est > self.cfg.kv_page_budget
                 && !self.active.is_empty()
             {
@@ -392,6 +433,9 @@ impl Batcher {
         }
         if let Some(ps) = engine.pool_stats() {
             metrics.observe_pool(&ps);
+        }
+        if let Some(ps) = engine.prefix_stats() {
+            metrics.observe_prefix(&ps);
         }
         out
     }

@@ -4,14 +4,42 @@
 //! in the serving benches.
 //!
 //! The integer engine owns ONE [`PagePool`] shared by every sequence
-//! it serves: admission control reasons in pages, eviction returns a
-//! sequence's pages to the pool free list the moment its state drops,
-//! and a prompt identical to the last admitted one forks the snapshot
-//! cache instead of recomputing — refcounted page sharing with
-//! copy-on-write at the first divergent append.
+//! it serves, plus a radix [`PrefixTree`] over token prefixes:
+//! admission control reasons in pages, eviction returns a sequence's
+//! pages to the pool free list the moment its state drops, and a
+//! prompt sharing a page-aligned prefix with ANY remembered prompt
+//! forks the cached pages and prefills only its uncached suffix —
+//! refcounted page sharing with copy-on-write at the first divergent
+//! append.
+//!
+//! # Canonical page chunking (why hits are bit-identical)
+//!
+//! Integer prefill is deterministic, but its CHUNKING is not neutral:
+//! a lane's dyadic scale resolves per appended chunk, so splitting a
+//! prompt at different boundaries produces (slightly) different cache
+//! bits. For a trie hit to be bit-identical to fresh compute, hit and
+//! miss paths must therefore chunk IDENTICALLY. `IntEngine::prefill`
+//! runs prefill page by page ([`PAGE_TOKENS`]-token chunks, plus the
+//! unaligned remainder as a final chunk) and snapshots the cache at
+//! every page boundary. A later prompt that forks the snapshot at
+//! boundary M and prefills its remaining pages performs exactly the
+//! appends a fresh canonical prefill would, from exactly the state it
+//! would have — so logits, lane scales and cache contents match bit
+//! for bit, at every `ILLM_THREADS` count (threads never change
+//! arithmetic, established in PR 4).
+//!
+//! # Locking (the PR-5 lock-narrowing satellite)
+//!
+//! The old registry held its mutex across the whole prefill
+//! computation, serializing concurrent admissions. The trie lock now
+//! covers only lookup+fork before the compute and insert bookkeeping
+//! after it — never the prefill itself. Ordering: trie lock may take
+//! the pool lock (fork/drop), never the reverse (see prefix_tree).
 
+use super::prefix_tree::{Lookup, PrefixStats, PrefixTree};
 use crate::int_model::kv_cache::{
     lock_pool, IntKvCache, PagePool, PoolStats, SharedPagePool,
+    PAGE_TOKENS,
 };
 use crate::int_model::IntModel;
 use crate::nn::FpModel;
@@ -93,6 +121,32 @@ pub trait Engine: Send + Sync {
     fn pool_stats(&self) -> Option<PoolStats> {
         None
     }
+
+    /// Pages the engine's prefix cache already holds for `prompt` (the
+    /// exact token slice `prefill` will receive). Admission subtracts
+    /// this from a request's page estimate: cached pages are already
+    /// counted in pool occupancy and will be forked, not allocated.
+    /// Engines without a prefix cache report 0.
+    fn cached_prefix_pages(&self, prompt: &[u16]) -> usize {
+        let _ = prompt;
+        0
+    }
+
+    /// Ask the engine to unpin at least `want_pages` prefix-cache
+    /// pages (LRU leaves first) because `kv_page_budget` admission
+    /// would otherwise starve. Returns pages unpinned; the caller
+    /// re-reads occupancy, since unpinned pages reach the free list
+    /// only once no live sequence still references them.
+    fn reclaim_prefix_pages(&self, want_pages: usize) -> usize {
+        let _ = want_pages;
+        0
+    }
+
+    /// Prefix-cache counters (hit rate, tokens reused, pinned pages),
+    /// for engines that keep one. Sampled once per scheduling step.
+    fn prefix_stats(&self) -> Option<PrefixStats> {
+        None
+    }
 }
 
 /// Greedy sampling at the model boundary: NaN-safe argmax over f32
@@ -112,26 +166,34 @@ pub fn greedy(logits: &[f32]) -> u16 {
     best.map_or(0, |(_, i)| i as u16)
 }
 
-/// Snapshot of the last prefilled prompt: an identical prompt admitted
-/// next forks `cache` (sharing every page) instead of recomputing.
-struct PrefixEntry {
-    tokens: Vec<u16>,
-    cache: IntKvCache,
-    logits: Vec<f32>,
-}
-
 /// The integer-only serving engine: model + shared page pool + the
-/// prefix-sharing snapshot.
+/// radix prefix tree remembering page-aligned prompt prefixes across
+/// requests.
 pub struct IntEngine {
     pub model: Arc<IntModel>,
     pool: SharedPagePool,
-    prefix: Mutex<Option<PrefixEntry>>,
+    prefix: Mutex<PrefixTree<IntKvCache>>,
 }
 
 impl IntEngine {
     pub fn new(model: Arc<IntModel>) -> IntEngine {
+        // default prefix budget: ~8 remembered 64-token first chunks;
+        // serving deployments under a kv_page_budget shrink it live
+        // through `reclaim_prefix_pages`
+        let budget = model.pages_for_tokens(512);
+        IntEngine::with_prefix_budget(model, budget)
+    }
+
+    /// Engine with an explicit prefix-cache page budget (pages pinned
+    /// by the trie beyond it are evicted LRU-leaf-first on insert).
+    pub fn with_prefix_budget(model: Arc<IntModel>, max_prefix_pages: usize)
+        -> IntEngine {
         let pool = PagePool::shared(model.cfg.head_dim());
-        IntEngine { model, pool, prefix: Mutex::new(None) }
+        IntEngine {
+            model,
+            pool,
+            prefix: Mutex::new(PrefixTree::new(max_prefix_pages)),
+        }
     }
 }
 
@@ -146,35 +208,54 @@ impl Engine for IntEngine {
 
     fn prefill_with_threads(&self, prompt: &[u16], attn_threads: usize)
         -> (SeqState, Vec<f32>) {
-        // poison-robust like the page pool: the registry only ever
-        // holds a complete snapshot or None
-        let mut reg = lock_recover(&self.prefix);
-        if let Some(entry) = reg.as_ref() {
-            if !prompt.is_empty() && entry.tokens == prompt {
-                // identical prompt admitted back-to-back: fork the
-                // snapshot (refcounted page sharing, CoW on the first
-                // divergent append) — zero prefill compute, and the
-                // fork is bit-identical to a recomputation because the
-                // integer prefill is deterministic
-                let cache = entry.cache.fork();
-                let logits = entry.logits.clone();
-                return (SeqState::Int { cache }, logits);
+        let threads = attn_threads.max(1);
+        if prompt.is_empty() {
+            let mut cache =
+                IntKvCache::with_pool(&self.model, self.pool.clone());
+            let logits = self
+                .model
+                .prefill_batch_threads(prompt, &mut cache, threads);
+            return (SeqState::Int { cache }, logits);
+        }
+        // ---- trie lock #1: lookup + fork only (poison-robust; the
+        // tree is structurally complete between operations) ----
+        let hit = lock_recover(&self.prefix).lookup(prompt);
+        let (mut cache, matched) = match hit {
+            Lookup::Exact { state, logits } => {
+                // whole prompt cached: zero prefill compute, stored
+                // logits, refcounted pages with CoW on divergence
+                return (SeqState::Int { cache: state }, logits);
             }
+            Lookup::Partial { state, matched } => (state, matched),
+            Lookup::Miss => (
+                IntKvCache::with_pool(&self.model, self.pool.clone()),
+                0,
+            ),
+        };
+        // ---- compute, lock-free: canonical page chunking (see the
+        // module docs) with a boundary snapshot fork per page ----
+        let b = prompt.len() / PAGE_TOKENS * PAGE_TOKENS;
+        let mut aligned: Vec<(IntKvCache, Vec<f32>)> = Vec::new();
+        let mut logits = Vec::new();
+        let mut off = matched;
+        while off < b {
+            let next = off + PAGE_TOKENS;
+            logits = self.model.prefill_batch_threads(
+                &prompt[off..next], &mut cache, threads);
+            aligned.push((cache.fork(), logits.clone()));
+            off = next;
         }
-        let mut cache =
-            IntKvCache::with_pool(&self.model, self.pool.clone());
-        let logits = self.model.prefill_batch_threads(
-            prompt, &mut cache, attn_threads.max(1));
-        if !prompt.is_empty() {
-            // keep a forked snapshot (shares pages with the state we
-            // hand out; the snapshot replaces — and thereby frees —
-            // the previous prompt's snapshot)
-            *reg = Some(PrefixEntry {
-                tokens: prompt.to_vec(),
-                cache: cache.fork(),
-                logits: logits.clone(),
-            });
+        if b < prompt.len() {
+            logits = self.model.prefill_batch_threads(
+                &prompt[b..], &mut cache, threads);
         }
+        let tail = if b < prompt.len() {
+            Some((cache.fork(), logits.clone()))
+        } else {
+            None
+        };
+        // ---- trie lock #2: insert bookkeeping only ----
+        lock_recover(&self.prefix).insert(prompt, matched, aligned, tail);
         (SeqState::Int { cache }, logits)
     }
 
@@ -212,7 +293,33 @@ impl Engine for IntEngine {
     }
 
     fn pool_stats(&self) -> Option<PoolStats> {
-        Some(lock_pool(&self.pool).stats())
+        // pool lock and trie lock taken SEQUENTIALLY, never nested
+        // (the guard from lock_pool drops at the end of the statement)
+        let mut stats = lock_pool(&self.pool).stats();
+        let tree_stats = lock_recover(&self.prefix).stats();
+        stats.prefix_pages = tree_stats.pinned_pages;
+        stats.evicted_prefix_pages = tree_stats.evicted_pages;
+        Some(stats)
+    }
+
+    fn cached_prefix_pages(&self, prompt: &[u16]) -> usize {
+        // touch (not lookup): bumps recency so the prefix an admission
+        // is about to fork is not the next eviction victim, without
+        // polluting hit-rate counters
+        let matched = lock_recover(&self.prefix).touch_matched(prompt);
+        if matched == 0 {
+            0
+        } else {
+            self.model.pages_for_tokens(matched)
+        }
+    }
+
+    fn reclaim_prefix_pages(&self, want_pages: usize) -> usize {
+        lock_recover(&self.prefix).reclaim(want_pages)
+    }
+
+    fn prefix_stats(&self) -> Option<PrefixStats> {
+        Some(lock_recover(&self.prefix).stats())
     }
 }
 

@@ -3,6 +3,7 @@
 //! serializable for tooling (`to_json`, the payload of the benches'
 //! `BENCH_serving.json`).
 
+use super::prefix_tree::PrefixStats;
 use crate::int_model::kv_cache::PoolStats;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -25,6 +26,9 @@ pub struct ServeMetrics {
     pub pool_used_peak: usize,
     /// peak shared (refcount > 1) pages across samples
     pub pool_shared_peak: usize,
+    /// latest prefix-cache sample (hit rate, tokens reused, pinned
+    /// pages; None for engines without a prefix tree)
+    pub prefix_last: Option<PrefixStats>,
 }
 
 impl ServeMetrics {
@@ -39,6 +43,18 @@ impl ServeMetrics {
         self.pool_used_peak = self.pool_used_peak.max(s.used);
         self.pool_shared_peak = self.pool_shared_peak.max(s.shared);
         self.pool_last = Some(*s);
+    }
+
+    /// Record the latest prefix-cache counters (cumulative on the
+    /// engine side, so keeping the last sample suffices).
+    pub fn observe_prefix(&mut self, s: &PrefixStats) {
+        self.prefix_last = Some(*s);
+    }
+
+    /// Prompt tokens served from the prefix cache instead of being
+    /// recomputed by prefill (0 without a prefix tree).
+    pub fn prefill_tokens_saved(&self) -> u64 {
+        self.prefix_last.map_or(0, |p| p.tokens_reused)
     }
 
     pub fn requests(&self) -> usize {
@@ -148,7 +164,30 @@ impl ServeMetrics {
                       Json::Int(p.cow_copies as i64));
             pj.insert("high_water".to_string(),
                       Json::Int(p.high_water as i64));
+            pj.insert("prefix_pages".to_string(),
+                      Json::Int(p.prefix_pages as i64));
+            pj.insert("evicted_prefix_pages".to_string(),
+                      Json::Int(p.evicted_prefix_pages as i64));
             put("pool", Json::Obj(pj));
+        }
+        if let Some(p) = &self.prefix_last {
+            let mut fj = BTreeMap::new();
+            fj.insert("lookups".to_string(),
+                      Json::Int(p.lookups as i64));
+            fj.insert("hits".to_string(), Json::Int(p.hits as i64));
+            fj.insert("exact_hits".to_string(),
+                      Json::Int(p.exact_hits as i64));
+            fj.insert("hit_rate".to_string(), Json::Num(p.hit_rate()));
+            fj.insert("prefill_tokens_saved".to_string(),
+                      Json::Int(p.tokens_reused as i64));
+            fj.insert("pinned_pages".to_string(),
+                      Json::Int(p.pinned_pages as i64));
+            fj.insert("evicted_pages".to_string(),
+                      Json::Int(p.evicted_pages as i64));
+            fj.insert("nodes".to_string(), Json::Int(p.nodes as i64));
+            fj.insert("entries".to_string(),
+                      Json::Int(p.entries as i64));
+            put("prefix", Json::Obj(fj));
         }
         Json::Obj(o)
     }
@@ -176,13 +215,31 @@ impl ServeMetrics {
         if let Some(p) = &self.pool_last {
             println!(
                 "pool stats  pages used {} (peak {}) / free {} / \
-                 shared peak {} / CoW copies {} / high-water {}",
+                 shared peak {} / CoW copies {} / high-water {} / \
+                 prefix-pinned {} / prefix-evicted {}",
                 p.used,
                 self.pool_used_peak,
                 p.free,
                 self.pool_shared_peak,
                 p.cow_copies,
                 p.high_water,
+                p.prefix_pages,
+                p.evicted_prefix_pages,
+            );
+        }
+        if let Some(p) = &self.prefix_last {
+            println!(
+                "prefix tree lookups {} hits {} ({:.0}% rate, {} \
+                 exact) / prefill tokens saved {} / pinned {} pages \
+                 in {} nodes / evicted {} pages",
+                p.lookups,
+                p.hits,
+                100.0 * p.hit_rate(),
+                p.exact_hits,
+                p.tokens_reused,
+                p.pinned_pages,
+                p.nodes,
+                p.evicted_pages,
             );
         }
     }
@@ -228,6 +285,11 @@ mod tests {
         }
         m.observe_pool(&PoolStats {
             used: 6, free: 4, shared: 2, cow_copies: 3, high_water: 10,
+            prefix_pages: 5, evicted_prefix_pages: 2,
+        });
+        m.observe_prefix(&PrefixStats {
+            lookups: 10, hits: 4, exact_hits: 1, tokens_reused: 128,
+            pinned_pages: 5, ..Default::default()
         });
         let j = m.to_json();
         let parsed = Json::parse(&j.dump()).expect("valid json");
@@ -240,6 +302,15 @@ mod tests {
         let pool = parsed.get("pool").expect("pool section");
         assert_eq!(pool.get("high_water").unwrap().as_i64(), Some(10));
         assert_eq!(pool.get("used_peak").unwrap().as_i64(), Some(6));
+        assert_eq!(pool.get("prefix_pages").unwrap().as_i64(), Some(5));
+        assert_eq!(pool.get("evicted_prefix_pages").unwrap().as_i64(),
+                   Some(2));
+        let pre = parsed.get("prefix").expect("prefix section");
+        assert_eq!(pre.get("prefill_tokens_saved").unwrap().as_i64(),
+                   Some(128));
+        let rate = pre.get("hit_rate").unwrap().as_f64().unwrap();
+        assert!((rate - 0.4).abs() < 1e-9);
+        assert_eq!(m.prefill_tokens_saved(), 128);
     }
 
     #[test]
@@ -248,9 +319,11 @@ mod tests {
         assert!(m.pool_last.is_none());
         m.observe_pool(&PoolStats {
             used: 10, free: 0, shared: 4, cow_copies: 1, high_water: 10,
+            ..Default::default()
         });
         m.observe_pool(&PoolStats {
             used: 6, free: 4, shared: 0, cow_copies: 3, high_water: 10,
+            ..Default::default()
         });
         assert_eq!(m.pool_used_peak, 10);
         assert_eq!(m.pool_shared_peak, 4);

@@ -3,11 +3,14 @@
 //! integer-only engine. Admission control, eviction and prefix sharing
 //! all reason in POOL PAGES (see int_model::kv_cache): a request is
 //! admitted when the page budget covers its prompt + generation
-//! headroom, finished sequences return pages to the free list at
-//! eviction, and identical prompts fork the last prefill's pages
-//! copy-on-write. Python never appears on this path — the engine is
-//! the rust `IntModel` (quantized offline) and, for the compose-proof,
-//! AOT PJRT executables loaded by `runtime`.
+//! headroom (minus pages the prefix cache already holds for it),
+//! finished sequences return pages to the free list at eviction, and
+//! prompts sharing a page-aligned prefix with any remembered prompt
+//! fork the cached pages copy-on-write through the radix
+//! [`prefix_tree`], prefilling only their divergent suffix. Python
+//! never appears on this path — the engine is the rust `IntModel`
+//! (quantized offline) and, for the compose-proof, AOT PJRT
+//! executables loaded by `runtime`.
 //!
 //! Concurrency is std::thread + mpsc (the offline vendor set has no
 //! tokio or rayon). The coordinator loop owns scheduling — admission,
@@ -23,6 +26,7 @@
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod prefix_tree;
 pub mod workload;
 
 use crate::data;

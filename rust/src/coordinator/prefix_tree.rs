@@ -1,0 +1,852 @@
+//! Radix-tree prefix cache over the paged integer KV pool (the PR-5
+//! tentpole): a trie keyed on token sequences whose edges are runs of
+//! WHOLE 16-token pages, storing refcounted cache snapshots at every
+//! page boundary so any later prompt sharing a page-aligned prefix can
+//! fork the cached pages instead of recomputing them. This replaces
+//! the single-entry exact-match `PrefixEntry` registry: shared system
+//! prompts and few-shot preambles now hit at page granularity across
+//! MANY remembered prompts.
+//!
+//! # Page-alignment invariant
+//!
+//! Every edge run is a non-empty multiple of [`PAGE_TOKENS`] tokens
+//! (so a node maps to a run of whole pages), and edge SPLITTING snaps
+//! to page boundaries: when a new key diverges from an existing edge,
+//! the edge is split at the largest page multiple <= the common
+//! prefix. Divergence inside the first page of an edge creates a
+//! sibling instead (sub-page state does not exist, so there is
+//! nothing to share below a page). A consequence: siblings may share
+//! up to 15 leading tokens, so lookup scans all children for the best
+//! page-aligned partial match; siblings never have a prefix-of
+//! relation (insert splits instead), so a FULL edge match is unique.
+//! Prompts with an unaligned remainder (< 16 trailing tokens) attach
+//! that remainder as a `Tail` at the node ending at their last page
+//! boundary — an exact-match terminal that preserves the old
+//! registry's zero-compute duplicate-prompt path.
+//!
+//! # Lane-scale reconciliation invariant
+//!
+//! A cached page is only reusable if the lane scales that interpret
+//! it are EXACTLY the scales a fresh computation would carry at the
+//! same boundary — later appends can coarsen a lane scale (grow) and
+//! rescale earlier pages in place, which is lossy and unrecoverable.
+//! The trie therefore never stores "a slice of a longer prompt's
+//! pages": every entry is a FORK of the live cache captured at the
+//! moment its boundary was the frontier ([`crate::int_model::kv_cache::IntKvCache::fork`] —
+//! refcounted page sharing, so later grows/appends on the live side
+//! copy-on-write and the snapshot keeps its bit-exact state and
+//! scales). Combined with the engine's CANONICAL PAGE CHUNKING
+//! (`IntEngine` prefills page by page, so the state at every page
+//! boundary is materialized and deterministic — see
+//! `coordinator::engine`), a hit forks precisely the state fresh
+//! compute would reach, which is what makes hits bit-identical: no
+//! rescale reconciliation is ever needed at hit time, because the
+//! `grow_by` machinery already ran (and CoW'd) on the writer's side.
+//!
+//! # Locking discipline (trie lock vs pool lock)
+//!
+//! The tree itself is not synchronized; `IntEngine` wraps it in a
+//! `Mutex`. Ordering rule: the TRIE lock may be held while the POOL
+//! lock is taken (forking an entry on lookup, releasing pages when an
+//! eviction drops an entry), NEVER the reverse — no `PagePool`
+//! critical section calls back into the tree. The engine holds the
+//! trie lock only for lookup/fork and insert/evict bookkeeping
+//! (O(pages) refcounting), never across prefill compute, so
+//! concurrent admissions serialize only on the short registry
+//! operations.
+//!
+//! # Eviction
+//!
+//! Entries pin pool pages (the refcounts they hold keep pages off the
+//! free list). `max_pages` bounds the pinned set: inserts make room
+//! first and re-enforce after, and the batcher calls
+//! [`PrefixTree::reclaim`] when `kv_page_budget` admission would
+//! otherwise starve. Eviction drops the least-recently-used LEAF unit
+//! (a tail, or a whole childless node) — ancestors are bumped on
+//! every descendant lookup, so shared prefixes stay warm and leaves
+//! go first. Dropping an entry releases its page references; pages
+//! return to the pool free list once no live sequence holds them.
+
+use crate::int_model::kv_cache::{IntKvCache, PAGE_TOKENS};
+use std::collections::HashSet;
+
+/// What the tree stores: something that pins pool pages and can be
+/// forked O(pages). Implemented by [`IntKvCache`]; tests use a fake.
+pub trait CachedState {
+    /// Refcounted copy (shares pages, copy-on-write on divergence).
+    fn fork(&self) -> Self;
+    /// Insert every pool page id this state pins into `out`.
+    fn collect_pages(&self, out: &mut HashSet<u32>);
+}
+
+impl CachedState for IntKvCache {
+    fn fork(&self) -> IntKvCache {
+        IntKvCache::fork(self)
+    }
+
+    fn collect_pages(&self, out: &mut HashSet<u32>) {
+        self.for_each_page(|id| {
+            out.insert(id);
+        });
+    }
+}
+
+/// Cumulative + sampled counters, surfaced through
+/// `Engine::prefix_stats` into `ServeMetrics` / BENCH_serving.json.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct PrefixStats {
+    /// lookups since tree creation (misses included)
+    pub lookups: u64,
+    /// lookups that reused at least one cached page
+    pub hits: u64,
+    /// hits that covered the whole query (zero prefill compute)
+    pub exact_hits: u64,
+    /// prompt tokens served from cache instead of prefill compute
+    pub tokens_reused: u64,
+    /// pages unpinned by eviction since tree creation (they return to
+    /// the pool free list once no live sequence still holds them)
+    pub evicted_pages: u64,
+    /// eviction operations (leaf units dropped)
+    pub evictions: u64,
+    /// distinct pool pages currently pinned by tree entries
+    pub pinned_pages: usize,
+    /// nodes (edges) currently in the tree, root excluded
+    pub nodes: usize,
+    /// cached states (page-boundary entries + exact tails)
+    pub entries: usize,
+}
+
+impl PrefixStats {
+    /// Hit rate over all lookups (0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups > 0 {
+            self.hits as f64 / self.lookups as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Result of a lookup. `Exact` means zero prefill compute; `Partial`
+/// hands back the state at the deepest cached page boundary and the
+/// caller prefills only `query[matched..]`.
+pub enum Lookup<S> {
+    Miss,
+    Partial { state: S, matched: usize },
+    Exact { state: S, logits: Vec<f32> },
+}
+
+/// A cached snapshot at one page boundary: the forked cache plus the
+/// last-position logits of the chunk that ended there (returned
+/// directly on exact hits).
+struct Entry<S> {
+    state: S,
+    logits: Vec<f32>,
+}
+
+/// Exact-match terminal for a prompt with an unaligned remainder
+/// (< 16 trailing tokens past its last page boundary).
+struct Tail<S> {
+    tokens: Vec<u16>,
+    entry: Entry<S>,
+    last_hit: u64,
+}
+
+struct Node<S> {
+    /// edge label from the parent's boundary; empty only at the root,
+    /// otherwise a non-empty multiple of PAGE_TOKENS tokens
+    run: Vec<u16>,
+    /// one snapshot per page of `run` (entries[i] is the state at
+    /// `run_start + (i + 1) * PAGE_TOKENS` tokens)
+    entries: Vec<Entry<S>>,
+    children: Vec<usize>,
+    tails: Vec<Tail<S>>,
+    last_hit: u64,
+    parent: usize,
+}
+
+const ROOT: usize = 0;
+
+/// Outcome of the shared read-only walk.
+enum Found {
+    Miss,
+    /// page-boundary entry: `entries[page]` of `node`, covering
+    /// `matched` tokens; `exact` when the query ends at that boundary
+    Entry { node: usize, page: usize, matched: usize, exact: bool },
+    /// exact unaligned terminal
+    Tail { node: usize, tail: usize, matched: usize },
+}
+
+pub struct PrefixTree<S> {
+    /// arena; slot 0 is the root, freed slots are tombstoned
+    nodes: Vec<Option<Node<S>>>,
+    free: Vec<usize>,
+    /// pinned-page budget; inserts and `reclaim` evict LRU leaves to
+    /// keep the pinned set at or under it
+    max_pages: usize,
+    tick: u64,
+    lookups: u64,
+    hits: u64,
+    exact_hits: u64,
+    tokens_reused: u64,
+    evicted_pages: u64,
+    evictions: u64,
+}
+
+fn lcp(a: &[u16], b: &[u16]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+impl<S: CachedState> PrefixTree<S> {
+    pub fn new(max_pages: usize) -> PrefixTree<S> {
+        PrefixTree {
+            nodes: vec![Some(Node {
+                run: Vec::new(),
+                entries: Vec::new(),
+                children: Vec::new(),
+                tails: Vec::new(),
+                last_hit: 0,
+                parent: usize::MAX,
+            })],
+            free: Vec::new(),
+            max_pages,
+            tick: 0,
+            lookups: 0,
+            hits: 0,
+            exact_hits: 0,
+            tokens_reused: 0,
+            evicted_pages: 0,
+            evictions: 0,
+        }
+    }
+
+    fn node(&self, i: usize) -> &Node<S> {
+        self.nodes[i].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node<S> {
+        self.nodes[i].as_mut().expect("live node")
+    }
+
+    fn bump(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn alloc_node(&mut self, n: Node<S>) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(n);
+                i
+            }
+            None => {
+                self.nodes.push(Some(n));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Read-only walk to the deepest cached coverage of `query`.
+    /// Returns the traversed path (for recency bumping) and what was
+    /// found. A full edge match descends; otherwise the best
+    /// page-aligned partial match into a child wins, falling back to
+    /// the current node's end boundary.
+    fn walk(&self, query: &[u16]) -> (Vec<usize>, Found) {
+        let mut path = vec![ROOT];
+        if query.is_empty() {
+            return (path, Found::Miss);
+        }
+        let mut cur = ROOT;
+        let mut off = 0usize;
+        loop {
+            let rem = &query[off..];
+            if rem.is_empty() {
+                // query ends exactly at this node's boundary
+                let found = if cur == ROOT {
+                    Found::Miss
+                } else {
+                    Found::Entry {
+                        node: cur,
+                        page: self.node(cur).entries.len() - 1,
+                        matched: off,
+                        exact: true,
+                    }
+                };
+                return (path, found);
+            }
+            if rem.len() < PAGE_TOKENS {
+                if let Some(ti) = self
+                    .node(cur)
+                    .tails
+                    .iter()
+                    .position(|t| t.tokens == rem)
+                {
+                    return (path, Found::Tail {
+                        node: cur,
+                        tail: ti,
+                        matched: query.len(),
+                    });
+                }
+            }
+            let mut full = None;
+            let mut best_child = usize::MAX;
+            let mut best_pages = 0usize;
+            for &c in &self.node(cur).children {
+                let l = lcp(&self.node(c).run, rem);
+                if l == self.node(c).run.len() {
+                    full = Some(c);
+                    break;
+                }
+                let pages = l / PAGE_TOKENS;
+                if pages > best_pages {
+                    best_pages = pages;
+                    best_child = c;
+                }
+            }
+            if let Some(c) = full {
+                path.push(c);
+                off += self.node(c).run.len();
+                cur = c;
+                continue;
+            }
+            if best_pages > 0 {
+                path.push(best_child);
+                let matched = off + best_pages * PAGE_TOKENS;
+                return (path, Found::Entry {
+                    node: best_child,
+                    page: best_pages - 1,
+                    matched,
+                    exact: matched == query.len(),
+                });
+            }
+            let found = if cur == ROOT {
+                Found::Miss
+            } else {
+                Found::Entry {
+                    node: cur,
+                    page: self.node(cur).entries.len() - 1,
+                    matched: off,
+                    exact: false,
+                }
+            };
+            return (path, found);
+        }
+    }
+
+    /// Longest cached prefix of `query` and fork of its state. Bumps
+    /// recency along the path and updates hit counters. The fork
+    /// happens here, under the caller's tree lock, so entry lifetimes
+    /// never escape the lock.
+    pub fn lookup(&mut self, query: &[u16]) -> Lookup<S> {
+        self.lookups += 1;
+        let (path, found) = self.walk(query);
+        let t = self.bump();
+        for &n in &path {
+            self.node_mut(n).last_hit = t;
+        }
+        match found {
+            Found::Miss => Lookup::Miss,
+            Found::Tail { node, tail, matched } => {
+                self.node_mut(node).tails[tail].last_hit = t;
+                self.hits += 1;
+                self.exact_hits += 1;
+                self.tokens_reused += matched as u64;
+                let e = &self.node(node).tails[tail].entry;
+                Lookup::Exact {
+                    state: e.state.fork(),
+                    logits: e.logits.clone(),
+                }
+            }
+            Found::Entry { node, page, matched, exact } => {
+                self.hits += 1;
+                self.tokens_reused += matched as u64;
+                let e = &self.node(node).entries[page];
+                if exact {
+                    self.exact_hits += 1;
+                    Lookup::Exact {
+                        state: e.state.fork(),
+                        logits: e.logits.clone(),
+                    }
+                } else {
+                    Lookup::Partial { state: e.state.fork(), matched }
+                }
+            }
+        }
+    }
+
+    /// Cached-prefix length of `query` in tokens, WITHOUT counting a
+    /// lookup or forking — the admission controller's estimate probe.
+    /// It does bump recency so a prefix about to be admitted is not
+    /// the next eviction victim.
+    pub fn touch_matched(&mut self, query: &[u16]) -> usize {
+        let (path, found) = self.walk(query);
+        let t = self.bump();
+        for &n in &path {
+            self.node_mut(n).last_hit = t;
+        }
+        match found {
+            Found::Miss => 0,
+            Found::Tail { node, tail, matched } => {
+                self.node_mut(node).tails[tail].last_hit = t;
+                matched
+            }
+            Found::Entry { matched, .. } => matched,
+        }
+    }
+
+    /// Insert the snapshots of a just-prefilled prompt. `matched` is
+    /// the boundary the prefill resumed from (0 on a miss);
+    /// `aligned[j]` is the (state, logits) captured at boundary
+    /// `matched + (j + 1) * PAGE_TOKENS`; `tail` is the full-prompt
+    /// snapshot when the prompt has an unaligned remainder. Purely
+    /// bookkeeping — the caller computed everything outside the lock.
+    /// Races (another thread cached the same prompt first, or an
+    /// eviction removed the matched path) are resolved by dropping
+    /// the surplus snapshots: canonical chunking makes duplicates
+    /// bit-identical, so either copy is valid.
+    pub fn insert(&mut self, key: &[u16], matched: usize,
+                  mut aligned: Vec<(S, Vec<f32>)>,
+                  tail: Option<(S, Vec<f32>)>) {
+        if key.is_empty() {
+            return;
+        }
+        let b = key.len() / PAGE_TOKENS * PAGE_TOKENS;
+        debug_assert_eq!(matched % PAGE_TOKENS, 0);
+        debug_assert_eq!(matched + aligned.len() * PAGE_TOKENS, b);
+        // make room for the incoming pin set before taking it
+        let mut incoming = HashSet::new();
+        for (s, _) in &aligned {
+            s.collect_pages(&mut incoming);
+        }
+        if let Some((s, _)) = &tail {
+            s.collect_pages(&mut incoming);
+        }
+        self.make_room(&incoming);
+        let t = self.bump();
+        let mut cur = ROOT;
+        let mut off = 0usize;
+        while off < b {
+            self.node_mut(cur).last_hit = t;
+            let rem = &key[off..b];
+            let mut full = None;
+            let mut part_child = usize::MAX;
+            let mut part_split = 0usize;
+            for &c in &self.node(cur).children {
+                let l = lcp(&self.node(c).run, rem);
+                if l == self.node(c).run.len() {
+                    full = Some(c);
+                    break;
+                }
+                let s_al = l / PAGE_TOKENS * PAGE_TOKENS;
+                if s_al > part_split {
+                    part_split = s_al;
+                    part_child = c;
+                }
+            }
+            if let Some(c) = full {
+                // edge already cached (or raced in); our duplicates
+                // for boundaries past `matched` drop at return
+                off += self.node(c).run.len();
+                cur = c;
+                continue;
+            }
+            if part_split > 0 {
+                self.split(part_child, part_split);
+                self.node_mut(part_child).last_hit = t;
+                off += part_split;
+                cur = part_child;
+                continue;
+            }
+            if off < matched {
+                // a racing eviction removed boundaries we did not
+                // recompute; skip — the next prefill re-caches them
+                return;
+            }
+            let start = (off - matched) / PAGE_TOKENS;
+            let ents: Vec<Entry<S>> = aligned
+                .drain(start..)
+                .map(|(s, l)| Entry { state: s, logits: l })
+                .collect();
+            debug_assert_eq!(ents.len() * PAGE_TOKENS, b - off);
+            let id = self.alloc_node(Node {
+                run: rem.to_vec(),
+                entries: ents,
+                children: Vec::new(),
+                tails: Vec::new(),
+                last_hit: t,
+                parent: cur,
+            });
+            self.node_mut(cur).children.push(id);
+            cur = id;
+            off = b;
+        }
+        self.node_mut(cur).last_hit = t;
+        if let Some((s, l)) = tail {
+            let rem = &key[b..];
+            debug_assert!(!rem.is_empty() && rem.len() < PAGE_TOKENS);
+            let existing = self
+                .node(cur)
+                .tails
+                .iter()
+                .position(|x| x.tokens == rem);
+            match existing {
+                Some(ti) => self.node_mut(cur).tails[ti].last_hit = t,
+                None => self.node_mut(cur).tails.push(Tail {
+                    tokens: rem.to_vec(),
+                    entry: Entry { state: s, logits: l },
+                    last_hit: t,
+                }),
+            }
+        }
+        self.enforce_budget();
+    }
+
+    /// Split edge `c` at `s` tokens (a positive page multiple strictly
+    /// inside its run): `c` keeps the upper pages, a new child takes
+    /// the lower run plus `c`'s children and tails.
+    fn split(&mut self, c: usize, s: usize) {
+        debug_assert!(s > 0 && s % PAGE_TOKENS == 0);
+        let pages = s / PAGE_TOKENS;
+        let (low_run, low_entries, low_children, low_tails, lh) = {
+            let n = self.nodes[c].as_mut().expect("live node");
+            debug_assert!(s < n.run.len());
+            (
+                n.run.split_off(s),
+                n.entries.split_off(pages),
+                std::mem::take(&mut n.children),
+                std::mem::take(&mut n.tails),
+                n.last_hit,
+            )
+        };
+        let li = self.alloc_node(Node {
+            run: low_run,
+            entries: low_entries,
+            children: low_children,
+            tails: low_tails,
+            last_hit: lh,
+            parent: c,
+        });
+        let kids = self.node(li).children.clone();
+        for k in kids {
+            self.node_mut(k).parent = li;
+        }
+        self.node_mut(c).children.push(li);
+    }
+
+    /// Drop the least-recently-used leaf unit (a tail anywhere, or a
+    /// whole childless tail-less node). Returns false when nothing is
+    /// evictable (empty tree). Dropping entries releases their page
+    /// references (pool lock taken inside the state's drop — see the
+    /// module-level ordering rule).
+    fn evict_one(&mut self) -> bool {
+        let mut best_hit = u64::MAX;
+        let mut best: Option<(usize, Option<usize>)> = None;
+        for (i, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            for (ti, tl) in n.tails.iter().enumerate() {
+                if tl.last_hit < best_hit {
+                    best_hit = tl.last_hit;
+                    best = Some((i, Some(ti)));
+                }
+            }
+            if i != ROOT && n.children.is_empty() && n.tails.is_empty()
+                && n.last_hit < best_hit
+            {
+                best_hit = n.last_hit;
+                best = Some((i, None));
+            }
+        }
+        let Some((i, tail)) = best else { return false };
+        match tail {
+            Some(ti) => {
+                self.node_mut(i).tails.remove(ti);
+            }
+            None => {
+                let p = self.node(i).parent;
+                self.node_mut(p).children.retain(|&c| c != i);
+                self.nodes[i] = None;
+                self.free.push(i);
+            }
+        }
+        self.evictions += 1;
+        true
+    }
+
+    fn collect_pinned(&self, out: &mut HashSet<u32>) {
+        for n in self.nodes.iter().flatten() {
+            for e in &n.entries {
+                e.state.collect_pages(out);
+            }
+            for tl in &n.tails {
+                tl.entry.state.collect_pages(out);
+            }
+        }
+    }
+
+    /// Distinct pool pages currently pinned by tree entries. O(entries
+    /// x pages) — called on inserts and metric samples, not hot paths.
+    pub fn pinned_pages(&self) -> usize {
+        let mut set = HashSet::new();
+        self.collect_pinned(&mut set);
+        set.len()
+    }
+
+    /// Evict LRU leaves until the union of the current pinned set and
+    /// `incoming` fits the budget (or nothing is left to evict).
+    fn make_room(&mut self, incoming: &HashSet<u32>) {
+        if self.max_pages == usize::MAX {
+            return;
+        }
+        loop {
+            // one scan serves both the eviction accounting (pinned
+            // before) and, extended with `incoming`, the budget check
+            let mut set = HashSet::new();
+            self.collect_pinned(&mut set);
+            let before = set.len();
+            set.extend(incoming.iter().copied());
+            if set.len() <= self.max_pages {
+                return;
+            }
+            if !self.evict_one() {
+                return;
+            }
+            self.evicted_pages +=
+                (before - self.pinned_pages()) as u64;
+        }
+    }
+
+    fn enforce_budget(&mut self) {
+        self.make_room(&HashSet::new());
+    }
+
+    /// Unpin at least `want_pages` pages by evicting LRU leaves (the
+    /// batcher's pool-pressure hook). Returns the pages unpinned —
+    /// they reach the free list once no live sequence still refs
+    /// them, so the caller re-reads pool occupancy afterwards.
+    pub fn reclaim(&mut self, want_pages: usize) -> usize {
+        if want_pages == 0 {
+            return 0;
+        }
+        let start = self.pinned_pages();
+        let mut unpinned = 0usize;
+        while unpinned < want_pages && self.evict_one() {
+            unpinned = start - self.pinned_pages();
+        }
+        self.evicted_pages += unpinned as u64;
+        unpinned
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        let mut nodes = 0usize;
+        let mut entries = 0usize;
+        for n in self.nodes.iter().flatten() {
+            nodes += 1;
+            entries += n.entries.len() + n.tails.len();
+        }
+        PrefixStats {
+            lookups: self.lookups,
+            hits: self.hits,
+            exact_hits: self.exact_hits,
+            tokens_reused: self.tokens_reused,
+            evicted_pages: self.evicted_pages,
+            evictions: self.evictions,
+            pinned_pages: self.pinned_pages(),
+            nodes: nodes - 1,
+            entries,
+        }
+    }
+}
+
+impl<S> std::fmt::Debug for PrefixTree<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PrefixTree({} slots, budget {})", self.nodes.len(),
+               self.max_pages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Page-id-set stand-in for a KV cache: page `p` of key family
+    /// `fam` gets id `fam * 64 + p`, so shared prefixes share ids.
+    #[derive(Clone)]
+    struct Fake {
+        pages: Vec<u32>,
+    }
+
+    impl CachedState for Fake {
+        fn fork(&self) -> Fake {
+            self.clone()
+        }
+
+        fn collect_pages(&self, out: &mut HashSet<u32>) {
+            out.extend(self.pages.iter().copied());
+        }
+    }
+
+    fn key(fam: u16, n: usize) -> Vec<u16> {
+        (0..n).map(|i| fam * 1000 + (i as u16 % 97)).collect()
+    }
+
+    /// (state, logits) snapshots for boundaries (matched..b] of a key
+    /// whose page `p` has id `fam * 64 + p`.
+    fn snaps(fam: u16, matched: usize, b: usize)
+        -> Vec<(Fake, Vec<f32>)> {
+        (matched / PAGE_TOKENS + 1..=b / PAGE_TOKENS)
+            .map(|pages| {
+                let ids =
+                    (0..pages as u32).map(|p| fam as u32 * 64 + p);
+                (Fake { pages: ids.collect() },
+                 vec![pages as f32])
+            })
+            .collect()
+    }
+
+    fn tail_snap(fam: u16, b: usize, len: usize)
+        -> Option<(Fake, Vec<f32>)> {
+        if len == b {
+            return None;
+        }
+        let ids = (0..=(b / PAGE_TOKENS) as u32)
+            .map(|p| fam as u32 * 64 + p);
+        Some((Fake { pages: ids.collect() }, vec![len as f32 + 0.5]))
+    }
+
+    fn insert_key(t: &mut PrefixTree<Fake>, fam: u16, len: usize,
+                  matched: usize) {
+        let k = key(fam, len);
+        let b = len / PAGE_TOKENS * PAGE_TOKENS;
+        t.insert(&k, matched, snaps(fam, matched, b),
+                 tail_snap(fam, b, len));
+    }
+
+    #[test]
+    fn exact_and_boundary_lookups_roundtrip() {
+        let mut t: PrefixTree<Fake> = PrefixTree::new(usize::MAX);
+        insert_key(&mut t, 1, 40, 0); // 2 pages + 8-token tail
+        // exact full prompt -> tail terminal with its logits
+        match t.lookup(&key(1, 40)) {
+            Lookup::Exact { logits, .. } => {
+                assert_eq!(logits, vec![40.5])
+            }
+            _ => panic!("exact tail lookup missed"),
+        }
+        // exact page-aligned prefixes -> boundary entries
+        match t.lookup(&key(1, 32)) {
+            Lookup::Exact { state, logits } => {
+                assert_eq!(logits, vec![2.0]);
+                let mut s = HashSet::new();
+                state.collect_pages(&mut s);
+                assert_eq!(s.len(), 2);
+            }
+            _ => panic!("aligned exact missed"),
+        }
+        match t.lookup(&key(1, 16)) {
+            Lookup::Exact { logits, .. } => {
+                assert_eq!(logits, vec![1.0])
+            }
+            _ => panic!("16-token exact missed"),
+        }
+        // 24 tokens: one whole page cached, 8 to recompute
+        match t.lookup(&key(1, 24)) {
+            Lookup::Partial { matched, .. } => assert_eq!(matched, 16),
+            _ => panic!("unaligned partial missed"),
+        }
+        // unrelated key misses
+        assert!(matches!(t.lookup(&key(9, 40)), Lookup::Miss));
+        let s = t.stats();
+        assert_eq!(s.lookups, 5);
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.exact_hits, 3);
+        assert_eq!(s.tokens_reused, (40 + 32 + 16 + 16) as u64);
+        assert_eq!(s.entries, 3); // 2 boundary entries + 1 tail
+    }
+
+    #[test]
+    fn divergent_key_splits_at_page_boundary() {
+        let mut t: PrefixTree<Fake> = PrefixTree::new(usize::MAX);
+        insert_key(&mut t, 1, 48, 0); // single 3-page edge
+        assert_eq!(t.stats().nodes, 1);
+        // a second key sharing the first 2 pages + 3 tokens: lookup
+        // snaps the match to 32
+        let mut k2 = key(1, 35);
+        k2.extend(key(2, 13)); // 48 tokens, diverges at 35
+        let matched = match t.lookup(&k2) {
+            Lookup::Partial { matched, .. } => matched,
+            _ => panic!("shared-prefix lookup missed"),
+        };
+        assert_eq!(matched, 32, "match must snap to the page size");
+        // insert the recomputed remainder: the 48-edge splits at 32
+        t.insert(&k2, 32, snaps(2, 32, 48), None);
+        let s = t.stats();
+        assert_eq!(s.nodes, 3, "split must yield parent + 2 branches");
+        // both originals still hit exactly
+        assert!(matches!(t.lookup(&key(1, 48)), Lookup::Exact { .. }));
+        assert!(matches!(t.lookup(&k2), Lookup::Exact { .. }));
+        // the shared 32-token boundary is cached once (page ids of
+        // family 1 for pages 0..2 pin exactly once)
+        assert!(matches!(t.lookup(&key(1, 32)),
+                         Lookup::Exact { .. }));
+    }
+
+    #[test]
+    fn lru_evicts_cold_leaves_first() {
+        let mut t: PrefixTree<Fake> = PrefixTree::new(usize::MAX);
+        insert_key(&mut t, 1, 32, 0); // pins pages {64, 65}
+        insert_key(&mut t, 2, 32, 0); // pins pages {128, 129}
+        assert_eq!(t.pinned_pages(), 4);
+        // warm key 1, then reclaim 2 pages: key 2 must go first
+        let _ = t.lookup(&key(1, 32));
+        let freed = t.reclaim(2);
+        assert_eq!(freed, 2);
+        assert!(matches!(t.lookup(&key(1, 32)),
+                         Lookup::Exact { .. }),
+                "warm key evicted before the cold one");
+        assert!(matches!(t.lookup(&key(2, 32)), Lookup::Miss));
+        let s = t.stats();
+        assert_eq!(s.evicted_pages, 2);
+        assert!(s.evictions >= 1);
+        // reclaim everything
+        let freed = t.reclaim(usize::MAX);
+        assert_eq!(freed, 2);
+        assert_eq!(t.pinned_pages(), 0);
+        assert_eq!(t.stats().nodes, 0);
+    }
+
+    #[test]
+    fn insert_budget_is_enforced() {
+        // budget of 3 pages: a 2-page key fits, the second key evicts
+        // the first instead of growing the pinned set
+        let mut t: PrefixTree<Fake> = PrefixTree::new(3);
+        insert_key(&mut t, 1, 32, 0);
+        assert_eq!(t.pinned_pages(), 2);
+        insert_key(&mut t, 2, 32, 0);
+        assert!(t.pinned_pages() <= 3,
+                "budget exceeded: {}", t.pinned_pages());
+        assert!(matches!(t.lookup(&key(2, 32)),
+                         Lookup::Exact { .. }),
+                "newest insert must survive its own budget pass");
+    }
+
+    #[test]
+    fn tails_are_exact_only_and_deduped() {
+        let mut t: PrefixTree<Fake> = PrefixTree::new(usize::MAX);
+        insert_key(&mut t, 1, 20, 0); // 1 page + 4-token tail
+        // same 16-token page, different 4-token tail: partial at 16
+        let mut other = key(1, 16);
+        other.extend(key(7, 4));
+        match t.lookup(&other) {
+            Lookup::Partial { matched, .. } => assert_eq!(matched, 16),
+            _ => panic!("divergent tail must not match exactly"),
+        }
+        // inserting the same full key twice keeps one tail
+        insert_key(&mut t, 1, 20, 16);
+        assert_eq!(t.stats().entries, 2, "duplicate tail not deduped");
+        // sub-page prompt attaches its tail at the root
+        insert_key(&mut t, 3, 9, 0);
+        assert!(matches!(t.lookup(&key(3, 9)),
+                         Lookup::Exact { .. }));
+        assert!(matches!(t.lookup(&key(3, 8)), Lookup::Miss));
+    }
+}

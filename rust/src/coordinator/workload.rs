@@ -1,5 +1,7 @@
 //! Synthetic serving workloads: Poisson arrivals over corpus-derived
-//! prompts (the workload generator for the serving benches).
+//! prompts, plus a shared-prefix workload (system-prompt-style traffic
+//! where groups of requests share a long common prefix) for the radix
+//! prefix-cache benches.
 
 use crate::data::Corpus;
 use crate::util::rng::Pcg64;
@@ -26,6 +28,20 @@ impl Default for WorkloadSpec {
     }
 }
 
+/// Slice `text[start..start + len]` snapped outward to char
+/// boundaries (ascii corpus, but be safe).
+fn snap_slice(text: &str, start: usize, len: usize) -> String {
+    let mut s = start.min(text.len());
+    while s > 0 && !text.is_char_boundary(s) {
+        s -= 1;
+    }
+    let mut e = (s + len).min(text.len());
+    while e < text.len() && !text.is_char_boundary(e) {
+        e += 1;
+    }
+    text[s..e].to_string()
+}
+
 /// Prompts sampled from the corpus val split.
 pub fn generate(spec: &WorkloadSpec, corpus: &Corpus)
     -> Vec<(String, usize)> {
@@ -40,16 +56,72 @@ pub fn generate(spec: &WorkloadSpec, corpus: &Corpus)
                 + rng.below(spec.max_new.1 - spec.max_new.0 + 1);
             let start =
                 rng.below(bytes.len().saturating_sub(plen + 1).max(1));
-            // snap to char boundary (ascii corpus, but be safe)
-            let mut s = start;
-            while s > 0 && !text.is_char_boundary(s) {
-                s -= 1;
-            }
-            let mut e = s + plen;
-            while e < text.len() && !text.is_char_boundary(e) {
-                e += 1;
-            }
-            (text[s..e].to_string(), mlen)
+            (snap_slice(&text, start, plen), mlen)
+        })
+        .collect()
+}
+
+/// Shared-prefix workload: `n_groups` distinct "system prompts", each
+/// reused by `group_size` requests whose suffixes differ — the
+/// dominant traffic shape the radix prefix cache targets.
+#[derive(Debug, Clone)]
+pub struct SharedPrefixSpec {
+    /// distinct shared prefixes
+    pub n_groups: usize,
+    /// requests per group
+    pub group_size: usize,
+    /// shared prefix length (tokens; byte-level tokenizer)
+    pub prefix_len: usize,
+    /// per-request divergent suffix length range (inclusive)
+    pub suffix_len: (usize, usize),
+    /// generation budget range (inclusive)
+    pub max_new: (usize, usize),
+    pub seed: u64,
+}
+
+impl Default for SharedPrefixSpec {
+    fn default() -> Self {
+        Self {
+            n_groups: 2,
+            group_size: 4,
+            prefix_len: 48,
+            suffix_len: (8, 16),
+            max_new: (4, 8),
+            seed: 0xCAFE,
+        }
+    }
+}
+
+/// Generate the shared-prefix requests ROUND-ROBIN across groups, so
+/// two requests with the same prefix are never adjacent (with
+/// `n_groups >= 2` an unrelated prompt always sits between them) —
+/// exercising cross-request reuse rather than back-to-back duplicate
+/// snapshots.
+pub fn generate_shared_prefix(spec: &SharedPrefixSpec, corpus: &Corpus)
+    -> Vec<(String, usize)> {
+    let mut rng = Pcg64::new(spec.seed);
+    let text = crate::data::decode(&corpus.val);
+    let n = text.len().max(1);
+    // disjoint corpus slices per group, so prefixes differ
+    let prefixes: Vec<String> = (0..spec.n_groups)
+        .map(|g| {
+            let start = (g * (spec.prefix_len + 64)) % n;
+            snap_slice(&text, start, spec.prefix_len)
+        })
+        .collect();
+    (0..spec.n_groups * spec.group_size)
+        .map(|i| {
+            let g = i % spec.n_groups;
+            let slen = spec.suffix_len.0
+                + rng.below(spec.suffix_len.1 - spec.suffix_len.0 + 1);
+            let mlen = spec.max_new.0
+                + rng.below(spec.max_new.1 - spec.max_new.0 + 1);
+            // clamp like `generate`: a start near the corpus end must
+            // not truncate the divergent suffix below its minimum
+            let start = rng.below(n.saturating_sub(slen + 1).max(1));
+            let mut prompt = prefixes[g].clone();
+            prompt.push_str(&snap_slice(&text, start, slen));
+            (prompt, mlen)
         })
         .collect()
 }
@@ -83,6 +155,36 @@ mod tests {
         for (p, m) in &w {
             assert!(p.len() >= spec.prompt_len.0 - 1);
             assert!(*m >= spec.max_new.0 && *m <= spec.max_new.1);
+        }
+    }
+
+    #[test]
+    fn shared_prefix_workload_interleaves_groups() {
+        let corpus = Corpus {
+            train: vec![],
+            val: "the engineer builds a small bridge near the harbor. "
+                .repeat(20)
+                .bytes()
+                .map(|b| b as u16)
+                .collect(),
+        };
+        let spec = SharedPrefixSpec::default();
+        let w = generate_shared_prefix(&spec, &corpus);
+        assert_eq!(w.len(), spec.n_groups * spec.group_size);
+        // every request in a group shares the exact prefix; adjacent
+        // requests always belong to different groups (non-adjacency:
+        // an unrelated prompt sits between same-prefix prompts)
+        for (i, (p, m)) in w.iter().enumerate() {
+            let twin = &w[(i + spec.n_groups) % w.len()].0;
+            assert_eq!(&p[..spec.prefix_len], &twin[..spec.prefix_len],
+                       "group members lost their shared prefix");
+            assert!(p.len() >= spec.prefix_len + spec.suffix_len.0 - 1);
+            assert!(*m >= spec.max_new.0 && *m <= spec.max_new.1);
+            if i + 1 < w.len() {
+                assert_ne!(&p[..spec.prefix_len],
+                           &w[i + 1].0[..spec.prefix_len],
+                           "adjacent requests share a prefix group");
+            }
         }
     }
 }

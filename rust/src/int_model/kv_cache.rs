@@ -13,8 +13,10 @@
 //! pool's free list; dropping a cache returns its pages immediately, so
 //! an evicted sequence's memory is reusable before any allocator gets
 //! involved. Pages are REFCOUNTED: forking a cache (`IntKvCache::fork`)
-//! shares every page, which is how identical prompt prefixes admitted
-//! back-to-back share memory. A shared page is copied on the first
+//! shares every page, which is how prompts sharing a cached prefix
+//! share memory (the coordinator's radix prefix tree holds boundary
+//! forks across many remembered prompts). A shared page is copied on
+//! the first
 //! write — either a divergent append into the tail page or a lane-scale
 //! grow that must rescale cached values in place (copy-on-write).
 //!
@@ -220,6 +222,13 @@ pub struct PoolStats {
     pub cow_copies: u64,
     /// max `used` ever observed (allocation high-water mark)
     pub high_water: usize,
+    /// pages pinned by the engine's prefix cache (0 without one; the
+    /// pool itself does not know the trie — `IntEngine::pool_stats`
+    /// overlays this from the prefix tree)
+    pub prefix_pages: usize,
+    /// pages unpinned by prefix-cache eviction since engine creation
+    /// (they reach the free list once no live sequence holds them)
+    pub evicted_prefix_pages: u64,
 }
 
 /// One fixed-size block of page storage. Cells are `UnsafeCell` so the
@@ -337,6 +346,8 @@ impl PagePool {
             shared: self.refcnt.iter().filter(|&&c| c > 1).count(),
             cow_copies: self.cow_copies,
             high_water: self.high_water,
+            prefix_pages: 0,
+            evicted_prefix_pages: 0,
         }
     }
 
@@ -775,6 +786,18 @@ impl IntKvCache {
     /// holder, so summing over sequences is conservative).
     pub fn pages(&self) -> usize {
         self.k.iter().chain(self.v.iter()).map(|l| l.pages.len()).sum()
+    }
+
+    /// Visit every pool page id this cache's page tables reference
+    /// (the prefix tree's pinned-page accounting; ids repeat across
+    /// lanes' shared prefixes only if genuinely the same page, so the
+    /// caller de-dupes into a set).
+    pub fn for_each_page(&self, mut f: impl FnMut(u32)) {
+        for lane in self.k.iter().chain(self.v.iter()) {
+            for &id in &lane.pages {
+                f(id);
+            }
+        }
     }
 
     /// Stats of the pool backing this cache.

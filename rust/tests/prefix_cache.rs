@@ -1,0 +1,226 @@
+//! Radix prefix-cache integration (the PR-5 tentpole contract):
+//! page-aligned cross-request reuse over the shared pool, hits
+//! bit-identical to fresh compute at both bit widths and thread
+//! counts, refcounts balanced under random insert/hit/evict/drop
+//! interleavings, and the lock-narrowing concurrency property.
+
+use illm::coordinator::engine::{greedy, Engine, IntEngine, SeqState};
+use illm::data::load_corpus;
+use illm::int_model::quantize::quantize_model;
+use illm::int_model::IntModel;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn int_model(scheme: QuantScheme) -> Arc<IntModel> {
+    let dir = illm::artifacts_dir();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    Arc::new(quantize_model(&fp, scheme, None, None))
+}
+
+fn corpus_toks(at: usize, n: usize) -> Vec<u16> {
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    corpus.val[at..at + n].to_vec()
+}
+
+/// The acceptance scenario: two prompts sharing a >= 32-token prefix,
+/// submitted NON-adjacently (an unrelated prompt between them), must
+/// allocate pages only for their divergent suffixes, produce logits
+/// bit-identical to fresh compute, and keep the pool high-water below
+/// the sum of independent peaks.
+#[test]
+fn shared_prefix_nonadjacent_reuse_is_bit_identical() {
+    let im = int_model(QuantScheme::W8A8);
+    let mut prompt_x = corpus_toks(0, 48);
+    prompt_x.extend(corpus_toks(300, 12));
+    let unrelated = corpus_toks(600, 40);
+    let mut prompt_y = corpus_toks(0, 48);
+    prompt_y.extend(corpus_toks(700, 14));
+
+    let engine = IntEngine::new(im.clone());
+    let (_st_x, _) = engine.prefill(&prompt_x);
+    let (_st_u, _) = engine.prefill(&unrelated); // non-adjacent filler
+    let before = engine.pool_stats().unwrap();
+    let (mut st_y, l_y) = engine.prefill(&prompt_y);
+    let after = engine.pool_stats().unwrap();
+
+    // pages only for the divergent suffix: the 48 shared tokens span
+    // 3 whole pages per lane that are forked, never reallocated. The
+    // only other admissible allocations are CoW copies made when a
+    // lane-scale grow must preserve the trie's shared copy — counted
+    // exactly via the pool's CoW counter.
+    let delta = after.used - before.used;
+    let full = im.pages_for_tokens(prompt_y.len());
+    let suffix_pages =
+        full - im.pages_for_tokens(48.min(prompt_y.len()));
+    let cow_delta = (after.cow_copies - before.cow_copies) as usize;
+    assert!(delta <= suffix_pages + cow_delta,
+            "radix hit allocated {delta} pages; suffix needs only \
+             {suffix_pages} (+{cow_delta} CoW) of the {full} total");
+    assert!(after.shared > 0, "no pages shared after the hit");
+    assert!(after.prefix_pages > 0, "prefix tree pins nothing");
+
+    // bit-identical to fresh compute, including a decode continuation
+    let fresh = IntEngine::new(im.clone());
+    let (mut st_f, l_f) = fresh.prefill(&prompt_y);
+    assert_eq!(l_y, l_f, "hit logits diverged from fresh compute");
+    let next = greedy(&l_y);
+    let d_y = engine.decode(&mut st_y, next);
+    let d_f = fresh.decode(&mut st_f, next);
+    assert_eq!(d_y, d_f, "decode after a radix hit diverged");
+
+    // all three sequences live: sharing keeps the pool below the sum
+    // of independent footprints
+    let sum_independent = im.pages_for_tokens(prompt_x.len())
+        + im.pages_for_tokens(unrelated.len())
+        + im.pages_for_tokens(prompt_y.len());
+    assert!(after.high_water < sum_independent,
+            "high-water {} vs independent sum {}",
+            after.high_water, sum_independent);
+
+    let ps = engine.prefix_stats().unwrap();
+    assert!(ps.hits >= 1 && ps.tokens_reused >= 48,
+            "prefix stats missed the hit: {ps:?}");
+}
+
+/// Hits must be bit-identical to fresh compute at w8a8 AND w4a4, with
+/// 1 AND 4 engine-internal attention threads (threads are scheduling,
+/// never arithmetic).
+#[test]
+fn radix_hits_match_fresh_compute_across_schemes_and_threads() {
+    for scheme in [QuantScheme::W8A8, QuantScheme::W4A4] {
+        let im = int_model(scheme);
+        for threads in [1usize, 4] {
+            let mut warm_prompt = corpus_toks(0, 40);
+            warm_prompt.extend(corpus_toks(250, 9));
+            let unrelated = corpus_toks(500, 25);
+            let mut hit_prompt = corpus_toks(0, 40);
+            hit_prompt.extend(corpus_toks(800, 11));
+            let tag = format!("{} t={threads}", scheme.tag());
+
+            let engine = IntEngine::new(im.clone());
+            let (_sx, _) = engine.prefill_with_threads(&warm_prompt,
+                                                       threads);
+            let (_su, _) = engine.prefill_with_threads(&unrelated,
+                                                       threads);
+            let (mut sy, ly) =
+                engine.prefill_with_threads(&hit_prompt, threads);
+            let fresh = IntEngine::new(im.clone());
+            let (mut sf, lf) =
+                fresh.prefill_with_threads(&hit_prompt, threads);
+            assert_eq!(ly, lf, "{tag}: hit diverged from fresh");
+            // the partial hit really happened (40 tokens -> 2 pages)
+            let ps = engine.prefix_stats().unwrap();
+            assert!(ps.hits >= 1 && ps.tokens_reused >= 32,
+                    "{tag}: no page-aligned reuse recorded");
+            let next = greedy(&ly);
+            assert_eq!(engine.decode(&mut sy, next),
+                       fresh.decode(&mut sf, next),
+                       "{tag}: post-hit decode diverged");
+        }
+    }
+}
+
+/// Random interleavings of prefill (insert + hit), state drop,
+/// decode (CoW/grow on shared pages) and reclaim (evict) must leave
+/// pool refcounts balanced: after dropping every sequence and
+/// reclaiming the whole tree, zero pages remain in use — no leaked
+/// and no double-freed pages (a double free panics the pool's
+/// debug_assert under `cargo test`).
+#[test]
+fn prop_trie_refcounts_balanced_under_interleaving() {
+    let im = int_model(QuantScheme::W4A4);
+    // small budget so insert-time LRU eviction is constantly active
+    let engine = IntEngine::with_prefix_budget(
+        im.clone(), im.pages_for_tokens(96));
+    let mut rng = Pcg64::new(0x5EED);
+    let mut live: Vec<SeqState> = Vec::new();
+    let mut logits: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..60 {
+        match rng.below(10) {
+            0..=5 => {
+                // shared-prefix prompt: one of 3 prefixes x 5 suffixes
+                let p = rng.below(3);
+                let s = rng.below(5);
+                let mut prompt = corpus_toks(p * 200, 16 + p * 16);
+                prompt.extend(corpus_toks(900 + s * 40,
+                                          3 + rng.below(12)));
+                let (st, lg) = engine.prefill(&prompt);
+                live.push(st);
+                logits.push(lg);
+                if live.len() > 4 {
+                    let i = rng.below(live.len());
+                    live.swap_remove(i);
+                    logits.swap_remove(i);
+                }
+            }
+            6..=7 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    live.swap_remove(i);
+                    logits.swap_remove(i);
+                }
+            }
+            8 => {
+                let _ = engine.reclaim_prefix_pages(1 + rng.below(64));
+            }
+            _ => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let next = greedy(&logits[i]);
+                    logits[i] = engine.decode(&mut live[i], next);
+                }
+            }
+        }
+        let s = engine.pool_stats().unwrap();
+        assert!(s.prefix_pages <= im.pages_for_tokens(96),
+                "trie exceeded its page budget: {}", s.prefix_pages);
+    }
+    drop(live);
+    let _ = engine.reclaim_prefix_pages(usize::MAX);
+    let s = engine.pool_stats().unwrap();
+    assert_eq!(s.used, 0,
+               "pages leaked after dropping all sequences and the \
+                whole tree: {s:?}");
+    assert_eq!(engine.prefix_stats().unwrap().pinned_pages, 0);
+}
+
+/// The lock-narrowing satellite: concurrent prefills on one engine
+/// (shared trie + pool) must all complete and match fresh compute —
+/// the trie lock covers only lookup and insert, so shared-prefix
+/// admissions can overlap their compute without corrupting the tree.
+#[test]
+fn concurrent_shared_prefix_prefills_match_fresh_compute() {
+    let im = int_model(QuantScheme::W8A8);
+    let engine = IntEngine::new(im.clone());
+    // warm the shared prefix so every worker can hit it
+    let prefix = corpus_toks(0, 32);
+    let (_sp, _) = engine.prefill(&prefix);
+    let prompts: Vec<Vec<u16>> = (0..4)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.extend(corpus_toks(400 + i * 60, 7 + i));
+            p
+        })
+        .collect();
+    let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let engine = &engine;
+        let handles: Vec<_> = prompts
+            .iter()
+            .map(|p| s.spawn(move || engine.prefill(p).1))
+            .collect();
+        handles.into_iter()
+            .map(|h| h.join().expect("concurrent prefill worker"))
+            .collect()
+    });
+    for (p, got) in prompts.iter().zip(results.iter()) {
+        let fresh = IntEngine::new(im.clone());
+        let (_sf, want) = fresh.prefill(p);
+        assert_eq!(got, &want,
+                   "concurrent prefill diverged from fresh compute");
+    }
+    let s = engine.pool_stats().unwrap();
+    assert!(s.prefix_pages > 0);
+}

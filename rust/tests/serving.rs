@@ -275,11 +275,16 @@ fn kv_budget_admission_control_engages() {
 /// through one engine keeps the pool's allocation high-water mark near
 /// a single request's footprint, far below the sum of per-request
 /// peaks (what per-sequence contiguous allocation would have used).
+/// The prefix-tree budget is pinned to ~one prompt so the cache churns
+/// (LRU eviction) instead of legitimately accumulating every prompt.
 #[test]
 fn page_pool_reuses_freed_pages_across_requests() {
     let dir = illm::artifacts_dir();
     let corpus = load_corpus(&dir).unwrap();
-    let engine = int_engine("tinyllama_s", QuantScheme::W8A8);
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let im = Arc::new(quantize_model(&fp, QuantScheme::W8A8, None, None));
+    let budget = im.pages_for_tokens(24);
+    let engine = IntEngine::with_prefix_budget(im, budget);
     let mut sum_peaks = 0usize;
     let mut per_peak = 0usize;
     for i in 0..6 {
@@ -300,12 +305,17 @@ fn page_pool_reuses_freed_pages_across_requests() {
     assert!(stats.high_water < sum_peaks,
             "no page reuse: high-water {} vs sum of peaks {}",
             stats.high_water, sum_peaks);
-    // flat high-water: one live request + the prefix snapshot + CoW
-    // slack, never proportional to the number of requests served
-    assert!(stats.high_water <= 3 * per_peak,
+    // flat high-water: one live request + the budgeted prefix cache +
+    // CoW slack, never proportional to the number of requests served
+    assert!(stats.high_water <= 4 * per_peak,
             "high-water {} not flat (per-request peak {})",
             stats.high_water, per_peak);
     assert!(stats.free > 0, "freed pages must sit on the free list");
+    assert!(stats.prefix_pages <= budget,
+            "trie pinned {} pages over its {} budget",
+            stats.prefix_pages, budget);
+    assert!(stats.evicted_prefix_pages > 0,
+            "budgeted trie never evicted across distinct prompts");
 }
 
 /// Identical prompts admitted back-to-back share refcounted pages
