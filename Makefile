@@ -5,7 +5,8 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-full test smoke bench-json
+.PHONY: artifacts artifacts-full test smoke bench-json trace-smoke \
+	trace-overhead
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../artifacts --fast
@@ -25,8 +26,25 @@ smoke:
 	cd rust && ILLM_THREADS=4 cargo bench --bench perf_serving -- --smoke
 
 # serving bench + machine-readable rust/BENCH_serving.json (decode and
-# prefill tok/s, latency percentiles, pool high-water, thread count);
+# prefill tok/s, latency percentiles, pool high-water, thread count,
+# per-phase timing histograms, integer-health counters); every run
+# also appends a snapshot line to rust/BENCH_history/serving.jsonl.
 # ILLM_THREADS=4 so the tracked numbers exercise the parallel decode
 # wave; drop ILLM_BENCH_FAST for the full-length run
 bench-json:
-	cd rust && ILLM_BENCH_FAST=1 ILLM_THREADS=4 cargo bench --bench perf_serving
+	cd rust && ILLM_BENCH_FAST=1 ILLM_THREADS=4 \
+		ILLM_GIT_REV=$$(git rev-parse --short HEAD) \
+		cargo bench --bench perf_serving
+
+# request-lifecycle tracing end to end: run the smoke bench with
+# ILLM_TRACE set, then validate the Chrome-trace JSON (full span chain
+# per request + per-layer phase events) with the schema checker
+trace-smoke:
+	cd rust && ILLM_THREADS=2 ILLM_TRACE=trace_smoke.json \
+		cargo bench --bench perf_serving -- --smoke
+	$(PYTHON) python/check_trace.py rust/trace_smoke.json
+
+# microbench overhead gate: tracing disabled must cost < 2% on a
+# decode-scale kernel (asserted in --smoke mode)
+trace-overhead:
+	cd rust && cargo bench --bench perf_ops -- --smoke

@@ -75,6 +75,12 @@ fn main() -> anyhow::Result<()> {
     let n_requests: usize =
         args.get(1).and_then(|v| v.parse().ok()).unwrap_or(32);
     let rate: f64 = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(8.0);
+    // ILLM_TRACE=out.json records request-lifecycle spans + per-layer
+    // phase events and writes a Chrome-trace file at exit (load it in
+    // chrome://tracing or Perfetto); see README "Observability"
+    if illm::trace::init_from_env().is_some() {
+        println!("tracing enabled (ILLM_TRACE)");
+    }
     let dir = illm::artifacts_dir();
     let corpus = load_corpus(&dir)?;
     let model_name = "tinyllama_s";
@@ -126,5 +132,6 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\nE2E OK: build-time python artifacts -> PJRT runtime -> \
               integer-only serving, no python on the request path.");
+    illm::trace::flush_env_trace();
     Ok(())
 }

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file written by the rust trace
+layer (ILLM_TRACE=out.json) — the `make trace-smoke` gate.
+
+Checks, in order:
+  * top-level shape: {"traceEvents": [...], "displayTimeUnit": "ms"}
+  * every event carries name/cat/ph/ts/pid/tid with sane types;
+    'X' events carry a non-negative dur, 'i' events scope s == "g"
+  * at least one request traverses the FULL lifecycle chain
+    queued -> admitted -> prefill-chunk -> decode-wave -> finished
+    (matched through args.req)
+  * at least one per-layer phase event (cat == "phase") exists
+
+Stdlib only (the container has no extra wheels). Exit 0 on success
+with a one-line summary; exit 1 with "check_trace: FAIL: ..." on the
+first violation.
+"""
+
+import json
+import sys
+
+LIFECYCLE = ("queued", "admitted", "prefill-chunk", "decode-wave",
+             "finished")
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}")
+    sys.exit(1)
+
+
+def check_event(i, e):
+    if not isinstance(e, dict):
+        fail(f"event {i} is not an object")
+    for key, types in (("name", str), ("cat", str), ("ph", str),
+                       ("ts", (int, float)), ("pid", int),
+                       ("tid", int)):
+        if key not in e:
+            fail(f"event {i} ({e.get('name', '?')}) missing {key!r}")
+        if not isinstance(e[key], types):
+            fail(f"event {i} {key!r} has type "
+                 f"{type(e[key]).__name__}")
+    if e["ph"] == "X":
+        if not isinstance(e.get("dur"), (int, float)):
+            fail(f"event {i} ({e['name']}): 'X' without numeric dur")
+        if e["dur"] < 0:
+            fail(f"event {i} ({e['name']}): negative dur {e['dur']}")
+    elif e["ph"] == "i":
+        if e.get("s") != "g":
+            fail(f"event {i} ({e['name']}): instant scope {e.get('s')!r}"
+                 " != 'g'")
+    else:
+        fail(f"event {i} ({e['name']}): unexpected ph {e['ph']!r}")
+    if "args" in e and not isinstance(e["args"], dict):
+        fail(f"event {i} ({e['name']}): args is not an object")
+
+
+def main():
+    if len(sys.argv) != 2:
+        print("usage: check_trace.py <trace.json>")
+        sys.exit(2)
+    path = sys.argv[1]
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot load {path}: {e}")
+    if not isinstance(doc, dict):
+        fail("top level is not an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("traceEvents missing or not an array")
+    if not events:
+        fail("traceEvents is empty")
+    if doc.get("displayTimeUnit") != "ms":
+        fail(f"displayTimeUnit {doc.get('displayTimeUnit')!r} != 'ms'")
+
+    per_req = {}  # req id -> set of lifecycle event names
+    n_phase = 0
+    for i, e in enumerate(events):
+        check_event(i, e)
+        if e["cat"] == "phase":
+            n_phase += 1
+        req = e.get("args", {}).get("req")
+        if req is not None and e["name"] in LIFECYCLE:
+            per_req.setdefault(req, set()).add(e["name"])
+
+    complete = [r for r, names in sorted(per_req.items())
+                if names.issuperset(LIFECYCLE)]
+    if not complete:
+        seen = {r: sorted(n) for r, n in sorted(per_req.items())}
+        fail("no request carries the full lifecycle chain "
+             f"{' -> '.join(LIFECYCLE)}; saw {seen}")
+    if n_phase == 0:
+        fail("no per-layer phase events (cat == 'phase')")
+
+    print(f"check_trace: OK: {len(events)} events, "
+          f"{len(complete)}/{len(per_req)} requests with the full "
+          f"lifecycle chain, {n_phase} phase events")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,10 @@ fn rand_mat(rng: &mut Pcg64, r: usize, c: usize, s: f64) -> Mat {
 
 fn main() {
     let mut rng = Pcg64::new(2024);
-    let budget = if std::env::var_os("ILLM_BENCH_FAST").is_some() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget = if smoke
+        || std::env::var_os("ILLM_BENCH_FAST").is_some()
+    {
         0.4
     } else {
         1.5
@@ -134,6 +137,67 @@ fn main() {
         println!("   -> tiled/row ratio {:.2}x (same integer sums, \
                   page-locality only)",
                  s_row.mean_ns / s_tile.mean_ns);
+    }
+
+    // tracing-overhead guardrail (PR 6): a phase-timer wrapping a
+    // decode-scale kernel must be invisible while tracing is OFF (the
+    // disabled path is one relaxed load + branch). Kernel = one page
+    // of attention dots (~130k MACs), large enough that min-of-iters
+    // noise sits well under the 2% gate asserted in smoke mode.
+    {
+        let (rows, phd) = (64usize, 128usize);
+        let page: Vec<i32> = (0..PAGE_TOKENS * phd)
+            .map(|i| ((i * 7) % 255) as i32 - 127)
+            .collect();
+        let q: Vec<i64> = (0..rows * phd)
+            .map(|i| ((i * 13) % 255) as i64 - 127)
+            .collect();
+        let mut scores = vec![0i64; rows * PAGE_TOKENS];
+        let run = |scores: &mut Vec<i64>| {
+            for i in 0..rows {
+                let qrow = &q[i * phd..(i + 1) * phd];
+                for slot in 0..PAGE_TOKENS {
+                    let krow = &page[slot * phd..(slot + 1) * phd];
+                    let mut acc = 0i64;
+                    for (a, &b) in qrow.iter().zip(krow.iter()) {
+                        acc += a * b as i64;
+                    }
+                    scores[i * PAGE_TOKENS + slot] = acc;
+                }
+            }
+            scores[0]
+        };
+        illm::trace::set_spans(false);
+        illm::trace::set_timing(false);
+        let s_seed = bench("decode kernel, no phase timer", budget,
+                           || run(&mut scores));
+        let s_off = bench("decode kernel, timer DISABLED", budget, || {
+            let _pt = illm::trace::phase_timer(
+                illm::trace::Phase::Attend, -1);
+            run(&mut scores)
+        });
+        illm::trace::set_timing(true);
+        let s_on = bench("decode kernel, timer ENABLED ", budget, || {
+            let _pt = illm::trace::phase_timer(
+                illm::trace::Phase::Attend, -1);
+            run(&mut scores)
+        });
+        illm::trace::set_timing(false);
+        illm::trace::reset_phases();
+        let ovh_off =
+            (s_off.min_ns - s_seed.min_ns) / s_seed.min_ns;
+        let ovh_on = (s_on.min_ns - s_seed.min_ns) / s_seed.min_ns;
+        println!("   -> tracing overhead: disabled {:+.2}%, enabled \
+                  {:+.2}% (min-of-iters)",
+                 100.0 * ovh_off, 100.0 * ovh_on);
+        if smoke {
+            assert!(ovh_off < 0.02,
+                    "disabled-tracing overhead {:.2}% exceeds the 2% \
+                     budget (seed {} vs wrapped {})",
+                    100.0 * ovh_off, s_seed.min_ns, s_off.min_ns);
+            println!("   -> smoke assert passed: disabled tracing \
+                      within 2% of the seed path");
+        }
     }
 
     // norm

@@ -405,6 +405,11 @@ fn bench_paging(im: &Arc<IntModel>, corpus: &Corpus, smoke: bool)
 }
 
 fn main() {
+    // phase timing is cheap (lock-free histograms) and makes every
+    // BENCH snapshot carry the per-phase breakdown; ILLM_TRACE
+    // additionally records lifecycle spans for a Chrome trace
+    illm::trace::set_timing(true);
+    let _ = illm::trace::init_from_env();
     let dir = illm::artifacts_dir();
     let corpus = load_corpus(&dir).expect("run `make artifacts`");
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -415,10 +420,15 @@ fn main() {
     let im = Arc::new(im);
     let fpa = Arc::new(fp);
     let threads = illm::util::illm_threads();
+    // provenance stamp for the committed snapshot + history line
+    // (env-injected by `make bench-json`; benches avoid wall clocks)
+    let git_rev = std::env::var("ILLM_GIT_REV")
+        .unwrap_or_else(|_| "unknown".to_string());
     let mut report: Vec<(&str, Json)> = vec![
         ("model", Json::Str(model.to_string())),
         ("threads", Json::Int(threads as i64)),
         ("smoke", Json::Bool(smoke)),
+        ("git_rev", Json::Str(git_rev)),
     ];
 
     let mut serving_json: Option<Json> = None;
@@ -502,6 +512,18 @@ fn main() {
     std::fs::write(out, json.dump() + "\n")
         .expect("write BENCH_serving.json");
     println!("\nwrote {out}");
+    // one line per run appended to the history (ROADMAP item 5: keep
+    // the perf trajectory across commits, not just the latest)
+    std::fs::create_dir_all("BENCH_history")
+        .expect("create BENCH_history");
+    use std::io::Write as _;
+    std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_history/serving.jsonl")
+        .and_then(|mut f| f.write_all((json.dump() + "\n").as_bytes()))
+        .expect("append BENCH_history/serving.jsonl");
+    illm::trace::flush_env_trace();
 
     if !smoke {
         println!("\ntargets (DESIGN.md §8): coordinator overhead < 10%; \

@@ -46,6 +46,7 @@ use super::engine::{greedy, Engine, SeqState};
 use super::metrics::ServeMetrics;
 use super::{Request, Response};
 use crate::data;
+use crate::trace;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -152,11 +153,22 @@ fn wave_one<E: Engine>(cfg: &BatcherConfig, engine: &E, a: &mut Active,
         // attn_threads is this worker's share of the thread budget
         let n = a.pending_prompt.len().min(cfg.prefill_chunk);
         let chunk: Vec<u16> = a.pending_prompt.drain(..n).collect();
+        let mut sp = trace::span("prefill-chunk", "request");
+        sp.arg("req", a.req.id as i64);
+        sp.arg("tokens", chunk.len() as i64);
+        // page sampling only when the span will actually emit
+        let pages0 =
+            if sp.enabled() { engine.kv_pages(&a.state) } else { 0 };
         let t0 = Instant::now();
         let logits = engine.prefill_chunk(&mut a.state, &chunk,
                                           attn_threads);
         ws.prefill_tokens += chunk.len() as u64;
         ws.prefill_time_s += t0.elapsed().as_secs_f64();
+        if sp.enabled() {
+            sp.arg("pages_delta",
+                   engine.kv_pages(&a.state) as i64 - pages0 as i64);
+        }
+        drop(sp);
         a.last_logits = Some(logits);
         return false;
     }
@@ -178,9 +190,19 @@ fn wave_one<E: Engine>(cfg: &BatcherConfig, engine: &E, a: &mut Active,
     if stop {
         return true;
     }
+    let mut sp = trace::span("decode-wave", "request");
+    sp.arg("req", a.req.id as i64);
+    sp.arg("step", a.generated.len() as i64);
+    let pages0 =
+        if sp.enabled() { engine.kv_pages(&a.state) } else { 0 };
     let t0 = Instant::now();
     let logits = engine.decode(&mut a.state, next);
     ws.decode_time_s += t0.elapsed().as_secs_f64();
+    if sp.enabled() {
+        sp.arg("pages_delta",
+               engine.kv_pages(&a.state) as i64 - pages0 as i64);
+    }
+    drop(sp);
     a.last_logits = Some(logits);
     false
 }
@@ -251,6 +273,12 @@ impl Batcher {
             if front.max_new == 0 {
                 let req = self.queue.pop_front().unwrap();
                 let plen = admitted_len(&req.prompt, engine.max_seq(), 0);
+                trace::span_at("queued", "request", req.submitted,
+                               Instant::now(),
+                               &[("req", req.id as i64)]);
+                trace::instant("finished", "request",
+                               &[("req", req.id as i64),
+                                 ("generated", 0)]);
                 let latency = req.submitted.elapsed().as_secs_f64();
                 metrics.record_request(latency, latency);
                 out.push(Response {
@@ -324,10 +352,23 @@ impl Batcher {
             if kv_used + est > self.cfg.kv_page_budget
                 && !self.active.is_empty()
             {
+                trace::instant("admission-block", "request",
+                               &[("req", front.id as i64),
+                                 ("kv_used", kv_used as i64),
+                                 ("est_pages", est as i64)]);
                 metrics.admission_blocks += 1;
                 break;
             }
             let req = self.queue.pop_front().unwrap();
+            // queued span: submit -> admission, on the request's own
+            // timeline; the admitted marker carries the KV accounting
+            // the admission decision was made on
+            trace::span_at("queued", "request", req.submitted,
+                           Instant::now(), &[("req", req.id as i64)]);
+            trace::instant("admitted", "request",
+                           &[("req", req.id as i64),
+                             ("kv_used", kv_used as i64),
+                             ("est_pages", est as i64)]);
             let prompt = normalize_prompt(&req.prompt, engine.max_seq(),
                                           req.max_new);
             let prompt_len = prompt.len();
@@ -336,6 +377,9 @@ impl Batcher {
                 [..prompt.len().min(self.cfg.prefill_chunk)]
                 .to_vec();
             let rest = prompt[first.len()..].to_vec();
+            let mut sp = trace::span("prefill-chunk", "request");
+            sp.arg("req", req.id as i64);
+            sp.arg("tokens", first.len() as i64);
             let t0 = Instant::now();
             // admission runs serially on this thread, so the first
             // chunk's prefill gets the FULL attention thread budget
@@ -344,6 +388,11 @@ impl Batcher {
                                       self.cfg.effective_threads());
             metrics.prefill_tokens += first.len() as u64;
             metrics.prefill_time_s += t0.elapsed().as_secs_f64();
+            if sp.enabled() {
+                // a fresh state's page count IS the allocation delta
+                sp.arg("pages_delta", engine.kv_pages(&state) as i64);
+            }
+            drop(sp);
             self.active.push(Active {
                 req,
                 state,
@@ -417,6 +466,9 @@ impl Batcher {
         // ---- evict finished ----
         for i in finished_idx.into_iter().rev() {
             let a = self.active.swap_remove(i);
+            trace::instant("finished", "request",
+                           &[("req", a.req.id as i64),
+                             ("generated", a.generated.len() as i64)]);
             let latency = a.req.submitted.elapsed().as_secs_f64();
             metrics.record_request(latency, a.ttft.unwrap_or(latency));
             out.push(Response {

@@ -224,6 +224,9 @@ impl Engine for IntEngine {
             Lookup::Exact { state, logits } => {
                 // whole prompt cached: zero prefill compute, stored
                 // logits, refcounted pages with CoW on divergence
+                crate::trace::instant(
+                    "prefix-hit", "engine",
+                    &[("matched", prompt.len() as i64)]);
                 return (SeqState::Int { cache: state }, logits);
             }
             Lookup::Partial { state, matched } => (state, matched),
@@ -232,6 +235,10 @@ impl Engine for IntEngine {
                 0,
             ),
         };
+        if matched > 0 {
+            crate::trace::instant("prefix-hit", "engine",
+                                  &[("matched", matched as i64)]);
+        }
         // ---- compute, lock-free: canonical page chunking (see the
         // module docs) with a boundary snapshot fork per page ----
         let b = prompt.len() / PAGE_TOKENS * PAGE_TOKENS;

@@ -98,6 +98,11 @@ impl ServeMetrics {
     /// `p * n` samples are <= it (rank `ceil(p * n)`, 1-based). The
     /// former `round()` on an interpolated rank was off by one — the
     /// p50 of 1..=100 came out 51.
+    ///
+    /// Edge cases, explicitly: an EMPTY slice returns 0.0 (there is no
+    /// sample to report — callers render it as "no data", not a
+    /// latency); `p <= 0.0` returns the minimum; `p >= 1.0` the
+    /// maximum; a single sample is every percentile of itself.
     pub fn pct(xs: &[f64], p: f64) -> f64 {
         if xs.is_empty() {
             return 0.0;
@@ -189,6 +194,12 @@ impl ServeMetrics {
                       Json::Int(p.entries as i64));
             put("prefix", Json::Obj(fj));
         }
+        // observability (PR 6): per-phase timing histograms and the
+        // global integer-health counters ride along in every snapshot
+        // — process-global aggregates, not per-run (zeroed phase
+        // counts just mean timing was never enabled)
+        put("phases", crate::trace::phases_json());
+        put("health", crate::trace::health_json());
         Json::Obj(o)
     }
 
@@ -242,6 +253,8 @@ impl ServeMetrics {
                 p.evicted_pages,
             );
         }
+        // phase breakdown (prints nothing unless timing ran)
+        crate::trace::print_phase_table();
     }
 }
 
@@ -263,6 +276,45 @@ mod tests {
         // single sample is every percentile
         assert_eq!(ServeMetrics::pct(&[7.0], 0.5), 7.0);
         assert_eq!(ServeMetrics::pct(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn percentiles_of_known_sequences() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        // nearest rank: ceil(0.95 * 100) = 95, ceil(0.99 * 100) = 99
+        assert_eq!(ServeMetrics::pct(&xs, 0.95), 95.0);
+        assert_eq!(ServeMetrics::pct(&xs, 0.99), 99.0);
+        // n = 10: p95 -> rank ceil(9.5) = 10 (the max), p50 -> rank 5
+        let ten: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(ServeMetrics::pct(&ten, 0.95), 10.0);
+        assert_eq!(ServeMetrics::pct(&ten, 0.5), 5.0);
+        // unsorted input must sort before ranking
+        assert_eq!(ServeMetrics::pct(&[9.0, 1.0, 5.0, 3.0, 7.0], 0.5),
+                   5.0);
+        // p past 1.0 clamps to the max, p below 0.0 to the min
+        assert_eq!(ServeMetrics::pct(&ten, 1.5), 10.0);
+        assert_eq!(ServeMetrics::pct(&ten, -0.5), 1.0);
+    }
+
+    #[test]
+    fn percentile_ties_at_rank_boundaries() {
+        // ties straddling the rank: nearest-rank picks the sample AT
+        // the rank, so duplicated values at the boundary must come
+        // back unchanged (not interpolated between distinct values)
+        let xs = [1.0, 2.0, 2.0, 2.0, 3.0]; // n = 5, p50 -> rank 3
+        assert_eq!(ServeMetrics::pct(&xs, 0.5), 2.0);
+        // all-equal samples: every percentile is the value
+        let same = [4.0; 8];
+        for p in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(ServeMetrics::pct(&same, p), 4.0);
+        }
+        // n = 4, p50 -> rank ceil(2.0) = 2: the LOWER of the two
+        // middle samples (nearest-rank never averages)
+        assert_eq!(ServeMetrics::pct(&[1.0, 2.0, 3.0, 4.0], 0.5), 2.0);
+        // boundary exactness: p = k/n lands exactly on rank k
+        let ten: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(ServeMetrics::pct(&ten, 0.2), 2.0);
+        assert_eq!(ServeMetrics::pct(&ten, 0.9), 9.0);
     }
 
     #[test]

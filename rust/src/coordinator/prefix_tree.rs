@@ -349,6 +349,7 @@ impl<S: CachedState> PrefixTree<S> {
             Found::Tail { node, tail, matched } => {
                 self.node_mut(node).tails[tail].last_hit = t;
                 self.hits += 1;
+                crate::trace::bump(&crate::trace::health().prefix_hits);
                 self.exact_hits += 1;
                 self.tokens_reused += matched as u64;
                 let e = &self.node(node).tails[tail].entry;
@@ -359,6 +360,7 @@ impl<S: CachedState> PrefixTree<S> {
             }
             Found::Entry { node, page, matched, exact } => {
                 self.hits += 1;
+                crate::trace::bump(&crate::trace::health().prefix_hits);
                 self.tokens_reused += matched as u64;
                 let e = &self.node(node).entries[page];
                 if exact {
@@ -569,6 +571,7 @@ impl<S: CachedState> PrefixTree<S> {
             }
         }
         self.evictions += 1;
+        crate::trace::bump(&crate::trace::health().prefix_evictions);
         true
     }
 

@@ -111,6 +111,7 @@ use crate::ops::di_softmax::{di_softmax_row, di_softmax_rows};
 use crate::ops::{rdiv, requant_row};
 use crate::quant::DynQ;
 use crate::tensor::IMat;
+use crate::trace::{bump, bump_by, health, phase_timer, Phase};
 use std::cell::UnsafeCell;
 use std::sync::{Arc, Mutex, MutexGuard};
 
@@ -194,12 +195,16 @@ pub(crate) fn merge_align(dst: &mut [i64], src: &[i64], vm: i32, sh: i32) {
         return;
     }
     // largest |src * vm| whose shifted value still fits the clamp
+    bump(&health().merge_widenings);
     let lim = (ALIGN_SAT as i128) >> sh.min(63);
+    let mut clamped = 0u64;
     for (d, &s) in dst.iter_mut().zip(src.iter()) {
         let num = s as i128 * vm as i128;
         *d = if num > lim {
+            clamped += 1;
             ALIGN_SAT
         } else if num < -lim {
+            clamped += 1;
             -ALIGN_SAT
         } else {
             // |num| <= ALIGN_SAT >> sh, so the shift is exact (and 0
@@ -207,6 +212,7 @@ pub(crate) fn merge_align(dst: &mut [i64], src: &[i64], vm: i32, sh: i32) {
             (num << sh.min(63)) as i64
         };
     }
+    bump_by(&health().merge_saturations, clamped);
 }
 
 /// Aggregate pool counters for metrics / admission diagnostics.
@@ -425,6 +431,7 @@ impl PagePool {
         self.copy_page(id, new);
         self.release(id);
         self.cow_copies += 1;
+        bump(&health().pool_cow_copies);
         new
     }
 
@@ -619,9 +626,19 @@ impl Lane {
         }
         let lo = x.iter().copied().min().unwrap_or(0);
         let hi = x.iter().copied().max().unwrap_or(0);
+        // health telemetry: an incoming nonzero row past the shift cap
+        // either forces saturating grow probes (coarser than the lane
+        // by > 2^LANE_SH_MAX) or rounds to stored zeros (finer)
+        let nonzero = lo != 0 || hi != 0;
+        if nonzero && self.k - kt > LANE_SH_MAX {
+            bump(&health().lane_grow_saturations);
+        }
         let grows = self.grows_needed(&[(lo, hi, mt, kt)]);
         self.grow_by(pool, grows, hd);
         let sh = self.k - kt;
+        if nonzero && -sh > LANE_SH_MAX {
+            bump(&health().lane_zero_rounds);
+        }
         let (id, slot) = self.writable_tail(pool);
         let dst = &mut pool.page_mut(id)[slot * hd..(slot + 1) * hd];
         for (d, &v) in dst.iter_mut().zip(x.iter()) {
@@ -651,8 +668,26 @@ impl Lane {
                 (lo, hi, ms[r], ks[r])
             })
             .collect();
+        let k_entry = self.k;
         let grows = self.grows_needed(&rows);
         self.grow_by(pool, grows, hd);
+        // health telemetry, mirroring `append`: per nonzero row, a
+        // pre-grow gap past the cap forced saturating probes; a
+        // post-grow gap past the cap stores the row as zeros
+        let (mut grow_sat, mut zero_rounds) = (0u64, 0u64);
+        for &(lo, hi, _mt, kt) in &rows {
+            if lo == 0 && hi == 0 {
+                continue;
+            }
+            if k_entry - kt > LANE_SH_MAX {
+                grow_sat += 1;
+            }
+            if kt - self.k > LANE_SH_MAX {
+                zero_rounds += 1;
+            }
+        }
+        bump_by(&health().lane_grow_saturations, grow_sat);
+        bump_by(&health().lane_zero_rounds, zero_rounds);
         for r in 0..t {
             let sh = self.k - ks[r];
             let mt = ms[r] as i64;
@@ -869,18 +904,23 @@ impl IntModel {
             }
         }
         probs.resize(valid, 0);
-        di_softmax_row(
-            scores,
-            qm,
-            qk,
-            lane_k.m,
-            lane_k.k,
-            self.scheme.softmax_bits,
-            self.scheme.clip,
-            valid,
-            probs,
-            scratch,
-        );
+        {
+            // nested inside the Attend phase; layer is unattributed
+            // (-1) here — attend_row does not know its layer index
+            let _pt = phase_timer(Phase::Softmax, -1);
+            di_softmax_row(
+                scores,
+                qm,
+                qk,
+                lane_k.m,
+                lane_k.k,
+                self.scheme.softmax_bits,
+                self.scheme.clip,
+                valid,
+                probs,
+                scratch,
+            );
+        }
         let mut j = 0;
         'v_pages: for &pid in &lane_v.pages {
             let pdata = snap.page(pid);
@@ -987,19 +1027,22 @@ impl IntModel {
             }
             j0 += page_toks;
         }
-        di_softmax_rows(
-            scores,
-            s_total,
-            qm,
-            qk,
-            lane_k.m,
-            lane_k.k,
-            self.scheme.softmax_bits,
-            self.scheme.clip,
-            pos0 + 1,
-            probs,
-            exp,
-        );
+        {
+            let _pt = phase_timer(Phase::Softmax, -1);
+            di_softmax_rows(
+                scores,
+                s_total,
+                qm,
+                qk,
+                lane_k.m,
+                lane_k.k,
+                self.scheme.softmax_bits,
+                self.scheme.clip,
+                pos0 + 1,
+                probs,
+                exp,
+            );
+        }
         let mut j0 = 0usize;
         for &pid in &lane_v.pages {
             if j0 >= s_total {
@@ -1168,6 +1211,7 @@ impl IntModel {
         let AttnScratch { scores, probs, exp, o_raw, vms, vks, snap, .. } =
             scratch;
         for (li, layer) in self.layers.iter().enumerate() {
+            let pt = phase_timer(Phase::Qkv, li as i64);
             let hh = di_norm(&x, a_bits, centered);
             let q = di_linear(&hh, &layer.wq, a_bits);
             let k = di_linear(&hh, &layer.wk, a_bits);
@@ -1175,9 +1219,13 @@ impl IntModel {
             let qh = self.center_rope(&q, pos0, rotate);
             let kh = self.center_rope(&k, pos0, rotate);
             let vh = self.center_rope(&v, 0, false);
+            drop(pt);
             // ---- short locked phase: bulk K/V append + snapshot
             // refresh; the pool lock is never held across attention ----
             {
+                // times lock wait + hold: the lock-held side of the
+                // narrowing split (the guard drops before the timer)
+                let _pt = phase_timer(Phase::KvAppend, li as i64);
                 let mut guard = lock_pool(pool);
                 for head in 0..h {
                     let idx = li * h + head;
@@ -1198,6 +1246,7 @@ impl IntModel {
                 vks.push(lane_v.k);
             }
             // ---- lock-free attend phase over the snapshot ----
+            let pt = phase_timer(Phase::Attend, li as i64);
             o_raw.clear();
             o_raw.resize(t * h * hd, 0);
             if nt <= 1 {
@@ -1285,7 +1334,11 @@ impl IntModel {
                     }
                 }
             }
+            drop(pt);
+            let pt = phase_timer(Phase::Merge, li as i64);
             let att = self.merge_heads(o_raw, t, vms, vks);
+            drop(pt);
+            let _pt = phase_timer(Phase::Mlp, li as i64);
             x = self.layer_tail(&x, &att, layer);
         }
         cache.pos += t;
@@ -1334,6 +1387,7 @@ impl IntModel {
         let AttnScratch { scores, probs, exp, o_raw, vms, vks, qrow,
                           krow, vrow, snap } = scratch;
         for (li, layer) in self.layers.iter().enumerate() {
+            let pt = phase_timer(Phase::Qkv, li as i64);
             let hh = di_norm(&x, a_bits, centered);
             let q = di_linear(&hh, &layer.wq, a_bits);
             let k = di_linear(&hh, &layer.wk, a_bits);
@@ -1342,12 +1396,14 @@ impl IntModel {
             self.center_rope_row_into(&q, pos, rotate, qrow);
             self.center_rope_row_into(&k, pos, rotate, krow);
             self.center_rope_row_into(&v, 0, false, vrow);
+            drop(pt);
             // ---- short locked phase: append K/V, refresh the cached
             // storage snapshot (O(1) unless the pool grew a slab).
             // Appending V before the softmax is equivalent: scores
             // never read the V lane, and the PV loop covers the new
             // entry either way. ----
             {
+                let _pt = phase_timer(Phase::KvAppend, li as i64);
                 let mut guard = lock_pool(pool);
                 for head in 0..h {
                     let idx = li * h + head;
@@ -1363,6 +1419,7 @@ impl IntModel {
                 guard.refresh_snapshot(snap);
             }
             // ---- lock-free attend over the snapshot ----
+            let pt = phase_timer(Phase::Attend, li as i64);
             o_raw.clear();
             o_raw.resize(h * hd, 0);
             vms.clear();
@@ -1389,7 +1446,11 @@ impl IntModel {
                     exp,
                 );
             }
+            drop(pt);
+            let pt = phase_timer(Phase::Merge, li as i64);
             let att = self.merge_heads(o_raw, 1, vms, vks);
+            drop(pt);
+            let _pt = phase_timer(Phase::Mlp, li as i64);
             x = self.layer_tail(&x, &att, layer);
         }
         cache.pos += 1;
@@ -1579,6 +1640,7 @@ mod tests {
         let hd = 2;
         let mut pool = PagePool::new(hd);
         let mut lane = Lane::new();
+        let h0 = health().snapshot();
         // adopt a very fine scale, then append at a much coarser one:
         // the saturating probe must keep growing rather than silently
         // truncating the shift, and values must stay in range
@@ -1589,10 +1651,22 @@ mod tests {
                 "gap append escaped 8-bit range: {vals:?}");
         // and the coarse vector survived (did not collapse to zero)
         assert!(vals[hd..].iter().any(|&v| v != 0));
+        // exactly ONE health tick: the second append's 58-binade gap
+        // (the first adopts the lane scale, gap 0)
+        let d = health().snapshot().since(&h0);
+        assert_eq!(d.lane_grow_saturations, 1,
+                   "grow-saturation must count once per clamped append");
+        assert_eq!(d.lane_zero_rounds, 0);
         // reverse direction: much finer than the lane rounds to zero
         lane.append(&mut pool, &[3, -3], 200, 62, hd);
         let vals = lane.used_vals(&pool, hd);
         assert_eq!(&vals[2 * hd..], &[0, 0]);
+        let d = health().snapshot().since(&h0);
+        assert_eq!(
+            (d.lane_grow_saturations, d.lane_zero_rounds),
+            (1, 1),
+            "zero-round must count once for the rounded-away append"
+        );
     }
 
     /// The bulk scale resolution must land on exactly the lane scale
@@ -1705,6 +1779,7 @@ mod tests {
     #[test]
     fn merge_aligns_extreme_cross_head_scale_gaps_exactly() {
         let hd = 4;
+        let h0 = health().snapshot();
         // three heads; kcom = 45. gaps: 45, 35, 0 — two past the cap.
         let vks = [0i32, 10, 45];
         let vms = [1i32, 255, 200];
@@ -1745,5 +1820,14 @@ mod tests {
         let mut huge = vec![0i64; hd];
         merge_align(&mut huge, &[0, 5, -5, 0], 3, 200);
         assert_eq!(huge, vec![0, ALIGN_SAT, -ALIGN_SAT, 0]);
+        // health ticks are exact: 4 wide-path calls (sh = 45, 35, 50,
+        // 200; sh = 0 stays on the fast path) and 5 clamped elements
+        // (3 at sh=50 — 255<<22, -255<<22 and 255 all exceed lim=15 —
+        // plus ±15 against lim=0 at sh=200; zeros never clamp)
+        let d = health().snapshot().since(&h0);
+        assert_eq!(d.merge_widenings, 4,
+                   "wide-path entries must count once per call");
+        assert_eq!(d.merge_saturations, 5,
+                   "clamped elements must count exactly");
     }
 }

@@ -27,6 +27,7 @@ pub mod ops;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 
 use std::path::PathBuf;

@@ -12,6 +12,7 @@
 use super::di_exp::{di_exp_one, exp_t};
 use super::{fdiv, ilog2, rdiv};
 use crate::quant::K_MAX;
+use crate::trace::{bump, bump_by, health};
 
 /// Softmax of one score row into `out` (i32 probabilities with scale
 /// 1/2^(p_out-1), zp = 0). `valid` = number of leading attendable
@@ -33,6 +34,7 @@ pub fn di_softmax_row(
     let m_in = m1 as i64 * m2 as i64;
     let k_in = k1 + k2;
     debug_assert!(m_in >= 1 && k_in >= 0);
+    bump(&health().softmax_rows);
     let mut pmax = i64::MIN;
     for &v in &p[..n] {
         if v > pmax {
@@ -58,6 +60,11 @@ pub fn di_softmax_row(
                 pmin = v;
             }
         }
+        // the clip floor ENGAGES only when the true row range exceeds
+        // the window c — that is the accuracy-relevant event to count
+        if pmax - c_i > pmin {
+            bump(&health().softmax_clipped_rows);
+        }
         pmin.max(pmax - c_i)
     };
     let rng = (pmax - floor_v).max(1);
@@ -78,13 +85,19 @@ pub fn di_softmax_row(
     scratch.clear();
     scratch.reserve(n);
     let mut denom: i64 = 0;
+    let mut underflows = 0u64;
     for &v in &p[..n] {
         let vc = v.max(floor_v);
         let x8 = rdiv((vc - floor_v) * qmax, rng);
         let e = di_exp_one(x8 - 255, t);
+        if e == 0 {
+            // an ATTENDED entry whose DI-exp rounded to exactly zero
+            underflows += 1;
+        }
         scratch.push(e);
         denom += e;
     }
+    bump_by(&health().exp_underflows, underflows);
     let denom = denom.max(1);
     let pout_max = 1i64 << (p_out - 1);
     for (o, &e) in out[..n].iter_mut().zip(scratch.iter()) {

@@ -125,16 +125,23 @@ pub fn requant_row(
 
     // Eq. 6: k_y via MSB of qmax * 2^(k_in+8) / (rng * m_in)
     let num = qmax << (k_in + 8).min(56);
-    let k_y = ilog2((num / (rng * m_in)).max(1)).clamp(0, ACT_K_MAX);
+    let ky_raw = ilog2((num / (rng * m_in)).max(1));
+    let k_y = ky_raw.clamp(0, ACT_K_MAX);
     // Eq. 7: m_y = floor(rng * m_in * 2^(k_y - k_in) / qmax)
     let sh = k_y - k_in;
     let prod = rng * m_in;
-    let m_y = if sh >= 0 {
+    let my_raw = if sh >= 0 {
         (prod << sh.min(62)) / qmax
     } else {
         (prod >> (-sh).min(62)) / qmax
+    };
+    let m_y = my_raw.clamp(1, 255) as i32;
+    // health telemetry: a scale hitting its rail means the row's
+    // dynamic range outran the dyadic representation (ky_raw >= 0
+    // always, since ilog2's argument is >= 1)
+    if ky_raw > ACT_K_MAX || my_raw < 1 || my_raw > 255 {
+        crate::trace::bump(&crate::trace::health().requant_scale_clamps);
     }
-    .clamp(1, 255) as i32;
     // Eq. 8 (round-half-up)
     let zp = rdiv(-pmin * qmax, rng) as i32;
     if clipped {

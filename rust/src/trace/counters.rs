@@ -1,0 +1,142 @@
+//! Always-on integer-health counters: one global set of relaxed
+//! atomics bumped at every saturation / clip site in the integer
+//! kernels and at pool / prefix-trie events. See the module doc in
+//! `trace/mod.rs` for why these are unconditional and `Relaxed`.
+
+use crate::util::json::{obj, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// One relaxed increment. Call sites pass the specific counter field
+/// so the hot path stays a single `fetch_add`.
+#[inline]
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Batched increment for loops that tally locally first (keeps the
+/// atomic traffic to one RMW per call site invocation).
+#[inline]
+pub fn bump_by(c: &AtomicU64, n: u64) {
+    if n > 0 {
+        c.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+macro_rules! health_counters {
+    ($($(#[$doc:meta])* $name:ident),* $(,)?) => {
+        /// The global tally set. Each field is an independent
+        /// monotonic event count; read with `snapshot()`.
+        #[derive(Debug, Default)]
+        pub struct HealthCounters {
+            $($(#[$doc])* pub $name: AtomicU64,)*
+        }
+
+        /// A point-in-time copy of every counter (plain u64s), for
+        /// delta assertions and JSON export.
+        #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+        pub struct HealthSnapshot {
+            $(pub $name: u64,)*
+        }
+
+        impl HealthCounters {
+            pub fn snapshot(&self) -> HealthSnapshot {
+                HealthSnapshot {
+                    $($name: self.$name.load(Ordering::Relaxed),)*
+                }
+            }
+        }
+
+        impl HealthSnapshot {
+            /// Per-counter delta `self - earlier` (saturating, so a
+            /// stale `earlier` cannot underflow).
+            pub fn since(&self, earlier: &HealthSnapshot) -> HealthSnapshot {
+                HealthSnapshot {
+                    $($name: self.$name.saturating_sub(earlier.$name),)*
+                }
+            }
+
+            pub fn total(&self) -> u64 {
+                0 $(+ self.$name)*
+            }
+
+            pub fn to_json(&self) -> Json {
+                obj(vec![
+                    $((stringify!($name), Json::Int(self.$name as i64)),)*
+                ])
+            }
+        }
+    };
+}
+
+health_counters!(
+    /// `Lane::append`/`append_chunk`: an incoming row's exponent was
+    /// so far above the lane scale that the grow probe saturated at
+    /// `LANE_SH_MAX` (old values clamp to the i8 rails).
+    lane_grow_saturations,
+    /// `Lane::append`/`append_chunk`: an incoming nonzero row landed
+    /// more than `LANE_SH_MAX` binades BELOW the lane scale and was
+    /// stored as zeros.
+    lane_zero_rounds,
+    /// `merge_align` took the wide (i128) path because the cross-head
+    /// exponent gap exceeded `MERGE_SH_MAX`.
+    merge_widenings,
+    /// Elements clamped to `±ALIGN_SAT` inside the wide merge path.
+    merge_saturations,
+    /// DI-ClippedSoftmax rows processed (denominator for clip rate).
+    softmax_rows,
+    /// Rows where the clip floor actually engaged (`pmax - c > pmin`).
+    softmax_clipped_rows,
+    /// Attended score entries whose DI-exp underflowed to exactly 0.
+    exp_underflows,
+    /// `requant_row` hit a scale rail (`k_y > ACT_K_MAX` or `m_y`
+    /// outside `[1, 255]` before clamping).
+    requant_scale_clamps,
+    /// Pages copied by the pool's copy-on-write fork path.
+    pool_cow_copies,
+    /// Radix prefix-tree lookups that returned a reusable prefix.
+    prefix_hits,
+    /// Prefix-tree leaves evicted (LRU or admission reclaim).
+    prefix_evictions,
+);
+
+/// The process-wide counter set.
+pub fn health() -> &'static HealthCounters {
+    static H: OnceLock<HealthCounters> = OnceLock::new();
+    H.get_or_init(HealthCounters::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_deltas_and_json() {
+        let c = HealthCounters::default();
+        let s0 = c.snapshot();
+        bump(&c.lane_grow_saturations);
+        bump_by(&c.merge_saturations, 3);
+        bump_by(&c.prefix_hits, 0); // no-op
+        let d = c.snapshot().since(&s0);
+        assert_eq!(d.lane_grow_saturations, 1);
+        assert_eq!(d.merge_saturations, 3);
+        assert_eq!(d.prefix_hits, 0);
+        assert_eq!(d.total(), 4);
+        let j = d.to_json();
+        assert_eq!(
+            j.get("merge_saturations").and_then(Json::as_i64),
+            Some(3)
+        );
+        assert_eq!(j.get("softmax_rows").and_then(Json::as_i64), Some(0));
+    }
+
+    #[test]
+    fn since_saturates_instead_of_underflowing() {
+        let c = HealthCounters::default();
+        bump(&c.exp_underflows);
+        let later = c.snapshot();
+        bump(&c.exp_underflows);
+        let newer = c.snapshot();
+        assert_eq!(later.since(&newer).exp_underflows, 0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Export paths for the trace layer: Chrome trace-event JSON
+//! (`chrome://tracing` / Perfetto), the `phases`/`health` blocks for
+//! `ServeMetrics::to_json`, and the human phase table.
+
+use super::counters::health;
+use super::span::{phase_snapshots, take_events, Event};
+use crate::util::bench::fmt_ns;
+use crate::util::json::{obj, Json};
+use crate::util::Table;
+
+fn event_json(e: &Event) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("name", Json::Str(e.name.to_string())),
+        ("cat", Json::Str(e.cat.to_string())),
+        ("ph", Json::Str(e.ph.to_string())),
+        ("ts", Json::Num(e.ts_us)),
+        ("pid", Json::Int(1)),
+        ("tid", Json::Int(e.tid as i64)),
+    ];
+    match e.ph {
+        'X' => pairs.push(("dur", Json::Num(e.dur_us))),
+        // instants need a scope; "g" (global) spans all rows
+        'i' => pairs.push(("s", Json::Str("g".into()))),
+        _ => {}
+    }
+    if !e.args.is_empty() {
+        pairs.push((
+            "args",
+            obj(e.args.iter().map(|&(k, v)| (k, Json::Int(v))).collect()),
+        ));
+    }
+    obj(pairs)
+}
+
+/// Chrome trace-event "JSON object format": the shape both
+/// `chrome://tracing` and Perfetto load directly.
+pub fn chrome_trace_json(events: &[Event]) -> Json {
+    obj(vec![
+        (
+            "traceEvents",
+            Json::Arr(events.iter().map(event_json).collect()),
+        ),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Drain all recorded events into a Chrome trace file. Returns the
+/// number of events written.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<usize> {
+    let events = take_events();
+    let json = chrome_trace_json(&events);
+    std::fs::write(path, json.dump() + "\n")?;
+    Ok(events.len())
+}
+
+/// If `ILLM_TRACE` is set, write the accumulated events there (the
+/// companion to `init_from_env` at process start).
+pub fn flush_env_trace() {
+    let Ok(path) = std::env::var("ILLM_TRACE") else {
+        return;
+    };
+    let path = path.trim();
+    if path.is_empty() {
+        return;
+    }
+    match write_chrome_trace(path) {
+        Ok(n) => println!("trace: wrote {n} events to {path}"),
+        Err(e) => eprintln!("trace: failed to write {path}: {e}"),
+    }
+}
+
+/// Per-phase timing histograms as JSON (embedded in
+/// `ServeMetrics::to_json` -> BENCH_serving.json).
+pub fn phases_json() -> Json {
+    obj(phase_snapshots()
+        .iter()
+        .map(|s| {
+            (
+                s.phase.name(),
+                obj(vec![
+                    ("count", Json::Int(s.count as i64)),
+                    ("total_ns", Json::Int(s.total_ns as i64)),
+                    ("mean_ns", Json::Num(s.mean_ns())),
+                    ("max_ns", Json::Int(s.max_ns as i64)),
+                    (
+                        "log2ns_buckets",
+                        Json::Arr(
+                            s.buckets
+                                .iter()
+                                .map(|&b| Json::Int(b as i64))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            )
+        })
+        .collect())
+}
+
+/// The global health-counter tallies as JSON.
+pub fn health_json() -> Json {
+    health().snapshot().to_json()
+}
+
+/// Human phase-breakdown table for `ServeMetrics::print_summary`.
+/// Prints nothing when no phase timing was recorded (timing off).
+pub fn print_phase_table() {
+    let snaps = phase_snapshots();
+    if snaps.iter().all(|s| s.count == 0) {
+        return;
+    }
+    println!("  per-layer phase breakdown (cumulative):");
+    let mut t = Table::new(&["phase", "calls", "total", "mean", "max"]);
+    for s in &snaps {
+        if s.count == 0 {
+            continue;
+        }
+        t.row(vec![
+            s.phase.name().to_string(),
+            s.count.to_string(),
+            fmt_ns(s.total_ns as f64),
+            fmt_ns(s.mean_ns()),
+            fmt_ns(s.max_ns as f64),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_json_shape_round_trips() {
+        let events = vec![
+            Event {
+                name: "queued",
+                cat: "request",
+                ph: 'X',
+                ts_us: 1.5,
+                dur_us: 20.0,
+                tid: 1,
+                args: vec![("req", 7)],
+            },
+            Event {
+                name: "admitted",
+                cat: "request",
+                ph: 'i',
+                ts_us: 22.0,
+                dur_us: 0.0,
+                tid: 1,
+                args: vec![],
+            },
+        ];
+        let j = chrome_trace_json(&events);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        let x = &evs[0];
+        assert_eq!(x.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(x.get("dur").and_then(Json::as_f64), Some(20.0));
+        assert_eq!(x.get("pid").and_then(Json::as_i64), Some(1));
+        assert_eq!(
+            x.get("args").and_then(|a| a.get("req")).and_then(Json::as_i64),
+            Some(7)
+        );
+        let i = &evs[1];
+        assert_eq!(i.get("s").and_then(Json::as_str), Some("g"));
+        assert!(i.get("dur").is_none());
+    }
+
+    #[test]
+    fn phases_json_has_every_phase() {
+        let j = phases_json();
+        for p in super::super::span::Phase::ALL {
+            let ph = j.get(p.name()).expect("phase present");
+            assert!(ph.get("count").is_some());
+            assert_eq!(
+                ph.get("log2ns_buckets").unwrap().as_arr().unwrap().len(),
+                super::super::span::N_BUCKETS
+            );
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Observability for the serving engine: request-lifecycle spans,
+//! per-phase timing histograms and always-on integer-health counters.
+//!
+//! Three layers, by cost:
+//!
+//! - **Health counters** (`counters`): one relaxed `fetch_add` at every
+//!   saturation / clip site in the integer kernels (`Lane::append`
+//!   shift clamps, `merge_heads` widening, DI-softmax clip floor,
+//!   DI-exp underflow, requant scale extrema) plus pool/trie events
+//!   (CoW forks, prefix hits, evictions). Always on: the increments
+//!   observe values the kernels already computed, never change them,
+//!   so bit-identity of all outputs is unconditional. `Relaxed`
+//!   ordering is deliberate — each counter is an independent
+//!   monotonic tally with no cross-counter invariant to order
+//!   against, so the cheapest atomic is the correct one; totals are
+//!   exact, only inter-counter interleavings are unspecified.
+//! - **Phase timing** (`span::phase_timer`): RAII timers around the
+//!   per-layer phases of `prefill_raw`/`decode_raw` (q/k/v linears,
+//!   KV append under the pool lock, lock-free attention, softmax,
+//!   head merge, MLP), aggregated into fixed-size log2-ns histograms
+//!   (relaxed atomics, no allocation). Gated on a runtime flag: when
+//!   disabled the timer constructor is one relaxed load + branch and
+//!   no clock is read.
+//! - **Lifecycle spans** (`span`): queued → admitted →
+//!   prefill-chunk[i] → decode-wave[j] → finished/rejected events in
+//!   the batcher, with thread ids and page-allocation deltas. Gated
+//!   on the same kind of flag; when enabled, completed spans append
+//!   to a mutex'd vector drained at export time (the mutex is
+//!   touched only at span END, never inside kernels).
+//!
+//! Export paths (`export`): Chrome trace-event JSON for
+//! `chrome://tracing` / Perfetto (`ILLM_TRACE=out.json`), the
+//! `phases`/`health` blocks embedded in `ServeMetrics::to_json`
+//! (hence BENCH_serving.json), and a human phase-breakdown table for
+//! `print_summary`.
+//!
+//! Overhead discipline: nothing in this module runs on the hot path
+//! unless it is (a) a relaxed atomic increment at an already-rare
+//! clamp site, or (b) behind `timing_on()`/`spans_on()`. The
+//! `perf_ops` bench asserts the disabled-timer overhead on a
+//! decode-shaped kernel stays under 2%.
+
+pub mod counters;
+pub mod export;
+pub mod span;
+
+pub use counters::{
+    bump, bump_by, health, HealthCounters, HealthSnapshot,
+};
+pub use export::{
+    chrome_trace_json, flush_env_trace, health_json, phases_json,
+    print_phase_table, write_chrome_trace,
+};
+pub use span::{
+    init_from_env, instant, phase_snapshots, phase_timer, reset_phases,
+    set_spans, set_timing, span, span_at, spans_on, take_events,
+    timing_on, Event, Phase, PhaseSnapshot, PhaseTimer, Span,
+    N_BUCKETS, N_PHASES,
+};

@@ -1,0 +1,425 @@
+//! Lifecycle spans and per-phase timing. Everything here is gated on
+//! runtime flags (`spans_on` / `timing_on`): disabled, a span or
+//! phase-timer constructor is one relaxed load plus a branch and no
+//! clock read; enabled, completed spans append to a mutex'd buffer
+//! (touched only at span end) and phase durations fold into lock-free
+//! log2-ns histograms.
+
+use crate::util::lock_recover;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------- flags
+
+struct Tracer {
+    spans: AtomicBool,
+    timing: AtomicBool,
+    t0: Instant,
+    events: Mutex<Vec<Event>>,
+}
+
+fn tracer() -> &'static Tracer {
+    static T: OnceLock<Tracer> = OnceLock::new();
+    T.get_or_init(|| Tracer {
+        spans: AtomicBool::new(false),
+        timing: AtomicBool::new(false),
+        t0: Instant::now(),
+        events: Mutex::new(Vec::new()),
+    })
+}
+
+/// Are lifecycle/phase span EVENTS being recorded?
+#[inline]
+pub fn spans_on() -> bool {
+    tracer().spans.load(Ordering::Relaxed)
+}
+
+/// Is per-phase histogram timing being recorded?
+#[inline]
+pub fn timing_on() -> bool {
+    tracer().timing.load(Ordering::Relaxed)
+}
+
+pub fn set_spans(on: bool) {
+    tracer().spans.store(on, Ordering::Relaxed);
+}
+
+pub fn set_timing(on: bool) {
+    tracer().timing.store(on, Ordering::Relaxed);
+}
+
+/// Read `ILLM_TRACE`; when set (and non-empty) enable spans + timing
+/// and return the output path the caller should flush to (see
+/// `export::flush_env_trace`).
+pub fn init_from_env() -> Option<String> {
+    let path = std::env::var("ILLM_TRACE").ok()?;
+    let path = path.trim().to_string();
+    if path.is_empty() {
+        return None;
+    }
+    set_spans(true);
+    set_timing(true);
+    Some(path)
+}
+
+// --------------------------------------------------------------- events
+
+/// One Chrome-trace event: a completed span (`ph == 'X'`, has a
+/// duration) or an instant marker (`ph == 'i'`).
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ph: char,
+    /// Microseconds since the tracer epoch.
+    pub ts_us: f64,
+    /// Span duration in microseconds (0 for instants).
+    pub dur_us: f64,
+    /// Small dense per-process thread id (first-use order, from 1).
+    pub tid: u32,
+    pub args: Vec<(&'static str, i64)>,
+}
+
+/// Dense thread id for trace rows: assigned on first use per thread,
+/// stable for the thread's lifetime.
+pub fn cur_tid() -> u32 {
+    static NEXT: AtomicU32 = AtomicU32::new(1);
+    thread_local! {
+        static TID: Cell<u32> = Cell::new(0);
+    }
+    TID.with(|c| {
+        let v = c.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT.fetch_add(1, Ordering::Relaxed);
+        c.set(v);
+        v
+    })
+}
+
+fn us_since_epoch(t: Instant) -> f64 {
+    t.saturating_duration_since(tracer().t0).as_nanos() as f64 / 1e3
+}
+
+fn push_event(e: Event) {
+    lock_recover(&tracer().events).push(e);
+}
+
+/// Drain every recorded event (export does this once at flush time).
+pub fn take_events() -> Vec<Event> {
+    std::mem::take(&mut *lock_recover(&tracer().events))
+}
+
+/// RAII lifecycle span: records an 'X' event from construction to
+/// drop. Created disabled (when `spans_on()` is false) it holds no
+/// timestamp and drop is a no-op.
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start: Option<Instant>,
+    args: Vec<(&'static str, i64)>,
+}
+
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    let start = if spans_on() { Some(Instant::now()) } else { None };
+    Span { name, cat, start, args: Vec::new() }
+}
+
+impl Span {
+    /// True when this span will emit an event — callers use this to
+    /// skip arg computation (e.g. page-count sampling) when disabled.
+    pub fn enabled(&self) -> bool {
+        self.start.is_some()
+    }
+
+    pub fn arg(&mut self, key: &'static str, val: i64) {
+        if self.start.is_some() {
+            self.args.push((key, val));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            push_event(Event {
+                name: self.name,
+                cat: self.cat,
+                ph: 'X',
+                ts_us: us_since_epoch(start),
+                dur_us: start.elapsed().as_nanos() as f64 / 1e3,
+                tid: cur_tid(),
+                args: std::mem::take(&mut self.args),
+            });
+        }
+    }
+}
+
+/// Record a completed span from externally-held timestamps (e.g. the
+/// queued span, whose start is the request's submit time).
+pub fn span_at(
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    end: Instant,
+    args: &[(&'static str, i64)],
+) {
+    if !spans_on() {
+        return;
+    }
+    push_event(Event {
+        name,
+        cat,
+        ph: 'X',
+        ts_us: us_since_epoch(start),
+        dur_us: end.saturating_duration_since(start).as_nanos() as f64
+            / 1e3,
+        tid: cur_tid(),
+        args: args.to_vec(),
+    });
+}
+
+/// Record an instant ('i') marker.
+pub fn instant(
+    name: &'static str,
+    cat: &'static str,
+    args: &[(&'static str, i64)],
+) {
+    if !spans_on() {
+        return;
+    }
+    push_event(Event {
+        name,
+        cat,
+        ph: 'i',
+        ts_us: us_since_epoch(Instant::now()),
+        dur_us: 0.0,
+        tid: cur_tid(),
+        args: args.to_vec(),
+    });
+}
+
+// --------------------------------------------------------------- phases
+
+/// The per-layer phases of `prefill_raw`/`decode_raw`. `Softmax`
+/// nests inside `Attend` (the attend total includes it); the split is
+/// reported anyway because the softmax is the integer pipeline's most
+/// saturation-prone stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// q/k/v DI-linears + RoPE centering.
+    Qkv,
+    /// KV page append while holding the pool mutex (the lock-held
+    /// side of the lock-narrowing split).
+    KvAppend,
+    /// Lock-free attention over the page snapshot.
+    Attend,
+    /// DI-ClippedSoftmax rows (nested inside `Attend`).
+    Softmax,
+    /// Cross-head align + requant (`merge_heads`).
+    Merge,
+    /// Post-attention tail: norm, FFN DI-linears, DI-SwiGLU.
+    Mlp,
+}
+
+pub const N_PHASES: usize = 6;
+pub const N_BUCKETS: usize = 26;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Qkv,
+        Phase::KvAppend,
+        Phase::Attend,
+        Phase::Softmax,
+        Phase::Merge,
+        Phase::Mlp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Qkv => "qkv_linear",
+            Phase::KvAppend => "kv_append_locked",
+            Phase::Attend => "attend_lockfree",
+            Phase::Softmax => "softmax",
+            Phase::Merge => "merge_heads",
+            Phase::Mlp => "mlp",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Lock-free per-phase aggregate: count / total / max plus a log2-ns
+/// histogram. Bucket 0 holds durations under 512 ns; bucket `i` holds
+/// `[2^(8+i), 2^(9+i))` ns; the last bucket is open-ended (~8.6 s+).
+struct PhaseAgg {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+fn phase_aggs() -> &'static [PhaseAgg; N_PHASES] {
+    static P: OnceLock<[PhaseAgg; N_PHASES]> = OnceLock::new();
+    P.get_or_init(|| {
+        std::array::from_fn(|_| PhaseAgg {
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        })
+    })
+}
+
+/// Histogram bucket for a duration in ns: floor(log2(ns)) - 8,
+/// clamped into [0, N_BUCKETS).
+pub fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        return 0;
+    }
+    (63 - ns.leading_zeros() as usize)
+        .saturating_sub(8)
+        .min(N_BUCKETS - 1)
+}
+
+fn record_phase(p: Phase, dur: Duration) {
+    let ns = dur.as_nanos() as u64;
+    let a = &phase_aggs()[p.idx()];
+    a.count.fetch_add(1, Ordering::Relaxed);
+    a.total_ns.fetch_add(ns, Ordering::Relaxed);
+    a.max_ns.fetch_max(ns, Ordering::Relaxed);
+    a.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Plain-u64 copy of one phase's aggregate.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseSnapshot {
+    pub phase: Phase,
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+    pub buckets: [u64; N_BUCKETS],
+}
+
+impl PhaseSnapshot {
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+}
+
+pub fn phase_snapshots() -> Vec<PhaseSnapshot> {
+    Phase::ALL
+        .iter()
+        .map(|&p| {
+            let a = &phase_aggs()[p.idx()];
+            PhaseSnapshot {
+                phase: p,
+                count: a.count.load(Ordering::Relaxed),
+                total_ns: a.total_ns.load(Ordering::Relaxed),
+                max_ns: a.max_ns.load(Ordering::Relaxed),
+                buckets: std::array::from_fn(|i| {
+                    a.buckets[i].load(Ordering::Relaxed)
+                }),
+            }
+        })
+        .collect()
+}
+
+/// Zero every phase aggregate (bench sections use this to isolate
+/// scenarios; racing recorders may land on either side of the reset).
+pub fn reset_phases() {
+    for a in phase_aggs() {
+        a.count.store(0, Ordering::Relaxed);
+        a.total_ns.store(0, Ordering::Relaxed);
+        a.max_ns.store(0, Ordering::Relaxed);
+        for b in &a.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// RAII phase timer: on drop, folds the elapsed time into the phase
+/// histogram and (when spans are on) emits a per-layer 'X' event.
+/// Constructed with both flags off it holds no timestamp and drop is
+/// a no-op — the disabled cost is one load + branch.
+pub struct PhaseTimer {
+    start: Option<Instant>,
+    phase: Phase,
+    layer: i64,
+}
+
+pub fn phase_timer(phase: Phase, layer: i64) -> PhaseTimer {
+    let on = timing_on() || spans_on();
+    PhaseTimer {
+        start: if on { Some(Instant::now()) } else { None },
+        phase,
+        layer,
+    }
+}
+
+impl Drop for PhaseTimer {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let dur = start.elapsed();
+            record_phase(self.phase, dur);
+            if spans_on() {
+                push_event(Event {
+                    name: self.phase.name(),
+                    cat: "phase",
+                    ph: 'X',
+                    ts_us: us_since_epoch(start),
+                    dur_us: dur.as_nanos() as f64 / 1e3,
+                    tid: cur_tid(),
+                    args: vec![("layer", self.layer)],
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2_from_256ns() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(255), 0);
+        assert_eq!(bucket_of(256), 0);
+        assert_eq!(bucket_of(511), 0);
+        assert_eq!(bucket_of(512), 1);
+        assert_eq!(bucket_of(1024), 2);
+        assert_eq!(bucket_of(1_000_000), 11); // ~1 ms -> 2^19..2^20
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        set_spans(false);
+        let before = lock_recover(&tracer().events).len();
+        {
+            let mut s = span("unit-noop", "test");
+            assert!(!s.enabled());
+            s.arg("k", 1);
+        }
+        assert_eq!(lock_recover(&tracer().events).len(), before);
+    }
+
+    #[test]
+    fn tids_are_stable_and_distinct() {
+        let a = cur_tid();
+        assert_eq!(a, cur_tid());
+        let b = std::thread::spawn(cur_tid).join().unwrap();
+        assert_ne!(a, b);
+    }
+}

@@ -78,8 +78,18 @@ fn int_generation_agrees_with_fp_on_easy_text() {
         }
         out
     };
+    // integer-health contract: well-conditioned FSBR-smoothed text
+    // must not trip the KV-lane or head-merge saturation rails — the
+    // counters exist to flag pathology, not normal operation
+    let h0 = illm::trace::health().snapshot();
     let a = gen(&ie);
     let b = gen(&fe);
+    let d = illm::trace::health().snapshot().since(&h0);
+    assert_eq!(
+        (d.lane_grow_saturations, d.lane_zero_rounds,
+         d.merge_saturations),
+        (0, 0, 0),
+        "saturation rails tripped on easy text: {d:?}");
     let agree = a.iter().zip(b.iter()).filter(|(x, y)| x == y).count();
     assert!(agree >= 8, "int vs fp generation agree {agree}/12:\n  \
             int: {:?}\n  fp:  {:?}",

@@ -1,0 +1,123 @@
+//! End-to-end lifecycle tracing: drive a real workload through the
+//! coordinator with spans + timing enabled, then validate the
+//! recorded event stream — the full per-request span chain
+//! (queued -> admitted -> prefill-chunk -> decode-wave -> finished),
+//! per-layer phase events, and the Chrome-trace JSON export.
+//!
+//! This file is its own test process (integration tests are separate
+//! binaries), so it owns the global trace flags and event buffer —
+//! no other test races `take_events`.
+
+use illm::coordinator::batcher::BatcherConfig;
+use illm::coordinator::engine::IntEngine;
+use illm::coordinator::{run_workload, workload};
+use illm::data::load_corpus;
+use illm::int_model::quantize::quantize_model;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::trace;
+use illm::util::json::Json;
+use std::sync::Arc;
+
+#[test]
+fn workload_emits_full_span_chain() {
+    trace::set_spans(true);
+    trace::set_timing(true);
+    let dir = illm::artifacts_dir();
+    let corpus = load_corpus(&dir).unwrap();
+    let fp = load_model(&dir, "tinyllama_s").unwrap();
+    let engine = IntEngine::new(Arc::new(quantize_model(
+        &fp, QuantScheme::W8A8, None, None)));
+    // prompts longer than prefill_chunk force continuation chunks
+    // (the wave-side prefill-chunk span); max_new >= 2 guarantees at
+    // least one decode-wave span per request
+    let spec = workload::WorkloadSpec {
+        n_requests: 4,
+        prompt_len: (40, 60),
+        max_new: (3, 6),
+        ..Default::default()
+    };
+    let reqs = workload::generate(&spec, &corpus);
+    let (responses, metrics) = run_workload(
+        engine,
+        BatcherConfig {
+            max_batch: 2,
+            prefill_chunk: 16,
+            stop_token: None,
+            ..Default::default()
+        },
+        reqs,
+        0.0,
+    );
+    trace::set_spans(false);
+    trace::set_timing(false);
+    assert_eq!(responses.len(), 4);
+    let events = trace::take_events();
+    assert!(!events.is_empty(), "tracing recorded no events");
+
+    // ---- the full lifecycle chain, for EVERY request ----
+    let has = |name: &str, id: i64| {
+        events.iter().any(|e| {
+            e.name == name
+                && e.args.iter().any(|&(k, v)| k == "req" && v == id)
+        })
+    };
+    for r in &responses {
+        let id = r.id as i64;
+        for name in
+            ["queued", "admitted", "prefill-chunk", "decode-wave",
+             "finished"]
+        {
+            assert!(has(name, id),
+                    "request {id} missing lifecycle event {name}");
+        }
+    }
+
+    // ---- per-layer phase events, one of each phase ----
+    for p in trace::Phase::ALL {
+        assert!(
+            events.iter().any(|e| e.cat == "phase"
+                && e.name == p.name()),
+            "no phase event for {}", p.name());
+    }
+    // qkv events carry their layer; layer 0 must appear
+    assert!(
+        events.iter().any(|e| e.name == "qkv_linear"
+            && e.args.contains(&("layer", 0))),
+        "no layer-0 qkv_linear event");
+
+    // ---- phase histograms populated alongside the spans ----
+    let snaps = trace::phase_snapshots();
+    let qkv = snaps
+        .iter()
+        .find(|s| s.phase == trace::Phase::Qkv)
+        .unwrap();
+    assert!(qkv.count > 0, "qkv phase histogram is empty");
+    assert!(qkv.buckets.iter().sum::<u64>() == qkv.count,
+            "histogram buckets disagree with count");
+
+    // ---- metrics snapshot carries the phase + health sections ----
+    let mj = metrics.to_json();
+    let parsed = Json::parse(&mj.dump()).expect("metrics json");
+    let phases = parsed.get("phases").expect("phases section");
+    let qkv_count = phases
+        .get("qkv_linear")
+        .and_then(|p| p.get("count"))
+        .and_then(Json::as_i64)
+        .unwrap();
+    assert!(qkv_count > 0);
+    let health = parsed.get("health").expect("health section");
+    assert!(
+        health.get("softmax_rows").and_then(Json::as_i64).unwrap()
+            > 0,
+        "softmax row counter never moved during a real workload");
+
+    // ---- Chrome-trace export round-trips ----
+    let n = events.len();
+    let ct = trace::chrome_trace_json(&events);
+    let parsed = Json::parse(&ct.dump()).expect("chrome trace json");
+    match parsed.get("traceEvents") {
+        Some(Json::Arr(v)) => assert_eq!(v.len(), n),
+        other => panic!("traceEvents missing/not array: {other:?}"),
+    }
+}
