@@ -10,6 +10,10 @@ Checks, in order:
     queued -> admitted -> prefill-chunk -> decode-wave -> finished
     (matched through args.req)
   * at least one per-layer phase event (cat == "phase") exists
+  * decode waves are continuously batched: whenever any per-request
+    decode-wave span exists, at least one wave-level "decode-batch"
+    span (cat == "engine", the single batched forward every
+    decode-wave of that step shares) must exist too
 
 Stdlib only (the container has no extra wheels). Exit 0 on success
 with a one-line summary; exit 1 with "check_trace: FAIL: ..." on the
@@ -76,10 +80,19 @@ def main():
 
     per_req = {}  # req id -> set of lifecycle event names
     n_phase = 0
+    n_decode_wave = 0
+    n_decode_batch = 0
     for i, e in enumerate(events):
         check_event(i, e)
         if e["cat"] == "phase":
             n_phase += 1
+        if e["name"] == "decode-wave":
+            n_decode_wave += 1
+        if e["name"] == "decode-batch":
+            if e["cat"] != "engine":
+                fail(f"event {i}: decode-batch cat {e['cat']!r} "
+                     "!= 'engine'")
+            n_decode_batch += 1
         req = e.get("args", {}).get("req")
         if req is not None and e["name"] in LIFECYCLE:
             per_req.setdefault(req, set()).add(e["name"])
@@ -92,10 +105,15 @@ def main():
              f"{' -> '.join(LIFECYCLE)}; saw {seen}")
     if n_phase == 0:
         fail("no per-layer phase events (cat == 'phase')")
+    if n_decode_wave > 0 and n_decode_batch == 0:
+        fail(f"{n_decode_wave} decode-wave spans but no wave-level "
+             "'decode-batch' span — decode ran outside the batched "
+             "path")
 
     print(f"check_trace: OK: {len(events)} events, "
           f"{len(complete)}/{len(per_req)} requests with the full "
-          f"lifecycle chain, {n_phase} phase events")
+          f"lifecycle chain, {n_phase} phase events, "
+          f"{n_decode_batch} batched decode waves")
 
 
 if __name__ == "__main__":

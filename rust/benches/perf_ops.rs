@@ -57,6 +57,57 @@ fn main() {
         requant_rows(&raw, 8, None)
     });
 
+    // continuous-batched decode's GEMM shape: N single-token lanes
+    // run as N separate 1-row GEMVs (the old per-sequence decode
+    // wave, each streaming the full weight matrix) vs ONE N-row
+    // row-blocked GEMM (the batched wave — every streamed weight row
+    // amortizes over all lanes while hot in L1). Same integer sums;
+    // the ratio is pure weight-streaming amortization.
+    {
+        println!();
+        let xw = rand_mat(&mut rng, 16, d, 2.0);
+        let gemv_1row: Vec<_> = (0..16)
+            .map(|r| {
+                quantize_rows_f32(
+                    &Mat::from_vec(1, d, xw.row(r).to_vec()), 8)
+            })
+            .collect();
+        let mut t_gemv = f64::MAX;
+        let mut t_gemm = f64::MAX;
+        for n in [1usize, 4, 8, 16] {
+            let xn = quantize_rows_f32(
+                &Mat::from_vec(n, d,
+                               xw.data[..n * d].to_vec()), 8);
+            let s_v = bench(
+                &format!("decode GEMV x{n:>2} (1-row calls, D={d}, \
+                          FF={ff})"),
+                budget,
+                || {
+                    let mut last = 0i64;
+                    for xr in &gemv_1row[..n] {
+                        last = di_linear_raw(xr, &wq).p[0];
+                    }
+                    last
+                },
+            );
+            let s_m = bench(
+                &format!("decode GEMM  {n:>2}-row block      \
+                          (D={d}, FF={ff})"),
+                budget,
+                || di_linear_raw(&xn, &wq).p[0],
+            );
+            println!("   -> N={n}: row-blocked GEMM {:.2}x vs N GEMVs",
+                     s_v.mean_ns / s_m.mean_ns);
+            if n == 16 {
+                t_gemv = s_v.mean_ns;
+                t_gemm = s_m.mean_ns;
+            }
+        }
+        println!("   -> batched decode's per-lane GEMM cost at N=16: \
+                  {:.1}% of the GEMV lane",
+                 100.0 * t_gemm / t_gemv);
+    }
+
     // softmax row
     let scores: Vec<i64> =
         (0..256).map(|_| (rng.normal() * 3e5) as i64).collect();

@@ -3,7 +3,10 @@
 //! plus the paged-KV admission study and the prefill-kernel comparison
 //! (replay vs row-at-a-time vs page-tiled vs tiled+threads vs
 //! radix-hit — the cached-prefix column measures engine prefill of a
-//! prompt whose shared prefix sits in the radix prefix tree).
+//! prompt whose shared prefix sits in the radix prefix tree), plus
+//! the decode-path comparison: per-sequence decode waves vs the
+//! continuous-batched wave (`decode_wave` vs `decode_batched` tok/s
+//! at 1 and 4 worker-pool threads).
 //!
 //! The paper's deployment claim: the integer-only pipeline serves LLMs
 //! on integer hardware; here we verify the coordinator adds negligible
@@ -23,7 +26,9 @@
 //! and the head-parallel tiled prefill).
 
 use illm::coordinator::batcher::BatcherConfig;
-use illm::coordinator::engine::{Engine, FpEngine, IntEngine};
+use illm::coordinator::engine::{
+    greedy, Engine, FpEngine, IntEngine, SeqState,
+};
 use illm::coordinator::{run_workload, workload};
 use illm::data::{load_corpus, Corpus};
 use illm::eval::methods;
@@ -160,6 +165,137 @@ fn bench_radix(im: &Arc<IntModel>, corpus: &Corpus, reps: usize) -> Json {
         ("radix_hit_tok_per_s", Json::Num(n / t_hit)),
         ("radix_hit_speedup", Json::Num(t_cold / t_hit)),
     ])
+}
+
+/// Decode-path comparison tracked in BENCH_serving.json: the old
+/// per-sequence wave (one `Engine::decode` GEMV-shaped forward per
+/// lane per step) vs the continuous-batched wave
+/// (`Engine::decode_wave_batched`: one row-blocked forward over all
+/// lanes) at 1 and 4 pool threads. Same lanes, same steps, same
+/// tokens — the batched column's win is amortized weight streaming
+/// plus the worker pool, not different work.
+fn bench_decode(im: &Arc<IntModel>, corpus: &Corpus, reps: usize)
+    -> Json {
+    let n_seqs = 4usize;
+    let steps = 16usize;
+    let mk_states = |engine: &IntEngine| -> Vec<(SeqState, Vec<f32>)> {
+        (0..n_seqs)
+            .map(|s| {
+                let p: Vec<u16> =
+                    corpus.val[s * 50..s * 50 + 24 + 3 * s].to_vec();
+                engine.prefill(&p)
+            })
+            .collect()
+    };
+    let mut t_wave = f64::MAX;
+    let mut t_b1 = f64::MAX;
+    let mut t_b4 = f64::MAX;
+    for _ in 0..reps {
+        let engine = IntEngine::new(im.clone());
+        let mut states = mk_states(&engine);
+        let (_, s) = illm::util::time_it(|| {
+            for _ in 0..steps {
+                for (st, l) in states.iter_mut() {
+                    let next = greedy(l);
+                    *l = engine.decode(st, next);
+                }
+            }
+        });
+        t_wave = t_wave.min(s);
+        for (threads, tref) in
+            [(1usize, &mut t_b1), (4, &mut t_b4)]
+        {
+            let engine = IntEngine::new(im.clone());
+            let mut states = mk_states(&engine);
+            let (_, s) = illm::util::time_it(|| {
+                for _ in 0..steps {
+                    let toks: Vec<u16> =
+                        states.iter().map(|(_, l)| greedy(l)).collect();
+                    let mut sts: Vec<&mut SeqState> = states
+                        .iter_mut()
+                        .map(|(st, _)| st)
+                        .collect();
+                    let out = engine
+                        .decode_wave_batched(&mut sts, &toks, threads);
+                    drop(sts);
+                    for ((_, l), nl) in states.iter_mut().zip(out) {
+                        *l = nl;
+                    }
+                }
+            });
+            *tref = (*tref).min(s);
+        }
+    }
+    let tok = (n_seqs * steps) as f64;
+    println!("\n== perf: decode wave ({n_seqs} lanes x {steps} steps, \
+              {}) ==", im.scheme.tag());
+    println!("  decode_wave (per-seq forwards):  {:>9.0} tok/s",
+             tok / t_wave);
+    println!("  decode_batched, 1 thread:        {:>9.0} tok/s  \
+              ({:.2}x vs wave)",
+             tok / t_b1, t_wave / t_b1);
+    println!("  decode_batched, 4 threads:       {:>9.0} tok/s  \
+              ({:.2}x vs wave)",
+             tok / t_b4, t_wave / t_b4);
+    jobj(vec![
+        ("n_seqs", Json::Int(n_seqs as i64)),
+        ("steps", Json::Int(steps as i64)),
+        ("decode_wave_tok_per_s", Json::Num(tok / t_wave)),
+        ("decode_batched_t1_tok_per_s", Json::Num(tok / t_b1)),
+        ("decode_batched_t4_tok_per_s", Json::Num(tok / t_b4)),
+        ("batched_speedup_t1_vs_wave", Json::Num(t_wave / t_b1)),
+        ("batched_speedup_t4_vs_wave", Json::Num(t_wave / t_b4)),
+    ])
+}
+
+/// Smoke-mode batched-decode equivalence, run under both CI thread
+/// counts (`make smoke` at ILLM_THREADS=1 and 4): the continuous-
+/// batched wave must be bit-identical to the sequential per-sequence
+/// decode it replaced, in-process, at the ambient thread count. The
+/// deep sweep (batch sizes, schemes, lane scales, mid-wave finish)
+/// lives in tests/batched_decode.rs.
+fn assert_decode_batch_equivalence(im: &Arc<IntModel>,
+                                   corpus: &Corpus) {
+    let threads = illm::util::illm_threads();
+    let n_seqs = 3usize;
+    let steps = 3usize;
+    let prompts: Vec<Vec<u16>> = (0..n_seqs)
+        .map(|s| corpus.val[s * 61..s * 61 + 18 + 5 * s].to_vec())
+        .collect();
+    let seq_engine = IntEngine::new(im.clone());
+    let seq: Vec<Vec<f32>> = prompts
+        .iter()
+        .map(|p| {
+            let (mut st, mut l) = seq_engine.prefill(p);
+            for _ in 0..steps {
+                l = seq_engine.decode(&mut st, greedy(&l));
+            }
+            l
+        })
+        .collect();
+    let engine = IntEngine::new(im.clone());
+    let mut states: Vec<(SeqState, Vec<f32>)> =
+        prompts.iter().map(|p| engine.prefill(p)).collect();
+    for _ in 0..steps {
+        let toks: Vec<u16> =
+            states.iter().map(|(_, l)| greedy(l)).collect();
+        let mut sts: Vec<&mut SeqState> =
+            states.iter_mut().map(|(st, _)| st).collect();
+        let out = engine.decode_wave_batched(&mut sts, &toks, threads);
+        drop(sts);
+        for ((_, l), nl) in states.iter_mut().zip(out) {
+            *l = nl;
+        }
+    }
+    for (s, ((_, l), want)) in
+        states.iter().zip(seq.iter()).enumerate()
+    {
+        assert_eq!(l, want,
+                   "batched decode diverged from sequential \
+                    (seq {s}, {threads} thread(s))");
+    }
+    println!("  batched decode == sequential (bit-identical, \
+              {threads} thread(s))");
 }
 
 /// Smoke-mode kernel equivalence: tiled and threaded prefill must be
@@ -490,6 +626,9 @@ fn main() {
     // cached-prefix column: radix-hit vs cold engine prefill
     let radix_json = bench_radix(&im, &corpus, if fast { 2 } else { 3 });
     report.push(("radix", radix_json));
+    // decode column: per-sequence wave vs continuous-batched wave
+    let decode_json = bench_decode(&im, &corpus, if fast { 1 } else { 3 });
+    report.push(("decode", decode_json));
     if let Some(sj) = serving_json {
         report.push(("serving_int_w8a8_batch8", sj));
     }
@@ -502,6 +641,7 @@ fn main() {
         // kernel + scheduling determinism under the CI thread matrix
         assert_prefill_equivalence(
             &im, &corpus.val[..48.min(corpus.val.len())]);
+        assert_decode_batch_equivalence(&im, &corpus);
         assert_thread_determinism(&im, &corpus);
         // radix prefix reuse: the shared-prefix acceptance criterion
         assert_radix_reuse(&im, &corpus);

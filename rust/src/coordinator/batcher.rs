@@ -27,20 +27,27 @@
 //!    sampling, never after;
 //!  * the stop token TERMINATES a response, it is never part of it:
 //!    sampling the stop byte finishes the request without emitting it;
+//!  * decode waves are CONTINUOUSLY BATCHED through the engine: the
+//!    scheduler samples every decode-ready sequence's next token on
+//!    the scheduling thread (deterministic greedy, plus ttft/stop
+//!    bookkeeping), then hands the whole wave to
+//!    `Engine::decode_wave_batched` as ONE batched forward —
+//!    cross-sequence row-blocked GEMMs, a single locked K/V append
+//!    pass and per-(sequence, head) attention fan-out on the
+//!    persistent worker pool (see int_model::kv_cache). Engines
+//!    without a batched path inherit the trait default (sequential
+//!    per-sequence decode), which doubles as the bit-exactness oracle
+//!    for the batched path;
 //!  * with `threads > 1` (or `ILLM_THREADS` when the config leaves it
-//!    0) the decode/prefill WAVE fans sequences out across
-//!    `std::thread::scope` workers. This is what the engine's
-//!    lock-narrowed page pool buys: each sequence's forward locks the
-//!    pool only for its short per-layer K/V appends, so concurrent
-//!    decodes overlap their attention compute. Each worker owns a
-//!    disjoint slice of the active set and does that slice's per-token
-//!    work (including the deterministic greedy sampling); admission,
-//!    eviction and metrics folding stay on the scheduler thread.
-//!    Results are bit-identical at every thread count. The thread
-//!    budget is SPLIT across wave workers: each worker's
-//!    `prefill_chunk` gets `threads / workers` attention threads, so
-//!    a parallel wave never multiplies into
-//!    wave-workers × attention-workers threads.
+//!    0) the decode wave hands the FULL thread budget to
+//!    `decode_wave_batched` — the worker pool slices the batched
+//!    GEMMs by row block and attention by (sequence, head), so the
+//!    engine parallelizes across AND within sequences. Pending
+//!    prefill chunks still fan out across `std::thread::scope`
+//!    workers with the budget split so
+//!    wave-workers × attention-threads never exceeds it. Admission,
+//!    sampling, eviction and metrics folding stay on the scheduler
+//!    thread. Results are bit-identical at every thread count.
 
 use super::engine::{greedy, Engine, SeqState};
 use super::metrics::ServeMetrics;
@@ -101,19 +108,19 @@ struct Active {
     prompt_len: usize,
 }
 
-/// Engine-time counters accumulated by one wave worker and folded
-/// into [`ServeMetrics`] after the join. Token counts SUM across
-/// workers; engine times fold as the MAX across workers (`merge_max`)
+/// Prefill-time counters accumulated by one prefill-wave worker and
+/// folded into [`ServeMetrics`] after the join. Token counts SUM
+/// across workers; times fold as the MAX across workers (`merge_max`)
 /// — a parallel wave's wall time is bounded by its slowest worker, so
 /// the folded time approximates the critical path and
-/// `decode_tok_per_s` stays wall-clock-meaningful (and shows the
-/// parallel speedup) instead of flatlining on summed CPU time.
+/// `prefill_tok_per_s` stays wall-clock-meaningful instead of
+/// flatlining on summed CPU time. (Decode time needs no such fold:
+/// the batched decode wave is ONE engine call, timed once, on the
+/// scheduler thread.)
 #[derive(Debug, Default)]
 struct WaveStats {
     prefill_tokens: u64,
     prefill_time_s: f64,
-    decode_tokens: u64,
-    decode_time_s: f64,
 }
 
 impl WaveStats {
@@ -121,90 +128,44 @@ impl WaveStats {
     /// path (max).
     fn merge_max(&mut self, w: &WaveStats) {
         self.prefill_tokens += w.prefill_tokens;
-        self.decode_tokens += w.decode_tokens;
         self.prefill_time_s = self.prefill_time_s.max(w.prefill_time_s);
-        self.decode_time_s = self.decode_time_s.max(w.decode_time_s);
     }
 
     fn fold_into(self, m: &mut ServeMetrics) {
         m.prefill_tokens += self.prefill_tokens;
         m.prefill_time_s += self.prefill_time_s;
-        m.decode_tokens += self.decode_tokens;
-        m.decode_time_s += self.decode_time_s;
     }
 }
 
-/// One decode/prefill wave step for one active sequence; returns true
-/// when the sequence is finished. Runs on the scheduler thread or a
+/// One chunked-prefill step for one active sequence that still has
+/// pending prompt tokens. Runs on the scheduler thread or a prefill
 /// wave worker — it touches only its own `Active` and the (internally
 /// synchronized) engine, never the batcher or global metrics.
-fn wave_one<E: Engine>(cfg: &BatcherConfig, engine: &E, a: &mut Active,
-                       attn_threads: usize, ws: &mut WaveStats) -> bool {
-    // defensive: a request whose generation budget is already
-    // exhausted needs no logits — finish before burning prefill
-    // waves (admission short-circuits max_new == 0, so this only
-    // guards future paths into the active set)
-    if a.generated.len() >= a.req.max_new {
-        return true;
-    }
-    if !a.pending_prompt.is_empty() {
-        // continue chunked prefill through the engine's batched
-        // prefill path (one forward per chunk, not per token);
-        // attn_threads is this worker's share of the thread budget
-        let n = a.pending_prompt.len().min(cfg.prefill_chunk);
-        let chunk: Vec<u16> = a.pending_prompt.drain(..n).collect();
-        let mut sp = trace::span("prefill-chunk", "request");
-        sp.arg("req", a.req.id as i64);
-        sp.arg("tokens", chunk.len() as i64);
-        // page sampling only when the span will actually emit
-        let pages0 =
-            if sp.enabled() { engine.kv_pages(&a.state) } else { 0 };
-        let t0 = Instant::now();
-        let logits = engine.prefill_chunk(&mut a.state, &chunk,
-                                          attn_threads);
-        ws.prefill_tokens += chunk.len() as u64;
-        ws.prefill_time_s += t0.elapsed().as_secs_f64();
-        if sp.enabled() {
-            sp.arg("pages_delta",
-                   engine.kv_pages(&a.state) as i64 - pages0 as i64);
-        }
-        drop(sp);
-        a.last_logits = Some(logits);
-        return false;
-    }
-    // decode one token
-    let logits = a.last_logits.as_ref().expect("logits");
-    let next = greedy(logits);
-    if a.ttft.is_none() {
-        a.ttft = Some(a.req.submitted.elapsed().as_secs_f64());
-    }
-    if Some(next) == cfg.stop_token {
-        // the stop byte terminates the response WITHOUT being
-        // emitted: it appears in neither `text` nor `n_generated`
-        return true;
-    }
-    a.generated.push(next);
-    ws.decode_tokens += 1;
-    let stop = a.generated.len() >= a.req.max_new
-        || a.prompt_len + a.generated.len() >= engine.max_seq();
-    if stop {
-        return true;
-    }
-    let mut sp = trace::span("decode-wave", "request");
+fn prefill_one<E: Engine>(cfg: &BatcherConfig, engine: &E,
+                          a: &mut Active, attn_threads: usize,
+                          ws: &mut WaveStats) {
+    // continue chunked prefill through the engine's batched prefill
+    // path (one forward per chunk, not per token); attn_threads is
+    // this worker's share of the thread budget
+    let n = a.pending_prompt.len().min(cfg.prefill_chunk);
+    let chunk: Vec<u16> = a.pending_prompt.drain(..n).collect();
+    let mut sp = trace::span("prefill-chunk", "request");
     sp.arg("req", a.req.id as i64);
-    sp.arg("step", a.generated.len() as i64);
+    sp.arg("tokens", chunk.len() as i64);
+    // page sampling only when the span will actually emit
     let pages0 =
         if sp.enabled() { engine.kv_pages(&a.state) } else { 0 };
     let t0 = Instant::now();
-    let logits = engine.decode(&mut a.state, next);
-    ws.decode_time_s += t0.elapsed().as_secs_f64();
+    let logits = engine.prefill_chunk(&mut a.state, &chunk,
+                                      attn_threads);
+    ws.prefill_tokens += chunk.len() as u64;
+    ws.prefill_time_s += t0.elapsed().as_secs_f64();
     if sp.enabled() {
         sp.arg("pages_delta",
                engine.kv_pages(&a.state) as i64 - pages0 as i64);
     }
     drop(sp);
     a.last_logits = Some(logits);
-    false
 }
 
 pub struct Batcher {
@@ -404,56 +365,163 @@ impl Batcher {
             });
         }
         // ---- one decode/prefill wave over active sequences ----
-        // sequences are independent within a wave, so the wave fans
-        // out across scoped workers when configured; bookkeeping
-        // (finished flags, metrics folds, eviction) stays serial and
-        // in index order — results are bit-identical at every count
+        // Bookkeeping pass, on the scheduler thread: sample each
+        // decode-ready sequence's next token from its last logits
+        // (deterministic greedy), record ttft, apply the stop rules,
+        // and partition the survivors into a prefill lane list and a
+        // decode lane list. Sampling here — not inside the engine —
+        // keeps the engine a pure (states, tokens) -> logits function
+        // and lets a stop-token finish shrink THIS wave before the
+        // batched forward ever sees the sequence.
         let mut finished = vec![false; self.active.len()];
         let budget = self.cfg.effective_threads();
-        let nt = budget.min(self.active.len()).max(1);
-        // split the thread budget: nt wave workers × attn_share
-        // engine-internal attention threads never exceeds the budget
-        let attn_share = (budget / nt).max(1);
-        if nt <= 1 {
-            let mut ws = WaveStats::default();
-            for (a, f) in self.active.iter_mut().zip(finished.iter_mut())
+        let mut prefills: Vec<&mut Active> = Vec::new();
+        let mut decodes: Vec<(&mut Active, u16)> = Vec::new();
+        for (i, a) in self.active.iter_mut().enumerate() {
+            // defensive: a request whose generation budget is already
+            // exhausted needs no logits — finish before burning
+            // waves (admission short-circuits max_new == 0, so this
+            // only guards future paths into the active set)
+            if a.generated.len() >= a.req.max_new {
+                finished[i] = true;
+                continue;
+            }
+            if !a.pending_prompt.is_empty() {
+                prefills.push(a);
+                continue;
+            }
+            let logits = a.last_logits.as_ref().expect("logits");
+            let next = greedy(logits);
+            if a.ttft.is_none() {
+                a.ttft =
+                    Some(a.req.submitted.elapsed().as_secs_f64());
+            }
+            if Some(next) == self.cfg.stop_token {
+                // the stop byte terminates the response WITHOUT
+                // being emitted: it appears in neither `text` nor
+                // `n_generated`
+                finished[i] = true;
+                continue;
+            }
+            a.generated.push(next);
+            metrics.decode_tokens += 1;
+            if a.generated.len() >= a.req.max_new
+                || a.prompt_len + a.generated.len() >= engine.max_seq()
             {
-                *f = wave_one(&self.cfg, engine, a, attn_share, &mut ws);
+                finished[i] = true;
+                continue;
             }
-            ws.fold_into(metrics);
-        } else {
-            let chunk = self.active.len().div_ceil(nt);
-            let cfg = &self.cfg;
-            let stats: Vec<WaveStats> = std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                for (ach, fch) in self
-                    .active
-                    .chunks_mut(chunk)
-                    .zip(finished.chunks_mut(chunk))
-                {
-                    handles.push(s.spawn(move || {
-                        let mut ws = WaveStats::default();
-                        for (a, f) in
-                            ach.iter_mut().zip(fch.iter_mut())
-                        {
-                            *f = wave_one(cfg, engine, a, attn_share,
-                                          &mut ws);
-                        }
-                        ws
-                    }));
+            decodes.push((a, next));
+        }
+        // Prefill lanes fan out across scoped workers when
+        // configured; the thread budget is split so nt wave workers ×
+        // attn_share engine-internal attention threads never exceeds
+        // the budget.
+        if !prefills.is_empty() {
+            let nt = budget.min(prefills.len()).max(1);
+            let attn_share = (budget / nt).max(1);
+            if nt <= 1 {
+                let mut ws = WaveStats::default();
+                for a in prefills.iter_mut() {
+                    prefill_one(&self.cfg, engine, a, attn_share,
+                                &mut ws);
                 }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("decode wave worker"))
-                    .collect()
-            });
-            // tokens sum; times fold as the slowest worker (critical
-            // path), keeping the tok/s metrics wall-clock-meaningful
-            let mut agg = WaveStats::default();
-            for ws in &stats {
-                agg.merge_max(ws);
+                ws.fold_into(metrics);
+            } else {
+                let chunk = prefills.len().div_ceil(nt);
+                let cfg = &self.cfg;
+                let stats: Vec<WaveStats> =
+                    std::thread::scope(|s| {
+                        let mut handles = Vec::new();
+                        for ach in prefills.chunks_mut(chunk) {
+                            handles.push(s.spawn(move || {
+                                let mut ws = WaveStats::default();
+                                for a in ach.iter_mut() {
+                                    prefill_one(cfg, engine, a,
+                                                attn_share, &mut ws);
+                                }
+                                ws
+                            }));
+                        }
+                        handles
+                            .into_iter()
+                            .map(|h| {
+                                h.join().expect("prefill wave worker")
+                            })
+                            .collect()
+                    });
+                // tokens sum; times fold as the slowest worker
+                // (critical path), keeping tok/s wall-clock-meaningful
+                let mut agg = WaveStats::default();
+                for ws in &stats {
+                    agg.merge_max(ws);
+                }
+                agg.fold_into(metrics);
             }
-            agg.fold_into(metrics);
+        }
+        // Decode lanes go through the engine as ONE batched forward
+        // with the full thread budget (the engine's worker pool
+        // slices by row block and (sequence, head)). The wave is
+        // timed as a single wall-clock interval — decode_tok_per_s
+        // stays wall-clock-meaningful by construction, no critical-
+        // path fold needed.
+        if !decodes.is_empty() {
+            let n = decodes.len();
+            let tokens: Vec<u16> =
+                decodes.iter().map(|(_, t)| *t).collect();
+            let ids: Vec<i64> =
+                decodes.iter().map(|(a, _)| a.req.id as i64).collect();
+            let steps: Vec<i64> = decodes
+                .iter()
+                .map(|(a, _)| a.generated.len() as i64)
+                .collect();
+            // page sampling only when the spans will actually emit
+            let spans_on = trace::spans_on();
+            let pages0: Vec<i64> = if spans_on {
+                decodes
+                    .iter()
+                    .map(|(a, _)| engine.kv_pages(&a.state) as i64)
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let mut states: Vec<&mut SeqState> =
+                decodes.iter_mut().map(|(a, _)| &mut a.state).collect();
+            let t0 = Instant::now();
+            let all_logits =
+                engine.decode_wave_batched(&mut states, &tokens,
+                                           budget);
+            let t1 = Instant::now();
+            drop(states);
+            metrics.decode_time_s +=
+                t1.saturating_duration_since(t0).as_secs_f64();
+            debug_assert_eq!(all_logits.len(), n);
+            for ((a, _), logits) in
+                decodes.iter_mut().zip(all_logits)
+            {
+                a.last_logits = Some(logits);
+            }
+            // wave-level span (one batched engine call) plus the
+            // per-request decode-wave spans the request-lifecycle
+            // chain is built from: every lane shares the wave's
+            // wall-clock interval because every lane's token IS
+            // computed inside that one call
+            trace::span_at("decode-batch", "engine", t0, t1,
+                           &[("n_seqs", n as i64)]);
+            if spans_on {
+                for (j, (a, _)) in decodes.iter().enumerate() {
+                    let delta = engine.kv_pages(&a.state) as i64
+                        - pages0[j];
+                    trace::span_at(
+                        "decode-wave",
+                        "request",
+                        t0,
+                        t1,
+                        &[("req", ids[j]), ("step", steps[j]),
+                          ("pages_delta", delta)],
+                    );
+                }
+            }
         }
         let finished_idx: Vec<usize> = finished
             .iter()

@@ -38,8 +38,8 @@
 
 use super::prefix_tree::{Lookup, PrefixStats, PrefixTree};
 use crate::int_model::kv_cache::{
-    lock_pool, IntKvCache, PagePool, PoolStats, SharedPagePool,
-    PAGE_TOKENS,
+    lock_pool, DecodeBatchScratch, IntKvCache, PagePool, PoolStats,
+    SharedPagePool, PAGE_TOKENS,
 };
 use crate::int_model::IntModel;
 use crate::nn::FpModel;
@@ -96,6 +96,26 @@ pub trait Engine: Send + Sync {
 
     /// One decode step: feed `token`, return next-token logits.
     fn decode(&self, state: &mut SeqState, token: u16) -> Vec<f32>;
+
+    /// One CONTINUOUS-BATCHED decode step over several states: feed
+    /// `tokens[i]` into `states[i]`, return each state's next-token
+    /// logits in order. `attn_threads` caps engine-internal
+    /// parallelism for the whole wave — the batcher hands this one
+    /// call its full thread budget, since the wave is a single engine
+    /// invocation now rather than per-worker shares. This default —
+    /// the sequential loop — IS the semantic contract: a batched
+    /// override must be bit-identical to it (the integer engine's is,
+    /// enforced by `tests/batched_decode.rs`).
+    fn decode_wave_batched(&self, states: &mut [&mut SeqState],
+                           tokens: &[u16], attn_threads: usize)
+        -> Vec<Vec<f32>> {
+        let _ = attn_threads;
+        states
+            .iter_mut()
+            .zip(tokens)
+            .map(|(s, &t)| self.decode(s, t))
+            .collect()
+    }
 
     /// KV pages a state currently holds (page-denominated admission
     /// accounting; pages shared between forked states are counted by
@@ -173,6 +193,11 @@ pub struct IntEngine {
     pub model: Arc<IntModel>,
     pool: SharedPagePool,
     prefix: Mutex<PrefixTree<IntKvCache>>,
+    /// Free list of batched-decode scratches. A wave POPS one (taking
+    /// exclusive ownership for its whole duration) and pushes it back
+    /// after, so concurrent waves can never alias scratch — each
+    /// either reuses a returned instance or allocates a fresh one.
+    decode_scratch: Mutex<Vec<DecodeBatchScratch>>,
 }
 
 impl IntEngine {
@@ -193,7 +218,15 @@ impl IntEngine {
             model,
             pool,
             prefix: Mutex::new(PrefixTree::new(max_prefix_pages)),
+            decode_scratch: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Scratch instances currently parked on the free list
+    /// (diagnostics; the scratch-ownership regression test asserts
+    /// concurrent waves grew the pool to one instance per wave).
+    pub fn idle_decode_scratches(&self) -> usize {
+        lock_recover(&self.decode_scratch).len()
     }
 }
 
@@ -282,6 +315,30 @@ impl Engine for IntEngine {
             SeqState::Int { cache } => self.model.decode_one(token, cache),
             _ => panic!("wrong state kind"),
         }
+    }
+
+    fn decode_wave_batched(&self, states: &mut [&mut SeqState],
+                           tokens: &[u16], attn_threads: usize)
+        -> Vec<Vec<f32>> {
+        if states.is_empty() {
+            return Vec::new();
+        }
+        let mut caches: Vec<&mut IntKvCache> = states
+            .iter_mut()
+            .map(|s| match &mut **s {
+                SeqState::Int { cache } => cache,
+                _ => panic!("wrong state kind"),
+            })
+            .collect();
+        // pop = exclusive ownership for the wave's duration; two
+        // concurrent waves therefore hold two distinct instances
+        let mut scratch = lock_recover(&self.decode_scratch)
+            .pop()
+            .unwrap_or_default();
+        let out = self.model.decode_batch(
+            tokens, &mut caches, attn_threads.max(1), &mut scratch);
+        lock_recover(&self.decode_scratch).push(scratch);
+        out
     }
 
     fn kv_pages(&self, state: &SeqState) -> usize {

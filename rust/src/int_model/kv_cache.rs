@@ -60,13 +60,41 @@
 //! instead of reallocating per call.
 //!
 //! With `ILLM_THREADS > 1` (or an explicit count through
-//! `prefill_batch_threads`) the attend phase fans heads out across
-//! `std::thread::scope` workers — each worker owns a contiguous head
-//! range and a private output block, merged after the join, so the
-//! threaded path is also bit-identical. Decode keeps its single-row
-//! attention serial per sequence (one row of work cannot amortize a
-//! spawn); decode parallelism is per-SEQUENCE, in the coordinator's
-//! batcher wave.
+//! `prefill_batch_threads`) the attend phase fans heads out across the
+//! persistent worker pool (`util::worker_pool::broadcast`) — each pool
+//! slot owns a contiguous head range and a private output block,
+//! scattered after the barrier, so the threaded path is also
+//! bit-identical. The pool replaced the former per-layer
+//! `std::thread::scope` fan-out: threads are spawned once per process
+//! and sleep between jobs, so a decode-scale layer no longer pays
+//! spawn cost.
+//!
+//! # Continuous-batched decode (`decode_batch_raw`)
+//!
+//! One decode step for N active sequences used to be N independent
+//! `decode_raw` forwards (the batcher's PR 4 wave ran them on worker
+//! threads, but each still issued 1-row GEMVs). `decode_batch_raw`
+//! stacks the N current-token activations into one N-row block and
+//! runs each layer as batched work:
+//!
+//!  * qkv / o-proj / MLP DI-linears execute as ONE row-blocked GEMM
+//!    over all sequences (`di_linear_raw_threads`), with each
+//!    sequence's dynamic requant scales riding along as row metadata —
+//!    exactly the trick `prefill_batch` plays across prompt rows,
+//!    applied across sequences. RoPE uses the per-ROW position table
+//!    (`center_rope_at`): the sequences sit at ragged positions.
+//!  * K/V append is ONE pool-locked pass over all N sequences' lanes,
+//!    followed by a single snapshot refresh shared by the whole wave.
+//!  * Attention stays per-sequence (each attends its own lanes) but
+//!    fans (sequence, head) work items over the pool off that one
+//!    shared snapshot, each slot with private scratch
+//!    ([`DecodeBatchScratch`]).
+//!
+//! Every op in the stack is row-independent (per-row scales, per-row
+//! requant, per-lane appends), so `decode_batch_raw` is BIT-IDENTICAL
+//! to running `decode_raw` per sequence in any order — sequential
+//! decode stays in-tree as the equivalence oracle, enforced by
+//! `tests/batched_decode.rs` at every thread count.
 //!
 //! # Locking discipline (who may hold the pool lock, and for how long)
 //!
@@ -98,21 +126,52 @@
 //!    sequence.
 //!
 //! Narrow locks are what let different sequences run forwards
-//! concurrently: the batcher's decode wave dispatches sequences across
-//! worker threads and their per-layer append phases interleave on the
-//! lock while their attend phases overlap.
+//! concurrently: batcher-side prefill continuations run on worker
+//! threads and their per-layer append phases interleave on the lock
+//! while their attend phases overlap.
+//!
+//! With the persistent worker pool in the picture there are three
+//! locks to order: the prefix-trie mutex (coordinator), the pool
+//! mutex here, and the worker pool's internal job mutex. The
+//! discipline:
+//!
+//!  * Lock ORDER is trie -> KV pool -> (nothing). The trie lock may
+//!    take the KV pool lock (fork/release during lookup/insert/evict);
+//!    the KV pool lock never takes the trie lock, and NO code calls
+//!    into the worker pool while holding either — `broadcast` is only
+//!    ever entered from the GEMM and attend phases, which sit strictly
+//!    between locked append phases. The barrier at the end of each
+//!    `broadcast` (every slot completed) is therefore always reached
+//!    BEFORE the next `lock_pool`, never while holding it.
+//!  * The worker pool's own mutex is a leaf: it guards slot
+//!    claim/complete bookkeeping only and is never held while user
+//!    code runs (see `util::worker_pool`), so it cannot appear in a
+//!    cycle at all.
+//!  * `decode_batch_raw`'s single append pass locks the KV pool once
+//!    for ALL sequences in the wave. It cannot deadlock against the
+//!    trie lock: the batched decode path never touches the trie (trie
+//!    lookups happen only on the admission/prefill path), and the
+//!    append pass takes exactly one lock, so there is no second lock
+//!    to complete a cycle with. Pool slots during the attend phase
+//!    read ONLY through the pre-refreshed snapshot — a worker never
+//!    acquires the KV pool lock, which is what makes "barrier while a
+//!    lock is pending" impossible by construction.
 
 use super::{dequant_logits, Heads, IntModel, NL_BITS};
 use crate::config::Arch;
 use crate::ops::di_add::di_add;
-use crate::ops::di_matmul::{di_linear, di_linear_raw};
+use crate::ops::di_matmul::{
+    di_linear, di_linear_raw, di_linear_raw_threads, di_linear_threads,
+};
 use crate::ops::di_norm::di_norm;
 use crate::ops::di_softmax::{di_softmax_row, di_softmax_rows};
 use crate::ops::{rdiv, requant_row};
 use crate::quant::DynQ;
 use crate::tensor::IMat;
 use crate::trace::{bump, bump_by, health, phase_timer, Phase};
+use crate::util::worker_pool::broadcast;
 use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Token-slots per page per lane. A page holds `PAGE_TOKENS * head_dim`
@@ -742,6 +801,35 @@ struct AttnScratch {
     snap: PageSnapshot,
 }
 
+/// One pool slot's private attention scratch for the batched decode
+/// path. Slots must NEVER share these buffers: `di_softmax_row`
+/// resizes and overwrites them per call, and two slots interleaving on
+/// one buffer would corrupt each other's scores mid-softmax.
+#[derive(Debug, Default)]
+struct WorkerScratch {
+    scores: Vec<i64>,
+    probs: Vec<i32>,
+    exp: Vec<i64>,
+}
+
+/// Reusable scratch for ONE in-flight `decode_batch_raw` wave: a
+/// shared storage snapshot (refreshed once per layer under the pool
+/// lock, read lock-free by every attend slot) plus strictly per-slot
+/// attention scratch. The engine keeps a free list of these so
+/// concurrent waves each own a private instance; the `in_use`
+/// tripwire turns any accidental sharing into a loud panic instead of
+/// silent corruption (see the scratch-ownership audit test in
+/// `tests/batched_decode.rs`).
+#[derive(Debug, Default)]
+pub struct DecodeBatchScratch {
+    snap: PageSnapshot,
+    workers: Vec<WorkerScratch>,
+    o_raw: Vec<i64>,
+    vms: Vec<i32>,
+    vks: Vec<i32>,
+    in_use: AtomicBool,
+}
+
 /// Integer KV cache for one sequence: page tables per (layer, head)
 /// lane over a pool shared with the engine (or private, when built
 /// with [`IntKvCache::new`]), plus the sequence's attention scratch.
@@ -1270,57 +1358,67 @@ impl IntModel {
                     );
                 }
             } else {
-                // head-parallel attend: each worker owns a contiguous
-                // head range and a private compact output block,
-                // scattered into the head-interleaved o_raw after the
-                // join — bit-identical to the serial loop
+                // head-parallel attend on the persistent pool: each
+                // slot owns a contiguous head range and a private
+                // compact output block, scattered into the
+                // head-interleaved o_raw after the barrier —
+                // bit-identical to the serial loop. (Replaces the
+                // former per-layer std::thread::scope fan-out.)
                 let k_ref: &[Lane] = k_lanes;
                 let v_ref: &[Lane] = v_lanes;
                 let qh_ref = &qh;
                 let snap_ref: &PageSnapshot = snap;
                 let (qm, qk) = (&q.m[..], &q.k[..]);
                 let hc = h.div_ceil(nt);
-                let parts: Vec<(usize, usize, Vec<i64>)> =
-                    std::thread::scope(|s| {
-                        let mut handles = Vec::new();
-                        let mut h0 = 0usize;
-                        while h0 < h {
-                            let h1 = (h0 + hc).min(h);
-                            handles.push(s.spawn(move || {
-                                let mut out =
-                                    vec![0i64; (h1 - h0) * t * hd];
-                                let mut sc: Vec<i64> = Vec::new();
-                                let mut pr: Vec<i32> = Vec::new();
-                                let mut ex: Vec<i64> = Vec::new();
-                                for head in h0..h1 {
-                                    let idx = li * h + head;
-                                    self.attend_head(
-                                        snap_ref,
-                                        &k_ref[idx],
-                                        &v_ref[idx],
-                                        qh_ref,
-                                        head,
-                                        qm,
-                                        qk,
-                                        pos0,
-                                        rowwise,
-                                        &mut out[(head - h0) * t * hd..],
-                                        hd,
-                                        &mut sc,
-                                        &mut pr,
-                                        &mut ex,
-                                    );
-                                }
-                                (h0, h1, out)
-                            }));
-                            h0 = h1;
+                let nslots = h.div_ceil(hc);
+                let mut parts: Vec<Vec<i64>> = (0..nslots)
+                    .map(|slot| {
+                        let h0 = slot * hc;
+                        let h1 = (h0 + hc).min(h);
+                        vec![0i64; (h1 - h0) * t * hd]
+                    })
+                    .collect();
+                {
+                    // SAFETY wrapper: each pool slot writes only
+                    // parts[slot], and broadcast runs every slot
+                    // exactly once — no element is ever aliased.
+                    struct PartsPtr(*mut Vec<i64>);
+                    unsafe impl Send for PartsPtr {}
+                    unsafe impl Sync for PartsPtr {}
+                    let pp = PartsPtr(parts.as_mut_ptr());
+                    broadcast(nslots, |slot| {
+                        let h0 = slot * hc;
+                        let h1 = (h0 + hc).min(h);
+                        let out = unsafe { &mut *pp.0.add(slot) };
+                        // slot-private scratch: pool slots never
+                        // share attention scratch (ownership audit)
+                        let mut sc: Vec<i64> = Vec::new();
+                        let mut pr: Vec<i32> = Vec::new();
+                        let mut ex: Vec<i64> = Vec::new();
+                        for head in h0..h1 {
+                            let idx = li * h + head;
+                            self.attend_head(
+                                snap_ref,
+                                &k_ref[idx],
+                                &v_ref[idx],
+                                qh_ref,
+                                head,
+                                qm,
+                                qk,
+                                pos0,
+                                rowwise,
+                                &mut out[(head - h0) * t * hd..],
+                                hd,
+                                &mut sc,
+                                &mut pr,
+                                &mut ex,
+                            );
                         }
-                        handles
-                            .into_iter()
-                            .map(|w| w.join().expect("attention worker"))
-                            .collect()
                     });
-                for (h0, h1, part) in parts {
+                }
+                for (slot, part) in parts.iter().enumerate() {
+                    let h0 = slot * hc;
+                    let h1 = (h0 + hc).min(h);
                     for head in h0..h1 {
                         let base = (head - h0) * t * hd;
                         for i in 0..t {
@@ -1456,6 +1554,225 @@ impl IntModel {
         cache.pos += 1;
         let hf = di_norm(&x, NL_BITS, centered);
         di_linear_raw(&hf, &self.lm_head)
+    }
+
+    /// One continuous-batched decode step: logits for every sequence.
+    /// Thin dequant wrapper over [`IntModel::decode_batch_raw`].
+    pub fn decode_batch(
+        &self,
+        tokens: &[u16],
+        caches: &mut [&mut IntKvCache],
+        threads: usize,
+        batch: &mut DecodeBatchScratch,
+    ) -> Vec<Vec<f32>> {
+        let raw = self.decode_batch_raw(tokens, caches, threads, batch);
+        let logits = dequant_logits(&raw);
+        (0..raw.rows).map(|r| logits.row(r).to_vec()).collect()
+    }
+
+    /// One decode step for N sequences as N-ROW batched work per layer
+    /// instead of N independent forwards (see the module docs): the
+    /// current-token activations stack into a row block, every
+    /// DI-linear runs as one row-blocked GEMM over all sequences with
+    /// per-sequence requant scales as row metadata, K/V append is a
+    /// single pool-locked pass over all lanes, and attention fans
+    /// (sequence, head) items over the worker pool off ONE shared
+    /// storage snapshot. Returns the raw lm_head accumulators, row `s`
+    /// for sequence `s`.
+    ///
+    /// Bit-identical to calling `decode_raw` once per sequence, in any
+    /// order and at any `threads` — every op in the stack is
+    /// row-independent and each lane sees the exact same append
+    /// sequence (`tests/batched_decode.rs` enforces this against the
+    /// sequential oracle).
+    ///
+    /// All caches must draw from ONE shared page pool (the serving
+    /// configuration); `&mut` exclusivity guarantees the caches are
+    /// distinct.
+    pub fn decode_batch_raw(
+        &self,
+        tokens: &[u16],
+        caches: &mut [&mut IntKvCache],
+        threads: usize,
+        batch: &mut DecodeBatchScratch,
+    ) -> crate::ops::RawRows {
+        let cfg = &self.cfg;
+        let n = tokens.len();
+        assert_eq!(caches.len(), n, "one cache per token");
+        assert!(n > 0, "decode_batch_raw needs at least one sequence");
+        assert!(
+            !batch.in_use.swap(true, Ordering::Acquire),
+            "DecodeBatchScratch shared by two concurrent waves"
+        );
+        let pool = caches[0].pool.clone();
+        for c in caches.iter() {
+            assert!(Arc::ptr_eq(&pool, &c.pool),
+                    "batched decode requires one shared page pool");
+            assert!(c.pos < cfg.max_seq, "sequence exceeds max_seq");
+        }
+        let centered = cfg.arch == Arch::Opt;
+        let a_bits = self.scheme.a_bits;
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let rotate = cfg.arch == Arch::Llama;
+        let nt = threads.clamp(1, 64);
+        let positions: Vec<usize> = caches.iter().map(|c| c.pos).collect();
+
+        let ids: Vec<usize> = tokens.iter().map(|&tk| tk as usize).collect();
+        let mut x = self.embed.gather(&ids);
+        if let Some(pe) = &self.pos_embed {
+            let p = pe.gather(&positions);
+            x = di_add(&x, &p, NL_BITS);
+        }
+        let DecodeBatchScratch { snap, workers, o_raw, vms, vks, in_use } =
+            batch;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let pt = phase_timer(Phase::Qkv, li as i64);
+            let hh = di_norm(&x, a_bits, centered);
+            let q = di_linear_threads(&hh, &layer.wq, a_bits, nt);
+            let k = di_linear_threads(&hh, &layer.wk, a_bits, nt);
+            let v = di_linear_threads(&hh, &layer.wv, a_bits, nt);
+            // per-ROW positions: the wave's sequences sit at ragged,
+            // unrelated offsets
+            let qh = self.center_rope_at(&q, &positions, rotate);
+            let kh = self.center_rope_at(&k, &positions, rotate);
+            let vh = self.center_rope(&v, 0, false);
+            drop(pt);
+            // ---- ONE pool-locked append pass for all lanes of the
+            // wave, then a single snapshot refresh shared by every
+            // attend slot. Per lane this is the exact append sequence
+            // sequential decode performs, so lane contents and scales
+            // cannot diverge from the oracle. ----
+            {
+                let _pt = phase_timer(Phase::KvAppend, li as i64);
+                let mut guard = lock_pool(&pool);
+                for (s, cache) in caches.iter_mut().enumerate() {
+                    for head in 0..h {
+                        let idx = li * h + head;
+                        cache.k[idx].append(
+                            &mut guard,
+                            kh.head_row(s, head),
+                            k.m[s], k.k[s], hd);
+                        cache.v[idx].append(
+                            &mut guard,
+                            vh.head_row(s, head),
+                            v.m[s], v.k[s], hd);
+                    }
+                }
+                guard.refresh_snapshot(snap);
+            }
+            // lane merge metadata, seq-major (n, h)
+            vms.clear();
+            vks.clear();
+            for cache in caches.iter() {
+                for head in 0..h {
+                    let lane_v = &cache.v[li * h + head];
+                    vms.push(lane_v.m);
+                    vks.push(lane_v.k);
+                }
+            }
+            // ---- lock-free attend: (sequence, head) items over the
+            // pool, all reading the one shared snapshot; each slot
+            // owns a contiguous item range, a disjoint slice of
+            // o_raw, and its PRIVATE WorkerScratch ----
+            let pt = phase_timer(Phase::Attend, li as i64);
+            o_raw.clear();
+            o_raw.resize(n * h * hd, 0);
+            let items = n * h;
+            let nslots = nt.min(items);
+            if workers.len() < nslots {
+                workers.resize_with(nslots, WorkerScratch::default);
+            }
+            let ipc = items.div_ceil(nslots);
+            {
+                struct RawPtr(*mut i64);
+                unsafe impl Send for RawPtr {}
+                unsafe impl Sync for RawPtr {}
+                struct WsPtr(*mut WorkerScratch);
+                unsafe impl Send for WsPtr {}
+                unsafe impl Sync for WsPtr {}
+                let optr = RawPtr(o_raw.as_mut_ptr());
+                let wptr = WsPtr(workers.as_mut_ptr());
+                let caches_ro: &[&mut IntKvCache] = &*caches;
+                let snap_ref: &PageSnapshot = snap;
+                let qh_ref = &qh;
+                let (qm, qk) = (&q.m[..], &q.k[..]);
+                broadcast(nslots, |slot| {
+                    let i0 = slot * ipc;
+                    let i1 = ((slot + 1) * ipc).min(items);
+                    if i0 >= i1 {
+                        return;
+                    }
+                    // SAFETY: slots own disjoint item ranges (hence
+                    // disjoint o_raw slices) and slot-indexed scratch,
+                    // and broadcast runs each slot exactly once; both
+                    // buffers outlive the barrier.
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            optr.0.add(i0 * hd),
+                            (i1 - i0) * hd,
+                        )
+                    };
+                    let ws = unsafe { &mut *wptr.0.add(slot) };
+                    for (off, item) in (i0..i1).enumerate() {
+                        let s = item / h;
+                        let head = item % h;
+                        let idx = li * h + head;
+                        let c: &IntKvCache = &*caches_ro[s];
+                        let lane_k = &c.k[idx];
+                        let lane_v = &c.v[idx];
+                        self.attend_row(
+                            snap_ref,
+                            lane_k,
+                            lane_v,
+                            qh_ref.head_row(s, head),
+                            qm[s],
+                            qk[s],
+                            lane_k.n_tokens(),
+                            hd,
+                            &mut out[off * hd..(off + 1) * hd],
+                            &mut ws.scores,
+                            &mut ws.probs,
+                            &mut ws.exp,
+                        );
+                    }
+                });
+            }
+            drop(pt);
+            let pt = phase_timer(Phase::Merge, li as i64);
+            let mut att_vals = IMat::zeros(n, h * hd);
+            let mut am = vec![0i32; n];
+            let mut ak = vec![0i32; n];
+            let mut az = vec![0i32; n];
+            for s in 0..n {
+                let one = self.merge_heads(
+                    &o_raw[s * h * hd..(s + 1) * h * hd],
+                    1,
+                    &vms[s * h..(s + 1) * h],
+                    &vks[s * h..(s + 1) * h],
+                );
+                att_vals.row_mut(s).copy_from_slice(one.vals.row(0));
+                am[s] = one.m[0];
+                ak[s] = one.k[0];
+                az[s] = one.zp[0];
+            }
+            let att = DynQ {
+                vals: att_vals,
+                m: am,
+                k: ak,
+                zp: az,
+                bits: a_bits,
+            };
+            drop(pt);
+            let _pt = phase_timer(Phase::Mlp, li as i64);
+            x = self.layer_tail_threads(&x, &att, layer, nt);
+        }
+        for cache in caches.iter_mut() {
+            cache.pos += 1;
+        }
+        let hf = di_norm(&x, NL_BITS, centered);
+        let out = di_linear_raw_threads(&hf, &self.lm_head, nt);
+        in_use.store(false, Ordering::Release);
+        out
     }
 
     /// Center + rotate a single-row qkv output into `out` (H*hd,) i64,

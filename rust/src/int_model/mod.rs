@@ -12,7 +12,7 @@ pub mod quantize;
 
 use crate::config::{Arch, ModelConfig};
 use crate::ops::di_add::di_add;
-use crate::ops::di_matmul::{di_linear, di_linear_raw};
+use crate::ops::di_matmul::{di_linear, di_linear_raw, di_linear_threads};
 use crate::ops::di_norm::di_norm;
 use crate::ops::di_softmax::di_softmax_row;
 use crate::ops::di_swiglu::{di_swiglu, AlphaSmooth};
@@ -106,23 +106,35 @@ impl IntModel {
     /// single-token decode and the batched prefill all reuse it.
     pub(crate) fn layer_tail(&self, x: &DynQ, att: &DynQ,
                              layer: &IntLayer) -> DynQ {
+        self.layer_tail_threads(x, att, layer, 1)
+    }
+
+    /// `layer_tail` with every DI-linear's accumulate phase spread
+    /// over the persistent worker pool. The threaded GEMM is
+    /// bit-identical to the serial one (see `di_linear_raw_threads`),
+    /// and di_add / di_norm / di_swiglu / di_relu are per-row, so the
+    /// result never depends on `threads`.
+    pub(crate) fn layer_tail_threads(&self, x: &DynQ, att: &DynQ,
+                                     layer: &IntLayer,
+                                     threads: usize) -> DynQ {
         let centered = self.cfg.arch == Arch::Opt;
         let a_bits = self.scheme.a_bits;
-        let o = di_linear(att, &layer.wo, a_bits);
+        let nt = threads.max(1);
+        let o = di_linear_threads(att, &layer.wo, a_bits, nt);
         let x = di_add(x, &o, NL_BITS);
         let h2 = di_norm(&x, a_bits, centered);
         let y = match &layer.mlp {
             IntMlp::SwiGlu { wg, wu, wd, alpha } => {
-                let gate = di_linear(&h2, wg, NL_BITS);
-                let up = di_linear(&h2, wu, NL_BITS);
+                let gate = di_linear_threads(&h2, wg, NL_BITS, nt);
+                let up = di_linear_threads(&h2, wu, NL_BITS, nt);
                 let sw = di_swiglu(&gate, &up, alpha,
                                    self.scheme.sig_bits, a_bits);
-                di_linear(&sw, wd, a_bits)
+                di_linear_threads(&sw, wd, a_bits, nt)
             }
             IntMlp::Relu { w1, w2 } => {
-                let mut a = di_linear(&h2, w1, a_bits);
+                let mut a = di_linear_threads(&h2, w1, a_bits, nt);
                 di_relu(&mut a);
-                di_linear(&a, w2, a_bits)
+                di_linear_threads(&a, w2, a_bits, nt)
             }
         };
         di_add(&x, &y, NL_BITS)
@@ -148,6 +160,41 @@ impl IntModel {
                     tables.rotate(
                         &mut out[head * hd..(head + 1) * hd],
                         r + pos0,
+                    );
+                }
+            }
+        }
+        Heads { t, h, hd, vals }
+    }
+
+    /// `center_rope` with an EXPLICIT position per row: row `r` is
+    /// rotated at `positions[r]`. The batched decode step stacks one
+    /// current-token row per sequence, and the sequences sit at
+    /// unrelated (ragged) positions, so the `r + pos0` contiguity of
+    /// `center_rope` does not apply. Row `r` here computes exactly
+    /// what `center_rope` computes for a 1-row input at
+    /// `pos0 = positions[r]` — the sequential-decode oracle depends
+    /// on that.
+    pub(crate) fn center_rope_at(&self, x: &DynQ, positions: &[usize],
+                                 rotate: bool) -> Heads {
+        let t = x.rows();
+        assert_eq!(positions.len(), t, "one position per row");
+        let h = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let mut vals = vec![0i64; t * h * hd];
+        for r in 0..t {
+            let zp = x.zp[r] as i64;
+            let row = x.vals.row(r);
+            let out = &mut vals[r * h * hd..(r + 1) * h * hd];
+            for c in 0..h * hd {
+                out[c] = row[c] as i64 - zp;
+            }
+            if rotate {
+                let tables = self.rope.as_ref().expect("rope tables");
+                for head in 0..h {
+                    tables.rotate(
+                        &mut out[head * hd..(head + 1) * hd],
+                        positions[r],
                     );
                 }
             }

@@ -16,24 +16,29 @@ use crate::quant::{DynQ, QWeight, BIAS_Q};
 /// degenerate to the plain GEMV.
 const RB: usize = 8;
 
-/// Accumulate phase: returns raw P rows with composite scales.
-pub fn di_linear_raw(x: &DynQ, w: &QWeight) -> RawRows {
-    let t = x.rows();
+/// One contiguous span of activation rows `[r0, r1)`: centered blocked
+/// GEMM, per-channel mantissa fold and per-row bias fold, written into
+/// `pspan` (the output slice for exactly those rows). Callers split
+/// spans at whole-RB-block boundaries only, and every row's
+/// accumulation keeps the same k-outer order regardless of the split,
+/// so ANY partition of the rows over spans is bit-identical to the
+/// single-span call — the threaded wrapper below needs no oracle of
+/// its own.
+fn gemm_span(x: &DynQ, w: &QWeight, r0: usize, r1: usize, pspan: &mut [i64]) {
     let kdim = x.cols();
     let n = w.wq.cols;
-    assert_eq!(kdim, w.wq.rows, "di_linear dims");
-    let mut p = vec![0i64; t * n];
+    debug_assert_eq!(pspan.len(), (r1 - r0) * n);
     // Centered i32 GEMM, k-outer within a block of RB rows: the weight
     // row loaded for k is applied to every row of the block while hot
     // in L1, and the inner loop stays unit-stride over the output row
     // (LLVM vectorizes it). Integer accumulation is exact under
     // reordering, so blocking is bit-identical to row-at-a-time GEMV.
-    let rb_cap = RB.min(t);
+    let rb_cap = RB.min(r1 - r0);
     let mut acc = vec![0i32; rb_cap * n];
     let mut xc_blk = vec![0i32; rb_cap * kdim];
-    let mut r = 0;
-    while r < t {
-        let rb = RB.min(t - r);
+    let mut r = r0;
+    while r < r1 {
+        let rb = RB.min(r1 - r);
         acc[..rb * n].iter_mut().for_each(|a| *a = 0);
         for j in 0..rb {
             let zp = x.zp[r + j];
@@ -58,7 +63,8 @@ pub fn di_linear_raw(x: &DynQ, w: &QWeight) -> RawRows {
             }
         }
         for j in 0..rb {
-            let prow = &mut p[(r + j) * n..(r + j + 1) * n];
+            let prow =
+                &mut pspan[(r - r0 + j) * n..(r - r0 + j + 1) * n];
             let arow = &acc[j * n..(j + 1) * n];
             for c in 0..n {
                 prow[c] = arow[c] as i64 * w.mw[c] as i64;
@@ -66,19 +72,73 @@ pub fn di_linear_raw(x: &DynQ, w: &QWeight) -> RawRows {
         }
         r += rb;
     }
-    let m_in: Vec<i64> = x.m.iter().map(|&m| m as i64).collect();
-    let k_in: Vec<i32> = x.k.iter().map(|&k| k + w.kw).collect();
     // bias fold (Eq. 3 extended): p += fdiv(bq << (k_in - BIAS_Q), m_in)
     if let Some(bq) = &w.bias_q {
-        for r in 0..t {
-            let sh = (k_in[r] - BIAS_Q).clamp(-40, 40);
-            let prow = &mut p[r * n..(r + 1) * n];
+        for r in r0..r1 {
+            let sh = (x.k[r] + w.kw - BIAS_Q).clamp(-40, 40);
+            let m_in = x.m[r] as i64;
+            let prow = &mut pspan[(r - r0) * n..(r - r0 + 1) * n];
             for c in 0..n {
                 let num = if sh >= 0 { bq[c] << sh } else { bq[c] >> -sh };
-                prow[c] += fdiv(num, m_in[r]);
+                prow[c] += fdiv(num, m_in);
             }
         }
     }
+}
+
+/// Raw output pointer smuggled into pool slots; each slot carves a
+/// DISJOINT row span out of it (same idiom as the slab writes in
+/// `int_model/kv_cache.rs`).
+struct SendPtr(*mut i64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Accumulate phase: returns raw P rows with composite scales.
+pub fn di_linear_raw(x: &DynQ, w: &QWeight) -> RawRows {
+    di_linear_raw_threads(x, w, 1)
+}
+
+/// `di_linear_raw` with the row blocks spread over the persistent
+/// worker pool. Spans split at RB-block boundaries only, so the
+/// result is bit-identical to the serial call at every thread count;
+/// `threads <= 1` (or a single block) never touches the pool.
+pub fn di_linear_raw_threads(
+    x: &DynQ,
+    w: &QWeight,
+    threads: usize,
+) -> RawRows {
+    let t = x.rows();
+    let kdim = x.cols();
+    let n = w.wq.cols;
+    assert_eq!(kdim, w.wq.rows, "di_linear dims");
+    let mut p = vec![0i64; t * n];
+    let blocks = t.div_ceil(RB).max(1);
+    let nslots = threads.clamp(1, 64).min(blocks);
+    if nslots <= 1 {
+        gemm_span(x, w, 0, t, &mut p);
+    } else {
+        let bps = blocks.div_ceil(nslots);
+        let ptr = SendPtr(p.as_mut_ptr());
+        crate::util::worker_pool::broadcast(nslots, |slot| {
+            let r0 = (slot * bps * RB).min(t);
+            let r1 = ((slot + 1) * bps * RB).min(t);
+            if r0 >= r1 {
+                return;
+            }
+            // SAFETY: slots own disjoint whole-block row spans of `p`
+            // and the pool runs each slot exactly once, so no element
+            // is aliased; `p` outlives the broadcast barrier.
+            let pspan = unsafe {
+                std::slice::from_raw_parts_mut(
+                    ptr.0.add(r0 * n),
+                    (r1 - r0) * n,
+                )
+            };
+            gemm_span(x, w, r0, r1, pspan);
+        });
+    }
+    let m_in: Vec<i64> = x.m.iter().map(|&m| m as i64).collect();
+    let k_in: Vec<i32> = x.k.iter().map(|&k| k + w.kw).collect();
     RawRows { rows: t, cols: n, p, m_in, k_in }
 }
 
@@ -86,6 +146,18 @@ pub fn di_linear_raw(x: &DynQ, w: &QWeight) -> RawRows {
 pub fn di_linear(x: &DynQ, w: &QWeight, out_bits: u32) -> DynQ {
     let raw = di_linear_raw(x, w);
     requant_rows(&raw, out_bits, None)
+}
+
+/// `di_linear` with the accumulate phase on the worker pool. The
+/// requant stays serial: it is per-row either way, and the GEMM is
+/// where the time goes.
+pub fn di_linear_threads(
+    x: &DynQ,
+    w: &QWeight,
+    out_bits: u32,
+    threads: usize,
+) -> DynQ {
+    requant_rows(&di_linear_raw_threads(x, w, threads), out_bits, None)
 }
 
 #[cfg(test)]
@@ -140,6 +212,27 @@ mod tests {
                     "bias fold err {delta} vs {}",
                     bias[c]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_gemm_is_bit_identical() {
+        let mut rng = Pcg64::new(31);
+        // row counts straddling the RB=8 block size, incl. ragged tails
+        for t in [1usize, 2, 7, 8, 9, 16, 37] {
+            let x = rand_mat(&mut rng, t, 48, 1.2);
+            let w = rand_mat(&mut rng, 48, 20, 0.3);
+            let bias: Vec<f32> =
+                (0..20).map(|c| (c as f32 - 10.0) * 0.05).collect();
+            let xq = quantize_rows_f32(&x, 8);
+            let wq = quantize_weight(&w, 8, 1.0, Some(&bias));
+            let serial = di_linear_raw(&xq, &wq);
+            for threads in [2usize, 4, 8] {
+                let par = di_linear_raw_threads(&xq, &wq, threads);
+                assert_eq!(serial.p, par.p, "t={t} threads={threads}");
+                assert_eq!(serial.m_in, par.m_in);
+                assert_eq!(serial.k_in, par.k_in);
             }
         }
     }

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod json;
 pub mod rng;
+pub mod worker_pool;
 
 use std::time::Instant;
 

@@ -1,0 +1,296 @@
+//! Persistent worker pool for intra-forward parallelism.
+//!
+//! PR 4 parallelized prefill attention and the decode wave with
+//! `std::thread::scope`, spawning OS threads per layer per forward.
+//! That is fine for long prefills, where the work amortizes the spawn
+//! cost, but a decode step over a small model is tens of microseconds
+//! per layer and the spawn cost dominates. This module keeps ONE
+//! process-wide set of detached worker threads that sleep on a
+//! condvar between jobs; `broadcast(n, body)` runs `body(slot)`
+//! exactly once for each slot in `0..n` and returns only after every
+//! slot has completed — the return edge is the per-layer barrier.
+//!
+//! Guarantees callers rely on:
+//!
+//! * `body(slot)` runs EXACTLY once per slot, so per-slot scratch
+//!   buffers and disjoint per-slot output slices never alias, even
+//!   when one OS thread executes several slots back to back.
+//! * `broadcast` returns only after all slots completed — even when a
+//!   slot panics (the panic is re-raised on the caller after the
+//!   barrier, mirroring the old `join().expect(..)` semantics).
+//! * Nested or contended broadcasts degrade to inline serial
+//!   execution of all slots on the calling thread. The integer
+//!   kernels are deterministic per slot, so the result is
+//!   bit-identical either way, and a worker never waits on the pool —
+//!   no deadlock is possible.
+//! * The pool's own mutex is a LEAF lock: it is held only for slot
+//!   bookkeeping (claim / complete), never while user code runs, so
+//!   it cannot participate in a cycle with the KV pool mutex or the
+//!   prefix-trie mutex (see the locking discipline in
+//!   `int_model/kv_cache.rs`).
+
+use crate::util::lock_recover;
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Hard cap on spawned workers; matches the `ILLM_THREADS` clamp in
+/// [`crate::util::illm_threads`] (caller thread + 63 workers = 64).
+const MAX_WORKERS: usize = 63;
+
+struct Job {
+    /// Lifetime-erased pointer to the caller's `body`. The closure
+    /// lives on the posting thread's stack; `broadcast` keeps it
+    /// alive until it observes `next >= n && running == 0` and takes
+    /// the job, and workers only dereference the pointer between a
+    /// claim and the matching `running -= 1`.
+    body: *const (dyn Fn(usize) + Sync),
+    /// Next unclaimed slot index.
+    next: usize,
+    /// Total slot count.
+    n: usize,
+    /// Slots currently executing (claimed, not yet completed).
+    running: usize,
+    /// Set when any slot body panicked; re-raised by the caller.
+    panicked: bool,
+}
+
+// SAFETY: `body` is only dereferenced while the posting `broadcast`
+// keeps the underlying closure alive (see the field doc above), and
+// the closure itself is `Sync` so shared calls from several threads
+// are sound.
+unsafe impl Send for Job {}
+
+#[derive(Default)]
+struct State {
+    job: Option<Job>,
+    spawned: usize,
+}
+
+struct Pool {
+    state: Mutex<State>,
+    /// Workers wait here for a job with unclaimed slots.
+    work: Condvar,
+    /// The posting thread waits here for the last slot to complete.
+    done: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static P: OnceLock<Pool> = OnceLock::new();
+    P.get_or_init(|| Pool {
+        state: Mutex::new(State::default()),
+        work: Condvar::new(),
+        done: Condvar::new(),
+    })
+}
+
+thread_local! {
+    /// True on pool worker threads: a nested `broadcast` from inside
+    /// a slot body must run inline (a worker waiting on the pool it
+    /// serves would deadlock).
+    static IN_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Claim and run slots of the current job until none remain
+/// unclaimed. Other slots may still be RUNNING on other threads when
+/// this returns. Shared by workers and the posting thread, so the
+/// caller drains any slots the (capped) worker set never picked up.
+fn drain_slots(p: &'static Pool) {
+    loop {
+        let claimed = {
+            let mut g = lock_recover(&p.state);
+            match g.job.as_mut() {
+                Some(j) if j.next < j.n => {
+                    let slot = j.next;
+                    j.next += 1;
+                    j.running += 1;
+                    Some((slot, j.body))
+                }
+                _ => None,
+            }
+        };
+        let Some((slot, body)) = claimed else { return };
+        // SAFETY: the job (and the closure it points to) stays alive
+        // until our `running -= 1` below — the poster's barrier
+        // cannot pass while this slot is counted as running.
+        let r = catch_unwind(AssertUnwindSafe(|| unsafe { (*body)(slot) }));
+        let mut g = lock_recover(&p.state);
+        if let Some(j) = g.job.as_mut() {
+            j.running -= 1;
+            if r.is_err() {
+                j.panicked = true;
+            }
+        }
+        drop(g);
+        p.done.notify_all();
+    }
+}
+
+fn worker_loop() {
+    IN_WORKER.with(|c| c.set(true));
+    let p = pool();
+    loop {
+        {
+            let mut g = lock_recover(&p.state);
+            while !matches!(g.job.as_ref(), Some(j) if j.next < j.n) {
+                g = p.work.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        drain_slots(p);
+    }
+}
+
+/// Run `body(slot)` exactly once for every `slot in 0..n`, spreading
+/// slots over the persistent workers plus the calling thread, and
+/// return after ALL slots completed (the barrier). `n <= 1`, a call
+/// from inside a slot body, or a pool already busy with another
+/// broadcast all degrade to inline serial execution — bit-identical
+/// results, no waiting.
+pub fn broadcast<F: Fn(usize) + Sync>(n: usize, body: F) {
+    if n <= 1 || IN_WORKER.with(|c| c.get()) {
+        for slot in 0..n {
+            body(slot);
+        }
+        return;
+    }
+    let p = pool();
+    {
+        let mut g = lock_recover(&p.state);
+        if g.job.is_some() {
+            // Another broadcast is in flight (e.g. two batcher-side
+            // prefill workers both reached their attention fan-out).
+            // Run inline rather than queueing: same values, and a
+            // thread that already holds pool slots never blocks here.
+            drop(g);
+            for slot in 0..n {
+                body(slot);
+            }
+            return;
+        }
+        // Lazily grow the worker set toward n - 1 threads (slot
+        // capacity for everything but the caller's share), capped.
+        let want = (n - 1).min(MAX_WORKERS);
+        while g.spawned < want {
+            let idx = g.spawned + 1;
+            let ok = std::thread::Builder::new()
+                .name(format!("illm-pool-{idx}"))
+                .spawn(worker_loop)
+                .is_ok();
+            if !ok {
+                break; // caller drains the unclaimed slots itself
+            }
+            g.spawned = idx;
+        }
+        let body_ref: &(dyn Fn(usize) + Sync) = &body;
+        // SAFETY: pure lifetime erasure on a fat reference; the
+        // barrier below keeps `body` alive past the last dereference.
+        let erased: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(body_ref) };
+        g.job = Some(Job {
+            body: erased as *const _,
+            next: 0,
+            n,
+            running: 0,
+            panicked: false,
+        });
+        p.work.notify_all();
+    }
+    // The caller works too (it always runs at least one slot, and all
+    // of them if every worker is still waking up).
+    drain_slots(p);
+    // Barrier: wait for the running slots, then retire the job.
+    let panicked = {
+        let mut g = lock_recover(&p.state);
+        while g
+            .job
+            .as_ref()
+            .is_some_and(|j| j.running > 0 || j.next < j.n)
+        {
+            g = p.done.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        g.job.take().is_some_and(|j| j.panicked)
+    };
+    if panicked {
+        panic!("worker pool: a broadcast slot panicked");
+    }
+}
+
+/// Number of persistent workers spawned so far (diagnostics/tests).
+pub fn spawned_workers() -> usize {
+    lock_recover(&pool().state).spawned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn each_slot_runs_exactly_once() {
+        for n in [1usize, 2, 3, 8, 16] {
+            let hits: Vec<AtomicUsize> =
+                (0..n).map(|_| AtomicUsize::new(0)).collect();
+            broadcast(n, |slot| {
+                hits[slot].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1,
+                           "slot {i} of {n} ran a wrong number of times");
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_sees_all_side_effects() {
+        let sum = AtomicUsize::new(0);
+        broadcast(13, |slot| {
+            sum.fetch_add(slot + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 13 * 14 / 2);
+    }
+
+    #[test]
+    fn nested_broadcast_runs_inline() {
+        let inner = AtomicUsize::new(0);
+        broadcast(4, |_| {
+            broadcast(4, |_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn concurrent_broadcasts_both_complete() {
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| broadcast(6, |_| {
+                a.fetch_add(1, Ordering::Relaxed);
+            }));
+            s.spawn(|| broadcast(6, |_| {
+                b.fetch_add(1, Ordering::Relaxed);
+            }));
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 6);
+        assert_eq!(b.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn slot_panic_propagates_and_pool_survives() {
+        let r = std::panic::catch_unwind(|| {
+            broadcast(4, |slot| {
+                if slot == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(r.is_err(), "slot panic was swallowed");
+        // the pool must be reusable after a panicked job
+        let ok = AtomicUsize::new(0);
+        broadcast(4, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+}
