@@ -6,7 +6,7 @@
 PYTHON ?= python3
 
 .PHONY: artifacts artifacts-full test smoke bench-json trace-smoke \
-	trace-overhead
+	trace-overhead lint
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../artifacts --fast
@@ -17,6 +17,14 @@ artifacts-full:
 
 test:
 	cd rust && cargo build --release && cargo test -q
+
+# project-invariant static analyzer (float-freedom, lock order,
+# atomics/panic discipline, overflow intent — see `illm::lint`):
+# exits non-zero on any violation and writes a machine-readable
+# report to rust/lint_report.json
+lint:
+	cd rust && cargo run --release --bin illm-lint -- \
+		--json lint_report.json
 
 # fast asserting serving bench: paging + admission + radix prefix
 # reuse regressions, at BOTH wave/attention thread counts so

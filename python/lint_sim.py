@@ -1,0 +1,931 @@
+#!/usr/bin/env python3
+"""Development mirror of the Rust `illm-lint` analyzer (rust/src/lint/).
+
+The authoring sandbox for this repo has no Rust toolchain, so the lint's
+tokenizer and rule logic are maintained twice: the shipping implementation
+in rust/src/lint/ (what CI runs via `make lint`) and this 1:1 Python port,
+which lets the rules be exercised against the tree without cargo. Keep the
+two in sync — rule semantics are documented in rust/src/lint/mod.rs.
+
+Usage: python3 python/lint_sim.py [--src rust/src] [--allow rust/lint_allow.toml]
+Exit code 1 if violations remain.
+"""
+
+import os
+import re
+import sys
+
+# ---------------------------------------------------------------- tokenizer
+
+IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+IDENT_CONT = IDENT_START | set("0123456789")
+DIGITS = set("0123456789")
+
+PUNCTS3 = ["<<=", ">>=", "..="]
+PUNCTS2 = ["->", "=>", "::", "<<", ">>", "<=", ">=", "==", "!=", "&&",
+           "||", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", ".."]
+
+IDENT, INT, FLOAT, STR, CHAR, PUNCT, LIFETIME = range(7)
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind = kind
+        self.text = text
+        self.line = line
+
+    def __repr__(self):
+        return f"{self.text}@{self.line}"
+
+
+def tokenize(src):
+    """-> (tokens, directives {line: [text]}).
+
+    Strings/chars become placeholder tokens; comments are stripped, but
+    `// ovf: ...` and `// lint: ...` comments are recorded as directives
+    keyed by their line."""
+    toks = []
+    directives = {}
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if src.startswith("//", i):
+            j = src.find("\n", i)
+            if j < 0:
+                j = n
+            body = src[i + 2:j].lstrip("/!").strip()
+            if body.startswith("ovf:") or body.startswith("lint:"):
+                directives.setdefault(line, []).append(body)
+            i = j
+            continue
+        if src.startswith("/*", i):
+            depth, i = 1, i + 2
+            while i < n and depth > 0:
+                if src.startswith("/*", i):
+                    depth += 1
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    i += 2
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            continue
+        # raw strings r"..", r#".."#, br#".."#
+        m = re.match(r'(b?r)(#*)"', src[i:])
+        if m:
+            hashes = m.group(2)
+            close = '"' + hashes
+            j = src.find(close, i + len(m.group(0)))
+            if j < 0:
+                j = n
+            line += src.count("\n", i, j)
+            toks.append(Tok(STR, "", line))
+            i = j + len(close)
+            continue
+        if c == '"' or src.startswith('b"', i):
+            i += 2 if c == "b" else 1
+            while i < n:
+                if src[i] == "\\":
+                    i += 2
+                    continue
+                if src[i] == '"':
+                    i += 1
+                    break
+                if src[i] == "\n":
+                    line += 1
+                i += 1
+            toks.append(Tok(STR, "", line))
+            continue
+        # char / byte-char / lifetime
+        if c == "'" or src.startswith("b'", i):
+            start = i + (2 if c == "b" else 1)
+            if c == "'" and start < n and src[start] in IDENT_START \
+                    and not (start + 1 < n and src[start + 1] == "'"):
+                # lifetime 'a — also covers 'static
+                j = start
+                while j < n and src[j] in IDENT_CONT:
+                    j += 1
+                toks.append(Tok(LIFETIME, src[i:j], line))
+                i = j
+                continue
+            i = start
+            while i < n:
+                if src[i] == "\\":
+                    i += 2
+                    continue
+                if src[i] == "'":
+                    i += 1
+                    break
+                i += 1
+            toks.append(Tok(CHAR, "", line))
+            continue
+        if c in IDENT_START:
+            j = i
+            while j < n and src[j] in IDENT_CONT:
+                j += 1
+            toks.append(Tok(IDENT, src[i:j], line))
+            i = j
+            continue
+        if c in DIGITS:
+            j = i
+            is_float = False
+            if src.startswith(("0x", "0o", "0b"), i):
+                j = i + 2
+                while j < n and (src[j] in IDENT_CONT):
+                    j += 1
+            else:
+                while j < n and (src[j] in DIGITS or src[j] == "_"):
+                    j += 1
+                if j < n and src[j] == "." and j + 1 < n \
+                        and src[j + 1] in DIGITS:
+                    is_float = True
+                    j += 1
+                    while j < n and (src[j] in DIGITS or src[j] == "_"):
+                        j += 1
+                if j < n and src[j] in "eE" and (
+                        j + 1 < n and (src[j + 1] in DIGITS
+                                       or src[j + 1] in "+-")):
+                    is_float = True
+                    j += 1
+                    if src[j] in "+-":
+                        j += 1
+                    while j < n and src[j] in DIGITS:
+                        j += 1
+                # suffix
+                k = j
+                while k < n and src[k] in IDENT_CONT:
+                    k += 1
+                suffix = src[j:k]
+                if suffix in ("f32", "f64"):
+                    is_float = True
+                j = k
+            toks.append(Tok(FLOAT if is_float else INT, src[i:j], line))
+            i = j
+            continue
+        matched = None
+        for p in PUNCTS3:
+            if src.startswith(p, i):
+                matched = p
+                break
+        if not matched:
+            for p in PUNCTS2:
+                if src.startswith(p, i):
+                    matched = p
+                    break
+        if not matched:
+            matched = c
+        toks.append(Tok(PUNCT, matched, line))
+        i += len(matched)
+    return toks, directives
+
+
+# ------------------------------------------------------------ file modeling
+
+class FnInfo:
+    def __init__(self, qname, name, path, body, is_test, sig_line):
+        self.qname = qname      # "Type::name" or "name"
+        self.name = name
+        self.path = path
+        self.body = body        # token slice of the body (inside braces)
+        self.is_test = is_test
+        self.sig_line = sig_line
+        self.direct_locks = set()
+        self.calls = []         # (name, qual_or_None, held tuple, line, pin)
+        self.may_locks = set()
+        self.is_compute = False
+        self.may_compute = False
+
+
+def mark_test_regions(toks):
+    """Per-token bool: inside an item annotated #[cfg(test)] (or inside
+    #[test] / #[bench] attributes' items)."""
+    in_test = [False] * len(toks)
+    i = 0
+    regions = []  # stack of close-depth
+    depth = 0
+    pending = False
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == PUNCT and t.text == "#" and i + 1 < len(toks) \
+                and toks[i + 1].text == "[":
+            # scan attribute
+            j = i + 2
+            bd = 1
+            attr = []
+            while j < len(toks) and bd > 0:
+                if toks[j].text == "[":
+                    bd += 1
+                elif toks[j].text == "]":
+                    bd -= 1
+                else:
+                    attr.append(toks[j].text)
+                j += 1
+            if ("cfg" in attr and "test" in attr) or attr[:1] == ["test"] \
+                    or attr[:1] == ["bench"]:
+                pending = True
+            for k in range(i, j):
+                if regions:
+                    in_test[k] = True
+            i = j
+            continue
+        if t.kind == PUNCT and t.text == "{":
+            depth += 1
+            if pending:
+                regions.append(depth)
+                pending = False
+        elif t.kind == PUNCT and t.text == "}":
+            if regions and regions[-1] == depth:
+                regions.pop()
+            depth -= 1
+        elif t.kind == PUNCT and t.text == ";" and pending and depth == 0:
+            pending = False  # e.g. `#[cfg(test)] mod tests;`
+        if regions:
+            in_test[i] = True
+        i += 1
+    return in_test
+
+
+KEYWORDS = {"if", "while", "for", "match", "return", "loop", "fn", "let",
+            "mut", "ref", "move", "in", "as", "pub", "crate", "self",
+            "Self", "use", "mod", "impl", "where", "unsafe", "else",
+            "break", "continue", "struct", "enum", "trait", "const",
+            "static", "type", "dyn", "box"}
+
+
+def parse_fns(path, toks, in_test):
+    """Extract fn items with impl-type qualification."""
+    fns = []
+    i = 0
+    impl_stack = []  # (type_name, close_depth)
+    depth = 0
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == PUNCT and t.text == "{":
+            depth += 1
+        elif t.kind == PUNCT and t.text == "}":
+            while impl_stack and impl_stack[-1][1] == depth:
+                impl_stack.pop()
+            depth -= 1
+        elif t.kind == IDENT and t.text == "impl":
+            # scan to the opening '{' (or ';'), find the type name
+            j = i + 1
+            names = []
+            gd = 0
+            last_for = -1
+            while j < len(toks):
+                tj = toks[j]
+                if tj.text == "<":
+                    gd += 1
+                elif tj.text == ">":
+                    gd = max(0, gd - 1)
+                elif tj.text == "{" and gd == 0:
+                    break
+                elif tj.text == ";" and gd == 0:
+                    break
+                elif tj.kind == IDENT and gd == 0:
+                    if tj.text == "for":
+                        last_for = len(names)
+                    elif tj.text not in ("where", "dyn"):
+                        names.append(tj.text)
+                j += 1
+            tyname = None
+            if last_for >= 0 and last_for < len(names):
+                tyname = names[last_for]
+            elif names:
+                tyname = names[-1]
+            if j < len(toks) and toks[j].text == "{":
+                impl_stack.append((tyname, depth + 1))
+                depth += 1
+                i = j + 1
+                continue
+        elif t.kind == IDENT and t.text == "fn" and i + 1 < len(toks) \
+                and toks[i + 1].kind == IDENT:
+            name = toks[i + 1].text
+            sig_line = t.line
+            # find body '{' at this depth (skip generics/args/ret/where)
+            j = i + 2
+            gd = 0
+            pd = 0
+            body = None
+            while j < len(toks):
+                tj = toks[j]
+                if tj.text == "<":
+                    gd += 1
+                elif tj.text == ">" and gd > 0:
+                    gd -= 1
+                elif tj.text in ("(", "["):
+                    pd += 1
+                elif tj.text in (")", "]"):
+                    pd -= 1
+                elif tj.text == ";" and pd == 0 and gd == 0:
+                    break  # trait method decl, no body
+                elif tj.text == "{" and pd == 0:
+                    # body span
+                    bd = 1
+                    k = j + 1
+                    while k < len(toks) and bd > 0:
+                        if toks[k].text == "{":
+                            bd += 1
+                        elif toks[k].text == "}":
+                            bd -= 1
+                        k += 1
+                    body = toks[j + 1:k - 1]
+                    break
+                j += 1
+            ty = impl_stack[-1][0] if impl_stack else None
+            qname = f"{ty}::{name}" if ty else name
+            fns.append(FnInfo(qname, name, path, body or [],
+                              in_test[i], sig_line))
+            # fall through WITHOUT skipping: the body's braces must pass
+            # through the depth tracker so impl blocks close correctly
+        i += 1
+    return fns
+
+
+# ------------------------------------------------------------------- rules
+
+TRIE, POOL, LEAF = 0, 1, 2
+LOCK_NAMES = {TRIE: "prefix-trie", POOL: "kv-pool", LEAF: "leaf"}
+
+COMPUTE = {"broadcast", "gemm_span", "attend_head", "attend_row",
+           "merge_heads", "di_softmax_row", "di_softmax_rows",
+           "di_exp_row", "di_norm", "di_add", "di_swiglu", "di_relu",
+           "di_linear_raw", "di_linear_raw_threads", "di_linear",
+           "di_linear_threads", "attention", "forward_raw",
+           "layer_tail", "layer_tail_threads"}
+
+# Method names that collide with std (Vec/slice/HashMap/Iterator/...).
+# An unpinned `.name(` call with one of these names is NOT union-resolved
+# against same-named crate fns — the overwhelming majority of such calls
+# are std methods and union resolution would wire unrelated code together.
+# A `// lint: callee=Type::fn` pin on the call line restores exact
+# resolution for the rare crate method that shadows a std name.
+STD_METHODS = {"get", "get_mut", "insert", "remove", "push", "pop",
+               "append", "collect", "extend", "clone", "min", "max",
+               "last", "first", "len", "is_empty", "contains", "iter",
+               "map", "take", "wait", "drain", "retain", "entry",
+               "split_off", "get_or_init", "find", "sum", "fold",
+               "next", "rev", "count", "sort", "clear", "join"}
+
+FLOAT_ROOTS = {"prefill_raw", "decode_raw", "decode_batch_raw"}
+REACH_DIRS = ("ops/", "int_model/", "tensor/", "quant/")
+SERVING_DIRS = ("ops/", "int_model/", "coordinator/", "trace/", "util/",
+                "quant/", "tensor/")
+# file prefixes skipped by every rule (the analyzer itself + binaries)
+SKIP_PREFIX = ("lint/", "bin/", "main.rs")
+
+
+def classify_lock_arg(args):
+    if "prefix" in args:
+        return TRIE
+    if "decode_scratch" in args or "state" in args or "events" in args:
+        return LEAF
+    return None
+
+
+class Violation:
+    def __init__(self, rule, path, line, item, msg):
+        self.rule = rule
+        self.path = path
+        self.line = line
+        self.item = item
+        self.msg = msg
+
+    def __repr__(self):
+        return f"[{self.rule}] {self.path}:{self.line} ({self.item}) {self.msg}"
+
+
+def analyze_fn_events(fn, registry_names):
+    """Populate fn.direct_locks and fn.calls with held-lock context."""
+    toks = fn.body
+    held_guards = {}   # name -> (lock, scope_depth)
+    held_temps = []    # locks held to end of statement
+    scope = 0
+    i = 0
+    pins = {}          # line -> {fnname: qname}
+    for line, ds in fn.directives.items() if False else []:
+        pass
+
+    def held_now():
+        locks = [l for (l, _) in held_guards.values()] + held_temps
+        return tuple(sorted(set(locks)))
+
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == PUNCT and t.text in ("{", "}", ";"):
+            if t.text == "{":
+                scope += 1
+            elif t.text == "}":
+                dead = [g for g, (_, d) in held_guards.items() if d == scope]
+                for g in dead:
+                    del held_guards[g]
+                scope -= 1
+            held_temps = []
+            i += 1
+            continue
+        if t.kind == IDENT and t.text in ("lock_pool", "lock_recover") \
+                and i + 1 < len(toks) and toks[i + 1].text == "(":
+            # arg scan to matching ')'
+            j = i + 2
+            pd = 1
+            args = []
+            while j < len(toks) and pd > 0:
+                if toks[j].text == "(":
+                    pd += 1
+                elif toks[j].text == ")":
+                    pd -= 1
+                elif toks[j].kind == IDENT:
+                    args.append(toks[j].text)
+                j += 1
+            if t.text == "lock_pool":
+                lock = POOL
+            else:
+                lock = classify_lock_arg(args)
+            if lock is None:
+                fn.unknown_locks.append(t.line)
+                i = j
+                continue
+            # ordering at acquisition
+            cur = held_now()
+            if cur and lock <= max(cur):
+                fn.order_viols.append(
+                    (t.line, f"acquires {LOCK_NAMES[lock]} while "
+                             f"{[LOCK_NAMES[c] for c in cur]} held"))
+            # binding or temp?
+            bound = None
+            if i >= 2 and toks[i - 1].text == "=" and \
+                    toks[i - 2].kind == IDENT:
+                name = toks[i - 2].text
+                k = i - 3
+                if k >= 0 and toks[k].text == "mut":
+                    k -= 1
+                if k >= 0 and toks[k].text == "let" \
+                        and j < len(toks) and toks[j].text == ";":
+                    bound = name
+            if bound:
+                held_guards[bound] = (lock, scope)
+            else:
+                held_temps.append(lock)
+            i = j
+            continue
+        # drop(guard)
+        if t.kind == IDENT and t.text == "drop" and i + 2 < len(toks) \
+                and toks[i + 1].text == "(" \
+                and toks[i + 2].kind == IDENT \
+                and toks[i + 2].text in held_guards:
+            del held_guards[toks[i + 2].text]
+            i += 3
+            continue
+        # call site
+        if t.kind == IDENT and t.text not in KEYWORDS \
+                and i + 1 < len(toks) and toks[i + 1].text == "(":
+            name = t.text
+            if name in ("drop",):
+                i += 1
+                continue
+            qual = None
+            if i >= 2 and toks[i - 1].text == "::" \
+                    and toks[i - 2].kind == IDENT:
+                qual = toks[i - 2].text
+            is_method = i >= 1 and toks[i - 1].text == "."
+            if name in registry_names or (qual and
+                                          f"{qual}::{name}" in
+                                          registry_names):
+                pin = None
+                for dline in (t.line,):
+                    for d in fn.file_directives.get(dline, []):
+                        m = re.match(r"lint:\s*callee\s*=\s*(\w+)::(\w+)",
+                                     d)
+                        if m and m.group(2) == name:
+                            pin = f"{m.group(1)}::{m.group(2)}"
+                fn.calls.append((name, qual, held_now(), t.line, pin,
+                                 is_method))
+            i += 1
+            continue
+        i += 1
+    fn.direct_locks = set()
+    # re-derive direct locks (any acquisition at all)
+    for i, t in enumerate(toks):
+        if t.kind == IDENT and t.text == "lock_pool" \
+                and i + 1 < len(toks) and toks[i + 1].text == "(":
+            fn.direct_locks.add(POOL)
+        if t.kind == IDENT and t.text == "lock_recover" \
+                and i + 1 < len(toks) and toks[i + 1].text == "(":
+            j = i + 2
+            pd = 1
+            args = []
+            while j < len(toks) and pd > 0:
+                if toks[j].text == "(":
+                    pd += 1
+                elif toks[j].text == ")":
+                    pd -= 1
+                elif toks[j].kind == IDENT:
+                    args.append(toks[j].text)
+                j += 1
+            lock = classify_lock_arg(args)
+            if lock is not None:
+                fn.direct_locks.add(lock)
+
+
+def load_allow(path):
+    entries = []
+    if not os.path.exists(path):
+        return entries, []
+    cur = None
+    errs = []
+    with open(path) as f:
+        for ln, raw in enumerate(f, 1):
+            s = raw.strip()
+            if not s or s.startswith("#"):
+                continue
+            if s == "[[allow]]":
+                if cur is not None:
+                    entries.append(cur)
+                cur = {}
+                continue
+            m = re.match(r'(\w+)\s*=\s*"(.*)"\s*$', s)
+            if m and cur is not None:
+                cur[m.group(1)] = m.group(2)
+            else:
+                errs.append(f"lint_allow.toml:{ln}: unparsable line: {s}")
+    if cur is not None:
+        entries.append(cur)
+    for e in entries:
+        if not e.get("reason", "").strip():
+            errs.append(f"allow entry {e} missing justification (reason)")
+        if "rule" not in e or "file" not in e:
+            errs.append(f"allow entry {e} missing rule/file")
+    return entries, errs
+
+
+def allowed(entries, rule, path, item, text=""):
+    for e in entries:
+        if e.get("rule") != rule:
+            continue
+        if e.get("file") != path:
+            continue
+        it = e.get("item")
+        if it and it not in (item, item.split("::")[-1]):
+            continue
+        pat = e.get("pattern")
+        if pat and pat not in text:
+            continue
+        e["_used"] = True
+        return True
+    return False
+
+
+def main():
+    src_root = "rust/src"
+    allow_path = "rust/lint_allow.toml"
+    args = sys.argv[1:]
+    while args:
+        a = args.pop(0)
+        if a == "--src":
+            src_root = args.pop(0)
+        elif a == "--allow":
+            allow_path = args.pop(0)
+    files = []
+    for dirpath, _, names in os.walk(src_root):
+        for nm in sorted(names):
+            if nm.endswith(".rs"):
+                full = os.path.join(dirpath, nm)
+                rel = os.path.relpath(full, src_root).replace(os.sep, "/")
+                files.append((rel, full))
+    files.sort()
+
+    allow, allow_errs = load_allow(allow_path)
+    viols = [Violation("allowlist", allow_path, 0, "-", e)
+             for e in allow_errs]
+
+    registry = {}          # qname -> FnInfo
+    by_name = {}           # name -> [FnInfo]
+    file_toks = {}
+    file_dirs = {}
+    file_tests = {}
+
+    for rel, full in files:
+        if rel.startswith(SKIP_PREFIX):
+            continue
+        with open(full) as f:
+            src = f.read()
+        toks, directives = tokenize(src)
+        in_test = mark_test_regions(toks)
+        file_toks[rel] = toks
+        file_dirs[rel] = directives
+        file_tests[rel] = in_test
+        for fn in parse_fns(rel, toks, in_test):
+            fn.file_directives = directives
+            fn.unknown_locks = []
+            fn.order_viols = []
+            if fn.is_test:
+                continue
+            if fn.name in ("lock_pool", "lock_recover"):
+                continue  # the locking primitives themselves
+            registry[f"{rel}::{fn.qname}"] = fn
+            by_name.setdefault(fn.name, []).append(fn)
+            by_name.setdefault(fn.qname, [])
+            if fn.qname not in by_name or fn not in by_name[fn.qname]:
+                by_name.setdefault(fn.qname, []).append(fn)
+
+    names_set = set(by_name.keys())
+    for fn in registry.values():
+        analyze_fn_events(fn, names_set)
+
+    # map (file, line) -> fn qname for messages
+    fn_spans = {}
+    for fn in registry.values():
+        if fn.body:
+            fn_spans.setdefault(fn.path, []).append(
+                (fn.body[0].line, fn.body[-1].line, fn.qname))
+
+    def owner_fn(rel, line):
+        for lo, hi, q in fn_spans.get(rel, []):
+            if lo <= line <= hi:
+                return q
+        return "-"
+
+    def resolve(call):
+        name, qual, _held, _line, pin, is_method = call
+        if pin and pin in by_name:
+            return by_name[pin]
+        if qual:
+            q = f"{qual}::{name}"
+            if q in by_name and by_name[q]:
+                return by_name[q]
+            return []  # qualified path to a non-crate fn
+        if is_method and name in STD_METHODS:
+            return []  # std-shadowed name, unpinned: out of scope
+        return by_name.get(name, [])
+
+    # transitive fixed point: may_locks / may_compute
+    for fn in registry.values():
+        fn.may_locks = set(fn.direct_locks)
+        fn.is_compute = fn.name in COMPUTE
+        fn.may_compute = fn.is_compute
+    changed = True
+    while changed:
+        changed = False
+        for fn in registry.values():
+            for call in fn.calls:
+                for callee in resolve(call):
+                    if not callee.may_locks <= fn.may_locks:
+                        fn.may_locks |= callee.may_locks
+                        changed = True
+                    if callee.may_compute and not fn.may_compute:
+                        fn.may_compute = True
+                        changed = True
+
+    # ---- rule 2: lock order + compute-under-lock ----
+    for fn in registry.values():
+        for line in fn.unknown_locks:
+            viols.append(Violation(
+                "lock-order", fn.path, line, fn.qname,
+                "lock_recover on an unregistered mutex — classify it in "
+                "the lint lock table"))
+        for line, msg in fn.order_viols:
+            if not allowed(allow, "lock-order", fn.path, fn.qname):
+                viols.append(Violation("lock-order", fn.path, line,
+                                       fn.qname, msg))
+        for call in fn.calls:
+            name, qual, held, line, pin, is_method = call
+            if not held:
+                continue
+            callees = resolve(call)
+            bad_locks = set()
+            compute = None
+            for c in callees:
+                bad_locks |= {l for l in c.may_locks if l <= max(held)}
+                if c.may_compute:
+                    compute = c.qname
+            if bad_locks and not allowed(allow, "lock-order", fn.path,
+                                         fn.qname, name):
+                viols.append(Violation(
+                    "lock-order", fn.path, line, fn.qname,
+                    f"call {name}() may acquire "
+                    f"{[LOCK_NAMES[l] for l in sorted(bad_locks)]} while "
+                    f"{[LOCK_NAMES[h] for h in held]} held"))
+            if compute and not allowed(allow, "lock-order", fn.path,
+                                       fn.qname, name):
+                viols.append(Violation(
+                    "lock-order", fn.path, line, fn.qname,
+                    f"compute call {name}() (via {compute}) while "
+                    f"{[LOCK_NAMES[h] for h in held]} held"))
+
+    # ---- rule 1: float freedom ----
+    def check_floats(fn, why):
+        found = []
+        for t in fn.body:
+            if t.kind == FLOAT:
+                found.append((t.line, f"float literal {t.text}"))
+            elif t.kind == IDENT and t.text in ("f32", "f64"):
+                found.append((t.line, f"{t.text} token"))
+        for line, what in found:
+            if not allowed(allow, "float-freedom", fn.path, fn.qname):
+                viols.append(Violation("float-freedom", fn.path, line,
+                                       fn.qname, f"{what} ({why})"))
+
+    float_files = [rel for rel in file_toks
+                   if re.match(r"ops/(di_\w+|rope|mod)\.rs$", rel)]
+    seen_float = set()
+    for fn in registry.values():
+        if fn.path in float_files:
+            check_floats(fn, "DI-kernel file scope")
+            seen_float.add(id(fn))
+    # reachability from the raw serving paths
+    reach = set()
+    work = [f for f in registry.values() if f.name in FLOAT_ROOTS]
+    while work:
+        fn = work.pop()
+        if id(fn) in reach:
+            continue
+        reach.add(id(fn))
+        for call in fn.calls:
+            for callee in resolve(call):
+                if callee.path.startswith(REACH_DIRS):
+                    work.append(callee)
+    for fn in registry.values():
+        if id(fn) in reach and id(fn) not in seen_float:
+            check_floats(fn, "reachable from prefill_raw/decode_raw/"
+                             "decode_batch_raw")
+
+    # ---- rule 3: atomics + panic discipline ----
+    for rel, toks in file_toks.items():
+        in_test = file_tests[rel]
+        if not rel.startswith(SERVING_DIRS):
+            continue
+        for i, t in enumerate(toks):
+            if in_test[i]:
+                continue
+            if t.kind == IDENT and t.text == "Relaxed" and i >= 2 \
+                    and toks[i - 1].text == "::" \
+                    and toks[i - 2].text == "Ordering":
+                if not rel.startswith("trace/") and \
+                        not allowed(allow, "atomics", rel, "-"):
+                    viols.append(Violation(
+                        "atomics", rel, t.line, "-",
+                        "Ordering::Relaxed outside trace/"))
+            if t.kind == IDENT and t.text == "unwrap" \
+                    and i + 2 < len(toks) and toks[i + 1].text == "(" \
+                    and toks[i + 2].text == ")" \
+                    and i >= 1 and toks[i - 1].text == ".":
+                if not allowed(allow, "panic-discipline", rel,
+                               owner_fn(rel, t.line), "unwrap"):
+                    viols.append(Violation(
+                        "panic-discipline", rel, t.line,
+                        owner_fn(rel, t.line),
+                        "unwrap() on the serving path"))
+            if t.kind == IDENT and t.text == "expect" \
+                    and i + 2 < len(toks) and toks[i + 1].text == "(" \
+                    and toks[i + 2].kind == STR \
+                    and i >= 1 and toks[i - 1].text == ".":
+                if not allowed(allow, "panic-discipline", rel,
+                               owner_fn(rel, t.line), "expect"):
+                    viols.append(Violation(
+                        "panic-discipline", rel, t.line,
+                        owner_fn(rel, t.line),
+                        "expect() on the serving path"))
+            if t.kind == IDENT and t.text in ("panic", "unreachable",
+                                              "todo", "unimplemented") \
+                    and i + 1 < len(toks) and toks[i + 1].text == "!":
+                if not allowed(allow, "panic-discipline", rel,
+                               owner_fn(rel, t.line), t.text):
+                    viols.append(Violation(
+                        "panic-discipline", rel, t.line,
+                        owner_fn(rel, t.line),
+                        f"{t.text}! on the serving path"))
+            if t.kind == IDENT and t.text == "lock" \
+                    and i >= 1 and toks[i - 1].text == "." \
+                    and i + 2 < len(toks) and toks[i + 1].text == "(" \
+                    and toks[i + 2].text == ")" \
+                    and rel != "util/mod.rs":
+                if not allowed(allow, "lock-order", rel,
+                               owner_fn(rel, t.line), "lock"):
+                    viols.append(Violation(
+                        "lock-order", rel, t.line, owner_fn(rel, t.line),
+                        "bare .lock() — use lock_pool/lock_recover"))
+
+    # ---- rule 4: overflow intent in ops/ ----
+    WRAP_PREFIX = ("wrapping_", "saturating_", "checked_", "overflowing_")
+    for rel, toks in file_toks.items():
+        if not rel.startswith("ops/"):
+            continue
+        in_test = file_tests[rel]
+        directives = file_dirs[rel]
+        # per-line: has ovf marker / has explicit-intent method. A
+        # standalone `// ovf:` comment covers the next token-bearing
+        # line (up to 5 lines below, so continuation comments are ok);
+        # an end-of-line `// ovf:` covers its own line.
+        token_lines = {t.line for t in toks}
+        marked = set()
+        for line, ds in directives.items():
+            for d in ds:
+                if d.startswith("ovf:") and d[4:].strip():
+                    marked.add(line)
+                    for j in range(line + 1, line + 6):
+                        if j in token_lines:
+                            marked.add(j)
+                            break
+        explicit = {}
+        for t in toks:
+            if t.kind == IDENT and t.text.startswith(WRAP_PREFIX):
+                explicit[t.line] = True
+        # assertion-macro argument spans are specification, not kernel
+        # arithmetic — exempt (debug builds check them anyway)
+        ASSERT_MACROS = {"assert", "assert_eq", "assert_ne",
+                         "debug_assert", "debug_assert_eq",
+                         "debug_assert_ne"}
+        in_assert = [False] * len(toks)
+        i = 0
+        while i < len(toks):
+            t = toks[i]
+            if t.kind == IDENT and t.text in ASSERT_MACROS \
+                    and i + 2 < len(toks) and toks[i + 1].text == "!" \
+                    and toks[i + 2].text == "(":
+                j = i + 3
+                pd = 1
+                while j < len(toks) and pd > 0:
+                    if toks[j].text == "(":
+                        pd += 1
+                    elif toks[j].text == ")":
+                        pd -= 1
+                    j += 1
+                for k in range(i, j):
+                    in_assert[k] = True
+                i = j
+                continue
+            i += 1
+        bracket = 0
+        attr = 0
+        for i, t in enumerate(toks):
+            if t.kind != PUNCT:
+                continue
+            if t.text == "#" and i + 1 < len(toks) \
+                    and toks[i + 1].text == "[":
+                attr += 1
+            if t.text == "[":
+                bracket += 1
+                continue
+            if t.text == "]":
+                bracket -= 1
+                if attr > 0:
+                    attr -= 1
+                continue
+            if in_test[i] or bracket > 0 or in_assert[i]:
+                continue
+            prev = toks[i - 1] if i > 0 else None
+            nxt = toks[i + 1] if i + 1 < len(toks) else None
+            binary_prev = prev is not None and (
+                prev.kind in (IDENT, INT, FLOAT)
+                and prev.text not in KEYWORDS
+                or prev.text in (")", "]"))
+            bad = False
+            if t.text in ("+", "-", "*") and binary_prev:
+                bad = True
+            elif t.text in ("+=", "-=", "*=", "<<=", ">>="):
+                bad = True
+            elif t.text in ("<<", ">>"):
+                if binary_prev and nxt is not None and (
+                        nxt.kind in (IDENT, INT)
+                        or nxt.text in ("(", "-")):
+                    bad = True
+            if not bad:
+                continue
+            if t.line in marked or explicit.get(t.line):
+                continue
+            if allowed(allow, "overflow-intent", rel,
+                       owner_fn(rel, t.line), t.text):
+                continue
+            viols.append(Violation(
+                "overflow-intent", rel, t.line, owner_fn(rel, t.line),
+                f"bare `{t.text}` without an `// ovf:` bound "
+                f"justification or explicit wrapping_/saturating_/"
+                f"checked_ intent"))
+
+    for e in allow:
+        if not e.get("_used"):
+            viols.append(Violation(
+                "allowlist", allow_path, 0, e.get("item", "-"),
+                f"stale allow entry (never matched): {e.get('rule')} "
+                f"{e.get('file')} {e.get('item', '')}"))
+
+    viols.sort(key=lambda v: (v.rule, v.path, v.line))
+    for v in viols:
+        print(v)
+    print(f"\n{len(viols)} violation(s)")
+    sys.exit(1 if viols else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+//! illm-lint CLI: run the project-invariant static analyzer over the
+//! crate sources and exit non-zero if any violation remains.
+//!
+//! ```text
+//! illm-lint [--src DIR] [--allow FILE] [--json FILE] [--quiet]
+//! ```
+//!
+//! Defaults assume the working directory is `rust/` (`--src src`,
+//! `--allow lint_allow.toml`); when invoked from the repo root it
+//! falls back to `rust/src` + `rust/lint_allow.toml` automatically.
+//! `--json` additionally writes a machine-readable report (consumed by
+//! CI artifacts). Rule semantics are documented in `illm::lint`.
+
+use illm::lint;
+use std::path::PathBuf;
+
+fn main() {
+    let mut src = PathBuf::from("src");
+    let mut allow = PathBuf::from("lint_allow.toml");
+    let mut json: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut explicit_src = false;
+    let mut explicit_allow = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--src" => {
+                src = PathBuf::from(args.next().unwrap_or_default());
+                explicit_src = true;
+            }
+            "--allow" => {
+                allow = PathBuf::from(args.next().unwrap_or_default());
+                explicit_allow = true;
+            }
+            "--json" => json = Some(PathBuf::from(args.next().unwrap_or_default())),
+            "--quiet" => quiet = true,
+            _ => {
+                eprintln!(
+                    "usage: illm-lint [--src DIR] [--allow FILE] \
+                     [--json FILE] [--quiet]"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    // repo-root convenience: cargo-less callers run `make lint` there
+    if !explicit_src && !src.is_dir() && PathBuf::from("rust/src").is_dir() {
+        src = PathBuf::from("rust/src");
+        if !explicit_allow {
+            allow = PathBuf::from("rust/lint_allow.toml");
+        }
+    }
+    if !src.is_dir() {
+        eprintln!("illm-lint: source dir {} not found", src.display());
+        std::process::exit(2);
+    }
+    let viols = lint::run(&src, &allow);
+    if !quiet {
+        for v in &viols {
+            println!("{v}");
+        }
+        println!("\n{} violation(s)", viols.len());
+    }
+    if let Some(p) = json {
+        if let Err(e) = std::fs::write(&p, lint::json_report(&viols)) {
+            eprintln!("illm-lint: cannot write {}: {e}", p.display());
+            std::process::exit(2);
+        }
+    }
+    std::process::exit(i32::from(!viols.is_empty()));
+}

@@ -232,7 +232,7 @@ impl Batcher {
             // batch cannot delay it once it reaches the front; FIFO
             // order is preserved behind blocked requests)
             if front.max_new == 0 {
-                let req = self.queue.pop_front().unwrap();
+                let Some(req) = self.queue.pop_front() else { break };
                 let plen = admitted_len(&req.prompt, engine.max_seq(), 0);
                 trace::span_at("queued", "request", req.submitted,
                                Instant::now(),
@@ -320,7 +320,7 @@ impl Batcher {
                 metrics.admission_blocks += 1;
                 break;
             }
-            let req = self.queue.pop_front().unwrap();
+            let Some(req) = self.queue.pop_front() else { break };
             // queued span: submit -> admission, on the request's own
             // timeline; the admitted marker carries the KV accounting
             // the admission decision was made on

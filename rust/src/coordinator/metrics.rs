@@ -108,7 +108,7 @@ impl ServeMetrics {
             return 0.0;
         }
         let mut s = xs.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let rank = (p * s.len() as f64).ceil() as usize;
         s[rank.saturating_sub(1).min(s.len() - 1)]
     }

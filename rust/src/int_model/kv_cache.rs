@@ -722,8 +722,10 @@ impl Lane {
         let rows: Vec<(i64, i64, i32, i32)> = (0..t)
             .map(|r| {
                 let row = heads.head_row(r, head);
-                let lo = row.iter().copied().min().unwrap();
-                let hi = row.iter().copied().max().unwrap();
+                // head_dim >= 1, but fold to 0 rather than panic on the
+                // serving path if a degenerate shape ever slips through
+                let lo = row.iter().copied().min().unwrap_or(0);
+                let hi = row.iter().copied().max().unwrap_or(0);
                 (lo, hi, ms[r], ks[r])
             })
             .collect();
@@ -877,8 +879,8 @@ impl IntKvCache {
     pub fn fork(&self) -> IntKvCache {
         let pool = self.pool.clone();
         let mut guard = lock_pool(&pool);
-        let k = self.k.iter().map(|l| l.fork(&mut guard)).collect();
-        let v = self.v.iter().map(|l| l.fork(&mut guard)).collect();
+        let k = self.k.iter().map(|l| l.fork(&mut guard)).collect(); // lint: callee=Lane::fork
+        let v = self.v.iter().map(|l| l.fork(&mut guard)).collect(); // lint: callee=Lane::fork
         drop(guard);
         IntKvCache {
             k,
@@ -1170,7 +1172,9 @@ impl IntModel {
         let h = vms.len();
         let hd = o_raw.len() / (t * h);
         let a_bits = self.scheme.a_bits;
-        let kcom = vks.iter().copied().max().unwrap();
+        // h >= 1 for any real attention shape; 0 keeps the merge total
+        // rather than panicking on the serving path
+        let kcom = vks.iter().copied().max().unwrap_or(0);
         let mut merged = IMat::zeros(t, h * hd);
         let mut m_out = vec![0i32; t];
         let mut k_out = vec![0i32; t];
@@ -2093,8 +2097,16 @@ mod tests {
     /// landed BELOW an sh=35 head purely because both shifts clamped
     /// to 32 and only the mantissas differed (100 * 1<<32 < 1 *
     /// 255<<32, against a true ratio of ~2^8.6 the other way).
+    /// Serializes the two merge tests that assert on (or bump) the
+    /// global merge health counters — cargo runs tests in parallel
+    /// and the exact-delta assertions below would otherwise race.
+    static MERGE_HEALTH_GATE: Mutex<()> = Mutex::new(());
+
     #[test]
     fn merge_aligns_extreme_cross_head_scale_gaps_exactly() {
+        let _gate = MERGE_HEALTH_GATE
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
         let hd = 4;
         let h0 = health().snapshot();
         // three heads; kcom = 45. gaps: 45, 35, 0 — two past the cap.
@@ -2146,5 +2158,99 @@ mod tests {
                    "wide-path entries must count once per call");
         assert_eq!(d.merge_saturations, 5,
                    "clamped elements must count exactly");
+    }
+
+    /// `merge_heads` end to end at its design maximum: a cross-head
+    /// exponent spread past MERGE_SH_MAX (exact i128 alignment for
+    /// in-range far-head values) with both range ends SATURATED at
+    /// ±ALIGN_SAT in one row — the point where requant_row's
+    /// `(v - pmin) * qmax` sits exactly on its i64 headroom budget
+    /// (2 * ALIGN_SAT * 255; the overflow-checked test profile aborts
+    /// if the 9-bit reserve is ever miscounted). Also pins per-row
+    /// scale independence: a second, tiny-magnitude row must still
+    /// span the full output range.
+    #[test]
+    fn merge_heads_extreme_spread_and_saturated_range() {
+        let _gate = MERGE_HEALTH_GATE
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        use super::super::QTable;
+        use crate::config::ModelConfig;
+        use crate::quant::{QuantScheme, QWeight};
+        let (h, hd, t) = (3usize, 4usize, 2usize);
+        // merge_heads only reads cfg/scheme; the tables are inert.
+        let im = IntModel {
+            cfg: ModelConfig {
+                arch: Arch::Llama,
+                vocab: 16,
+                d_model: h * hd,
+                n_layers: 1,
+                n_heads: h,
+                d_ff: 8,
+                max_seq: 64,
+                rope_theta: 10000.0,
+                norm_eps: 1e-6,
+                name: "merge-test".to_string(),
+            },
+            scheme: QuantScheme::W8A8,
+            embed: QTable {
+                q: DynQ {
+                    vals: IMat::zeros(1, 1),
+                    m: vec![1],
+                    k: vec![0],
+                    zp: vec![0],
+                    bits: 8,
+                },
+            },
+            pos_embed: None,
+            rope: None,
+            layers: Vec::new(),
+            lm_head: QWeight {
+                wq: IMat::zeros(1, 1),
+                mw: vec![1],
+                kw: 0,
+                bias_q: None,
+                bits: 8,
+            },
+        };
+        // kcom = 45: head gaps 45, 35, 0 — two past MERGE_SH_MAX.
+        let vms = [1i32, 255, 200];
+        let vks = [0i32, 10, 45];
+        let mut o_raw = vec![0i64; t * h * hd];
+        // row 0: the far head clamps at ±ALIGN_SAT (1<<22 scaled by
+        // 2^45 overflows i64) next to an exactly-aligned value; the
+        // mid and near heads are ~2^3 and ~2^35 smaller.
+        o_raw[..hd].copy_from_slice(&[1 << 22, -(1 << 22), 100, 0]);
+        o_raw[hd..2 * hd].copy_from_slice(&[1, -1, 3, 2]);
+        o_raw[2 * hd..3 * hd].copy_from_slice(&[1000, -1000, 500, 2]);
+        // row 1: only the near head speaks, at tiny magnitude.
+        let r1 = h * hd;
+        o_raw[r1 + 2 * hd..r1 + 3 * hd]
+            .copy_from_slice(&[1, 0, 0, -1]);
+        let q = im.merge_heads(&o_raw, t, &vms, &vks);
+        assert_eq!(q.bits, 8);
+        assert_eq!(q.m.len(), t);
+        let row0 = q.vals.row(0).to_vec();
+        let zp0 = q.zp[0];
+        assert_eq!(row0[0], 255, "+ALIGN_SAT must hit the range top");
+        assert_eq!(row0[1], 0, "-ALIGN_SAT must hit the range bottom");
+        assert!(row0[2] > zp0 && row0[2] < 255,
+                "exact far-head value must keep its weight: {} vs zp {}",
+                row0[2], zp0);
+        // the ~2^35-smaller mid head and the unshifted near head both
+        // collapse to within one count of the zero point
+        for (c, &v) in row0.iter().enumerate().skip(hd) {
+            assert!((v - zp0).abs() <= 1,
+                    "smaller head [{c}] not near zp: {v} vs {zp0}");
+        }
+        // row 1: per-row requant — the tiny row still spans the full
+        // output range instead of inheriting row 0's coarse scale
+        let row1 = q.vals.row(1).to_vec();
+        let zp1 = q.zp[1];
+        assert_eq!(row1[2 * hd], 255);
+        assert_eq!(row1[2 * hd + 3], 0);
+        for (c, &v) in row1.iter().take(2 * hd).enumerate() {
+            assert_eq!(v, zp1, "silent head [{c}] must sit at zp");
+        }
     }
 }

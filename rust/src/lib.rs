@@ -22,6 +22,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod int_model;
+pub mod lint;
 pub mod nn;
 pub mod ops;
 pub mod quant;

@@ -1,0 +1,135 @@
+//! Allowlist loading and matching for illm-lint.
+//!
+//! `lint_allow.toml` is parsed with a tiny stdlib-only TOML subset
+//! (`[[allow]]` table arrays of `key = "value"` lines — no external
+//! crates per vendor policy). Every entry MUST carry a non-empty
+//! `reason`; entries that never match any violation are reported as
+//! stale. See `lint::mod` docs for the entry format.
+
+use std::cell::Cell;
+use std::fs;
+use std::path::Path;
+
+#[derive(Debug, Default)]
+pub struct AllowEntry {
+    pub rule: Option<String>,
+    pub file: Option<String>,
+    pub item: Option<String>,
+    pub pattern: Option<String>,
+    pub reason: Option<String>,
+    /// Set when the entry suppresses at least one violation.
+    pub used: Cell<bool>,
+}
+
+/// Parse one `key = "value"` line (value may itself contain quotes;
+/// everything between the first and last `"` is taken verbatim).
+fn parse_kv(s: &str) -> Option<(String, String)> {
+    let eq = s.find('=')?;
+    let key = s[..eq].trim_end();
+    if key.is_empty()
+        || !key.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_')
+    {
+        return None;
+    }
+    let val = s[eq + 1..].trim();
+    if val.len() < 2 || !val.starts_with('"') || !val.ends_with('"') {
+        return None;
+    }
+    Some((key.to_string(), val[1..val.len() - 1].to_string()))
+}
+
+fn set_field(e: &mut AllowEntry, key: &str, val: String) {
+    match key {
+        "rule" => e.rule = Some(val),
+        "file" => e.file = Some(val),
+        "item" => e.item = Some(val),
+        "pattern" => e.pattern = Some(val),
+        "reason" => e.reason = Some(val),
+        _ => {} // unknown keys are tolerated, like the mirror
+    }
+}
+
+/// Load the allowlist; returns (entries, parse/validation errors).
+/// A missing file is an empty allowlist, not an error.
+pub fn load_allow(path: &Path) -> (Vec<AllowEntry>, Vec<String>) {
+    let mut entries: Vec<AllowEntry> = Vec::new();
+    let mut errs: Vec<String> = Vec::new();
+    let Ok(text) = fs::read_to_string(path) else {
+        return (entries, errs);
+    };
+    let mut cur: Option<AllowEntry> = None;
+    for (ln, raw) in text.lines().enumerate() {
+        let s = raw.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        if s == "[[allow]]" {
+            if let Some(e) = cur.take() {
+                entries.push(e);
+            }
+            cur = Some(AllowEntry::default());
+            continue;
+        }
+        match (parse_kv(s), cur.as_mut()) {
+            (Some((k, v)), Some(e)) => set_field(e, &k, v),
+            _ => errs.push(format!(
+                "lint_allow.toml:{}: unparsable line: {s}",
+                ln + 1
+            )),
+        }
+    }
+    if let Some(e) = cur.take() {
+        entries.push(e);
+    }
+    for (idx, e) in entries.iter().enumerate() {
+        if e.reason.as_deref().map(str::trim).unwrap_or("").is_empty() {
+            errs.push(format!(
+                "allow entry #{} ({} {}) missing justification (reason)",
+                idx + 1,
+                e.rule.as_deref().unwrap_or("?"),
+                e.file.as_deref().unwrap_or("?")
+            ));
+        }
+        if e.rule.is_none() || e.file.is_none() {
+            errs.push(format!("allow entry #{} missing rule/file", idx + 1));
+        }
+    }
+    (entries, errs)
+}
+
+/// Does some entry cover (rule, path, item, text)? `item` matches the
+/// entry's `item` field exactly or by its last `::` segment; `pattern`
+/// is a substring match against `text`. First match wins and marks the
+/// entry used.
+pub fn allowed(
+    entries: &[AllowEntry],
+    rule: &str,
+    path: &str,
+    item: &str,
+    text: &str,
+) -> bool {
+    for e in entries {
+        if e.rule.as_deref() != Some(rule) {
+            continue;
+        }
+        if e.file.as_deref() != Some(path) {
+            continue;
+        }
+        if let Some(it) = e.item.as_deref() {
+            if !it.is_empty() {
+                let short = item.rsplit("::").next().unwrap_or(item);
+                if it != item && it != short {
+                    continue;
+                }
+            }
+        }
+        if let Some(p) = e.pattern.as_deref() {
+            if !p.is_empty() && !text.contains(p) {
+                continue;
+            }
+        }
+        e.used.set(true);
+        return true;
+    }
+    false
+}

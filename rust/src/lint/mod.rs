@@ -1,0 +1,368 @@
+//! illm-lint: project-invariant static analysis for the integer-only
+//! serving stack.
+//!
+//! The crate's correctness story rests on invariants that rustc cannot
+//! check: kernels must stay float-free, locks must nest in one order,
+//! and every potentially-overflowing arithmetic site must carry a
+//! written bound. This module is a zero-dependency analyzer (stdlib
+//! only — the offline vendor policy forbids syn/proc-macro crates)
+//! that tokenizes `rust/src/` with a lightweight Rust lexer
+//! ([`tokenizer`]), extracts per-function call-and-lock summaries
+//! ([`parse`]), and enforces four rule families ([`rules`]):
+//!
+//! ## Rule 1 — float-freedom (`float-freedom`)
+//!
+//! The paper's premise (I-LLM §3) is integer-only inference: the only
+//! float op on the serving path is the boundary logits dequant. The
+//! rule bans `f32`/`f64` tokens and float literals in two scopes:
+//! every fn in the DI-kernel files (`ops/di_*.rs`, `ops/rope.rs`,
+//! `ops/mod.rs`), and every fn reachable from the integer entry points
+//! `prefill_raw` / `decode_raw` / `decode_batch_raw` through files
+//! under `ops/`, `int_model/`, `tensor/`, `quant/`. Quantization
+//! boundaries (offline table builders, calibration constructors) are
+//! allowlisted with written justification.
+//!
+//! ## Rule 2 — lock-order discipline (`lock-order`)
+//!
+//! The serving stack has three lock ranks with a documented
+//! acquisition order: prefix-trie (0) -> kv-pool (1) -> leaf
+//! scratch/state/events (2). The analyzer replays each fn body
+//! tracking guard lifetimes (`let g = lock_pool(..)` held to scope end
+//! or `drop(g)`; unbound acquisitions to end of statement), then takes
+//! a transitive may-acquire closure over the call graph and flags:
+//! out-of-order acquisition, any call that may acquire a rank <= one
+//! already held, compute-kernel calls made while a lock is held, bare
+//! `.lock()` outside `util/mod.rs` (everything must go through the
+//! poison-recovering `lock_pool`/`lock_recover` wrappers), and
+//! `lock_recover` on a mutex the lint's lock table cannot classify.
+//! Unpinned method calls whose names collide with std
+//! (`.insert(`, `.fork(`, ...) are excluded from union resolution; a
+//! same-line `// lint: callee=Type::fn` pin restores exact resolution.
+//!
+//! ## Rule 3 — atomics and panic discipline (`atomics`,
+//! `panic-discipline`)
+//!
+//! `Ordering::Relaxed` is legitimate only for the monotonic counters
+//! in `trace/`; anywhere else it needs an allowlist entry arguing why
+//! no ordering is required. `.unwrap()`, `.expect("..")`, `panic!`,
+//! `unreachable!`, `todo!`, `unimplemented!` are banned outside tests
+//! and benches on the serving path (`ops/`, `int_model/`,
+//! `coordinator/`, `trace/`, `util/`, `quant/`, `tensor/`); the
+//! deliberate invariant tripwires that remain are each allowlisted
+//! with the reason they should crash rather than continue.
+//!
+//! ## Rule 4 — overflow intent (`overflow-intent`)
+//!
+//! The dev and test cargo profiles run with `overflow-checks = true`,
+//! so any unintended wrap aborts under test. This rule is the static
+//! half: in `ops/` (the integer kernels), every bare `+`, `-`, `*`,
+//! `<<`, `>>`, and compound assignment must either sit on a line with
+//! an explicit `wrapping_*`/`saturating_*`/`checked_*` call or carry
+//! an `// ovf: <bound>` comment stating why it cannot overflow
+//! (end-of-line form covers its line; a standalone `// ovf:` comment
+//! covers the next code line within 5 lines). Index/capacity math in
+//! `[...]` and assertion-macro arguments are exempt.
+//!
+//! ## Allowlist (`rust/lint_allow.toml`)
+//!
+//! ```toml
+//! [[allow]]
+//! rule = "panic-discipline"          # required
+//! file = "coordinator/engine.rs"     # required, path relative to src/
+//! item = "IntEngine::decode"         # optional fn filter (or bare name)
+//! pattern = "expect"                 # optional substring filter
+//! reason = "why the rule does not apply here"   # required, non-empty
+//! ```
+//!
+//! An entry without a `reason` is itself a violation, and so is an
+//! entry that never matches anything (stale). The analyzer's own files
+//! (`lint/`, `bin/`, `main.rs`) are out of scope for every rule.
+//!
+//! ## Running
+//!
+//! `make lint` (or `cargo run --release --bin illm-lint` from `rust/`)
+//! walks `src/`, prints human-readable violations, optionally writes a
+//! JSON report (`--json PATH`), and exits non-zero if anything fired.
+//! `python/lint_sim.py` is a 1:1 mirror for environments without a
+//! Rust toolchain — keep the two in sync when evolving rules.
+
+// Index-based token scanning mirrors python/lint_sim.py statement for
+// statement; iterator rewrites would make the two diverge.
+#![allow(clippy::needless_range_loop)]
+
+pub mod allow;
+pub mod parse;
+pub mod rules;
+pub mod tokenizer;
+
+pub use allow::{allowed, load_allow, AllowEntry};
+pub use rules::{json_report, run, Violation};
+pub use tokenizer::{mark_test_regions, tokenize, Kind, Tok};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    /// A throwaway source tree under the system temp dir; each rule
+    /// family gets a seeded synthetic violation to prove the lint
+    /// catches it.
+    struct TempTree {
+        root: PathBuf,
+    }
+
+    impl TempTree {
+        fn create(tag: &str) -> Self {
+            let root = std::env::temp_dir()
+                .join(format!("illm_lint_{}_{}", tag, std::process::id()));
+            let _ = fs::remove_dir_all(&root);
+            fs::create_dir_all(&root).expect("temp tree");
+            TempTree { root }
+        }
+
+        fn write(&self, rel: &str, content: &str) {
+            let p = self.root.join(rel);
+            fs::create_dir_all(p.parent().expect("parent")).expect("mkdir");
+            fs::write(p, content).expect("write");
+        }
+
+        fn lint(&self) -> Vec<Violation> {
+            run(&self.root, &self.root.join("lint_allow.toml"))
+        }
+    }
+
+    impl Drop for TempTree {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.root);
+        }
+    }
+
+    fn has_rule(v: &[Violation], rule: &str) -> bool {
+        v.iter().any(|v| v.rule == rule)
+    }
+
+    #[test]
+    fn tokenizer_numbers_ranges_and_strings() {
+        let (toks, _) = tokenize(
+            "for i in 0..n { let x = 1.5e3; let s = \"f64 inside\"; }",
+        );
+        assert!(toks
+            .iter()
+            .any(|t| t.kind == Kind::Float && t.text == "1.5e3"));
+        // `0..n` must lex as INT 0, `..`, ident n — not a float
+        assert!(toks
+            .iter()
+            .any(|t| t.kind == Kind::Punct && t.text == ".."));
+        assert!(toks.iter().any(|t| t.kind == Kind::Int && t.text == "0"));
+        // string contents are stripped: the f64 in the literal is gone
+        assert!(!toks.iter().any(|t| t.text == "f64"));
+    }
+
+    #[test]
+    fn tokenizer_captures_directives() {
+        let (_, dirs) = tokenize(
+            "let y = a * b; // ovf: |a|,|b| < 2^20\n// lint: callee=Lane::fork\n",
+        );
+        assert_eq!(dirs.get(&1).map(Vec::len), Some(1));
+        assert_eq!(
+            dirs.get(&2).map(|d| d[0].as_str()),
+            Some("lint: callee=Lane::fork")
+        );
+    }
+
+    #[test]
+    fn catches_float_in_di_kernel() {
+        let t = TempTree::create("float");
+        t.write(
+            "ops/di_fake.rs",
+            "pub fn f() -> i64 {\n    let x = 1.5;\n    x as i64\n}\n",
+        );
+        let v = t.lint();
+        assert!(has_rule(&v, "float-freedom"), "{v:?}");
+    }
+
+    #[test]
+    fn catches_float_reachable_from_decode_raw() {
+        let t = TempTree::create("reach");
+        t.write(
+            "int_model/fake.rs",
+            "pub fn decode_raw() {\n    helper();\n}\n\
+             pub fn helper() {\n    let _x = 0.25;\n}\n",
+        );
+        let v = t.lint();
+        assert!(has_rule(&v, "float-freedom"), "{v:?}");
+    }
+
+    #[test]
+    fn catches_lock_order_inversion() {
+        let t = TempTree::create("lock");
+        t.write(
+            "coordinator/fake.rs",
+            "pub fn bad(a: &M, b: &M) {\n    let g = lock_pool(a);\n    \
+             let h = lock_recover(&b.prefix);\n    drop(h);\n    drop(g);\n}\n",
+        );
+        let v = t.lint();
+        assert!(has_rule(&v, "lock-order"), "{v:?}");
+    }
+
+    #[test]
+    fn catches_compute_call_under_pool_lock() {
+        let t = TempTree::create("compute");
+        t.write(
+            "int_model/fake.rs",
+            "pub fn di_norm(x: &X) {\n    let _ = x;\n}\n\n\
+             pub fn bad(p: &M, x: &X) {\n    let g = lock_pool(p);\n    \
+             di_norm(x);\n    drop(g);\n}\n",
+        );
+        let v = t.lint();
+        assert!(
+            v.iter().any(|v| v.rule == "lock-order"
+                && v.msg.contains("compute call")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn catches_panic_and_unwrap_on_serving_path() {
+        let t = TempTree::create("panic");
+        t.write(
+            "util/fake.rs",
+            "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+        );
+        let v = t.lint();
+        assert!(has_rule(&v, "panic-discipline"), "{v:?}");
+        // the same code under #[cfg(test)] is fine
+        let t2 = TempTree::create("panic_test_ok");
+        t2.write(
+            "util/fake.rs",
+            "#[cfg(test)]\nmod tests {\n    pub fn f(x: Option<u32>) -> u32 \
+             {\n        x.unwrap()\n    }\n}\n",
+        );
+        let v2 = t2.lint();
+        assert!(!has_rule(&v2, "panic-discipline"), "{v2:?}");
+    }
+
+    #[test]
+    fn catches_relaxed_ordering_outside_trace() {
+        let t = TempTree::create("atomics");
+        t.write(
+            "int_model/fake.rs",
+            "pub fn f(c: &C) {\n    c.n.fetch_add(1, Ordering::Relaxed);\n}\n",
+        );
+        let v = t.lint();
+        assert!(has_rule(&v, "atomics"), "{v:?}");
+        // the identical code under trace/ is the sanctioned use
+        let t2 = TempTree::create("atomics_trace_ok");
+        t2.write(
+            "trace/fake.rs",
+            "pub fn f(c: &C) {\n    c.n.fetch_add(1, Ordering::Relaxed);\n}\n",
+        );
+        assert!(!has_rule(&t2.lint(), "atomics"));
+    }
+
+    #[test]
+    fn catches_bare_arithmetic_in_ops() {
+        let t = TempTree::create("ovf");
+        t.write(
+            "ops/fake.rs",
+            "pub fn f(a: i64, b: i64) -> i64 {\n    a * b\n}\n",
+        );
+        let v = t.lint();
+        assert!(has_rule(&v, "overflow-intent"), "{v:?}");
+    }
+
+    #[test]
+    fn ovf_marker_and_explicit_intent_suppress() {
+        let t = TempTree::create("ovf_ok");
+        t.write(
+            "ops/fake.rs",
+            "pub fn f(a: i64, b: i64) -> i64 {\n    \
+             let p = a * b; // ovf: |a|,|b| < 2^20\n    \
+             p.saturating_add(a)\n}\n",
+        );
+        let v = t.lint();
+        assert!(!has_rule(&v, "overflow-intent"), "{v:?}");
+    }
+
+    #[test]
+    fn allowlist_suppresses_with_reason_and_flags_stale() {
+        let t = TempTree::create("allow");
+        t.write(
+            "ops/fake.rs",
+            "pub fn f(a: i64, b: i64) -> i64 {\n    a * b\n}\n",
+        );
+        t.write(
+            "lint_allow.toml",
+            "[[allow]]\nrule = \"overflow-intent\"\nfile = \"ops/fake.rs\"\n\
+             reason = \"seeded test site\"\n",
+        );
+        let v = t.lint();
+        assert!(v.is_empty(), "{v:?}");
+        // an entry matching nothing is itself reported
+        let t2 = TempTree::create("allow_stale");
+        t2.write("ops/fake.rs", "pub fn f() -> i64 {\n    0\n}\n");
+        t2.write(
+            "lint_allow.toml",
+            "[[allow]]\nrule = \"overflow-intent\"\nfile = \"ops/other.rs\"\n\
+             reason = \"points at nothing\"\n",
+        );
+        let v2 = t2.lint();
+        assert!(has_rule(&v2, "allowlist"), "{v2:?}");
+    }
+
+    #[test]
+    fn pin_directive_restores_exact_resolution() {
+        // `.fork(` collides with nothing in std-methods, but `.insert(`
+        // does: unpinned it must NOT union-resolve to the crate's
+        // lock-taking insert; pinned to the real callee it must.
+        let t = TempTree::create("pin");
+        t.write(
+            "coordinator/fake.rs",
+            "pub struct Tree;\nimpl Tree {\n    pub fn insert(&self, p: &M) \
+             {\n        let g = lock_pool(p);\n        drop(g);\n    }\n}\n\n\
+             pub fn unpinned(m: &Map, t: &Tree, p: &M) {\n    \
+             let g = lock_pool(p);\n    m.insert(1, 2);\n    drop(g);\n}\n\n\
+             pub fn pinned(m: &Map, t: &Tree, p: &M) {\n    \
+             let g = lock_pool(p);\n    t.insert(p); // lint: callee=Tree::insert\n    \
+             drop(g);\n}\n",
+        );
+        let v = t.lint();
+        // only the pinned call resolves to Tree::insert (which acquires
+        // kv-pool) -> exactly one may-acquire violation, in `pinned`
+        let hits: Vec<_> = v
+            .iter()
+            .filter(|v| v.rule == "lock-order" && v.msg.contains("may acquire"))
+            .collect();
+        assert_eq!(hits.len(), 1, "{v:?}");
+        assert_eq!(hits[0].item, "pinned");
+    }
+
+    #[test]
+    fn real_tree_is_clean() {
+        // cargo runs tests with cwd = rust/, where the real tree lives;
+        // skip silently if the layout ever moves rather than fail on a
+        // path assumption
+        let src = PathBuf::from("src");
+        let allow = PathBuf::from("lint_allow.toml");
+        if !src.join("ops").is_dir() || !allow.is_file() {
+            return;
+        }
+        let v = run(&src, &allow);
+        assert!(v.is_empty(), "lint violations on the tree:\n{v:#?}");
+    }
+
+    #[test]
+    fn json_report_escapes_and_counts() {
+        let v = vec![Violation {
+            rule: "overflow-intent",
+            path: "ops/fake.rs".to_string(),
+            line: 3,
+            item: "f".to_string(),
+            msg: "bare `*` with \"quotes\"".to_string(),
+        }];
+        let j = json_report(&v);
+        assert!(j.contains("\"total\": 1"), "{j}");
+        assert!(j.contains("\\\"quotes\\\""), "{j}");
+    }
+}

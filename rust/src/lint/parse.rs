@@ -1,0 +1,505 @@
+//! Function extraction and per-function event analysis for illm-lint.
+//!
+//! `parse_fns` walks a token stream and extracts every `fn` item with
+//! its impl-type qualification (`Type::name`), body token span, and
+//! test-region flag. `analyze_fn_events` then replays a function body
+//! tracking lock-guard lifetimes (`let g = lock_pool(..)` held to scope
+//! end or `drop(g)`; un-bound acquisitions held to end of statement)
+//! and records every call site together with the set of locks held at
+//! that moment — the raw material of the lock-order rule.
+//!
+//! Mirrored 1:1 by `python/lint_sim.py` (keep in sync).
+
+use super::tokenizer::{Directives, Kind, Tok};
+use std::collections::HashSet;
+
+/// Lock ranks: the documented acquisition order is
+/// prefix-trie (0) -> kv-pool (1) -> leaf (2). A rank may only be
+/// acquired while strictly-lower-ranked locks are held.
+pub const TRIE: u8 = 0;
+pub const POOL: u8 = 1;
+pub const LEAF: u8 = 2;
+
+pub const LOCK_NAMES: [&str; 3] = ["prefix-trie", "kv-pool", "leaf"];
+
+/// Highest rank present in a held-lock bitmask (mask must be nonzero).
+pub fn max_rank(mask: u8) -> u8 {
+    let mut best = 0u8;
+    for l in 0..3u8 {
+        if mask & (1 << l) != 0 {
+            best = l;
+        }
+    }
+    best
+}
+
+/// Names of the locks in a bitmask, in rank order.
+pub fn lock_names(mask: u8) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for l in 0..3usize {
+        if mask & (1 << l) != 0 {
+            out.push(LOCK_NAMES[l]);
+        }
+    }
+    out
+}
+
+/// Classify a `lock_recover(..)` call by its argument idents; `None`
+/// means the mutex is not in the lint's lock table (a violation — the
+/// table must name every lock so ordering stays checkable).
+fn classify_lock_arg(args: &[&str]) -> Option<u8> {
+    if args.contains(&"prefix") {
+        return Some(TRIE);
+    }
+    if args.contains(&"decode_scratch")
+        || args.contains(&"state")
+        || args.contains(&"events")
+    {
+        return Some(LEAF);
+    }
+    None
+}
+
+pub fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "if" | "while"
+            | "for"
+            | "match"
+            | "return"
+            | "loop"
+            | "fn"
+            | "let"
+            | "mut"
+            | "ref"
+            | "move"
+            | "in"
+            | "as"
+            | "pub"
+            | "crate"
+            | "self"
+            | "Self"
+            | "use"
+            | "mod"
+            | "impl"
+            | "where"
+            | "unsafe"
+            | "else"
+            | "break"
+            | "continue"
+            | "struct"
+            | "enum"
+            | "trait"
+            | "const"
+            | "static"
+            | "type"
+            | "dyn"
+            | "box"
+    )
+}
+
+/// A recorded call site inside a function body.
+#[derive(Clone, Debug)]
+pub struct Call {
+    pub name: String,
+    /// `Type` of a `Type::name(..)` call, if qualified.
+    pub qual: Option<String>,
+    /// Bitmask of locks held at the call.
+    pub held: u8,
+    pub line: u32,
+    /// Exact callee from a same-line `// lint: callee=Type::fn` pin.
+    pub pin: Option<String>,
+    /// True for `.name(..)` method-call syntax.
+    pub is_method: bool,
+}
+
+/// One extracted `fn` item plus its analysis results.
+#[derive(Clone, Debug)]
+pub struct FnInfo {
+    /// `Type::name` inside an impl block, bare `name` otherwise.
+    pub qname: String,
+    pub name: String,
+    /// File path relative to the src root, `/`-separated.
+    pub path: String,
+    /// Body token span (inside the braces).
+    pub body: Vec<Tok>,
+    pub is_test: bool,
+    pub sig_line: u32,
+    /// Shadowed by a later same-qname fn in the same file (rare:
+    /// multiple `impl From<..> for X` blocks); excluded from analysis,
+    /// matching the mirror's dict-overwrite semantics.
+    pub dead: bool,
+    /// Locks acquired directly in this body (bitmask).
+    pub direct_locks: u8,
+    pub calls: Vec<Call>,
+    /// Transitive closure: locks this fn may acquire (bitmask).
+    pub may_locks: u8,
+    /// Transitive closure: may reach a compute kernel.
+    pub may_compute: bool,
+    /// Lines with `lock_recover` on an unclassified mutex.
+    pub unknown_locks: Vec<u32>,
+    /// (line, message) for out-of-order acquisitions in this body.
+    pub order_viols: Vec<(u32, String)>,
+}
+
+/// Extract fn items from a file token stream.
+pub fn parse_fns(path: &str, toks: &[Tok], in_test: &[bool]) -> Vec<FnInfo> {
+    let mut fns = Vec::new();
+    let mut impl_stack: Vec<(Option<String>, i32)> = Vec::new();
+    let mut depth = 0i32;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Punct && t.text == "{" {
+            depth += 1;
+        } else if t.kind == Kind::Punct && t.text == "}" {
+            while impl_stack.last().map(|e| e.1) == Some(depth) {
+                impl_stack.pop();
+            }
+            depth -= 1;
+        } else if t.kind == Kind::Ident && t.text == "impl" {
+            // scan to the opening '{' (or ';'), find the type name:
+            // the ident after `for` in trait impls, else the last ident
+            let mut j = i + 1;
+            let mut names: Vec<String> = Vec::new();
+            let mut gd = 0i32;
+            let mut last_for: i64 = -1;
+            while j < toks.len() {
+                let tj = &toks[j];
+                if tj.text == "<" {
+                    gd += 1;
+                } else if tj.text == ">" {
+                    gd = (gd - 1).max(0);
+                } else if (tj.text == "{" || tj.text == ";") && gd == 0 {
+                    break;
+                } else if tj.kind == Kind::Ident && gd == 0 {
+                    if tj.text == "for" {
+                        last_for = names.len() as i64;
+                    } else if tj.text != "where" && tj.text != "dyn" {
+                        names.push(tj.text.clone());
+                    }
+                }
+                j += 1;
+            }
+            let tyname: Option<String> =
+                if last_for >= 0 && (last_for as usize) < names.len() {
+                    Some(names[last_for as usize].clone())
+                } else {
+                    names.last().cloned()
+                };
+            if j < toks.len() && toks[j].text == "{" {
+                impl_stack.push((tyname, depth + 1));
+                depth += 1;
+                i = j + 1;
+                continue;
+            }
+        } else if t.kind == Kind::Ident
+            && t.text == "fn"
+            && i + 1 < toks.len()
+            && toks[i + 1].kind == Kind::Ident
+        {
+            let name = toks[i + 1].text.clone();
+            let sig_line = t.line;
+            // find the body '{' (skipping generics/args/return/where);
+            // a `;` at top level means a trait method decl with no body
+            let mut j = i + 2;
+            let mut gd = 0i32;
+            let mut pd = 0i32;
+            let mut body: Option<Vec<Tok>> = None;
+            while j < toks.len() {
+                let tj = &toks[j];
+                if tj.text == "<" {
+                    gd += 1;
+                } else if tj.text == ">" && gd > 0 {
+                    gd -= 1;
+                } else if tj.text == "(" || tj.text == "[" {
+                    pd += 1;
+                } else if tj.text == ")" || tj.text == "]" {
+                    pd -= 1;
+                } else if tj.text == ";" && pd == 0 && gd == 0 {
+                    break;
+                } else if tj.text == "{" && pd == 0 {
+                    let mut bd = 1i32;
+                    let mut k = j + 1;
+                    while k < toks.len() && bd > 0 {
+                        if toks[k].text == "{" {
+                            bd += 1;
+                        } else if toks[k].text == "}" {
+                            bd -= 1;
+                        }
+                        k += 1;
+                    }
+                    let end = k.saturating_sub(1).max(j + 1);
+                    body = Some(toks[j + 1..end].to_vec());
+                    break;
+                }
+                j += 1;
+            }
+            let ty = impl_stack.last().and_then(|e| e.0.clone());
+            let qname = match &ty {
+                Some(ty) => format!("{ty}::{name}"),
+                None => name.clone(),
+            };
+            fns.push(FnInfo {
+                qname,
+                name,
+                path: path.to_string(),
+                body: body.unwrap_or_default(),
+                is_test: in_test[i],
+                sig_line,
+                dead: false,
+                direct_locks: 0,
+                calls: Vec::new(),
+                may_locks: 0,
+                may_compute: false,
+                unknown_locks: Vec::new(),
+                order_viols: Vec::new(),
+            });
+            // fall through WITHOUT skipping: the body's braces must pass
+            // through the depth tracker so impl blocks close correctly
+        }
+        i += 1;
+    }
+    fns
+}
+
+/// Results of one body replay.
+#[derive(Default)]
+pub struct FnEvents {
+    pub calls: Vec<Call>,
+    pub unknown_locks: Vec<u32>,
+    pub order_viols: Vec<(u32, String)>,
+    pub direct_locks: u8,
+}
+
+/// Parse a `lint: callee=Type::fn` directive body into (Type, fn).
+fn parse_pin(d: &str) -> Option<(String, String)> {
+    let rest = d.strip_prefix("lint:")?.trim_start();
+    let rest = rest.strip_prefix("callee")?.trim_start();
+    let rest = rest.strip_prefix('=')?.trim_start();
+    let b = rest.as_bytes();
+    let mut k = 0usize;
+    while k < b.len() && (b[k].is_ascii_alphanumeric() || b[k] == b'_') {
+        k += 1;
+    }
+    if k == 0 {
+        return None;
+    }
+    let ty = &rest[..k];
+    let rest2 = rest[k..].strip_prefix("::")?;
+    let b2 = rest2.as_bytes();
+    let mut m = 0usize;
+    while m < b2.len() && (b2[m].is_ascii_alphanumeric() || b2[m] == b'_') {
+        m += 1;
+    }
+    if m == 0 {
+        return None;
+    }
+    Some((ty.to_string(), rest2[..m].to_string()))
+}
+
+fn held_mask(guards: &[(String, u8, i32)], temps: &[u8]) -> u8 {
+    let mut m = 0u8;
+    for (_, l, _) in guards {
+        m |= 1 << l;
+    }
+    for l in temps {
+        m |= 1 << l;
+    }
+    m
+}
+
+/// Replay a function body, producing call/lock events.
+pub fn analyze_fn_events(
+    body: &[Tok],
+    registry_names: &HashSet<String>,
+    directives: &Directives,
+) -> FnEvents {
+    let toks = body;
+    let mut ev = FnEvents::default();
+    // (guard name, lock, scope depth at binding)
+    let mut held_guards: Vec<(String, u8, i32)> = Vec::new();
+    let mut held_temps: Vec<u8> = Vec::new();
+    let mut scope = 0i32;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Punct
+            && (t.text == "{" || t.text == "}" || t.text == ";")
+        {
+            if t.text == "{" {
+                scope += 1;
+            } else if t.text == "}" {
+                held_guards.retain(|(_, _, d)| *d != scope);
+                scope -= 1;
+            }
+            held_temps.clear();
+            i += 1;
+            continue;
+        }
+        // lock acquisition
+        if t.kind == Kind::Ident
+            && (t.text == "lock_pool" || t.text == "lock_recover")
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "("
+        {
+            let mut j = i + 2;
+            let mut pd = 1i32;
+            let mut args: Vec<&str> = Vec::new();
+            while j < toks.len() && pd > 0 {
+                if toks[j].text == "(" {
+                    pd += 1;
+                } else if toks[j].text == ")" {
+                    pd -= 1;
+                } else if toks[j].kind == Kind::Ident {
+                    args.push(toks[j].text.as_str());
+                }
+                j += 1;
+            }
+            let lock = if t.text == "lock_pool" {
+                Some(POOL)
+            } else {
+                classify_lock_arg(&args)
+            };
+            let Some(lock) = lock else {
+                ev.unknown_locks.push(t.line);
+                i = j;
+                continue;
+            };
+            let cur = held_mask(&held_guards, &held_temps);
+            if cur != 0 && lock <= max_rank(cur) {
+                ev.order_viols.push((
+                    t.line,
+                    format!(
+                        "acquires {} while {:?} held",
+                        LOCK_NAMES[lock as usize],
+                        lock_names(cur)
+                    ),
+                ));
+            }
+            // `let [mut] NAME = lock_..(..);` binds a guard held to
+            // scope end; anything else is a temp held to the next `;`
+            let mut bound: Option<String> = None;
+            if i >= 2
+                && toks[i - 1].text == "="
+                && toks[i - 2].kind == Kind::Ident
+            {
+                let name = toks[i - 2].text.clone();
+                let mut k = i as i64 - 3;
+                if k >= 0 && toks[k as usize].text == "mut" {
+                    k -= 1;
+                }
+                if k >= 0
+                    && toks[k as usize].text == "let"
+                    && j < toks.len()
+                    && toks[j].text == ";"
+                {
+                    bound = Some(name);
+                }
+            }
+            match bound {
+                Some(b) => {
+                    held_guards.retain(|(g, _, _)| g != &b);
+                    held_guards.push((b, lock, scope));
+                }
+                None => held_temps.push(lock),
+            }
+            i = j;
+            continue;
+        }
+        // drop(guard) releases early
+        if t.kind == Kind::Ident
+            && t.text == "drop"
+            && i + 2 < toks.len()
+            && toks[i + 1].text == "("
+            && toks[i + 2].kind == Kind::Ident
+            && held_guards.iter().any(|(g, _, _)| *g == toks[i + 2].text)
+        {
+            let g = toks[i + 2].text.clone();
+            held_guards.retain(|(n, _, _)| *n != g);
+            i += 3;
+            continue;
+        }
+        // call site
+        if t.kind == Kind::Ident
+            && !is_keyword(&t.text)
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "("
+        {
+            let name = t.text.clone();
+            if name == "drop" {
+                i += 1;
+                continue;
+            }
+            let qual = if i >= 2
+                && toks[i - 1].text == "::"
+                && toks[i - 2].kind == Kind::Ident
+            {
+                Some(toks[i - 2].text.clone())
+            } else {
+                None
+            };
+            let is_method = i >= 1 && toks[i - 1].text == ".";
+            let in_registry = registry_names.contains(&name)
+                || qual
+                    .as_ref()
+                    .map(|q| registry_names.contains(&format!("{q}::{name}")))
+                    .unwrap_or(false);
+            if in_registry {
+                let mut pin: Option<String> = None;
+                if let Some(ds) = directives.get(&t.line) {
+                    for d in ds {
+                        if let Some((ty, f)) = parse_pin(d) {
+                            if f == name {
+                                pin = Some(format!("{ty}::{f}"));
+                            }
+                        }
+                    }
+                }
+                ev.calls.push(Call {
+                    name,
+                    qual,
+                    held: held_mask(&held_guards, &held_temps),
+                    line: t.line,
+                    pin,
+                    is_method,
+                });
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    // direct locks: any acquisition at all, guard-bound or not
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Ident
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "("
+        {
+            if t.text == "lock_pool" {
+                ev.direct_locks |= 1 << POOL;
+            } else if t.text == "lock_recover" {
+                let mut j = i + 2;
+                let mut pd = 1i32;
+                let mut args: Vec<&str> = Vec::new();
+                while j < toks.len() && pd > 0 {
+                    if toks[j].text == "(" {
+                        pd += 1;
+                    } else if toks[j].text == ")" {
+                        pd -= 1;
+                    } else if toks[j].kind == Kind::Ident {
+                        args.push(toks[j].text.as_str());
+                    }
+                    j += 1;
+                }
+                if let Some(lock) = classify_lock_arg(&args) {
+                    ev.direct_locks |= 1 << lock;
+                }
+            }
+        }
+        i += 1;
+    }
+    ev
+}

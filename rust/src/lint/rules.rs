@@ -1,0 +1,827 @@
+//! The four illm-lint rule families, and the driver that runs them over
+//! a source tree. See `lint::mod` docs for rule semantics and
+//! rationale; mirrored 1:1 by `python/lint_sim.py`.
+
+use super::allow::{allowed, load_allow};
+use super::parse::{
+    analyze_fn_events, is_keyword, lock_names, max_rank, parse_fns, Call,
+    FnInfo,
+};
+use super::tokenizer::{mark_test_regions, tokenize, Directives, Kind, Tok};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Compute kernels: calling any of these while a lock is held stalls
+/// every other thread contending that lock. `rotate` is deliberately
+/// absent — RoPE centering legitimately runs inside the pool-locked
+/// K/V append pass (integer table lookups, decode-scale cost).
+const COMPUTE: [&str; 20] = [
+    "broadcast",
+    "gemm_span",
+    "attend_head",
+    "attend_row",
+    "merge_heads",
+    "di_softmax_row",
+    "di_softmax_rows",
+    "di_exp_row",
+    "di_norm",
+    "di_add",
+    "di_swiglu",
+    "di_relu",
+    "di_linear_raw",
+    "di_linear_raw_threads",
+    "di_linear",
+    "di_linear_threads",
+    "attention",
+    "forward_raw",
+    "layer_tail",
+    "layer_tail_threads",
+];
+
+/// Method names that collide with std (Vec/slice/HashMap/Iterator/..).
+/// An unpinned `.name(` call with one of these names is NOT
+/// union-resolved against same-named crate fns — the overwhelming
+/// majority of such calls are std methods, and union resolution would
+/// wire unrelated code together. A `// lint: callee=Type::fn` pin on
+/// the call line restores exact resolution for the rare crate method
+/// that shadows a std name.
+const STD_METHODS: [&str; 35] = [
+    "get",
+    "get_mut",
+    "insert",
+    "remove",
+    "push",
+    "pop",
+    "append",
+    "collect",
+    "extend",
+    "clone",
+    "min",
+    "max",
+    "last",
+    "first",
+    "len",
+    "is_empty",
+    "contains",
+    "iter",
+    "map",
+    "take",
+    "wait",
+    "drain",
+    "retain",
+    "entry",
+    "split_off",
+    "get_or_init",
+    "find",
+    "sum",
+    "fold",
+    "next",
+    "rev",
+    "count",
+    "sort",
+    "clear",
+    "join",
+];
+
+const FLOAT_ROOTS: [&str; 3] = ["prefill_raw", "decode_raw", "decode_batch_raw"];
+const REACH_DIRS: [&str; 4] = ["ops/", "int_model/", "tensor/", "quant/"];
+const SERVING_DIRS: [&str; 7] = [
+    "ops/",
+    "int_model/",
+    "coordinator/",
+    "trace/",
+    "util/",
+    "quant/",
+    "tensor/",
+];
+/// File prefixes skipped by every rule (the analyzer itself + binaries).
+const SKIP_PREFIX: [&str; 3] = ["lint/", "bin/", "main.rs"];
+
+const WRAP_PREFIX: [&str; 4] =
+    ["wrapping_", "saturating_", "checked_", "overflowing_"];
+
+const ASSERT_MACROS: [&str; 6] = [
+    "assert",
+    "assert_eq",
+    "assert_ne",
+    "debug_assert",
+    "debug_assert_eq",
+    "debug_assert_ne",
+];
+
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    pub item: String,
+    pub msg: String,
+}
+
+impl Violation {
+    fn new(
+        rule: &'static str,
+        path: &str,
+        line: u32,
+        item: &str,
+        msg: String,
+    ) -> Self {
+        Violation {
+            rule,
+            path: path.to_string(),
+            line,
+            item: item.to_string(),
+            msg,
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] {}:{} ({}) {}",
+            self.rule, self.path, self.line, self.item, self.msg
+        )
+    }
+}
+
+fn is_compute(name: &str) -> bool {
+    COMPUTE.contains(&name)
+}
+
+fn is_std_method(name: &str) -> bool {
+    STD_METHODS.contains(&name)
+}
+
+fn skip_path(rel: &str) -> bool {
+    SKIP_PREFIX.iter().any(|p| rel.starts_with(p))
+}
+
+/// `ops/(di_\w+|rope|mod)\.rs` — the DI-kernel file scope of rule 1.
+fn is_float_file(rel: &str) -> bool {
+    let Some(rest) = rel.strip_prefix("ops/") else {
+        return false;
+    };
+    if rest.contains('/') {
+        return false;
+    }
+    if rest == "rope.rs" || rest == "mod.rs" {
+        return true;
+    }
+    match rest.strip_suffix(".rs") {
+        Some(stem) => match stem.strip_prefix("di_") {
+            Some(tail) => {
+                !tail.is_empty()
+                    && tail
+                        .bytes()
+                        .all(|b| b.is_ascii_alphanumeric() || b == b'_')
+            }
+            None => false,
+        },
+        None => false,
+    }
+}
+
+/// All .rs files under `root`, as (rel-path, abs-path), sorted.
+fn walk_rs(root: &Path) -> Vec<(String, PathBuf)> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let Ok(rd) = fs::read_dir(&dir) else {
+            continue;
+        };
+        for ent in rd.flatten() {
+            let p = ent.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                if let Ok(rel) = p.strip_prefix(root) {
+                    let rel =
+                        rel.to_string_lossy().replace('\\', "/");
+                    out.push((rel, p));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+type Spans = Vec<(u32, u32, String)>;
+
+/// Run every rule over the tree at `src_root` with the allowlist at
+/// `allow_path`. Returns all violations, sorted by (rule, file, line).
+pub fn run(src_root: &Path, allow_path: &Path) -> Vec<Violation> {
+    let (allow, allow_errs) = load_allow(allow_path);
+    let allow_path_str = allow_path.to_string_lossy().to_string();
+    let mut viols: Vec<Violation> = allow_errs
+        .into_iter()
+        .map(|e| Violation::new("allowlist", &allow_path_str, 0, "-", e))
+        .collect();
+
+    // ---- load + parse every file ----
+    let mut fns: Vec<FnInfo> = Vec::new();
+    let mut file_toks: BTreeMap<String, Vec<Tok>> = BTreeMap::new();
+    let mut file_dirs: BTreeMap<String, Directives> = BTreeMap::new();
+    let mut file_tests: BTreeMap<String, Vec<bool>> = BTreeMap::new();
+    let mut registry_idx: HashMap<String, usize> = HashMap::new();
+    for (rel, full) in walk_rs(src_root) {
+        if skip_path(&rel) {
+            continue;
+        }
+        let Ok(src) = fs::read_to_string(&full) else {
+            continue;
+        };
+        let (toks, dirs) = tokenize(&src);
+        let in_test = mark_test_regions(&toks);
+        for f in parse_fns(&rel, &toks, &in_test) {
+            if f.is_test {
+                continue;
+            }
+            if f.name == "lock_pool" || f.name == "lock_recover" {
+                continue; // the locking primitives themselves
+            }
+            let key = format!("{rel}::{}", f.qname);
+            if let Some(&old) = registry_idx.get(&key) {
+                fns[old].dead = true;
+            }
+            registry_idx.insert(key, fns.len());
+            fns.push(f);
+        }
+        file_toks.insert(rel.clone(), toks);
+        file_dirs.insert(rel.clone(), dirs);
+        file_tests.insert(rel, in_test);
+    }
+
+    let mut by_name: HashMap<String, Vec<usize>> = HashMap::new();
+    for (i, f) in fns.iter().enumerate() {
+        by_name.entry(f.name.clone()).or_default().push(i);
+        if f.qname != f.name {
+            by_name.entry(f.qname.clone()).or_default().push(i);
+        }
+    }
+    let names_set: HashSet<String> = by_name.keys().cloned().collect();
+
+    // ---- per-body event analysis ----
+    let empty_dirs = Directives::new();
+    for f in fns.iter_mut() {
+        if f.dead {
+            continue;
+        }
+        let dirs = file_dirs.get(&f.path).unwrap_or(&empty_dirs);
+        let ev = analyze_fn_events(&f.body, &names_set, dirs);
+        f.calls = ev.calls;
+        f.unknown_locks = ev.unknown_locks;
+        f.order_viols = ev.order_viols;
+        f.direct_locks = ev.direct_locks;
+    }
+
+    // (file, line) -> owning fn qname, for messages
+    let mut fn_spans: HashMap<String, Spans> = HashMap::new();
+    for f in fns.iter() {
+        if f.dead {
+            continue;
+        }
+        if let (Some(a), Some(b)) = (f.body.first(), f.body.last()) {
+            fn_spans.entry(f.path.clone()).or_default().push((
+                a.line,
+                b.line,
+                f.qname.clone(),
+            ));
+        }
+    }
+    let owner_fn = |rel: &str, line: u32| -> String {
+        if let Some(spans) = fn_spans.get(rel) {
+            for (lo, hi, q) in spans {
+                if *lo <= line && line <= *hi {
+                    return q.clone();
+                }
+            }
+        }
+        "-".to_string()
+    };
+
+    let resolve = |call: &Call| -> Vec<usize> {
+        if let Some(pin) = &call.pin {
+            if let Some(v) = by_name.get(pin) {
+                return v.clone();
+            }
+        }
+        if let Some(q) = &call.qual {
+            let qn = format!("{q}::{}", call.name);
+            match by_name.get(&qn) {
+                Some(v) if !v.is_empty() => return v.clone(),
+                _ => return Vec::new(), // qualified path to a non-crate fn
+            }
+        }
+        if call.is_method && is_std_method(&call.name) {
+            return Vec::new(); // std-shadowed name, unpinned: out of scope
+        }
+        by_name.get(&call.name).cloned().unwrap_or_default()
+    };
+
+    // ---- transitive fixed point: may_locks / may_compute ----
+    for f in fns.iter_mut() {
+        f.may_locks = f.direct_locks;
+        f.may_compute = is_compute(&f.name);
+    }
+    loop {
+        let mut changed = false;
+        for i in 0..fns.len() {
+            if fns[i].dead {
+                continue;
+            }
+            let mut add_locks = 0u8;
+            let mut add_compute = false;
+            for ci in 0..fns[i].calls.len() {
+                let callees = resolve(&fns[i].calls[ci]);
+                for &j in &callees {
+                    add_locks |= fns[j].may_locks;
+                    add_compute = add_compute || fns[j].may_compute;
+                }
+            }
+            if add_locks & !fns[i].may_locks != 0 {
+                fns[i].may_locks |= add_locks;
+                changed = true;
+            }
+            if add_compute && !fns[i].may_compute {
+                fns[i].may_compute = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // ---- rule 2: lock order + compute-under-lock ----
+    for f in fns.iter() {
+        if f.dead {
+            continue;
+        }
+        for &line in &f.unknown_locks {
+            viols.push(Violation::new(
+                "lock-order",
+                &f.path,
+                line,
+                &f.qname,
+                "lock_recover on an unregistered mutex — classify it in \
+                 the lint lock table"
+                    .to_string(),
+            ));
+        }
+        for (line, msg) in &f.order_viols {
+            if !allowed(&allow, "lock-order", &f.path, &f.qname, "") {
+                viols.push(Violation::new(
+                    "lock-order",
+                    &f.path,
+                    *line,
+                    &f.qname,
+                    msg.clone(),
+                ));
+            }
+        }
+        for call in &f.calls {
+            if call.held == 0 {
+                continue;
+            }
+            let callees = resolve(call);
+            let mut bad_locks = 0u8;
+            let mut compute: Option<String> = None;
+            let mr = max_rank(call.held);
+            for &j in &callees {
+                for l in 0..3u8 {
+                    if fns[j].may_locks & (1 << l) != 0 && l <= mr {
+                        bad_locks |= 1 << l;
+                    }
+                }
+                if fns[j].may_compute {
+                    compute = Some(fns[j].qname.clone());
+                }
+            }
+            if bad_locks != 0
+                && !allowed(&allow, "lock-order", &f.path, &f.qname, &call.name)
+            {
+                viols.push(Violation::new(
+                    "lock-order",
+                    &f.path,
+                    call.line,
+                    &f.qname,
+                    format!(
+                        "call {}() may acquire {:?} while {:?} held",
+                        call.name,
+                        lock_names(bad_locks),
+                        lock_names(call.held)
+                    ),
+                ));
+            }
+            if let Some(c) = compute {
+                if !allowed(&allow, "lock-order", &f.path, &f.qname, &call.name)
+                {
+                    viols.push(Violation::new(
+                        "lock-order",
+                        &f.path,
+                        call.line,
+                        &f.qname,
+                        format!(
+                            "compute call {}() (via {c}) while {:?} held",
+                            call.name,
+                            lock_names(call.held)
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- rule 1: float freedom ----
+    let check_floats =
+        |f: &FnInfo, why: &str, viols: &mut Vec<Violation>| {
+            for t in &f.body {
+                let what = match t.kind {
+                    Kind::Float => Some(format!("float literal {}", t.text)),
+                    Kind::Ident if t.text == "f32" || t.text == "f64" => {
+                        Some(format!("{} token", t.text))
+                    }
+                    _ => None,
+                };
+                if let Some(what) = what {
+                    if !allowed(&allow, "float-freedom", &f.path, &f.qname, "")
+                    {
+                        viols.push(Violation::new(
+                            "float-freedom",
+                            &f.path,
+                            t.line,
+                            &f.qname,
+                            format!("{what} ({why})"),
+                        ));
+                    }
+                }
+            }
+        };
+    let mut seen_float: HashSet<usize> = HashSet::new();
+    for (i, f) in fns.iter().enumerate() {
+        if f.dead {
+            continue;
+        }
+        if is_float_file(&f.path) {
+            check_floats(f, "DI-kernel file scope", &mut viols);
+            seen_float.insert(i);
+        }
+    }
+    // reachability from the raw serving paths
+    let mut reach: HashSet<usize> = HashSet::new();
+    let mut work: Vec<usize> = fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| !f.dead && FLOAT_ROOTS.contains(&f.name.as_str()))
+        .map(|(i, _)| i)
+        .collect();
+    while let Some(i) = work.pop() {
+        if !reach.insert(i) {
+            continue;
+        }
+        for call in &fns[i].calls {
+            for j in resolve(call) {
+                if REACH_DIRS.iter().any(|d| fns[j].path.starts_with(d)) {
+                    work.push(j);
+                }
+            }
+        }
+    }
+    for (i, f) in fns.iter().enumerate() {
+        if f.dead {
+            continue;
+        }
+        if reach.contains(&i) && !seen_float.contains(&i) {
+            check_floats(
+                f,
+                "reachable from prefill_raw/decode_raw/decode_batch_raw",
+                &mut viols,
+            );
+        }
+    }
+
+    // ---- rule 3: atomics + panic discipline ----
+    for (rel, toks) in &file_toks {
+        if !SERVING_DIRS.iter().any(|d| rel.starts_with(d)) {
+            continue;
+        }
+        let in_test = &file_tests[rel];
+        for (i, t) in toks.iter().enumerate() {
+            if in_test[i] {
+                continue;
+            }
+            if t.kind == Kind::Ident
+                && t.text == "Relaxed"
+                && i >= 2
+                && toks[i - 1].text == "::"
+                && toks[i - 2].text == "Ordering"
+                && !rel.starts_with("trace/")
+                && !allowed(&allow, "atomics", rel, "-", "")
+            {
+                viols.push(Violation::new(
+                    "atomics",
+                    rel,
+                    t.line,
+                    "-",
+                    "Ordering::Relaxed outside trace/".to_string(),
+                ));
+            }
+            if t.kind == Kind::Ident
+                && t.text == "unwrap"
+                && i + 2 < toks.len()
+                && toks[i + 1].text == "("
+                && toks[i + 2].text == ")"
+                && i >= 1
+                && toks[i - 1].text == "."
+                && !allowed(
+                    &allow,
+                    "panic-discipline",
+                    rel,
+                    &owner_fn(rel, t.line),
+                    "unwrap",
+                )
+            {
+                viols.push(Violation::new(
+                    "panic-discipline",
+                    rel,
+                    t.line,
+                    &owner_fn(rel, t.line),
+                    "unwrap() on the serving path".to_string(),
+                ));
+            }
+            if t.kind == Kind::Ident
+                && t.text == "expect"
+                && i + 2 < toks.len()
+                && toks[i + 1].text == "("
+                && toks[i + 2].kind == Kind::Str
+                && i >= 1
+                && toks[i - 1].text == "."
+                && !allowed(
+                    &allow,
+                    "panic-discipline",
+                    rel,
+                    &owner_fn(rel, t.line),
+                    "expect",
+                )
+            {
+                viols.push(Violation::new(
+                    "panic-discipline",
+                    rel,
+                    t.line,
+                    &owner_fn(rel, t.line),
+                    "expect() on the serving path".to_string(),
+                ));
+            }
+            if t.kind == Kind::Ident
+                && matches!(
+                    t.text.as_str(),
+                    "panic" | "unreachable" | "todo" | "unimplemented"
+                )
+                && i + 1 < toks.len()
+                && toks[i + 1].text == "!"
+                && !allowed(
+                    &allow,
+                    "panic-discipline",
+                    rel,
+                    &owner_fn(rel, t.line),
+                    &t.text,
+                )
+            {
+                viols.push(Violation::new(
+                    "panic-discipline",
+                    rel,
+                    t.line,
+                    &owner_fn(rel, t.line),
+                    format!("{}! on the serving path", t.text),
+                ));
+            }
+            if t.kind == Kind::Ident
+                && t.text == "lock"
+                && i >= 1
+                && toks[i - 1].text == "."
+                && i + 2 < toks.len()
+                && toks[i + 1].text == "("
+                && toks[i + 2].text == ")"
+                && rel != "util/mod.rs"
+                && !allowed(
+                    &allow,
+                    "lock-order",
+                    rel,
+                    &owner_fn(rel, t.line),
+                    "lock",
+                )
+            {
+                viols.push(Violation::new(
+                    "lock-order",
+                    rel,
+                    t.line,
+                    &owner_fn(rel, t.line),
+                    "bare .lock() — use lock_pool/lock_recover".to_string(),
+                ));
+            }
+        }
+    }
+
+    // ---- rule 4: overflow intent in ops/ ----
+    for (rel, toks) in &file_toks {
+        if !rel.starts_with("ops/") {
+            continue;
+        }
+        let in_test = &file_tests[rel];
+        let dirs = &file_dirs[rel];
+        // An end-of-line `// ovf: <bound>` covers its own line; a
+        // standalone one covers the next token-bearing line within 5
+        // lines (so continuation comment lines are fine).
+        let token_lines: HashSet<u32> = toks.iter().map(|t| t.line).collect();
+        let mut marked: HashSet<u32> = HashSet::new();
+        for (line, ds) in dirs {
+            for d in ds {
+                let Some(rest) = d.strip_prefix("ovf:") else {
+                    continue;
+                };
+                if rest.trim().is_empty() {
+                    continue;
+                }
+                marked.insert(*line);
+                for j in *line + 1..*line + 6 {
+                    if token_lines.contains(&j) {
+                        marked.insert(j);
+                        break;
+                    }
+                }
+            }
+        }
+        // a wrapping_/saturating_/checked_ call on the line IS the intent
+        let mut explicit: HashSet<u32> = HashSet::new();
+        for t in toks {
+            if t.kind == Kind::Ident
+                && WRAP_PREFIX.iter().any(|p| t.text.starts_with(p))
+            {
+                explicit.insert(t.line);
+            }
+        }
+        // assertion-macro argument spans are specification, not kernel
+        // arithmetic — exempt (debug builds check them anyway)
+        let mut in_assert = vec![false; toks.len()];
+        let mut i = 0usize;
+        while i < toks.len() {
+            let t = &toks[i];
+            if t.kind == Kind::Ident
+                && ASSERT_MACROS.contains(&t.text.as_str())
+                && i + 2 < toks.len()
+                && toks[i + 1].text == "!"
+                && toks[i + 2].text == "("
+            {
+                let mut j = i + 3;
+                let mut pd = 1i32;
+                while j < toks.len() && pd > 0 {
+                    if toks[j].text == "(" {
+                        pd += 1;
+                    } else if toks[j].text == ")" {
+                        pd -= 1;
+                    }
+                    j += 1;
+                }
+                for flag in in_assert.iter_mut().take(j).skip(i) {
+                    *flag = true;
+                }
+                i = j;
+                continue;
+            }
+            i += 1;
+        }
+        let mut bracket = 0i32;
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != Kind::Punct {
+                continue;
+            }
+            if t.text == "[" {
+                bracket += 1;
+                continue;
+            }
+            if t.text == "]" {
+                bracket -= 1;
+                continue;
+            }
+            // indexing / capacity math inside brackets is exempt
+            if in_test[i] || bracket > 0 || in_assert[i] {
+                continue;
+            }
+            let prev = if i > 0 { Some(&toks[i - 1]) } else { None };
+            let nxt = toks.get(i + 1);
+            let binary_prev = match prev {
+                Some(p) => {
+                    (matches!(p.kind, Kind::Ident | Kind::Int | Kind::Float)
+                        && !is_keyword(&p.text))
+                        || p.text == ")"
+                        || p.text == "]"
+                }
+                None => false,
+            };
+            let bad = match t.text.as_str() {
+                "+" | "-" | "*" => binary_prev,
+                "+=" | "-=" | "*=" | "<<=" | ">>=" => true,
+                "<<" | ">>" => {
+                    binary_prev
+                        && match nxt {
+                            Some(x) => {
+                                matches!(x.kind, Kind::Ident | Kind::Int)
+                                    || x.text == "("
+                                    || x.text == "-"
+                            }
+                            None => false,
+                        }
+                }
+                _ => false,
+            };
+            if !bad {
+                continue;
+            }
+            if marked.contains(&t.line) || explicit.contains(&t.line) {
+                continue;
+            }
+            if allowed(
+                &allow,
+                "overflow-intent",
+                rel,
+                &owner_fn(rel, t.line),
+                &t.text,
+            ) {
+                continue;
+            }
+            viols.push(Violation::new(
+                "overflow-intent",
+                rel,
+                t.line,
+                &owner_fn(rel, t.line),
+                format!(
+                    "bare `{}` without an `// ovf:` bound justification or \
+                     explicit wrapping_/saturating_/checked_ intent",
+                    t.text
+                ),
+            ));
+        }
+    }
+
+    // ---- stale allowlist entries ----
+    for e in &allow {
+        if !e.used.get() {
+            viols.push(Violation::new(
+                "allowlist",
+                &allow_path_str,
+                0,
+                e.item.as_deref().unwrap_or("-"),
+                format!(
+                    "stale allow entry (never matched): {} {} {}",
+                    e.rule.as_deref().unwrap_or(""),
+                    e.file.as_deref().unwrap_or(""),
+                    e.item.as_deref().unwrap_or("")
+                ),
+            ));
+        }
+    }
+
+    viols.sort_by(|a, b| {
+        (a.rule, &a.path, a.line).cmp(&(b.rule, &b.path, b.line))
+    });
+    viols
+}
+
+/// Render a machine-readable JSON report (stdlib-only serializer).
+pub fn json_report(viols: &[Violation]) -> String {
+    fn esc(s: &str) -> String {
+        let mut o = String::new();
+        for c in s.chars() {
+            match c {
+                '"' => o.push_str("\\\""),
+                '\\' => o.push_str("\\\\"),
+                '\n' => o.push_str("\\n"),
+                c if (c as u32) < 0x20 => {
+                    o.push_str(&format!("\\u{:04x}", c as u32));
+                }
+                c => o.push(c),
+            }
+        }
+        o
+    }
+    let mut out = String::from("{\n  \"violations\": [\n");
+    for (i, v) in viols.iter().enumerate() {
+        let sep = if i + 1 < viols.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+             \"item\": \"{}\", \"message\": \"{}\"}}{sep}\n",
+            esc(v.rule),
+            esc(&v.path),
+            v.line,
+            esc(&v.item),
+            esc(&v.msg),
+        ));
+    }
+    out.push_str(&format!("  ],\n  \"total\": {}\n}}\n", viols.len()));
+    out
+}

@@ -1,0 +1,386 @@
+//! Lexical tokenizer for illm-lint.
+//!
+//! A lightweight Rust lexer (no external crates — vendor policy): it
+//! produces idents, numeric literals (with float detection), placeholder
+//! string/char tokens (contents stripped so string bodies can never trip
+//! a rule), punctuation (greedy 3-char then 2-char), and lifetimes.
+//! Comments are stripped, EXCEPT that `// ovf: ...` and `// lint: ...`
+//! comments are captured as *directives* keyed by their line — the
+//! overflow-intent rule and the call-pin mechanism read them.
+//!
+//! Mirrored 1:1 by `python/lint_sim.py::tokenize` (the authoring
+//! environment has no cargo; keep the two in sync).
+
+use std::collections::BTreeMap;
+
+/// Token kind. `Str`/`Char` carry no text (contents are stripped).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Int,
+    Float,
+    Str,
+    Char,
+    Punct,
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// Directive comments by line: `// ovf: ...` / `// lint: ...` bodies.
+pub type Directives = BTreeMap<u32, Vec<String>>;
+
+const PUNCTS3: [&str; 3] = ["<<=", ">>=", "..="];
+const PUNCTS2: [&str; 20] = [
+    "->", "=>", "::", "<<", ">>", "<=", ">=", "==", "!=", "&&", "||",
+    "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "..",
+];
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn count_newlines(s: &[u8], a: usize, b: usize) -> u32 {
+    let mut c = 0u32;
+    let mut i = a;
+    while i < b && i < s.len() {
+        if s[i] == b'\n' {
+            c += 1;
+        }
+        i += 1;
+    }
+    c
+}
+
+/// Lex `src` into tokens + directives. Never fails: unrecognized bytes
+/// become single-char punct tokens.
+pub fn tokenize(src: &str) -> (Vec<Tok>, Directives) {
+    let s = src.as_bytes();
+    let n = s.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut directives: Directives = BTreeMap::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = s[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. doc comments): strip, capture directives
+        if c == b'/' && i + 1 < n && s[i + 1] == b'/' {
+            let mut j = i + 2;
+            while j < n && s[j] != b'\n' {
+                j += 1;
+            }
+            let body = src[i + 2..j].trim_start_matches(['/', '!']).trim();
+            if body.starts_with("ovf:") || body.starts_with("lint:") {
+                directives.entry(line).or_default().push(body.to_string());
+            }
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < n && s[i + 1] == b'*' {
+            let mut depth = 1i32;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == b'/' && i + 1 < n && s[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == b'*' && i + 1 < n && s[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if s[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings: r"..", r#".."#, br#".."#
+        {
+            let mut k = i;
+            if s[k] == b'b' {
+                k += 1;
+            }
+            if k < n && s[k] == b'r' {
+                let mut h = k + 1;
+                while h < n && s[h] == b'#' {
+                    h += 1;
+                }
+                if h < n && s[h] == b'"' {
+                    let hashes = h - (k + 1);
+                    let mut j = h + 1;
+                    loop {
+                        if j >= n {
+                            break;
+                        }
+                        if s[j] == b'"'
+                            && j + 1 + hashes <= n
+                            && s[j + 1..j + 1 + hashes]
+                                .iter()
+                                .all(|&b| b == b'#')
+                        {
+                            break;
+                        }
+                        j += 1;
+                    }
+                    line += count_newlines(s, i, j);
+                    toks.push(Tok { kind: Kind::Str, text: String::new(), line });
+                    i = (j + 1 + hashes).min(n);
+                    continue;
+                }
+            }
+        }
+        // plain / byte strings
+        if c == b'"' || (c == b'b' && i + 1 < n && s[i + 1] == b'"') {
+            i += if c == b'b' { 2 } else { 1 };
+            while i < n {
+                if s[i] == b'\\' {
+                    i += 2;
+                    continue;
+                }
+                if s[i] == b'"' {
+                    i += 1;
+                    break;
+                }
+                if s[i] == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            toks.push(Tok { kind: Kind::Str, text: String::new(), line });
+            continue;
+        }
+        // char / byte-char / lifetime
+        if c == b'\'' || (c == b'b' && i + 1 < n && s[i + 1] == b'\'') {
+            let start = i + if c == b'b' { 2 } else { 1 };
+            if c == b'\''
+                && start < n
+                && is_ident_start(s[start])
+                && !(start + 1 < n && s[start + 1] == b'\'')
+            {
+                // lifetime 'a — also covers 'static
+                let mut j = start;
+                while j < n && is_ident_cont(s[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: src[i..j].to_string(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            i = start;
+            while i < n {
+                if s[i] == b'\\' {
+                    i += 2;
+                    continue;
+                }
+                if s[i] == b'\'' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok { kind: Kind::Char, text: String::new(), line });
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut is_float = false;
+            let radix_prefix = i + 1 < n
+                && s[i] == b'0'
+                && (s[i + 1] == b'x' || s[i + 1] == b'o' || s[i + 1] == b'b');
+            if radix_prefix {
+                j = i + 2;
+                while j < n && is_ident_cont(s[j]) {
+                    j += 1;
+                }
+            } else {
+                while j < n && (s[j].is_ascii_digit() || s[j] == b'_') {
+                    j += 1;
+                }
+                // a `.` only continues the number when a digit follows,
+                // so `0..n` stays INT `0` + `..` + ident
+                if j < n
+                    && s[j] == b'.'
+                    && j + 1 < n
+                    && s[j + 1].is_ascii_digit()
+                {
+                    is_float = true;
+                    j += 1;
+                    while j < n && (s[j].is_ascii_digit() || s[j] == b'_') {
+                        j += 1;
+                    }
+                }
+                if j < n
+                    && (s[j] == b'e' || s[j] == b'E')
+                    && j + 1 < n
+                    && (s[j + 1].is_ascii_digit()
+                        || s[j + 1] == b'+'
+                        || s[j + 1] == b'-')
+                {
+                    is_float = true;
+                    j += 1;
+                    if s[j] == b'+' || s[j] == b'-' {
+                        j += 1;
+                    }
+                    while j < n && s[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+                // type suffix (1i64, 2.5f32, ...)
+                let mut k = j;
+                while k < n && is_ident_cont(s[k]) {
+                    k += 1;
+                }
+                let suffix = &src[j..k];
+                if suffix == "f32" || suffix == "f64" {
+                    is_float = true;
+                }
+                j = k;
+            }
+            toks.push(Tok {
+                kind: if is_float { Kind::Float } else { Kind::Int },
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // non-ASCII outside strings/comments: one char of punct
+        if c >= 0x80 {
+            let ch_len = src[i..]
+                .chars()
+                .next()
+                .map(char::len_utf8)
+                .unwrap_or(1);
+            toks.push(Tok {
+                kind: Kind::Punct,
+                text: src[i..i + ch_len].to_string(),
+                line,
+            });
+            i += ch_len;
+            continue;
+        }
+        let mut matched: Option<&str> = None;
+        for p in PUNCTS3 {
+            if src[i..].starts_with(p) {
+                matched = Some(p);
+                break;
+            }
+        }
+        if matched.is_none() {
+            for p in PUNCTS2 {
+                if src[i..].starts_with(p) {
+                    matched = Some(p);
+                    break;
+                }
+            }
+        }
+        let text = match matched {
+            Some(p) => p.to_string(),
+            None => (c as char).to_string(),
+        };
+        i += text.len();
+        toks.push(Tok { kind: Kind::Punct, text, line });
+    }
+    (toks, directives)
+}
+
+/// Per-token flag: inside an item annotated `#[cfg(test)]` / `#[test]` /
+/// `#[bench]` (the annotated brace-block, or until `;` for `mod tests;`).
+pub fn mark_test_regions(toks: &[Tok]) -> Vec<bool> {
+    let mut in_test = vec![false; toks.len()];
+    let mut regions: Vec<i32> = Vec::new();
+    let mut depth = 0i32;
+    let mut pending = false;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Punct
+            && t.text == "#"
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "["
+        {
+            let mut j = i + 2;
+            let mut bd = 1i32;
+            let mut attr: Vec<&str> = Vec::new();
+            while j < toks.len() && bd > 0 {
+                if toks[j].text == "[" {
+                    bd += 1;
+                } else if toks[j].text == "]" {
+                    bd -= 1;
+                } else {
+                    attr.push(toks[j].text.as_str());
+                }
+                j += 1;
+            }
+            let is_test_attr = (attr.contains(&"cfg") && attr.contains(&"test"))
+                || attr.first() == Some(&"test")
+                || attr.first() == Some(&"bench");
+            if is_test_attr {
+                pending = true;
+            }
+            if !regions.is_empty() {
+                for flag in in_test.iter_mut().take(j).skip(i) {
+                    *flag = true;
+                }
+            }
+            i = j;
+            continue;
+        }
+        if t.kind == Kind::Punct && t.text == "{" {
+            depth += 1;
+            if pending {
+                regions.push(depth);
+                pending = false;
+            }
+        } else if t.kind == Kind::Punct && t.text == "}" {
+            if regions.last() == Some(&depth) {
+                regions.pop();
+            }
+            depth -= 1;
+        } else if t.kind == Kind::Punct && t.text == ";" && pending && depth == 0 {
+            pending = false; // e.g. `#[cfg(test)] mod tests;`
+        }
+        if !regions.is_empty() {
+            in_test[i] = true;
+        }
+        i += 1;
+    }
+    in_test
+}

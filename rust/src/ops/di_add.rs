@@ -4,6 +4,7 @@
 use super::{requant_rows, RawRows};
 use crate::quant::DynQ;
 
+#[allow(clippy::arithmetic_side_effects)]
 pub fn di_add(a: &DynQ, b: &DynQ, out_bits: u32) -> DynQ {
     let (t, n) = (a.rows(), a.cols());
     assert_eq!(b.rows(), t);
@@ -13,17 +14,19 @@ pub fn di_add(a: &DynQ, b: &DynQ, out_bits: u32) -> DynQ {
     let mut k_in = vec![0i32; t];
     for r in 0..t {
         let kc = a.k[r].max(b.k[r]);
-        let sa = (kc - a.k[r]).min(32);
-        let sb = (kc - b.k[r]).min(32);
-        let ma = (a.m[r] as i64) << sa;
-        let mb = (b.m[r] as i64) << sb;
-        let za = a.zp[r] as i64;
-        let zb = b.zp[r] as i64;
+        let sa = (kc - a.k[r]).min(32); // ovf: small i32 exponents, kc >= k
+        let sb = (kc - b.k[r]).min(32); // ovf: small i32 exponents, kc >= k
+        let ma = i64::from(a.m[r]) << sa; // ovf: m < 2^8, sa <= 32
+        let mb = i64::from(b.m[r]) << sb; // ovf: m < 2^8, sb <= 32
+        let za = i64::from(a.zp[r]);
+        let zb = i64::from(b.zp[r]);
         let arow = a.vals.row(r);
         let brow = b.vals.row(r);
         let prow = &mut p[r * n..(r + 1) * n];
         for c in 0..n {
-            prow[c] = (arow[c] as i64 - za) * ma + (brow[c] as i64 - zb) * mb;
+            let ta = (i64::from(arow[c]) - za) * ma; // ovf: |val-zp| <= 255, ma < 2^40
+            let tb = (i64::from(brow[c]) - zb) * mb; // ovf: |val-zp| <= 255, mb < 2^40
+            prow[c] = ta + tb; // ovf: each term < 2^48
         }
         k_in[r] = kc;
     }

@@ -9,23 +9,25 @@ use super::{fdiv, rdiv};
 
 /// Per-row constant: t = -round(2^k / m_f) (always <= -1).
 #[inline]
+#[allow(clippy::arithmetic_side_effects)]
 pub fn exp_t(m: i32, k: i32) -> i64 {
-    let m = m as i64;
-    let m_f = m + (m >> 1) - (m >> 4);
-    let two_k = 1i64 << k.min(62);
-    -(rdiv(two_k, m_f).max(1))
+    let m = i64::from(m);
+    let m_f = m + (m >> 1) - (m >> 4); // ovf: m < 2^8 (activation mantissa)
+    let two_k = 1i64 << k.min(62); // ovf: shift clamped
+    -(rdiv(two_k, m_f).max(1)) // ovf: result in [1, 2^62], negation safe
 }
 
 /// DI-Exp of a single value x <= 0 with per-row constant `t` from
 /// `exp_t`. Returns the "unshifted" integer exponential (conceptual
 /// scale 1/|t| — callers use ratios only, so it cancels).
 #[inline]
+#[allow(clippy::arithmetic_side_effects)]
 pub fn di_exp_one(x: i64, t: i64) -> i64 {
     debug_assert!(x <= 0 && t < 0);
     let q = fdiv(x, t); // >= 0
-    let r = x - q * t; // in (t, 0]
-    let unshifted = (r >> 1) - t;
-    unshifted >> q.min(62)
+    let r = x - q * t; // ovf: r is the floor-mod remainder, in (t, 0]
+    let unshifted = (r >> 1) - t; // ovf: |r| <= |t| <= 2^62, sum < 2^63
+    unshifted >> q.min(62) // ovf: right shift only narrows
 }
 
 /// DI-Exp over a row (values <= 0, scale m/2^k).

@@ -24,6 +24,7 @@ const RB: usize = 8;
 /// so ANY partition of the rows over spans is bit-identical to the
 /// single-span call — the threaded wrapper below needs no oracle of
 /// its own.
+#[allow(clippy::arithmetic_side_effects)]
 fn gemm_span(x: &DynQ, w: &QWeight, r0: usize, r1: usize, pspan: &mut [i64]) {
     let kdim = x.cols();
     let n = w.wq.cols;
@@ -33,20 +34,20 @@ fn gemm_span(x: &DynQ, w: &QWeight, r0: usize, r1: usize, pspan: &mut [i64]) {
     // in L1, and the inner loop stays unit-stride over the output row
     // (LLVM vectorizes it). Integer accumulation is exact under
     // reordering, so blocking is bit-identical to row-at-a-time GEMV.
-    let rb_cap = RB.min(r1 - r0);
+    let rb_cap = RB.min(r1 - r0); // ovf: r1 >= r0 (caller span)
     let mut acc = vec![0i32; rb_cap * n];
     let mut xc_blk = vec![0i32; rb_cap * kdim];
     let mut r = r0;
     while r < r1 {
-        let rb = RB.min(r1 - r);
+        let rb = RB.min(r1 - r); // ovf: r < r1 in the loop
         acc[..rb * n].iter_mut().for_each(|a| *a = 0);
         for j in 0..rb {
-            let zp = x.zp[r + j];
+            let zp = x.zp[r + j]; // ovf: row indices, bounded by memory
             for (d, &v) in xc_blk[j * kdim..(j + 1) * kdim]
                 .iter_mut()
-                .zip(x.vals.row(r + j).iter())
+                .zip(x.vals.row(r + j).iter()) // ovf: row index, fits memory
             {
-                *d = v - zp;
+                *d = v - zp; // ovf: 8-bit lanes: val in [0,255], zp in [0,255]
             }
         }
         for kk in 0..kdim {
@@ -58,6 +59,8 @@ fn gemm_span(x: &DynQ, w: &QWeight, r0: usize, r1: usize, pspan: &mut [i64]) {
                 }
                 let arow = &mut acc[j * n..(j + 1) * n];
                 for (a, &wv) in arow.iter_mut().zip(wrow.iter()) {
+                    // ovf: |xc| <= 255, |wv| <= 127, kdim <= 4096:
+                    // |acc| <= 255*127*4096 < 2^27 (module doc)
                     *a += xc * wv;
                 }
             }
@@ -67,20 +70,28 @@ fn gemm_span(x: &DynQ, w: &QWeight, r0: usize, r1: usize, pspan: &mut [i64]) {
                 &mut pspan[(r - r0 + j) * n..(r - r0 + j + 1) * n];
             let arow = &acc[j * n..(j + 1) * n];
             for c in 0..n {
-                prow[c] = arow[c] as i64 * w.mw[c] as i64;
+                // ovf: |acc| < 2^27, |mw| < 2^15, product < 2^42
+                prow[c] = i64::from(arow[c]) * i64::from(w.mw[c]);
             }
         }
-        r += rb;
+        r += rb; // ovf: row index, bounded by memory
     }
     // bias fold (Eq. 3 extended): p += fdiv(bq << (k_in - BIAS_Q), m_in)
     if let Some(bq) = &w.bias_q {
         for r in r0..r1 {
-            let sh = (x.k[r] + w.kw - BIAS_Q).clamp(-40, 40);
-            let m_in = x.m[r] as i64;
+            let sh = (x.k[r] + w.kw - BIAS_Q).clamp(-40, 40); // ovf: small exponents
+            let m_in = i64::from(x.m[r]);
             let prow = &mut pspan[(r - r0) * n..(r - r0 + 1) * n];
             for c in 0..n {
-                let num = if sh >= 0 { bq[c] << sh } else { bq[c] >> -sh };
-                prow[c] += fdiv(num, m_in);
+                // ovf: |bq| < 2^23 in practice but the defensive clamp admits
+                // sh = 40, so the up-shift saturates; a bias too large for i64
+                // was already meaningless and the requant rails absorb it
+                let num = if sh >= 0 {
+                    bq[c].saturating_mul(1i64 << sh)
+                } else {
+                    bq[c] >> -sh // ovf: right shift only narrows
+                };
+                prow[c] += fdiv(num, m_in); // ovf: fold < 2^42 + bias < 2^62
             }
         }
     }
@@ -102,6 +113,7 @@ pub fn di_linear_raw(x: &DynQ, w: &QWeight) -> RawRows {
 /// worker pool. Spans split at RB-block boundaries only, so the
 /// result is bit-identical to the serial call at every thread count;
 /// `threads <= 1` (or a single block) never touches the pool.
+#[allow(clippy::arithmetic_side_effects)]
 pub fn di_linear_raw_threads(
     x: &DynQ,
     w: &QWeight,
@@ -120,8 +132,8 @@ pub fn di_linear_raw_threads(
         let bps = blocks.div_ceil(nslots);
         let ptr = SendPtr(p.as_mut_ptr());
         crate::util::worker_pool::broadcast(nslots, |slot| {
-            let r0 = (slot * bps * RB).min(t);
-            let r1 = ((slot + 1) * bps * RB).min(t);
+            let r0 = (slot * bps * RB).min(t); // ovf: row indices, fit memory
+            let r1 = ((slot + 1) * bps * RB).min(t); // ovf: row indices, fit memory
             if r0 >= r1 {
                 return;
             }
@@ -130,15 +142,15 @@ pub fn di_linear_raw_threads(
             // is aliased; `p` outlives the broadcast barrier.
             let pspan = unsafe {
                 std::slice::from_raw_parts_mut(
-                    ptr.0.add(r0 * n),
-                    (r1 - r0) * n,
+                    ptr.0.add(r0 * n), // ovf: in-bounds offset of `p`
+                    (r1 - r0) * n, // ovf: span length, fits memory
                 )
             };
             gemm_span(x, w, r0, r1, pspan);
         });
     }
-    let m_in: Vec<i64> = x.m.iter().map(|&m| m as i64).collect();
-    let k_in: Vec<i32> = x.k.iter().map(|&k| k + w.kw).collect();
+    let m_in: Vec<i64> = x.m.iter().map(|&m| i64::from(m)).collect();
+    let k_in: Vec<i32> = x.k.iter().map(|&k| k + w.kw).collect(); // ovf: small exponents
     RawRows { rows: t, cols: n, p, m_in, k_in }
 }
 

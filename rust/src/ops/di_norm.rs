@@ -6,37 +6,40 @@
 //! The per-row input scale cancels in x/rms(x), so only centered
 //! integers matter. Output is a per-row dynamic requant of Q16 values.
 
-use super::{fdiv, isqrt, rdiv, requant_row};
+use super::{dim_i64, fdiv, isqrt, rdiv, requant_row};
 use crate::quant::DynQ;
 use crate::tensor::IMat;
 
 /// Output fixed-point exponent before requant (intops.NORM_FP_K).
 pub const NORM_FP_K: i32 = 16;
 
+#[allow(clippy::arithmetic_side_effects)]
 pub fn di_norm(x: &DynQ, out_bits: u32, centered: bool) -> DynQ {
     let (t, n) = (x.rows(), x.cols());
     let mut vals = IMat::zeros(t, n);
     let mut m = vec![0i32; t];
     let mut k = vec![0i32; t];
     let mut zp = vec![0i32; t];
-    let dsq = isqrt((n as i64) << 20); // sqrt(N) in Q10
+    let dsq = isqrt(dim_i64(n) << 20); // ovf: sqrt(N) in Q10; width n < 2^40
     let mut xc = vec![0i64; n];
     let mut y = vec![0i64; n];
     for r in 0..t {
-        let zpr = x.zp[r] as i64;
+        let zpr = i64::from(x.zp[r]);
         for (o, &v) in xc.iter_mut().zip(x.vals.row(r).iter()) {
-            *o = v as i64 - zpr;
+            *o = i64::from(v) - zpr; // ovf: |val - zp| <= 255 (8-bit lanes)
         }
         if centered {
             let sum: i64 = xc.iter().sum();
-            let mu = rdiv(sum, n as i64);
+            let mu = rdiv(sum, dim_i64(n));
             for v in xc.iter_mut() {
-                *v -= mu;
+                *v -= mu; // ovf: |xc| <= 255 and |mu| <= 255, result <= 510
             }
         }
+        // ovf: |xc| <= 510, squares <= 2^19, sum over n < 2^40 rows fits i64
         let var: i64 = xc.iter().map(|&v| v * v).sum();
         let std = isqrt(var).max(1);
         for (o, &v) in y.iter_mut().zip(xc.iter()) {
+            // ovf: |v| <= 510, dsq < 2^31 (Q10 sqrt of n<<20), v*dsq<<6 < 2^46
             *o = fdiv(v * dsq << 6, std);
         }
         let (my, ky, z) =

@@ -10,7 +10,7 @@
 //! probability zero; with `mask = None` the row is fully attended.
 
 use super::di_exp::{di_exp_one, exp_t};
-use super::{fdiv, ilog2, rdiv};
+use super::{fdiv, ilog2, narrow_i32, rdiv};
 use crate::quant::K_MAX;
 use crate::trace::{bump, bump_by, health};
 
@@ -18,6 +18,7 @@ use crate::trace::{bump, bump_by, health};
 /// 1/2^(p_out-1), zp = 0). `valid` = number of leading attendable
 /// entries (causal prefix); entries >= valid get probability 0.
 #[allow(clippy::too_many_arguments)]
+#[allow(clippy::arithmetic_side_effects)]
 pub fn di_softmax_row(
     p: &[i64],
     m1: i32,
@@ -30,9 +31,12 @@ pub fn di_softmax_row(
     out: &mut [i32],
     scratch: &mut Vec<i64>,
 ) {
+    // Caller contract (verified by the overflow-checked dev/test
+    // profiles): |scores| < 2^47 and m1*m2 < 2^24, so rng/prod
+    // products below stay under 2^62.
     let n = valid.min(p.len());
-    let m_in = m1 as i64 * m2 as i64;
-    let k_in = k1 + k2;
+    let m_in = i64::from(m1) * i64::from(m2); // ovf: mantissas < 2^12 each
+    let k_in = k1 + k2; // ovf: small i32 exponents
     debug_assert!(m_in >= 1 && k_in >= 0);
     bump(&health().softmax_rows);
     let mut pmax = i64::MIN;
@@ -52,8 +56,10 @@ pub fn di_softmax_row(
         }
         pmin
     } else {
-        let sh = (k_in - ck).clamp(0, 56);
-        let c_i = fdiv((cm as i64) << sh, m_in).max(1);
+        let sh = (k_in - ck).clamp(0, 56); // ovf: small i32 exponents
+        // ovf: cm < 2^8 and sh can reach 56; saturate like requant_row —
+        // a clip window too wide for i64 means "no clip"
+        let c_i = fdiv(i64::from(cm).saturating_mul(1i64 << sh), m_in).max(1);
         let mut pmin = i64::MAX;
         for &v in &p[..n] {
             if v < pmin {
@@ -62,24 +68,30 @@ pub fn di_softmax_row(
         }
         // the clip floor ENGAGES only when the true row range exceeds
         // the window c — that is the accuracy-relevant event to count
+        // ovf: pmax < 2^47 by the caller contract and c_i >= 1
         if pmax - c_i > pmin {
             bump(&health().softmax_clipped_rows);
         }
-        pmin.max(pmax - c_i)
+        pmin.max(pmax - c_i) // ovf: same bound as the guard above
     };
-    let rng = (pmax - floor_v).max(1);
+    let rng = (pmax - floor_v).max(1); // ovf: both < 2^47 (caller contract)
     // 8-bit window requant (Eq. 6-8 on the clipped range)
     let qmax = 255i64;
-    let num = qmax << (k_in + 8).min(56);
-    let k8 = ilog2((num / (rng * m_in)).max(1)).clamp(0, K_MAX);
-    let sh8 = k8 - k_in;
-    let prod = rng * m_in;
-    let m8 = if sh8 >= 0 {
-        (prod << sh8.min(62)) / qmax
-    } else {
-        (prod >> (-sh8).min(62)) / qmax
-    }
-    .clamp(1, 255) as i32;
+    // ovf: qmax < 2^8, shift capped at 55, so num <= (2^8-1) * 2^55 < 2^63
+    let num = qmax << (k_in + 8).min(55);
+    let k8 = ilog2((num / (rng * m_in)).max(1)).clamp(0, K_MAX); // ovf: rng*m_in < 2^62
+    let sh8 = k8 - k_in; // ovf: small i32 exponents
+    let prod = rng * m_in; // ovf: caller contract rng*m_in < 2^62
+    let m8 = narrow_i32(
+        if sh8 >= 0 {
+            // ovf: sh8 >= 0 only when k_in < k8 <= K_MAX, where prod*2^sh8
+            // < qmax*2^(k_in+8) / 2^k8_raw * 2^sh8 <= 2^9 * qmax by Eq. 6
+            (prod << sh8.min(62)) / qmax
+        } else {
+            (prod >> (-sh8).min(62)) / qmax // ovf: right shift only narrows
+        }
+        .clamp(1, 255),
+    );
     // exp of (x8 - 255) at scale m8/2^k8
     let t = exp_t(m8, k8);
     scratch.clear();
@@ -88,20 +100,23 @@ pub fn di_softmax_row(
     let mut underflows = 0u64;
     for &v in &p[..n] {
         let vc = v.max(floor_v);
+        // ovf: 0 <= vc - floor_v <= rng; x8 lands in [0, 255]
         let x8 = rdiv((vc - floor_v) * qmax, rng);
-        let e = di_exp_one(x8 - 255, t);
+        let e = di_exp_one(x8 - 255, t); // ovf: x8 in [0, 255]
         if e == 0 {
             // an ATTENDED entry whose DI-exp rounded to exactly zero
-            underflows += 1;
+            underflows += 1; // ovf: bounded by row length
         }
         scratch.push(e);
-        denom += e;
+        denom += e; // ovf: each e <= |t| < 2^21, rows < 2^40 tokens
     }
     bump_by(&health().exp_underflows, underflows);
     let denom = denom.max(1);
-    let pout_max = 1i64 << (p_out - 1);
+    debug_assert!(p_out >= 1 && p_out <= 16);
+    let pout_max = 1i64 << (p_out - 1); // ovf: p_out in [1, 16]
     for (o, &e) in out[..n].iter_mut().zip(scratch.iter()) {
-        *o = rdiv(e * pout_max, denom) as i32;
+        // ovf: e <= denom, so the scaled ratio is in [0, pout_max]
+        *o = narrow_i32(rdiv(e * pout_max, denom));
     }
     for o in out[n..].iter_mut() {
         *o = 0;
@@ -119,6 +134,7 @@ pub fn di_softmax_row(
 /// so the tiled kernel stays bit-identical to the row-at-a-time path —
 /// and one scratch buffer serves all rows (no per-row allocation).
 #[allow(clippy::too_many_arguments)]
+#[allow(clippy::arithmetic_side_effects)]
 pub fn di_softmax_rows(
     scores: &[i64],
     stride: usize,
@@ -145,7 +161,7 @@ pub fn di_softmax_rows(
             k2,
             p_out,
             clip,
-            (valid0 + r).min(stride),
+            (valid0 + r).min(stride), // ovf: token indices, bounded by memory
             &mut out[r * stride..(r + 1) * stride],
             scratch,
         );

@@ -38,6 +38,7 @@ impl AlphaSmooth {
     }
 }
 
+#[allow(clippy::arithmetic_side_effects)]
 pub fn di_swiglu(
     gate: &DynQ,
     up: &DynQ,
@@ -52,30 +53,34 @@ pub fn di_swiglu(
     let mut p = vec![0i64; t * n];
     let mut m_in = vec![0i64; t];
     let mut k_in = vec![0i32; t];
-    let psig_max = 1i64 << (p_sig - 1);
+    debug_assert!(p_sig >= 1 && p_sig <= 16);
+    let psig_max = 1i64 << (p_sig - 1); // ovf: p_sig in [1, 16]
     let mut xs = vec![0i64; n];
     for r in 0..t {
-        let zg = gate.zp[r] as i64;
-        let zu = up.zp[r] as i64;
+        let zg = i64::from(gate.zp[r]);
+        let zu = i64::from(up.zp[r]);
         let grow = gate.vals.row(r);
         let urow = up.vals.row(r);
         // de-smooth the sigmoid argument: x / alpha = (x << ak) / am
         for c in 0..n {
-            let gc = grow[c] as i64 - zg;
-            xs[c] = fdiv(gc << alpha.ak[c].min(24), alpha.am[c] as i64);
+            let gc = i64::from(grow[c]) - zg; // ovf: |val - zp| <= 255
+            // ovf: |gc| <= 255, shift <= 24, so |gc << ak| < 2^33
+            xs[c] = fdiv(gc << alpha.ak[c].min(24), i64::from(alpha.am[c]));
         }
         let te = exp_t(gate.m[r], gate.k[r]);
         let prow = &mut p[r * n..(r + 1) * n];
         for c in 0..n {
             let e_d = di_exp_one(xs[c].min(0), te);
             let e_m = di_exp_one((-xs[c]).min(0), te);
+            // ovf: e_d <= |t| < 2^21 (ACT_K_MAX), psig_max <= 2^15: num < 2^36
             let sig = rdiv(e_d * psig_max, (e_d + e_m).max(1));
-            let gc = grow[c] as i64 - zg;
-            let uc = urow[c] as i64 - zu;
-            prow[c] = gc * sig * uc;
+            let gc = i64::from(grow[c]) - zg; // ovf: |val - zp| <= 255
+            let uc = i64::from(urow[c]) - zu; // ovf: |val - zp| <= 255
+            prow[c] = gc * sig * uc; // ovf: 255 * 2^15 * 255 < 2^32
         }
-        m_in[r] = gate.m[r] as i64 * up.m[r] as i64;
-        k_in[r] = gate.k[r] + up.k[r] + (p_sig as i32 - 1);
+        // ovf: activation mantissas are < 2^8 each
+        m_in[r] = i64::from(gate.m[r]) * i64::from(up.m[r]);
+        k_in[r] = gate.k[r] + up.k[r] + (p_sig as i32 - 1); // ovf: small exponents
     }
     let raw = RawRows { rows: t, cols: n, p, m_in, k_in };
     requant_rows(&raw, out_bits, None)

@@ -8,6 +8,15 @@
 //!    banker's rounding;
 //!  * right shifts on negative ints are arithmetic (floor) shifts;
 //!  * i32 accumulation where bounds allow, i64 for requantization.
+//!
+//! Overflow policy: arithmetic in this tree is bare (checked in the
+//! dev/test profiles via `overflow-checks = true`, wrapping in release)
+//! and every bare site must carry an `// ovf:` bound justification or
+//! use an explicit `wrapping_*`/`saturating_*`/`checked_*` method —
+//! enforced by `illm-lint` (see `crate::lint`) and mirrored by the
+//! module-scoped `clippy::arithmetic_side_effects` deny below: new
+//! functions must opt in with a justified `#[allow]`.
+#![deny(clippy::arithmetic_side_effects)]
 
 pub mod di_add;
 pub mod di_exp;
@@ -22,12 +31,13 @@ use crate::tensor::IMat;
 
 /// Floor division (numpy `//` semantics).
 #[inline]
+#[allow(clippy::arithmetic_side_effects)]
 pub fn fdiv(a: i64, b: i64) -> i64 {
     debug_assert!(b != 0);
     let q = a / b;
     let r = a % b;
     if r != 0 && ((r < 0) != (b < 0)) {
-        q - 1
+        q - 1 // ovf: r != 0 rules out a = i64::MIN, b = 1, so q > i64::MIN
     } else {
         q
     }
@@ -35,30 +45,33 @@ pub fn fdiv(a: i64, b: i64) -> i64 {
 
 /// Round-half-up division for b > 0: floor((a + b/2) / b).
 #[inline]
+#[allow(clippy::arithmetic_side_effects)]
 pub fn rdiv(a: i64, b: i64) -> i64 {
     debug_assert!(b > 0);
-    fdiv(a + b / 2, b)
+    fdiv(a + b / 2, b) // ovf: caller contract |a|, b < 2^62 (requant/softmax operands)
 }
 
 /// floor(log2(x)) for x >= 1 (MSB method, paper Eq. 6).
 #[inline]
+#[allow(clippy::arithmetic_side_effects)]
 pub fn ilog2(x: i64) -> i32 {
     debug_assert!(x >= 1);
-    63 - x.leading_zeros() as i32
+    63 - x.leading_zeros() as i32 // ovf: leading_zeros of a positive i64 is in [0, 62]
 }
 
 /// Bit-wise integer square root (paper Alg. 4 I-SQRT): largest n with
 /// n*n <= x, non-restoring method over 31 bit pairs (covers x < 2^62).
+#[allow(clippy::arithmetic_side_effects)]
 pub fn isqrt(x: i64) -> i64 {
     debug_assert!(x >= 0);
     let mut n: i64 = 0;
     let mut rem = x;
     for v in (0..=30).rev() {
-        let bit = 1i64 << v;
-        let temp = ((n << 1) + bit) << v;
+        let bit = 1i64 << v; // ovf: v <= 30
+        let temp = ((n << 1) + bit) << v; // ovf: n < 2^31 invariant, so temp < 2^62
         if rem >= temp {
-            rem -= temp;
-            n += bit;
+            rem -= temp; // ovf: guarded by rem >= temp
+            n += bit; // ovf: n stays < 2^31 (one bit per position <= 30)
         }
     }
     n
@@ -67,8 +80,32 @@ pub fn isqrt(x: i64) -> i64 {
 /// Integer division to a target bit precision (paper's IntDiv):
 /// round(a / b * 2^(p-1)), all-integer.
 #[inline]
+#[allow(clippy::arithmetic_side_effects)]
 pub fn intdiv(a: i64, b: i64, p_bits: u32) -> i64 {
-    rdiv(a << (p_bits - 1), b)
+    debug_assert!(p_bits >= 1 && p_bits <= 16);
+    rdiv(a << (p_bits - 1), b) // ovf: p_bits <= 16 and softmax callers keep |a| <= b < 2^47
+}
+
+/// usize dimension -> i64, explicit about the (theoretical) truncation
+/// on targets where usize exceeds 63 bits. Dimensions are bounded by
+/// allocated memory, so this is lossless in practice; debug builds
+/// verify.
+#[inline]
+pub fn dim_i64(n: usize) -> i64 {
+    debug_assert!(i64::try_from(n).is_ok(), "dimension {n} overflows i64");
+    n as i64
+}
+
+/// Checked i64 -> i32 narrowing for values proven to fit by a quant
+/// bound (requant outputs are in [0, qmax], qmax < 2^8; shift results
+/// are clamped first). Debug builds verify the proof dynamically.
+#[inline]
+pub fn narrow_i32(v: i64) -> i32 {
+    debug_assert!(
+        v >= i64::from(i32::MIN) && v <= i64::from(i32::MAX),
+        "narrow_i32: {v} out of i32 range"
+    );
+    v as i32
 }
 
 /// Raw integer rows with a per-row dyadic scale — the intermediate
@@ -91,6 +128,7 @@ impl RawRows {
 /// Returns (vals written into `out`, m_y, k_y, zp).
 /// `clip`: optional (cm, ck) dyadic clip constant (Eq. 10) bounding the
 /// quantization window to c = cm/2^ck in input float units.
+#[allow(clippy::arithmetic_side_effects)]
 pub fn requant_row(
     p: &[i64],
     m_in: i64,
@@ -99,8 +137,11 @@ pub fn requant_row(
     clip: Option<(i32, i32)>,
     out: &mut [i32],
 ) -> (i32, i32, i32) {
+    // Caller contract (verified by the overflow-checked dev/test
+    // profiles): |p| < 2^47, m_in < 2^24, so every rng/prod product
+    // below stays under 2^62.
     debug_assert!(m_in >= 1 && k_in >= 0 && k_in <= 56);
-    let qmax = (1i64 << bits) - 1;
+    let qmax = (1i64 << bits) - 1; // ovf: bits <= 8
     // include zero in the range (see quant::quantize_rows_f32)
     let mut pmax = 0i64;
     let mut pmin = 0i64;
@@ -114,28 +155,34 @@ pub fn requant_row(
     }
     let mut clipped = false;
     if let Some((cm, ck)) = clip {
-        let sh = (k_in - ck).clamp(0, 56);
-        let c_i = fdiv((cm as i64) << sh, m_in).max(1);
+        let sh = (k_in - ck).clamp(0, 56); // ovf: small i32 exponents
+        // ovf: cm < 2^8 and sh can reach 56, so the shifted clip constant is
+        // computed saturating — a clip window too wide for i64 means "no clip".
+        let c_i = fdiv(i64::from(cm).saturating_mul(1i64 << sh), m_in).max(1);
+        // ovf: pmax >= 0 >= pmin and c_i >= 1, so pmax - c_i > i64::MIN
         if pmax - c_i > pmin {
-            pmin = pmax - c_i;
+            pmin = pmax - c_i; // ovf: pmax >= 0 >= pmin and c_i >= 1
             clipped = true;
         }
     }
-    let rng = (pmax - pmin).max(1);
+    let rng = (pmax - pmin).max(1); // ovf: pmax >= 0 >= pmin, both < 2^62
 
     // Eq. 6: k_y via MSB of qmax * 2^(k_in+8) / (rng * m_in)
-    let num = qmax << (k_in + 8).min(56);
-    let ky_raw = ilog2((num / (rng * m_in)).max(1));
+    // ovf: qmax < 2^8, shift capped at 55, so num <= (2^8-1) * 2^55 < 2^63
+    let num = qmax << (k_in + 8).min(55);
+    let ky_raw = ilog2((num / (rng * m_in)).max(1)); // ovf: caller contract rng*m_in < 2^62
     let k_y = ky_raw.clamp(0, ACT_K_MAX);
     // Eq. 7: m_y = floor(rng * m_in * 2^(k_y - k_in) / qmax)
-    let sh = k_y - k_in;
-    let prod = rng * m_in;
+    let sh = k_y - k_in; // ovf: small i32 exponents
+    let prod = rng * m_in; // ovf: caller contract rng*m_in < 2^62
     let my_raw = if sh >= 0 {
+        // ovf: sh >= 0 only when k_in < k_y <= ACT_K_MAX, where rng*m_in*2^sh
+        // < qmax*2^(k_in+8) / 2^ky_raw * 2^sh <= 2^9 * qmax by Eq. 6
         (prod << sh.min(62)) / qmax
     } else {
-        (prod >> (-sh).min(62)) / qmax
+        (prod >> (-sh).min(62)) / qmax // ovf: right shift only narrows
     };
-    let m_y = my_raw.clamp(1, 255) as i32;
+    let m_y = narrow_i32(my_raw.clamp(1, 255));
     // health telemetry: a scale hitting its rail means the row's
     // dynamic range outran the dyadic representation (ky_raw >= 0
     // always, since ilog2's argument is >= 1)
@@ -143,15 +190,18 @@ pub fn requant_row(
         crate::trace::bump(&crate::trace::health().requant_scale_clamps);
     }
     // Eq. 8 (round-half-up)
-    let zp = rdiv(-pmin * qmax, rng) as i32;
+    // ovf: 0 <= -pmin <= rng < 2^62/qmax by the caller contract
+    let zp = narrow_i32(rdiv(-pmin * qmax, rng));
     if clipped {
         for (o, &v) in out.iter_mut().zip(p.iter()) {
             let vc = v.max(pmin);
-            *o = rdiv((vc - pmin) * qmax, rng) as i32;
+            // ovf: 0 <= vc - pmin <= rng; rdiv result is in [0, qmax]
+            *o = narrow_i32(rdiv((vc - pmin) * qmax, rng));
         }
     } else {
         for (o, &v) in out.iter_mut().zip(p.iter()) {
-            *o = rdiv((v - pmin) * qmax, rng) as i32;
+            // ovf: 0 <= v - pmin <= rng; rdiv result is in [0, qmax]
+            *o = narrow_i32(rdiv((v - pmin) * qmax, rng));
         }
     }
     (m_y, k_y, zp)
@@ -193,6 +243,7 @@ pub struct CommonQ {
     pub zp: i32,
 }
 
+#[allow(clippy::arithmetic_side_effects)]
 pub fn requant_common(
     centered: &[i64],
     rows: usize,
@@ -205,15 +256,18 @@ pub fn requant_common(
     let kc = k.iter().copied().max().unwrap_or(0);
     let mut aligned = vec![0i64; rows * cols];
     for r in 0..rows {
-        let sh = (kc - k[r]).min(32);
-        let mult = (m[r] as i64) << sh;
+        let sh = (kc - k[r]).min(32); // ovf: small i32 exponents, kc >= k[r]
+        let mult = i64::from(m[r]) << sh; // ovf: m < 2^8 mantissa, sh <= 32
         for c in 0..cols {
+            // ovf: caller contract |centered| < 2^21 (8-bit centered values or
+            // merge-aligned heads), mult < 2^40, product < 2^61
             aligned[r * cols + c] = centered[r * cols + c] * mult;
         }
     }
     let mut out = vec![0i32; rows * cols];
     let (my, ky, zp) = requant_row(&aligned, 1, kc, bits, None, &mut out);
-    let vals = out.iter().map(|&v| v as i64 - zp as i64).collect();
+    // ovf: requant outputs and zp are both in [0, qmax], qmax < 2^8
+    let vals = out.iter().map(|&v| i64::from(v) - i64::from(zp)).collect();
     CommonQ { rows, cols, vals, m: my, k: ky, zp }
 }
 

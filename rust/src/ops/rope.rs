@@ -17,6 +17,9 @@ pub struct RopeTables {
 
 impl RopeTables {
     /// Offline table build (matches intops.rope_tables bit-for-bit).
+    /// Float math is allowlisted here (lint_allow.toml): tables are
+    /// built once at load time, never on the serving path.
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn new(head_dim: usize, max_seq: usize, theta: f64) -> Self {
         let half = head_dim / 2;
         let mut cos_q = Vec::with_capacity(max_seq * half);
@@ -34,24 +37,29 @@ impl RopeTables {
     }
 
     /// From pre-built integer tables (e.g. artifact params).
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn from_raw(cos_q: Vec<i32>, sin_q: Vec<i32>, half: usize) -> Self {
-        let max_seq = cos_q.len() / half;
+        let max_seq = cos_q.len() / half; // ovf: half > 0 for any real head_dim
         Self { cos_q, sin_q, half, max_seq }
     }
 
     /// Rotate one head-row in place: x is the CENTERED head vector
     /// (len = 2*half, half-split layout), `pos` the absolute position.
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn rotate(&self, x: &mut [i64], pos: usize) {
         debug_assert_eq!(x.len(), 2 * self.half);
         debug_assert!(pos < self.max_seq, "pos {pos} >= {}", self.max_seq);
-        let base = pos * self.half;
-        let round = 1i64 << (ROPE_Q - 1);
+        let base = pos * self.half; // ovf: pos < max_seq, table fits memory
+        let round = 1i64 << (ROPE_Q - 1); // ovf: ROPE_Q = 14
         for j in 0..self.half {
-            let c = self.cos_q[base + j] as i64;
-            let s = self.sin_q[base + j] as i64;
+            let c = i64::from(self.cos_q[base + j]);
+            let s = i64::from(self.sin_q[base + j]);
             let x1 = x[j];
             let x2 = x[self.half + j];
+            // ovf: |x| <= 255 centered, |cos_q|,|sin_q| <= 2^14 (Q14),
+            // so each product < 2^23 and the rounded sum < 2^25
             x[j] = (x1 * c - x2 * s + round) >> ROPE_Q;
+            // ovf: same Q14 bound as the line above
             x[self.half + j] = (x1 * s + x2 * c + round) >> ROPE_Q;
         }
     }

@@ -62,7 +62,7 @@ pub fn bench<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> Stats {
         std::hint::black_box(f());
         samples.push(s.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let n = samples.len().max(1);
     let mean = samples.iter().sum::<f64>() / n as f64;
     let pct = |p: f64| samples[(p * (n - 1) as f64) as usize];

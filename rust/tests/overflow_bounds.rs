@@ -1,0 +1,300 @@
+//! Overflow-bound property tests: drive the DI kernels at the exact
+//! magnitudes their `// ovf:` annotations claim are safe, under the
+//! overflow-checked test profile (Cargo.toml `[profile.test]`). A
+//! bound annotation that over-promises — an accumulator, fold, clip
+//! shift or alignment product that can actually escape its stated
+//! width — aborts these tests instead of silently wrapping in release.
+//!
+//! The documented extremes (ops/di_matmul.rs module doc and the
+//! requant_row / di_softmax_row caller contracts):
+//!
+//!  * GEMM accumulate: |x - zp| <= 255, |w| <= 127, K <= 4096
+//!    -> |acc| <= 255*127*4096 < 2^27;
+//!  * mantissa fold: |acc| * mw < 2^27 * 2^15 = 2^42;
+//!  * requant/softmax inputs: |p| < 2^47, m_in < 2^24, k_in <= 56,
+//!    with the clip-constant shift `(k_in - ck).clamp(0, 56)`
+//!    saturating (too-wide window means "no clip", never a wrap).
+
+use illm::ops::di_matmul::{di_linear_raw, di_linear_raw_threads};
+use illm::ops::di_softmax::di_softmax_rows;
+use illm::ops::{requant_row, requant_rows};
+use illm::quant::{DynQ, QWeight, ACT_K_MAX, W_K_MAX};
+use illm::tensor::IMat;
+use illm::util::rng::Pcg64;
+
+/// Longest K the GEMM accumulator bound admits (module doc: K <= 4096).
+const KDIM: usize = 4096;
+const N: usize = 8;
+
+/// Extreme 8-bit activation rows: even rows all-255 with zp 0
+/// (centered +255), odd rows all-0 with zp 255 (centered -255), at
+/// the coarsest per-row dyadic scale (m = 255, k = ACT_K_MAX).
+fn extreme_x(t: usize) -> DynQ {
+    let mut vals = vec![0i32; t * KDIM];
+    let mut zp = vec![0i32; t];
+    for r in 0..t {
+        if r % 2 == 0 {
+            vals[r * KDIM..(r + 1) * KDIM]
+                .iter_mut()
+                .for_each(|v| *v = 255);
+        } else {
+            zp[r] = 255;
+        }
+    }
+    DynQ {
+        vals: IMat::from_vec(t, KDIM, vals),
+        m: vec![255; t],
+        k: vec![ACT_K_MAX; t],
+        zp,
+        bits: 8,
+    }
+}
+
+/// Extreme weight: every element +/-127 (sign alternating by output
+/// column), per-channel mantissas at the i16 rail, shared exponent at
+/// the weight cap.
+fn extreme_w(bias_q: Option<Vec<i64>>) -> QWeight {
+    let mut wq = vec![0i32; KDIM * N];
+    for (i, v) in wq.iter_mut().enumerate() {
+        *v = if (i % N) % 2 == 0 { 127 } else { -127 };
+    }
+    QWeight {
+        wq: IMat::from_vec(KDIM, N, wq),
+        mw: vec![32767; N],
+        kw: W_K_MAX,
+        bias_q,
+        bits: 8,
+    }
+}
+
+#[test]
+fn gemm_accumulator_and_fold_at_documented_extremes() {
+    let t = 16; // two RB=8 blocks, so the threaded path really splits
+    let x = extreme_x(t);
+    let w = extreme_w(None);
+    let raw = di_linear_raw(&x, &w);
+    let acc = 255i64 * 127 * KDIM as i64;
+    assert!(acc < 1 << 27, "doc bound: |acc| < 2^27");
+    let fold = acc * 32767;
+    assert!(fold < 1 << 42, "doc bound: |fold| < 2^42");
+    assert!(fold < 1 << 47, "requant caller contract: |p| < 2^47");
+    for r in 0..t {
+        let row_sign = if r % 2 == 0 { 1 } else { -1 };
+        for c in 0..N {
+            let sign = row_sign * if c % 2 == 0 { 1 } else { -1 };
+            assert_eq!(raw.row(r)[c], sign * fold, "row {r} col {c}");
+        }
+        assert_eq!(raw.m_in[r], 255);
+        assert_eq!(raw.k_in[r], ACT_K_MAX + W_K_MAX);
+    }
+    // requantizing the extreme raw rows lands exactly on the 8-bit
+    // range ends (and exercises requant_row at rng = 2 * 2^42)
+    let q = requant_rows(&raw, 8, None);
+    for r in 0..t {
+        for c in 0..N {
+            let hi = (c % 2 == 0) == (r % 2 == 0);
+            assert_eq!(q.vals.row(r)[c], if hi { 255 } else { 0 });
+        }
+    }
+    // the worker-pool GEMM is bit-identical at the extremes too
+    let rawt = di_linear_raw_threads(&x, &w, 4);
+    assert_eq!(raw.p, rawt.p);
+    assert_eq!(raw.m_in, rawt.m_in);
+    assert_eq!(raw.k_in, rawt.k_in);
+}
+
+#[test]
+fn bias_fold_at_extreme_exponent_gap() {
+    // bias fold shift: k_in - BIAS_Q = 44 - 16 = 28, near the
+    // defensive clamp; |bq| at its documented 2^23 practical rail
+    let bq = (1i64 << 23) - 1;
+    let x = extreme_x(2);
+    let w = extreme_w(Some(vec![bq; N]));
+    let raw = di_linear_raw(&x, &w);
+    let fold = 255i64 * 127 * KDIM as i64 * 32767;
+    let bias = (bq << 28) / 255; // fdiv == / for positive operands
+    for c in 0..N {
+        let sign = if c % 2 == 0 { 1 } else { -1 };
+        assert_eq!(raw.row(0)[c], sign * fold + bias);
+        assert_eq!(raw.row(1)[c], -sign * fold + bias);
+    }
+}
+
+#[test]
+fn requant_clip_window_saturates_to_no_clip() {
+    // k_in at the contract ceiling (56) with ck = 0: 240 << 56
+    // overflows i64, so the shifted clip constant must saturate and
+    // disable the clip rather than wrap into a nonsense window.
+    let p = [1i64 << 46, -(1i64 << 46), 12345, 0];
+    let mut out_clip = [0i32; 4];
+    let mut out_ref = [0i32; 4];
+    let sc = requant_row(&p, 1, 56, 8, Some((240, 0)), &mut out_clip);
+    let sr = requant_row(&p, 1, 56, 8, None, &mut out_ref);
+    assert_eq!(out_clip, out_ref, "saturated clip must mean no clip");
+    assert_eq!(sc, sr);
+    assert_eq!(out_ref[0], 255);
+    assert_eq!(out_ref[1], 0);
+}
+
+#[test]
+fn requant_engaged_clip_floors_the_window() {
+    // c = 240/2^4 = 15 float units at scale 1/2^4: the window is 240
+    // counts, so 1000 - 240 = 760 becomes the floor
+    let p = [1000i64, 0, 800, 760];
+    let mut out = [0i32; 4];
+    requant_row(&p, 1, 4, 8, Some((240, 4)), &mut out);
+    assert_eq!(out[0], 255);
+    assert_eq!(out[1], 0, "below-floor entries collapse to 0");
+    assert_eq!(out[3], 0, "the floor itself maps to 0");
+    assert!(out[2] > 0 && out[2] < 255, "in-window entry: {}", out[2]);
+}
+
+#[test]
+fn gemm_matches_i128_reference_on_random_extreme_rows() {
+    // random {0, 255} activations against random +/-127 weights at
+    // the longest K: the i32 accumulator must agree with an i128
+    // reference that cannot wrap
+    let mut rng = Pcg64::new(0x0BF1);
+    for case in 0..4u64 {
+        let t = 2;
+        let mut vals = vec![0i32; t * KDIM];
+        for v in vals.iter_mut() {
+            *v = if rng.below(2) == 0 { 0 } else { 255 };
+        }
+        let zp = vec![128i32; t];
+        let x = DynQ {
+            vals: IMat::from_vec(t, KDIM, vals),
+            m: vec![200; t],
+            k: vec![ACT_K_MAX; t],
+            zp,
+            bits: 8,
+        };
+        let mut wq = vec![0i32; KDIM * N];
+        for v in wq.iter_mut() {
+            *v = if rng.below(2) == 0 { 127 } else { -127 };
+        }
+        let w = QWeight {
+            wq: IMat::from_vec(KDIM, N, wq),
+            mw: vec![32767; N],
+            kw: W_K_MAX,
+            bias_q: None,
+            bits: 8,
+        };
+        let raw = di_linear_raw(&x, &w);
+        for r in 0..t {
+            for c in 0..N {
+                let mut want = 0i128;
+                for kk in 0..KDIM {
+                    let xc = i128::from(x.vals.row(r)[kk] - x.zp[r]);
+                    want += xc * i128::from(w.wq.row(kk)[c]);
+                }
+                want *= i128::from(w.mw[c]);
+                assert_eq!(
+                    i128::from(raw.row(r)[c]),
+                    want,
+                    "case {case} row {r} col {c}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn softmax_rows_at_shift_cap_with_clip_and_masked_tail() {
+    // rows 0/1 run at k_in = k1 + k2 = 55: the `(k_in + 8).min(55)`
+    // window-solve cap engages, m1 * m2 sits at the 255*255 mantissa
+    // extreme, and scores reach the |p| < 2^47 contract edge.
+    let stride = 6;
+    let (m2, k2) = (255, 20);
+    let m1 = [255, 255, 1];
+    let k1 = [35, 35, 0];
+    let clip = Some((240, 4));
+    // integer clip window for rows 0/1: c * 2^(k_in-ck) / (m1*m2)
+    let c_i = (240i64 << (55 - 4)) / (255 * 255);
+    let big = 1i64 << 46;
+    let scores = vec![
+        // row 0 (valid 4): two tied maxima, one deep-clipped entry,
+        // one near-window-top entry (c/8 ~ 1.9 logits below the max,
+        // exp(-1.9) ~ 0.15 keeps visible mass); garbage past the
+        // causal prefix
+        big, big - 2 * c_i, big, big - c_i / 8, -big, big,
+        // row 1 (valid 5): a single dominant score
+        big, 0, 0, 0, 0, big,
+        // row 2 (valid 6, k_in = 20): exactly uniform scores
+        1000, 1000, 1000, 1000, 1000, 1000,
+    ];
+    let mut out = vec![-1i32; scores.len()];
+    let mut scratch = Vec::new();
+    di_softmax_rows(&scores, stride, &m1, &k1, m2, k2, 8, clip, 4,
+                    &mut out, &mut scratch);
+    let (r0, r1, r2) = (&out[..6], &out[6..12], &out[12..]);
+    // row 0: tied maxima split the mass equally, the deep-clipped
+    // entry underflows to zero, masked tail is forced to zero
+    assert_eq!(r0[0], r0[2], "tied maxima must tie: {r0:?}");
+    assert!(r0[0] >= 32, "dominant entries carry the mass: {r0:?}");
+    assert_eq!(r0[1], 0, "entry 2*c below the max must vanish");
+    assert!(r0[3] > 0, "in-window entry keeps weight: {r0:?}");
+    assert_eq!(&r0[4..], &[0, 0], "masked tail must be zero");
+    let s0: i64 = r0.iter().map(|&v| i64::from(v)).sum();
+    assert!((s0 - 128).abs() <= 4, "row 0 mass {s0}");
+    // row 1: everything else is >= c below the max
+    assert!(r1[0] >= 124, "lone max takes the row: {r1:?}");
+    assert_eq!(&r1[1..], &[0, 0, 0, 0, 0]);
+    // row 2: uniform scores -> uniform probabilities
+    let s2: i64 = r2.iter().map(|&v| i64::from(v)).sum();
+    assert!((s2 - 128).abs() <= 6, "row 2 mass {s2}");
+    for &v in r2 {
+        assert!((20..=22).contains(&v), "uniform row skewed: {r2:?}");
+    }
+}
+
+#[test]
+fn softmax_rows_random_extreme_sweep() {
+    // Pcg64-driven sweep over random strides, scales and clip modes
+    // with scores spanning the full |p| < 2^47 contract range. Under
+    // overflow-checks this is the dynamic proof of the kernel's ovf
+    // annotations; the assertions pin the output invariants (range,
+    // causal mask, probability mass).
+    let mut rng = Pcg64::new(0xB0B5_0FF);
+    let mut scratch = Vec::new();
+    for case in 0..300u64 {
+        let stride = 1 + rng.below(12);
+        let t = 1 + rng.below(4);
+        let m1: Vec<i32> =
+            (0..t).map(|_| 1 + rng.below(255) as i32).collect();
+        let m2 = 1 + rng.below(255) as i32;
+        let k2 = rng.below(21) as i32;
+        let k1: Vec<i32> = (0..t)
+            .map(|_| rng.below((56 - k2) as usize) as i32)
+            .collect();
+        let scores: Vec<i64> = (0..t * stride)
+            .map(|_| (rng.next_u64() >> 17) as i64 - (1 << 46))
+            .collect();
+        let clip = if rng.below(2) == 0 { Some((240, 4)) } else { None };
+        let valid0 = 1 + rng.below(stride);
+        let mut out = vec![-1i32; t * stride];
+        di_softmax_rows(&scores, stride, &m1, &k1, m2, k2, 8, clip,
+                        valid0, &mut out, &mut scratch);
+        for r in 0..t {
+            let row = &out[r * stride..(r + 1) * stride];
+            let valid = (valid0 + r).min(stride);
+            for (c, &v) in row.iter().enumerate() {
+                assert!(
+                    (0..=128).contains(&v),
+                    "case {case} row {r} col {c}: prob {v} escapes \
+                     [0, 128]"
+                );
+                if c >= valid {
+                    assert_eq!(v, 0, "case {case}: masked entry");
+                }
+            }
+            let mass: i64 =
+                row.iter().map(|&v| i64::from(v)).sum();
+            let tol = stride as i64 / 2 + 2;
+            assert!(
+                (mass - 128).abs() <= tol,
+                "case {case} row {r}: mass {mass} (tol {tol})"
+            );
+        }
+    }
+}
