@@ -5,8 +5,8 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-full test smoke bench-json trace-smoke \
-	trace-overhead lint
+.PHONY: artifacts artifacts-full test smoke smoke-faults bench-json \
+	trace-smoke trace-overhead lint
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../artifacts --fast
@@ -32,6 +32,18 @@ lint:
 smoke:
 	cd rust && ILLM_THREADS=1 cargo bench --bench perf_serving -- --smoke
 	cd rust && ILLM_THREADS=4 cargo bench --bench perf_serving -- --smoke
+
+# graceful-degradation gate: page-squeeze + deterministic fault
+# injection through the real engine (preempt / restore bit-identity /
+# typed rejection / pool drains to zero), at both thread counts.
+# Fault arming is process-global, so the binary runs single-threaded;
+# set ILLM_FAULTS="alloc_fail_at=N,worker_panic_at=M,..." to sweep
+# other schedules without recompiling.
+smoke-faults:
+	cd rust && ILLM_THREADS=1 cargo test --release --test faults \
+		-- --test-threads=1
+	cd rust && ILLM_THREADS=4 cargo test --release --test faults \
+		-- --test-threads=1
 
 # serving bench + machine-readable rust/BENCH_serving.json (decode and
 # prefill tok/s, latency percentiles, pool high-water, thread count,

@@ -14,6 +14,11 @@ Checks, in order:
     decode-wave span exists, at least one wave-level "decode-batch"
     span (cat == "engine", the single batched forward every
     decode-wave of that step shares) must exist too
+  * graceful degradation (vacuous when no faults occurred): every
+    preempted request resolves — it is later restored ("restoring",
+    emitted when it checkpointed generated tokens) and finishes, or
+    is rejected with a typed reason; "restoring" only ever follows a
+    preemption; no request is both rejected and finished
 
 Stdlib only (the container has no extra wheels). Exit 0 on success
 with a one-line summary; exit 1 with "check_trace: FAIL: ..." on the
@@ -82,6 +87,10 @@ def main():
     n_phase = 0
     n_decode_wave = 0
     n_decode_batch = 0
+    # degradation bookkeeping: req id -> set of degradation events,
+    # plus whether any preemption checkpointed generated tokens
+    degrade = {}
+    preempted_with_tokens = set()
     for i, e in enumerate(events):
         check_event(i, e)
         if e["cat"] == "phase":
@@ -96,6 +105,12 @@ def main():
         req = e.get("args", {}).get("req")
         if req is not None and e["name"] in LIFECYCLE:
             per_req.setdefault(req, set()).add(e["name"])
+        if req is not None and e["name"] in ("preempted", "restoring",
+                                            "rejected", "finished"):
+            degrade.setdefault(req, set()).add(e["name"])
+            if (e["name"] == "preempted"
+                    and e.get("args", {}).get("generated", 0) > 0):
+                preempted_with_tokens.add(req)
 
     complete = [r for r, names in sorted(per_req.items())
                 if names.issuperset(LIFECYCLE)]
@@ -110,10 +125,35 @@ def main():
              "'decode-batch' span — decode ran outside the batched "
              "path")
 
+    # graceful-degradation chain (vacuously true without faults):
+    # preempt -> restore -> finished, or a typed rejection
+    n_preempt = n_restore = n_reject = 0
+    for req, names in sorted(degrade.items()):
+        if "preempted" in names:
+            n_preempt += 1
+            if not names & {"finished", "rejected"}:
+                fail(f"req {req} was preempted but never finished "
+                     "nor rejected (lost request)")
+            if (req in preempted_with_tokens
+                    and not names & {"restoring", "rejected"}):
+                fail(f"req {req} was preempted with generated tokens "
+                     "but never restored nor rejected")
+        if "restoring" in names:
+            n_restore += 1
+            if "preempted" not in names:
+                fail(f"req {req} has a 'restoring' event without a "
+                     "preceding preemption")
+        if "rejected" in names:
+            n_reject += 1
+            if "finished" in names:
+                fail(f"req {req} is both rejected and finished")
+
     print(f"check_trace: OK: {len(events)} events, "
           f"{len(complete)}/{len(per_req)} requests with the full "
           f"lifecycle chain, {n_phase} phase events, "
-          f"{n_decode_batch} batched decode waves")
+          f"{n_decode_batch} batched decode waves, "
+          f"{n_preempt} preemptions / {n_restore} restores / "
+          f"{n_reject} rejections")
 
 
 if __name__ == "__main__":

@@ -48,14 +48,77 @@
 //!    wave-workers × attention-threads never exceeds it. Admission,
 //!    sampling, eviction and metrics folding stay on the scheduler
 //!    thread. Results are bit-identical at every thread count.
+//!
+//! # Graceful degradation under KV pressure (PR 9)
+//!
+//! Every engine call on the serving path is FALLIBLE (the `try_*`
+//! trait methods surface `PoolExhausted`; panics from a poisoned wave
+//! are caught with `catch_unwind`). A failure never crashes the
+//! scheduler — it moves the affected sequences through a small state
+//! machine:
+//!
+//! ```text
+//!   queued --admit--> active --finish--> evicted (Response)
+//!     ^                  |
+//!     |   preempt: checkpoint prompt+generated tokens,
+//!     |   drop state (pages -> free list), re-queue at FRONT
+//!     +------------------+
+//! ```
+//!
+//! * **Victim policy**: cold prefix-cache pages are reclaimed FIRST
+//!   (`Engine::reclaim_prefix_pages` — they hold no in-flight work);
+//!   only when the trie has nothing left to shed does the batcher
+//!   preempt a live sequence, NEWEST-ADMITTED first (`admitted_seq`),
+//!   so the oldest requests — the ones closest to completion and
+//!   longest-waiting — keep their pages.
+//! * **Restore is recompute, and it is EXACT**: a preempted sequence
+//!   re-enters through normal admission (same canonical page-chunked
+//!   prefill), then replays its checkpointed generated tokens
+//!   token-by-token through the regular decode waves with sampling
+//!   suppressed (`replay_left`). Integer-only inference is
+//!   deterministic — same tokens, same chunking, same bits — so the
+//!   rebuilt cache and all subsequent logits are bit-identical to a
+//!   never-preempted run at every thread count.
+//! * **Wave failures preempt the WHOLE wave**: the batched decode's
+//!   K/V append phase is one locked pass over every lane, so a
+//!   mid-pass failure leaves all of them mid-update; each lane's
+//!   sampled token is already checkpointed in `generated`, so replay
+//!   re-derives every bit.
+//! * **Typed rejection**: a request whose page estimate cannot fit
+//!   even an EMPTY pool fast-fails with
+//!   [`RejectReason::OversizedPrompt`] before any engine work; a
+//!   request whose admission keeps exhausting the pool after reclaim
+//!   and preemption both come up empty is rejected with
+//!   [`RejectReason::PoolExhausted`] after a bounded number of
+//!   attempts. Rejected requests still produce a [`Response`] (empty
+//!   text, `reject: Some(..)`) so closed-loop clients never hang.
+//! * **Admission is RESERVATION-based and capacity-learning**: the
+//!   page gate compares against `max(kv_used, committed)` where
+//!   `committed` sums every active sequence's full
+//!   prompt + `max_new` footprint, and the budget is capped by a
+//!   `learned_page_cap` ratcheted down to the pool occupancy observed
+//!   at each exhaustion fault. Without both, a pool whose physical
+//!   capacity is below the configured budget livelocks: the same
+//!   over-committed wave is rebuilt from momentarily-small restored
+//!   sequences, grows, faults, and preempts forever. A lone request
+//!   is always admitted regardless of the learned cap (the
+//!   `!active.is_empty()` escape), so the worst case is serial
+//!   service — degraded throughput, never a wedged queue.
 
 use super::engine::{greedy, Engine, SeqState};
 use super::metrics::ServeMetrics;
-use super::{Request, Response};
+use super::{RejectReason, Request, Response};
 use crate::data;
 use crate::trace;
+use crate::trace::{bump, bump_by, health};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
+
+/// Admission attempts (each preceded by reclaim + preemption) before
+/// a pool-exhaustion failure turns into a typed rejection. Bounded so
+/// a request that can never fit cannot livelock the queue front.
+const ADMISSION_FAULT_LIMIT: u32 = 3;
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -106,6 +169,41 @@ struct Active {
     last_logits: Option<Vec<f32>>,
     ttft: Option<f64>,
     prompt_len: usize,
+    /// tokens at the FRONT of `generated` still being replayed after a
+    /// restore: while > 0, decode waves feed checkpointed tokens and
+    /// sampling is suppressed (the wave's logits only advance the
+    /// cache). 0 for never-preempted sequences.
+    replay_left: usize,
+    /// monotone admission ticket — the preemption victim order
+    /// (newest-admitted first) sorts on this
+    admitted_seq: u64,
+    /// true while this activation is rebuilding a preempted sequence
+    /// (prompt re-prefill + replay); used for metrics attribution
+    restoring: bool,
+    /// set when an engine call failed under/for this sequence this
+    /// step; the eviction pass preempts every faulted sequence
+    fault: bool,
+}
+
+/// A waiting request plus the checkpoint needed to restore it after a
+/// preemption. Fresh requests carry an empty checkpoint.
+struct QueueItem {
+    req: Request,
+    /// generated tokens checkpointed at preemption (replayed through
+    /// decode on restore); empty for fresh requests
+    resume: Vec<u16>,
+    /// ttft already observed before preemption — a restored request
+    /// keeps its ORIGINAL first-token time
+    ttft: Option<f64>,
+    /// consecutive admission-time pool failures (see
+    /// [`ADMISSION_FAULT_LIMIT`])
+    faults: u32,
+}
+
+impl QueueItem {
+    fn fresh(req: Request) -> QueueItem {
+        QueueItem { req, resume: Vec::new(), ttft: None, faults: 0 }
+    }
 }
 
 /// Prefill-time counters accumulated by one prefill-wave worker and
@@ -121,6 +219,8 @@ struct Active {
 struct WaveStats {
     prefill_tokens: u64,
     prefill_time_s: f64,
+    /// subset of `prefill_tokens` recomputed for preemption restores
+    restore_tokens: u64,
 }
 
 impl WaveStats {
@@ -129,11 +229,14 @@ impl WaveStats {
     fn merge_max(&mut self, w: &WaveStats) {
         self.prefill_tokens += w.prefill_tokens;
         self.prefill_time_s = self.prefill_time_s.max(w.prefill_time_s);
+        self.restore_tokens += w.restore_tokens;
     }
 
     fn fold_into(self, m: &mut ServeMetrics) {
         m.prefill_tokens += self.prefill_tokens;
         m.prefill_time_s += self.prefill_time_s;
+        m.restore_prefill_tokens += self.restore_tokens;
+        bump_by(&health().restore_prefill_tokens, self.restore_tokens);
     }
 }
 
@@ -156,22 +259,50 @@ fn prefill_one<E: Engine>(cfg: &BatcherConfig, engine: &E,
     let pages0 =
         if sp.enabled() { engine.kv_pages(&a.state) } else { 0 };
     let t0 = Instant::now();
-    let logits = engine.prefill_chunk(&mut a.state, &chunk,
-                                      attn_threads);
+    // fallible + panic-safe: pool exhaustion (or a fault-injected
+    // wave panic) marks the sequence for preemption instead of
+    // crashing the scheduler or the wave worker
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        engine.try_prefill_chunk(&mut a.state, &chunk, attn_threads)
+    }));
     ws.prefill_tokens += chunk.len() as u64;
     ws.prefill_time_s += t0.elapsed().as_secs_f64();
-    if sp.enabled() {
-        sp.arg("pages_delta",
-               engine.kv_pages(&a.state) as i64 - pages0 as i64);
+    if a.restoring {
+        ws.restore_tokens += chunk.len() as u64;
+    }
+    match r {
+        Ok(Ok(logits)) => {
+            if sp.enabled() {
+                sp.arg("pages_delta",
+                       engine.kv_pages(&a.state) as i64 - pages0 as i64);
+            }
+            a.last_logits = Some(logits);
+        }
+        Ok(Err(_)) | Err(_) => {
+            sp.arg("fault", 1);
+            a.fault = true;
+        }
     }
     drop(sp);
-    a.last_logits = Some(logits);
 }
 
 pub struct Batcher {
     cfg: BatcherConfig,
-    queue: VecDeque<Request>,
+    queue: VecDeque<QueueItem>,
     active: Vec<Active>,
+    /// monotone admission ticket source (victim ordering)
+    next_seq: u64,
+    /// Physical page ceiling LEARNED from pool-exhaustion faults: the
+    /// pool occupancy observed when an allocation failed. The
+    /// configured `kv_page_budget` can be (deliberately or through
+    /// misconfiguration) larger than the pool's real capacity; once an
+    /// exhaustion fault reveals the true ceiling, admission gates on
+    /// `min(budget, learned)` so the same over-committed wave is not
+    /// rebuilt and preempted forever. Ratchets down only (a fault is
+    /// ground truth; capacity never grows mid-run), never below 1, and
+    /// a lone request is still always admitted — a too-low estimate
+    /// degrades throughput to serial, never wedges the queue.
+    learned_page_cap: Option<usize>,
 }
 
 /// Token count of a prompt as it will be admitted: truncated to the
@@ -203,11 +334,17 @@ fn normalize_prompt(prompt: &str, max_seq: usize, max_new: usize)
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Batcher {
-        Batcher { cfg, queue: VecDeque::new(), active: Vec::new() }
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            next_seq: 0,
+            learned_page_cap: None,
+        }
     }
 
     pub fn enqueue(&mut self, r: Request) {
-        self.queue.push_back(r);
+        self.queue.push_back(QueueItem::fresh(r));
     }
 
     pub fn is_idle(&self) -> bool {
@@ -231,8 +368,9 @@ impl Batcher {
             // generated tokens (checked before the slot gate, so a full
             // batch cannot delay it once it reaches the front; FIFO
             // order is preserved behind blocked requests)
-            if front.max_new == 0 {
-                let Some(req) = self.queue.pop_front() else { break };
+            if front.req.max_new == 0 {
+                let Some(item) = self.queue.pop_front() else { break };
+                let req = item.req;
                 let plen = admitted_len(&req.prompt, engine.max_seq(), 0);
                 trace::span_at("queued", "request", req.submitted,
                                Instant::now(),
@@ -249,6 +387,7 @@ impl Batcher {
                     n_generated: 0,
                     ttft: latency,
                     latency,
+                    reject: None,
                 });
                 continue;
             }
@@ -270,27 +409,49 @@ impl Batcher {
                     .map(|a| engine.kv_pages(&a.state))
                     .sum(),
             };
+            // RESERVATION: pages the active set is still committed to
+            // grow into (every live sequence may run to its max_new).
+            // Gating on `max(kv_used, committed)` instead of current
+            // occupancy alone is what makes degradation CONVERGE: a
+            // freshly-restored wave starts small, and admitting
+            // against its momentary footprint would rebuild the same
+            // over-committed set that just faulted. (Committed
+            // overcounts CoW-shared prefix pages — a safe direction.)
+            let committed: usize = self
+                .active
+                .iter()
+                .map(|a| {
+                    engine.pages_for_tokens(a.prompt_len
+                                            + a.req.max_new)
+                })
+                .sum();
+            // effective budget: configured budget capped by any
+            // fault-learned physical ceiling (see `learned_page_cap`)
+            let eff_budget = self
+                .learned_page_cap
+                .map_or(self.cfg.kv_page_budget,
+                        |c| self.cfg.kv_page_budget.min(c));
             let adm_len =
-                admitted_len(&front.prompt, engine.max_seq(),
-                             front.max_new);
+                admitted_len(&front.req.prompt, engine.max_seq(),
+                             front.req.max_new);
             let est_total =
-                engine.pages_for_tokens(adm_len + front.max_new);
+                engine.pages_for_tokens(adm_len + front.req.max_new);
             let mut est = est_total;
-            if kv_used + est > self.cfg.kv_page_budget {
+            if kv_used.max(committed) + est > eff_budget {
                 // over budget at face value: discount the pages the
                 // engine's prefix cache already holds for this prompt
                 // (they are counted in kv_used and will be forked,
                 // not allocated). Tokenizing here — only on the
                 // would-block path — keeps the common admission check
                 // allocation-free.
-                let toks = normalize_prompt(&front.prompt,
+                let toks = normalize_prompt(&front.req.prompt,
                                             engine.max_seq(),
-                                            front.max_new);
+                                            front.req.max_new);
                 let first =
                     &toks[..toks.len().min(self.cfg.prefill_chunk)];
                 est = est_total
                     .saturating_sub(engine.cached_prefix_pages(first));
-                if kv_used + est > self.cfg.kv_page_budget {
+                if kv_used.max(committed) + est > eff_budget {
                     // pool pressure: shed cold prefix-cache pages
                     // before blocking (trie leaves release pages to
                     // the free list), then re-read occupancy — AND
@@ -299,8 +460,8 @@ impl Batcher {
                     // and admitting on a stale discount would let the
                     // prefill overshoot the budget by exactly the
                     // discounted pages
-                    let need =
-                        kv_used + est - self.cfg.kv_page_budget;
+                    let need = (kv_used.max(committed) + est)
+                        .saturating_sub(eff_budget);
                     if engine.reclaim_prefix_pages(need) > 0 {
                         if let Some(used) = engine.kv_pages_used() {
                             kv_used = used;
@@ -310,28 +471,55 @@ impl Batcher {
                     }
                 }
             }
-            if kv_used + est > self.cfg.kv_page_budget
+            if est > self.cfg.kv_page_budget {
+                // UNSATISFIABLE, not backpressure: even an empty pool
+                // cannot hold this request's footprint. Fast-fail with
+                // a typed reason before any engine work — waiting can
+                // never help, and counting it as an admission block
+                // would wedge the queue front forever.
+                let Some(item) = self.queue.pop_front() else { break };
+                out.push(self.reject(
+                    item,
+                    RejectReason::OversizedPrompt {
+                        est_pages: est,
+                        budget: self.cfg.kv_page_budget,
+                    },
+                    adm_len,
+                    metrics,
+                ));
+                continue;
+            }
+            if kv_used.max(committed) + est > eff_budget
                 && !self.active.is_empty()
             {
                 trace::instant("admission-block", "request",
-                               &[("req", front.id as i64),
+                               &[("req", front.req.id as i64),
                                  ("kv_used", kv_used as i64),
                                  ("est_pages", est as i64)]);
                 metrics.admission_blocks += 1;
                 break;
             }
-            let Some(req) = self.queue.pop_front() else { break };
+            let Some(mut item) = self.queue.pop_front() else { break };
+            let restoring = !item.resume.is_empty();
             // queued span: submit -> admission, on the request's own
             // timeline; the admitted marker carries the KV accounting
             // the admission decision was made on
-            trace::span_at("queued", "request", req.submitted,
-                           Instant::now(), &[("req", req.id as i64)]);
+            trace::span_at("queued", "request", item.req.submitted,
+                           Instant::now(),
+                           &[("req", item.req.id as i64)]);
             trace::instant("admitted", "request",
-                           &[("req", req.id as i64),
+                           &[("req", item.req.id as i64),
                              ("kv_used", kv_used as i64),
                              ("est_pages", est as i64)]);
-            let prompt = normalize_prompt(&req.prompt, engine.max_seq(),
-                                          req.max_new);
+            if restoring {
+                trace::instant("restoring", "request",
+                               &[("req", item.req.id as i64),
+                                 ("resume_tokens",
+                                  item.resume.len() as i64)]);
+            }
+            let prompt = normalize_prompt(&item.req.prompt,
+                                          engine.max_seq(),
+                                          item.req.max_new);
             let prompt_len = prompt.len();
             // chunked prefill: first chunk now, rest in later steps
             let first = prompt
@@ -339,30 +527,97 @@ impl Batcher {
                 .to_vec();
             let rest = prompt[first.len()..].to_vec();
             let mut sp = trace::span("prefill-chunk", "request");
-            sp.arg("req", req.id as i64);
+            sp.arg("req", item.req.id as i64);
             sp.arg("tokens", first.len() as i64);
             let t0 = Instant::now();
             // admission runs serially on this thread, so the first
-            // chunk's prefill gets the FULL attention thread budget
-            let (state, logits) = engine
-                .prefill_with_threads(&first,
-                                      self.cfg.effective_threads());
+            // chunk's prefill gets the FULL attention thread budget.
+            // Fallible + panic-safe: mid-prefill pool exhaustion (or a
+            // fault-injected panic) drops the partial state, returning
+            // its pages, and falls into the degradation ladder below.
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                engine.try_prefill_with_threads(
+                    &first, self.cfg.effective_threads())
+            }));
             metrics.prefill_tokens += first.len() as u64;
             metrics.prefill_time_s += t0.elapsed().as_secs_f64();
-            if sp.enabled() {
-                // a fresh state's page count IS the allocation delta
-                sp.arg("pages_delta", engine.kv_pages(&state) as i64);
+            if restoring {
+                metrics.restore_prefill_tokens += first.len() as u64;
+                bump_by(&health().restore_prefill_tokens,
+                        first.len() as u64);
             }
-            drop(sp);
-            self.active.push(Active {
-                req,
-                state,
-                pending_prompt: rest,
-                generated: Vec::new(),
-                last_logits: Some(logits),
-                ttft: None,
-                prompt_len,
-            });
+            match r {
+                Ok(Ok((state, logits))) => {
+                    if sp.enabled() {
+                        // a fresh state's page count IS the delta
+                        sp.arg("pages_delta",
+                               engine.kv_pages(&state) as i64);
+                    }
+                    drop(sp);
+                    let admitted_seq = self.next_seq;
+                    self.next_seq += 1;
+                    let replay_left = item.resume.len();
+                    self.active.push(Active {
+                        req: item.req,
+                        state,
+                        pending_prompt: rest,
+                        generated: item.resume,
+                        last_logits: Some(logits),
+                        ttft: item.ttft,
+                        prompt_len,
+                        replay_left,
+                        admitted_seq,
+                        restoring,
+                        fault: false,
+                    });
+                }
+                Ok(Err(_)) | Err(_) => {
+                    // degradation ladder: (1) shed cold prefix-cache
+                    // pages, (2) preempt the newest-admitted live
+                    // sequence, (3) after ADMISSION_FAULT_LIMIT dry
+                    // attempts, reject with a typed reason. The item
+                    // returns to the queue FRONT between attempts so
+                    // FIFO order is preserved.
+                    sp.arg("fault", 1);
+                    drop(sp);
+                    item.faults += 1;
+                    trace::instant("admission-fault", "request",
+                                   &[("req", item.req.id as i64),
+                                     ("attempt", item.faults as i64)]);
+                    // the failed allocation just revealed the pool's
+                    // real ceiling: ratchet the learned capacity down
+                    // to the observed occupancy so admission stops
+                    // rebuilding an over-committed set
+                    if let Some(used) = engine.kv_pages_used() {
+                        let c = self
+                            .learned_page_cap
+                            .map_or(used, |c| c.min(used));
+                        self.learned_page_cap = Some(c.max(1));
+                    }
+                    let reclaimed =
+                        engine.reclaim_prefix_pages(est.max(1));
+                    let preempted = reclaimed == 0
+                        && self.preempt_newest(engine, metrics);
+                    if reclaimed == 0
+                        && !preempted
+                        && item.faults >= ADMISSION_FAULT_LIMIT
+                    {
+                        out.push(self.reject(
+                            item,
+                            RejectReason::PoolExhausted {
+                                est_pages: est,
+                            },
+                            adm_len,
+                            metrics,
+                        ));
+                    } else {
+                        self.queue.push_front(item);
+                    }
+                    // stop admitting this step: let the freed pages
+                    // settle and the active set make progress
+                    break;
+                }
+            }
         }
         // ---- one decode/prefill wave over active sequences ----
         // Bookkeeping pass, on the scheduler thread: sample each
@@ -381,13 +636,33 @@ impl Batcher {
             // defensive: a request whose generation budget is already
             // exhausted needs no logits — finish before burning
             // waves (admission short-circuits max_new == 0, so this
-            // only guards future paths into the active set)
-            if a.generated.len() >= a.req.max_new {
+            // only guards future paths into the active set). A
+            // restoring sequence is never "already done": its
+            // generated tokens are a checkpoint still being replayed.
+            if a.replay_left == 0 && a.generated.len() >= a.req.max_new {
                 finished[i] = true;
                 continue;
             }
             if !a.pending_prompt.is_empty() {
                 prefills.push(a);
+                continue;
+            }
+            if a.replay_left > 0 {
+                // restore replay: feed the next CHECKPOINTED token
+                // through the regular decode wave — no sampling, no
+                // ttft/stop bookkeeping (all of that happened before
+                // the preemption and is already reflected in
+                // `generated`). Integer decode is deterministic, so
+                // replay rebuilds the cache bit-identically.
+                let idx = a.generated.len() - a.replay_left;
+                let tok = a.generated[idx];
+                a.replay_left -= 1;
+                if a.replay_left == 0 {
+                    a.restoring = false;
+                }
+                metrics.restore_prefill_tokens += 1;
+                bump(&health().restore_prefill_tokens);
+                decodes.push((a, tok));
                 continue;
             }
             let logits = a.last_logits.as_ref().expect("logits");
@@ -488,68 +763,114 @@ impl Batcher {
             let mut states: Vec<&mut SeqState> =
                 decodes.iter_mut().map(|(a, _)| &mut a.state).collect();
             let t0 = Instant::now();
-            let all_logits =
-                engine.decode_wave_batched(&mut states, &tokens,
-                                           budget);
+            // fallible + panic-safe: a mid-wave pool exhaustion or a
+            // worker-slot panic leaves EVERY lane mid-append (one
+            // locked append pass covers the whole wave), so the only
+            // sound recovery is preempting the entire wave — each
+            // lane's fed token is already checkpointed in `generated`
+            let wave = catch_unwind(AssertUnwindSafe(|| {
+                engine.try_decode_wave_batched(&mut states, &tokens,
+                                               budget)
+            }));
             let t1 = Instant::now();
             drop(states);
             metrics.decode_time_s +=
                 t1.saturating_duration_since(t0).as_secs_f64();
-            debug_assert_eq!(all_logits.len(), n);
-            for ((a, _), logits) in
-                decodes.iter_mut().zip(all_logits)
-            {
-                a.last_logits = Some(logits);
-            }
-            // wave-level span (one batched engine call) plus the
-            // per-request decode-wave spans the request-lifecycle
-            // chain is built from: every lane shares the wave's
-            // wall-clock interval because every lane's token IS
-            // computed inside that one call
-            trace::span_at("decode-batch", "engine", t0, t1,
-                           &[("n_seqs", n as i64)]);
-            if spans_on {
-                for (j, (a, _)) in decodes.iter().enumerate() {
-                    let delta = engine.kv_pages(&a.state) as i64
-                        - pages0[j];
-                    trace::span_at(
-                        "decode-wave",
-                        "request",
-                        t0,
-                        t1,
-                        &[("req", ids[j]), ("step", steps[j]),
-                          ("pages_delta", delta)],
-                    );
+            match wave {
+                Ok(Ok(all_logits)) => {
+                    debug_assert_eq!(all_logits.len(), n);
+                    for ((a, _), logits) in
+                        decodes.iter_mut().zip(all_logits)
+                    {
+                        a.last_logits = Some(logits);
+                    }
+                    // wave-level span (one batched engine call) plus
+                    // the per-request decode-wave spans the
+                    // request-lifecycle chain is built from: every
+                    // lane shares the wave's wall-clock interval
+                    // because every lane's token IS computed inside
+                    // that one call
+                    trace::span_at("decode-batch", "engine", t0, t1,
+                                   &[("n_seqs", n as i64)]);
+                    if spans_on {
+                        for (j, (a, _)) in decodes.iter().enumerate() {
+                            let delta =
+                                engine.kv_pages(&a.state) as i64
+                                    - pages0[j];
+                            trace::span_at(
+                                "decode-wave",
+                                "request",
+                                t0,
+                                t1,
+                                &[("req", ids[j]), ("step", steps[j]),
+                                  ("pages_delta", delta)],
+                            );
+                        }
+                    }
+                }
+                Ok(Err(_)) | Err(_) => {
+                    trace::instant("wave-fault", "engine",
+                                   &[("n_seqs", n as i64)]);
+                    for (a, _) in decodes.iter_mut() {
+                        a.fault = true;
+                    }
                 }
             }
         }
-        let finished_idx: Vec<usize> = finished
-            .iter()
-            .enumerate()
-            .filter_map(|(i, &f)| f.then_some(i))
-            .collect();
         metrics.steps += 1;
         metrics.batch_occupancy_sum += self.active.len() as u64;
         metrics.step_time_s += step_t0.elapsed().as_secs_f64();
-        // ---- evict finished ----
-        for i in finished_idx.into_iter().rev() {
-            let a = self.active.swap_remove(i);
-            trace::instant("finished", "request",
-                           &[("req", a.req.id as i64),
-                             ("generated", a.generated.len() as i64)]);
-            let latency = a.req.submitted.elapsed().as_secs_f64();
-            metrics.record_request(latency, a.ttft.unwrap_or(latency));
-            out.push(Response {
-                id: a.req.id,
-                text: data::decode(&a.generated),
-                n_prompt: a.prompt_len,
-                n_generated: a.generated.len(),
-                ttft: a.ttft.unwrap_or(latency),
-                latency,
-            });
-            // dropping the state here releases the sequence's pages to
-            // the pool free list — the next admission reuses them
-            drop(a.state);
+        // ---- evict finished, preempt faulted ----
+        // A wave/prefill fault means the pool's real ceiling is at
+        // (or below) CURRENT occupancy — sample it before the faulted
+        // states release their pages, so the next admission round
+        // reasons against the learned ceiling instead of re-building
+        // the exact over-committed set that just faulted.
+        if self.active.iter().any(|a| a.fault) {
+            if let Some(used) = engine.kv_pages_used() {
+                let c = self
+                    .learned_page_cap
+                    .map_or(used, |c| c.min(used));
+                self.learned_page_cap = Some(c.max(1));
+            }
+        }
+        // Descending sweep: swap_remove(i) only moves elements from
+        // indices > i (all already visited), so `finished[i]` and
+        // `self.active[i]` stay aligned throughout.
+        let mut preempted: Vec<Active> = Vec::new();
+        for i in (0..self.active.len()).rev() {
+            if finished[i] {
+                let a = self.active.swap_remove(i);
+                trace::instant(
+                    "finished", "request",
+                    &[("req", a.req.id as i64),
+                      ("generated", a.generated.len() as i64)]);
+                let latency = a.req.submitted.elapsed().as_secs_f64();
+                metrics.record_request(latency,
+                                       a.ttft.unwrap_or(latency));
+                out.push(Response {
+                    id: a.req.id,
+                    text: data::decode(&a.generated),
+                    n_prompt: a.prompt_len,
+                    n_generated: a.generated.len(),
+                    ttft: a.ttft.unwrap_or(latency),
+                    latency,
+                    reject: None,
+                });
+                // dropping the state here releases the sequence's
+                // pages to the pool free list — the next admission
+                // reuses them
+                drop(a.state);
+            } else if self.active[i].fault {
+                preempted.push(self.active.swap_remove(i));
+            }
+        }
+        // re-queue preempted sequences newest-first so the OLDEST
+        // lands at the queue front and is restored first (FIFO among
+        // the preempted; all of them ahead of waiting fresh requests)
+        preempted.sort_by_key(|a| a.admitted_seq);
+        for a in preempted.into_iter().rev() {
+            self.preempt_one(engine, a, metrics);
         }
         if let Some(ps) = engine.pool_stats() {
             metrics.observe_pool(&ps);
@@ -558,6 +879,83 @@ impl Batcher {
             metrics.observe_prefix(&ps);
         }
         out
+    }
+
+    /// Checkpoint + free + re-queue one sequence. The checkpoint is
+    /// pure tokens (prompt lives in the request, generated tokens in
+    /// `resume`); dropping the state returns every page the sequence
+    /// held to the pool free list. Restore rebuilds the cache by
+    /// recompute through canonical admission — bit-identical because
+    /// integer inference is deterministic (see the module docs).
+    fn preempt_one<E: Engine>(&mut self, engine: &E, a: Active,
+                              metrics: &mut ServeMetrics) {
+        let pages = engine.kv_pages(&a.state) as u64;
+        trace::instant("preempted", "request",
+                       &[("req", a.req.id as i64),
+                         ("pages", pages as i64),
+                         ("generated", a.generated.len() as i64)]);
+        metrics.preemptions += 1;
+        metrics.preempted_pages_reclaimed += pages;
+        bump(&health().preemptions);
+        bump_by(&health().preempted_pages_reclaimed, pages);
+        let Active { req, state, generated, ttft, .. } = a;
+        // pages -> free list (the poisoned-cache contract in
+        // int_model::kv_cache guarantees refcounts stayed balanced
+        // through any mid-append failure, so this releases everything)
+        drop(state);
+        self.queue.push_front(QueueItem {
+            req,
+            resume: generated,
+            ttft,
+            faults: 0,
+        });
+    }
+
+    /// Admission-pressure victim selection: preempt the NEWEST-admitted
+    /// active sequence (least progress lost, oldest requests keep
+    /// their pages). Returns false when nothing is active to preempt.
+    fn preempt_newest<E: Engine>(&mut self, engine: &E,
+                                 metrics: &mut ServeMetrics) -> bool {
+        let Some(i) = self
+            .active
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, a)| a.admitted_seq)
+            .map(|(i, _)| i)
+        else {
+            return false;
+        };
+        let a = self.active.swap_remove(i);
+        self.preempt_one(engine, a, metrics);
+        true
+    }
+
+    /// Refuse service with a typed reason. The request still gets a
+    /// Response (empty text) so closed-loop clients see exactly one
+    /// response per request; rejections are excluded from the
+    /// latency/TTFT percentile samples and counted separately from
+    /// `admission_blocks`.
+    fn reject(&mut self, item: QueueItem, reason: RejectReason,
+              n_prompt: usize, metrics: &mut ServeMetrics) -> Response {
+        let req = item.req;
+        trace::instant("rejected", "request",
+                       &[("req", req.id as i64),
+                         ("oversized",
+                          matches!(reason,
+                                   RejectReason::OversizedPrompt { .. })
+                              as i64)]);
+        metrics.oversize_rejections += 1;
+        bump(&health().oversize_rejections);
+        let latency = req.submitted.elapsed().as_secs_f64();
+        Response {
+            id: req.id,
+            text: String::new(),
+            n_prompt,
+            n_generated: 0,
+            ttft: latency,
+            latency,
+            reject: Some(reason),
+        }
     }
 }
 
@@ -798,5 +1196,293 @@ mod tests {
         }
         assert_eq!(done.len(), 1);
         assert_eq!(m.prefill_tokens, 40);
+    }
+
+    use crate::int_model::kv_cache::PoolExhausted;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Echo with deterministic injected failures: the Nth batched
+    /// decode wave, the Nth continuation prefill chunk, and/or the
+    /// first K admission prefills fail with `PoolExhausted` (0 = that
+    /// fault never fires). The success paths are bit-identical to
+    /// [`Echo`], so a degraded run's outputs must match a clean run's.
+    struct FlakyEcho {
+        fail_wave_at: u64,
+        fail_chunk_at: u64,
+        fail_admissions: u64,
+        waves: AtomicU64,
+        chunks: AtomicU64,
+        admissions: AtomicU64,
+    }
+
+    impl FlakyEcho {
+        fn new(fail_wave_at: u64, fail_chunk_at: u64,
+               fail_admissions: u64) -> FlakyEcho {
+            FlakyEcho {
+                fail_wave_at,
+                fail_chunk_at,
+                fail_admissions,
+                waves: AtomicU64::new(0),
+                chunks: AtomicU64::new(0),
+                admissions: AtomicU64::new(0),
+            }
+        }
+
+        fn exhausted() -> PoolExhausted {
+            PoolExhausted { used: 0, capacity: Some(0) }
+        }
+    }
+
+    impl Engine for FlakyEcho {
+        fn max_seq(&self) -> usize {
+            128
+        }
+
+        fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>) {
+            Echo.prefill(prompt)
+        }
+
+        fn decode(&self, state: &mut SeqState, token: u16)
+            -> Vec<f32> {
+            Echo.decode(state, token)
+        }
+
+        fn try_prefill_with_threads(&self, prompt: &[u16],
+                                    attn_threads: usize)
+            -> Result<(SeqState, Vec<f32>), PoolExhausted> {
+            let n = self.admissions.fetch_add(1, Ordering::SeqCst) + 1;
+            if n <= self.fail_admissions {
+                return Err(Self::exhausted());
+            }
+            Ok(self.prefill_with_threads(prompt, attn_threads))
+        }
+
+        fn try_prefill_chunk(&self, state: &mut SeqState,
+                             tokens: &[u16], attn_threads: usize)
+            -> Result<Vec<f32>, PoolExhausted> {
+            let n = self.chunks.fetch_add(1, Ordering::SeqCst) + 1;
+            if self.fail_chunk_at != 0 && n == self.fail_chunk_at {
+                return Err(Self::exhausted());
+            }
+            Ok(self.prefill_chunk(state, tokens, attn_threads))
+        }
+
+        fn try_decode_wave_batched(&self, states: &mut [&mut SeqState],
+                                   tokens: &[u16], attn_threads: usize)
+            -> Result<Vec<Vec<f32>>, PoolExhausted> {
+            let n = self.waves.fetch_add(1, Ordering::SeqCst) + 1;
+            if self.fail_wave_at != 0 && n == self.fail_wave_at {
+                return Err(Self::exhausted());
+            }
+            Ok(self.decode_wave_batched(states, tokens, attn_threads))
+        }
+
+        fn kv_pages(&self, _state: &SeqState) -> usize {
+            1
+        }
+
+        fn pages_for_tokens(&self, _n_tokens: usize) -> usize {
+            1
+        }
+    }
+
+    fn run_flaky(e: &FlakyEcho, cfg: BatcherConfig,
+                 reqs: &[(u64, String, usize)])
+        -> (Vec<(u64, String, usize, bool)>, ServeMetrics) {
+        let mut b = Batcher::new(cfg);
+        let mut m = ServeMetrics::default();
+        for (id, prompt, max_new) in reqs {
+            b.enqueue(Request {
+                id: *id,
+                prompt: prompt.clone(),
+                max_new: *max_new,
+                submitted: Instant::now(),
+            });
+        }
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while !b.is_idle() {
+            done.extend(b.step(e, &mut m));
+            guard += 1;
+            assert!(guard < 500, "degraded batcher did not converge");
+        }
+        done.sort_by_key(|r| r.id);
+        let rows = done
+            .into_iter()
+            .map(|r| (r.id, r.text, r.n_generated, r.reject.is_none()))
+            .collect();
+        (rows, m)
+    }
+
+    #[test]
+    fn wave_fault_preempts_whole_wave_and_restores_identically() {
+        let reqs: Vec<(u64, String, usize)> = (0..3)
+            .map(|i| (i, format!("r{i}"), 4 + i as usize))
+            .collect();
+        let cfg = || BatcherConfig {
+            max_batch: 4,
+            stop_token: None,
+            ..Default::default()
+        };
+        let (clean, cm) =
+            run_flaky(&FlakyEcho::new(0, 0, 0), cfg(), &reqs);
+        assert_eq!(cm.preemptions, 0);
+        // second decode wave fails: all three sequences are preempted
+        // mid-generation, restored by recompute, and must produce the
+        // exact same outputs
+        let (flaky, fm) =
+            run_flaky(&FlakyEcho::new(2, 0, 0), cfg(), &reqs);
+        assert_eq!(flaky, clean, "restored outputs diverged");
+        assert_eq!(fm.preemptions, 3, "whole wave must be preempted");
+        assert_eq!(fm.preempted_pages_reclaimed, 3);
+        assert!(fm.restore_prefill_tokens > 0,
+                "restore work must be attributed");
+    }
+
+    #[test]
+    fn prefill_chunk_fault_preempts_and_restores_identically() {
+        let reqs =
+            vec![(1u64, "y".repeat(40), 3usize)];
+        let cfg = || BatcherConfig {
+            prefill_chunk: 8,
+            stop_token: None,
+            ..Default::default()
+        };
+        let (clean, cm) =
+            run_flaky(&FlakyEcho::new(0, 0, 0), cfg(), &reqs);
+        assert_eq!(cm.preemptions, 0);
+        // second continuation chunk fails mid-prompt-prefill
+        let (flaky, fm) =
+            run_flaky(&FlakyEcho::new(0, 2, 0), cfg(), &reqs);
+        assert_eq!(flaky, clean, "restored outputs diverged");
+        assert_eq!(fm.preemptions, 1);
+    }
+
+    #[test]
+    fn admission_fault_retries_then_serves() {
+        let reqs = vec![(1u64, "abc".into(), 3usize)];
+        let cfg = || BatcherConfig {
+            stop_token: None,
+            ..Default::default()
+        };
+        let (clean, _) =
+            run_flaky(&FlakyEcho::new(0, 0, 0), cfg(), &reqs);
+        // first admission prefill fails; the retry (same queue
+        // position) succeeds on the next step
+        let (flaky, fm) =
+            run_flaky(&FlakyEcho::new(0, 0, 1), cfg(), &reqs);
+        assert_eq!(flaky, clean);
+        assert_eq!(fm.oversize_rejections, 0);
+        assert_eq!(fm.preemptions, 0, "empty active set: none to evict");
+    }
+
+    #[test]
+    fn admission_exhaustion_rejects_typed_after_retries() {
+        // every admission prefill fails and there is nothing to
+        // reclaim or preempt: after ADMISSION_FAULT_LIMIT attempts the
+        // request must be REJECTED with a typed reason, not retried
+        // forever and never panicking
+        let reqs = vec![(7u64, "abc".into(), 3usize)];
+        let e = FlakyEcho::new(0, 0, u64::MAX);
+        let (rows, m) = run_flaky(
+            &e,
+            BatcherConfig { stop_token: None, ..Default::default() },
+            &reqs,
+        );
+        assert_eq!(rows.len(), 1, "rejected requests still respond");
+        let (id, text, n_gen, ok) = &rows[0];
+        assert_eq!(*id, 7);
+        assert_eq!(text, "");
+        assert_eq!(*n_gen, 0);
+        assert!(!ok, "response must carry a reject reason");
+        assert_eq!(m.oversize_rejections, 1);
+        assert!(m.latencies.is_empty(),
+                "rejections stay out of latency percentiles");
+        assert_eq!(
+            e.admissions.load(Ordering::SeqCst),
+            ADMISSION_FAULT_LIMIT as u64,
+            "rejection must come after exactly the retry budget"
+        );
+    }
+
+    /// Identity page accounting (1 page per token) to drive the
+    /// admission estimator precisely.
+    struct PagedEcho;
+
+    impl Engine for PagedEcho {
+        fn max_seq(&self) -> usize {
+            128
+        }
+
+        fn prefill(&self, prompt: &[u16]) -> (SeqState, Vec<f32>) {
+            Echo.prefill(prompt)
+        }
+
+        fn decode(&self, state: &mut SeqState, token: u16)
+            -> Vec<f32> {
+            Echo.decode(state, token)
+        }
+
+        fn kv_pages(&self, state: &SeqState) -> usize {
+            match state {
+                SeqState::Fp { tokens } => tokens.len(),
+                _ => 0,
+            }
+        }
+
+        fn pages_for_tokens(&self, n_tokens: usize) -> usize {
+            n_tokens
+        }
+    }
+
+    #[test]
+    fn oversized_request_fast_fails_with_typed_reason() {
+        // budget 10 "pages": a 20-token prompt + 4 new tokens can
+        // NEVER fit, even against an empty pool — it must be rejected
+        // immediately (no admission block, no engine work) while the
+        // small request behind it is served normally
+        let mut b = Batcher::new(BatcherConfig {
+            kv_page_budget: 10,
+            stop_token: None,
+            ..Default::default()
+        });
+        let mut m = ServeMetrics::default();
+        b.enqueue(Request {
+            id: 1,
+            prompt: "z".repeat(20),
+            max_new: 4,
+            submitted: Instant::now(),
+        });
+        b.enqueue(Request {
+            id: 2,
+            prompt: "ab".into(),
+            max_new: 2,
+            submitted: Instant::now(),
+        });
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while !b.is_idle() {
+            done.extend(b.step(&PagedEcho, &mut m));
+            guard += 1;
+            assert!(guard < 100, "batcher did not converge");
+        }
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(
+            done[0].reject,
+            Some(RejectReason::OversizedPrompt {
+                est_pages: 24,
+                budget: 10
+            })
+        );
+        assert_eq!(done[0].text, "");
+        assert_eq!(done[0].n_generated, 0);
+        assert!(done[1].reject.is_none());
+        assert_eq!(done[1].n_generated, 2);
+        assert_eq!(m.oversize_rejections, 1);
+        assert_eq!(m.admission_blocks, 0,
+                   "unsatisfiable is not backpressure");
+        assert_eq!(m.latencies.len(), 1,
+                   "only the served request enters the percentiles");
     }
 }

@@ -38,8 +38,8 @@
 
 use super::prefix_tree::{Lookup, PrefixStats, PrefixTree};
 use crate::int_model::kv_cache::{
-    lock_pool, DecodeBatchScratch, IntKvCache, PagePool, PoolStats,
-    SharedPagePool, PAGE_TOKENS,
+    expect_pool, lock_pool, DecodeBatchScratch, IntKvCache, PagePool,
+    PoolExhausted, PoolStats, SharedPagePool, PAGE_TOKENS,
 };
 use crate::int_model::IntModel;
 use crate::nn::FpModel;
@@ -115,6 +115,39 @@ pub trait Engine: Send + Sync {
             .zip(tokens)
             .map(|(s, &t)| self.decode(s, t))
             .collect()
+    }
+
+    /// Fallible admission prefill: like [`Engine::prefill_with_threads`]
+    /// but surfaces KV-pool exhaustion as a typed error instead of
+    /// panicking, so the batcher can degrade (preempt / retry /
+    /// reject). On `Err` no state is returned — the partial cache was
+    /// dropped and its pages are back on the free list. Engines
+    /// without a bounded pool never fail; the default wraps the
+    /// infallible path.
+    fn try_prefill_with_threads(&self, prompt: &[u16], attn_threads: usize)
+        -> Result<(SeqState, Vec<f32>), PoolExhausted> {
+        Ok(self.prefill_with_threads(prompt, attn_threads))
+    }
+
+    /// Fallible chunked-prefill continuation. On `Err` the state is
+    /// poisoned for compute (a chunk stopped mid-append) but safe to
+    /// drop; the batcher preempts the sequence and restores it by
+    /// recompute. Default wraps the infallible path.
+    fn try_prefill_chunk(&self, state: &mut SeqState, tokens: &[u16],
+                         attn_threads: usize)
+        -> Result<Vec<f32>, PoolExhausted> {
+        Ok(self.prefill_chunk(state, tokens, attn_threads))
+    }
+
+    /// Fallible continuous-batched decode step. On `Err` EVERY state
+    /// in the wave is mid-token and must be preempted (the wave's
+    /// append pass is one locked pass over all lanes — a mid-pass
+    /// failure leaves all of them partially appended). Default wraps
+    /// the infallible path.
+    fn try_decode_wave_batched(&self, states: &mut [&mut SeqState],
+                               tokens: &[u16], attn_threads: usize)
+        -> Result<Vec<Vec<f32>>, PoolExhausted> {
+        Ok(self.decode_wave_batched(states, tokens, attn_threads))
     }
 
     /// KV pages a state currently holds (page-denominated admission
@@ -213,7 +246,21 @@ impl IntEngine {
     /// by the trie beyond it are evicted LRU-leaf-first on insert).
     pub fn with_prefix_budget(model: Arc<IntModel>, max_prefix_pages: usize)
         -> IntEngine {
-        let pool = PagePool::shared(model.cfg.head_dim());
+        IntEngine::with_limits(model, max_prefix_pages, None)
+    }
+
+    /// Engine with a prefix budget AND a hard page-pool capacity.
+    /// `page_capacity: Some(n)` bounds the pool to `n` live pages:
+    /// allocation past the bound returns `Err(PoolExhausted)` through
+    /// the `try_*` engine paths instead of growing a new slab — the
+    /// configuration the graceful-degradation tests squeeze.
+    pub fn with_limits(model: Arc<IntModel>, max_prefix_pages: usize,
+                       page_capacity: Option<usize>) -> IntEngine {
+        let hd = model.cfg.head_dim();
+        let pool = match page_capacity {
+            Some(cap) => PagePool::shared_with_capacity(hd, cap),
+            None => PagePool::shared(hd),
+        };
         IntEngine {
             model,
             pool,
@@ -241,14 +288,19 @@ impl Engine for IntEngine {
 
     fn prefill_with_threads(&self, prompt: &[u16], attn_threads: usize)
         -> (SeqState, Vec<f32>) {
+        expect_pool(self.try_prefill_with_threads(prompt, attn_threads))
+    }
+
+    fn try_prefill_with_threads(&self, prompt: &[u16], attn_threads: usize)
+        -> Result<(SeqState, Vec<f32>), PoolExhausted> {
         let threads = attn_threads.max(1);
         if prompt.is_empty() {
             let mut cache =
                 IntKvCache::with_pool(&self.model, self.pool.clone());
             let logits = self
                 .model
-                .prefill_batch_threads(prompt, &mut cache, threads);
-            return (SeqState::Int { cache }, logits);
+                .try_prefill_batch_threads(prompt, &mut cache, threads)?;
+            return Ok((SeqState::Int { cache }, logits));
         }
         // ---- trie lock #1: lookup + fork only (poison-robust; the
         // tree is structurally complete between operations) ----
@@ -260,7 +312,7 @@ impl Engine for IntEngine {
                 crate::trace::instant(
                     "prefix-hit", "engine",
                     &[("matched", prompt.len() as i64)]);
-                return (SeqState::Int { cache: state }, logits);
+                return Ok((SeqState::Int { cache: state }, logits));
             }
             Lookup::Partial { state, matched } => (state, matched),
             Lookup::Miss => (
@@ -273,21 +325,24 @@ impl Engine for IntEngine {
                                   &[("matched", matched as i64)]);
         }
         // ---- compute, lock-free: canonical page chunking (see the
-        // module docs) with a boundary snapshot fork per page ----
+        // module docs) with a boundary snapshot fork per page. A `?`
+        // here drops `cache` and every fork in `aligned`, returning
+        // all their pages to the free list — the trie sees only
+        // fully-built snapshots (insert happens on success alone) ----
         let b = prompt.len() / PAGE_TOKENS * PAGE_TOKENS;
         let mut aligned: Vec<(IntKvCache, Vec<f32>)> = Vec::new();
         let mut logits = Vec::new();
         let mut off = matched;
         while off < b {
             let next = off + PAGE_TOKENS;
-            logits = self.model.prefill_batch_threads(
-                &prompt[off..next], &mut cache, threads);
+            logits = self.model.try_prefill_batch_threads(
+                &prompt[off..next], &mut cache, threads)?;
             aligned.push((cache.fork(), logits.clone()));
             off = next;
         }
         if b < prompt.len() {
-            logits = self.model.prefill_batch_threads(
-                &prompt[b..], &mut cache, threads);
+            logits = self.model.try_prefill_batch_threads(
+                &prompt[b..], &mut cache, threads)?;
         }
         let tail = if b < prompt.len() {
             Some((cache.fork(), logits.clone()))
@@ -296,16 +351,22 @@ impl Engine for IntEngine {
         };
         // ---- trie lock #2: insert bookkeeping only ----
         lock_recover(&self.prefix).insert(prompt, matched, aligned, tail);
-        (SeqState::Int { cache }, logits)
+        Ok((SeqState::Int { cache }, logits))
     }
 
     fn prefill_chunk(&self, state: &mut SeqState, tokens: &[u16],
                      attn_threads: usize) -> Vec<f32> {
+        expect_pool(self.try_prefill_chunk(state, tokens, attn_threads))
+    }
+
+    fn try_prefill_chunk(&self, state: &mut SeqState, tokens: &[u16],
+                         attn_threads: usize)
+        -> Result<Vec<f32>, PoolExhausted> {
         match state {
             SeqState::Int { cache } => self
                 .model
-                .prefill_batch_threads(tokens, cache,
-                                       attn_threads.max(1)),
+                .try_prefill_batch_threads(tokens, cache,
+                                           attn_threads.max(1)),
             _ => panic!("wrong state kind"),
         }
     }
@@ -320,8 +381,15 @@ impl Engine for IntEngine {
     fn decode_wave_batched(&self, states: &mut [&mut SeqState],
                            tokens: &[u16], attn_threads: usize)
         -> Vec<Vec<f32>> {
+        expect_pool(
+            self.try_decode_wave_batched(states, tokens, attn_threads))
+    }
+
+    fn try_decode_wave_batched(&self, states: &mut [&mut SeqState],
+                               tokens: &[u16], attn_threads: usize)
+        -> Result<Vec<Vec<f32>>, PoolExhausted> {
         if states.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let mut caches: Vec<&mut IntKvCache> = states
             .iter_mut()
@@ -335,8 +403,12 @@ impl Engine for IntEngine {
         let mut scratch = lock_recover(&self.decode_scratch)
             .pop()
             .unwrap_or_default();
-        let out = self.model.decode_batch(
+        let out = self.model.try_decode_batch(
             tokens, &mut caches, attn_threads.max(1), &mut scratch);
+        // the scratch survives an Err (its buffers are rewritten from
+        // scratch every wave) — park it again either way; only a PANIC
+        // inside decode_batch loses the instance, which is mere
+        // capacity, not correctness
         lock_recover(&self.decode_scratch).push(scratch);
         out
     }

@@ -18,6 +18,19 @@ pub struct ServeMetrics {
     pub steps: u64,
     pub batch_occupancy_sum: u64,
     pub admission_blocks: u64,
+    /// Sequences preempted under page pressure (checkpointed,
+    /// pages freed, re-queued for recompute-restore).
+    pub preemptions: u64,
+    /// KV pages freed by those preemptions, at preempt time.
+    pub preempted_pages_reclaimed: u64,
+    /// Tokens recomputed restoring preempted sequences (prompt
+    /// re-prefill + generated-token replay).
+    pub restore_prefill_tokens: u64,
+    /// Requests refused with a typed [`super::RejectReason`]
+    /// (oversized prompt or unrelievable pool exhaustion) — counted
+    /// separately from `admission_blocks`, which is transient
+    /// backpressure on requests that eventually run.
+    pub oversize_rejections: u64,
     pub latencies: Vec<f64>,
     pub ttfts: Vec<f64>,
     /// latest page-pool sample (None until an engine reports one)
@@ -156,6 +169,13 @@ impl ServeMetrics {
         put("ttft_p95_s", Json::Num(self.ttft_p95()));
         put("mean_occupancy", Json::Num(self.mean_occupancy()));
         put("admission_blocks", Json::Int(self.admission_blocks as i64));
+        put("preemptions", Json::Int(self.preemptions as i64));
+        put("preempted_pages_reclaimed",
+            Json::Int(self.preempted_pages_reclaimed as i64));
+        put("restore_prefill_tokens",
+            Json::Int(self.restore_prefill_tokens as i64));
+        put("oversize_rejections",
+            Json::Int(self.oversize_rejections as i64));
         put("steps", Json::Int(self.steps as i64));
         if let Some(p) = &self.pool_last {
             let mut pj = BTreeMap::new();
@@ -223,6 +243,16 @@ impl ServeMetrics {
             self.mean_occupancy(),
             self.admission_blocks,
         );
+        if self.preemptions > 0 || self.oversize_rejections > 0 {
+            println!(
+                "degradation preemptions {} (pages reclaimed {}) / \
+                 restore tokens {} / rejections {}",
+                self.preemptions,
+                self.preempted_pages_reclaimed,
+                self.restore_prefill_tokens,
+                self.oversize_rejections,
+            );
+        }
         if let Some(p) = &self.pool_last {
             println!(
                 "pool stats  pages used {} (peak {}) / free {} / \
@@ -332,6 +362,10 @@ mod tests {
         m.decode_time_s = 2.0;
         m.prefill_tokens = 40;
         m.prefill_time_s = 0.5;
+        m.preemptions = 2;
+        m.preempted_pages_reclaimed = 24;
+        m.restore_prefill_tokens = 31;
+        m.oversize_rejections = 1;
         for i in 1..=20 {
             m.record_request(i as f64, i as f64 * 0.5);
         }
@@ -351,6 +385,15 @@ mod tests {
         // nearest-rank p95 of 1..=20 is the 19th sample
         let p95 = parsed.get("latency_p95_s").unwrap().as_f64().unwrap();
         assert!((p95 - 19.0).abs() < 1e-9);
+        assert_eq!(parsed.get("preemptions").unwrap().as_i64(), Some(2));
+        assert_eq!(
+            parsed.get("preempted_pages_reclaimed").unwrap().as_i64(),
+            Some(24));
+        assert_eq!(
+            parsed.get("restore_prefill_tokens").unwrap().as_i64(),
+            Some(31));
+        assert_eq!(parsed.get("oversize_rejections").unwrap().as_i64(),
+                   Some(1));
         let pool = parsed.get("pool").expect("pool section");
         assert_eq!(pool.get("high_water").unwrap().as_i64(), Some(10));
         assert_eq!(pool.get("used_peak").unwrap().as_i64(), Some(6));

@@ -44,6 +44,24 @@ pub struct Request {
     pub submitted: Instant,
 }
 
+/// Why a request was refused service instead of being admitted. A
+/// rejected request still receives a [`Response`] (empty text,
+/// `reject: Some(..)`) so closed-loop clients always see exactly one
+/// response per submitted request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The request can NEVER fit: its page estimate exceeds the
+    /// configured `kv_page_budget` even against an empty pool.
+    /// Detected before any engine work (fast fail) and counted
+    /// separately from `admission_blocks` — a block is backpressure,
+    /// this is unsatisfiable.
+    OversizedPrompt { est_pages: usize, budget: usize },
+    /// Admission prefill kept failing with pool exhaustion after
+    /// retry, prefix-cache reclaim and preemption all failed to free
+    /// enough pages.
+    PoolExhausted { est_pages: usize },
+}
+
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
@@ -54,6 +72,10 @@ pub struct Response {
     pub ttft: f64,
     /// total latency (s)
     pub latency: f64,
+    /// `Some(reason)` when the request was refused service; such
+    /// responses carry no text and are excluded from latency/TTFT
+    /// percentiles.
+    pub reject: Option<RejectReason>,
 }
 
 /// Front handle: submit requests, receive responses.

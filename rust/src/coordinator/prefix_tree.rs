@@ -66,6 +66,13 @@
 //! every descendant lookup, so shared prefixes stay warm and leaves
 //! go first. Dropping an entry releases its page references; pages
 //! return to the pool free list once no live sequence holds them.
+//!
+//! Under pool-exhaustion faults the batcher's degradation ladder
+//! (see `coordinator::batcher`) reclaims trie pages BEFORE preempting
+//! any live sequence: cached prefixes hold no in-flight work, so they
+//! are always the cheapest pages to give back — eviction here costs a
+//! future prefill speedup, preemption costs recomputing work already
+//! done.
 
 use crate::int_model::kv_cache::{IntKvCache, PAGE_TOKENS};
 use std::collections::HashSet;

@@ -156,6 +156,34 @@
 //!    read ONLY through the pre-refreshed snapshot — a worker never
 //!    acquires the KV pool lock, which is what makes "barrier while a
 //!    lock is pending" impossible by construction.
+//!
+//! # Failure semantics (graceful degradation under KV pressure)
+//!
+//! Page grabs are FALLIBLE end-to-end: [`PagePool`] allocation, lane
+//! appends and CoW forks return `Result<_, `[`PoolExhausted`]`>`, and
+//! the forward paths (`prefill_raw` / `decode_raw` /
+//! `decode_batch_raw` and their public `try_*` wrappers) propagate it
+//! — a mid-wave exhaustion is a recoverable event the batcher turns
+//! into a preemption, never a panic on a serving path. The error
+//! contract (documented on [`PoolExhausted`]): refcounts stay
+//! balanced on every `Err` (dropping the failing cache frees all its
+//! pages — `used` returns to 0 after teardown), but the failing
+//! cache's values may be mid-update, so it must be discarded and the
+//! sequence rebuilt by recompute. Integer-only inference makes that
+//! rebuild EXACT: replaying the same admission chunking and the same
+//! per-token decode appends reproduces every lane value and scale
+//! bit-for-bit (I-LLM's fully-integer DI ops have no FP
+//! non-associativity to reorder), which is what lets the batcher
+//! promise restored sequences are bit-identical to uninterrupted
+//! runs.
+//!
+//! Deterministic fault injection (`util::faults`, off unless armed)
+//! hooks three spots here: `alloc_impl` (fail the Nth page grab),
+//! the append-phase `lock_pool` acquisitions (panic WITH the guard
+//! held — poisons the mutex before any mutation, so `lock_recover`
+//! re-enters a consistent pool), and the worker pool's broadcast
+//! slots. Hooks sit on compute paths only — never in drop/release —
+//! so an injected panic cannot double-panic during unwind cleanup.
 
 use super::{dequant_logits, Heads, IntModel, NL_BITS};
 use crate::config::Arch;
@@ -367,6 +395,67 @@ pub struct PagePool {
     free: Vec<u32>,
     cow_copies: u64,
     high_water: usize,
+    /// hard page limit: allocations past it fail with
+    /// [`PoolExhausted`] (None = grow without bound)
+    capacity: Option<usize>,
+}
+
+/// Typed allocation failure: the pool could not produce a page —
+/// its configured capacity is exhausted, or fault injection
+/// (`util::faults`) forced the failure. Carried as `Err` through
+/// every append/CoW/forward path so a mid-wave exhaustion is a
+/// recoverable event for the batcher, never a panic on a serving
+/// path.
+///
+/// # Error-state contract
+///
+/// An `Err` leaves REFCOUNTS balanced — no page is leaked or
+/// double-freed, and dropping the failing cache returns every page
+/// it holds to the free list — but it may leave that cache's VALUES
+/// mid-update: a chunk append stops partway through its rows, a
+/// multi-page rescale may have converted only a prefix of the lane.
+/// A cache that returned `PoolExhausted` must therefore be treated
+/// as poisoned for compute and DISCARDED; the sequence is restored
+/// by recompute (checkpointed tokens + deterministic integer
+/// prefill/decode), which is exactly what the batcher's preemption
+/// path does. All other caches on the same pool are untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// pages in use at the failed allocation
+    pub used: usize,
+    /// capacity that gated it (None = fault-injected failure)
+    pub capacity: Option<usize>,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.capacity {
+            Some(cap) => write!(
+                f,
+                "kv page pool exhausted ({} used of {} capacity)",
+                self.used, cap
+            ),
+            None => write!(
+                f,
+                "kv page allocation failed (fault-injected, {} used)",
+                self.used
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Unwrap a pool result on paths where exhaustion is impossible by
+/// construction: tests, benches and eval drive private unbounded
+/// pools with no fault injection armed. The serving engine never
+/// calls this — it propagates [`PoolExhausted`] through the `try_*`
+/// variants so the batcher can preempt/retry/reject.
+pub(crate) fn expect_pool<T>(r: Result<T, PoolExhausted>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => panic!("kv pool exhausted on an infallible path: {e}"),
+    }
 }
 
 /// Handle shared by an engine and every cache it creates.
@@ -388,11 +477,23 @@ impl PagePool {
             free: Vec::new(),
             cow_copies: 0,
             high_water: 0,
+            capacity: None,
         }
+    }
+
+    /// Pool that refuses to hold more than `capacity` pages at once:
+    /// the serving configuration for bounded KV memory. Allocation
+    /// past the limit returns [`PoolExhausted`] instead of growing.
+    pub fn with_capacity(hd: usize, capacity: usize) -> PagePool {
+        PagePool { capacity: Some(capacity), ..PagePool::new(hd) }
     }
 
     pub fn shared(hd: usize) -> SharedPagePool {
         Arc::new(Mutex::new(PagePool::new(hd)))
+    }
+
+    pub fn shared_with_capacity(hd: usize, capacity: usize) -> SharedPagePool {
+        Arc::new(Mutex::new(PagePool::with_capacity(hd, capacity)))
     }
 
     pub fn page_elems(&self) -> usize {
@@ -433,12 +534,25 @@ impl PagePool {
     }
 
     /// Take a zeroed page: off the free list if possible, freshly
-    /// allocated otherwise. Refcount starts at 1.
-    fn alloc(&mut self) -> u32 {
+    /// allocated otherwise. Refcount starts at 1. Fails with
+    /// [`PoolExhausted`] — before touching any pool state — when the
+    /// configured capacity is reached or fault injection fires.
+    fn alloc(&mut self) -> Result<u32, PoolExhausted> {
         self.alloc_impl(true)
     }
 
-    fn alloc_impl(&mut self, zero: bool) -> u32 {
+    fn alloc_impl(&mut self, zero: bool) -> Result<u32, PoolExhausted> {
+        let exhausted = self
+            .capacity
+            .map_or(false, |cap| self.used() >= cap)
+            || crate::util::faults::on_page_alloc();
+        if exhausted {
+            bump(&health().pool_alloc_failures);
+            return Err(PoolExhausted {
+                used: self.used(),
+                capacity: self.capacity,
+            });
+        }
         let id = match self.free.pop() {
             Some(id) => {
                 if zero {
@@ -460,7 +574,7 @@ impl PagePool {
             }
         };
         self.high_water = self.high_water.max(self.used());
-        id
+        Ok(id)
     }
 
     fn retain(&mut self, id: u32) {
@@ -483,15 +597,17 @@ impl PagePool {
 
     /// Copy-on-write: copy `id`'s contents to a fresh page, drop one
     /// reference on `id`, return the private copy. Skips the zero
-    /// fill — `copy_page` overwrites every element.
-    fn cow(&mut self, id: u32) -> u32 {
+    /// fill — `copy_page` overwrites every element. A failed
+    /// allocation propagates BEFORE any mutation: `id` keeps its
+    /// reference and the pool is unchanged.
+    fn cow(&mut self, id: u32) -> Result<u32, PoolExhausted> {
         debug_assert!(self.refcount(id) > 1, "cow of an unshared page");
-        let new = self.alloc_impl(false);
+        let new = self.alloc_impl(false)?;
         self.copy_page(id, new);
         self.release(id);
         self.cow_copies += 1;
         bump(&health().pool_cow_copies);
-        new
+        Ok(new)
     }
 
     fn copy_page(&mut self, src: u32, dst: u32) {
@@ -624,9 +740,15 @@ impl Lane {
     /// bit-identical to n incremental `grow` calls on the decode path.
     /// Rescaling writes in place, so a page shared with a forked lane
     /// is copied first (the fork keeps the values at ITS scale).
-    fn grow_by(&mut self, pool: &mut PagePool, n: i32, hd: usize) {
+    ///
+    /// A CoW allocation failure propagates with refcounts balanced,
+    /// but pages already rescaled keep their new values while `k` is
+    /// unchanged — the lane is poisoned for compute and the owning
+    /// cache must be discarded (see [`PoolExhausted`]).
+    fn grow_by(&mut self, pool: &mut PagePool, n: i32, hd: usize)
+               -> Result<(), PoolExhausted> {
         if n <= 0 {
-            return;
+            return Ok(());
         }
         let mut remaining = self.len * hd;
         for slot in self.pages.iter_mut() {
@@ -635,7 +757,7 @@ impl Lane {
             }
             let mut id = *slot;
             if pool.refcount(id) > 1 {
-                id = pool.cow(id);
+                id = pool.cow(id)?;
                 *slot = id;
             }
             let used = remaining.min(pool.page_elems);
@@ -649,33 +771,39 @@ impl Lane {
             remaining -= used;
         }
         self.k -= n;
+        Ok(())
     }
 
     /// Page id + token slot the next append writes into: a fresh pool
     /// page at page boundaries, a CoW copy if the tail page is shared
-    /// (the first divergent append after a fork lands here).
-    fn writable_tail(&mut self, pool: &mut PagePool) -> (u32, usize) {
+    /// (the first divergent append after a fork lands here). Fails
+    /// with the pool unchanged when no page can be produced.
+    fn writable_tail(&mut self, pool: &mut PagePool)
+                     -> Result<(u32, usize), PoolExhausted> {
         let slot = self.len % PAGE_TOKENS;
         if slot == 0 {
             debug_assert_eq!(self.pages.len(), self.len / PAGE_TOKENS);
-            let id = pool.alloc();
+            let id = pool.alloc()?;
             self.pages.push(id);
-            (id, 0)
+            Ok((id, 0))
         } else {
             let pi = self.len / PAGE_TOKENS;
             let mut id = self.pages[pi];
             if pool.refcount(id) > 1 {
-                id = pool.cow(id);
+                id = pool.cow(id)?;
                 self.pages[pi] = id;
             }
-            (id, slot)
+            Ok((id, slot))
         }
     }
 
     /// Append a centered vector with scale mt/2^kt, requantizing into
-    /// the lane scale (growing the lane scale first if needed).
+    /// the lane scale (growing the lane scale first if needed). On
+    /// `Err` the token was NOT appended (`len` unchanged) but a grow
+    /// may have partially rescaled — poisoned-lane contract, see
+    /// [`PoolExhausted`].
     fn append(&mut self, pool: &mut PagePool, x: &[i64], mt: i32, kt: i32,
-              hd: usize) {
+              hd: usize) -> Result<(), PoolExhausted> {
         if self.len == 0 {
             // adopt the first vector's scale directly — avoids a long
             // halving chain (each halving rounds, and tens of them bias
@@ -693,27 +821,31 @@ impl Lane {
             bump(&health().lane_grow_saturations);
         }
         let grows = self.grows_needed(&[(lo, hi, mt, kt)]);
-        self.grow_by(pool, grows, hd);
+        self.grow_by(pool, grows, hd)?;
         let sh = self.k - kt;
         if nonzero && -sh > LANE_SH_MAX {
             bump(&health().lane_zero_rounds);
         }
-        let (id, slot) = self.writable_tail(pool);
+        let (id, slot) = self.writable_tail(pool)?;
         let dst = &mut pool.page_mut(id)[slot * hd..(slot + 1) * hd];
         for (d, &v) in dst.iter_mut().zip(x.iter()) {
             *d = self.to_lane(v, mt as i64, sh) as i32;
         }
         self.len += 1;
+        Ok(())
     }
 
     /// Bulk-append one head's (T, hd) block of centered vectors with
     /// per-row scales (ms[r], ks[r]): resolve the lane scale ONCE from
     /// the chunk extrema, then write every row at the final scale.
+    /// On `Err` the chunk stops partway (rows before the failing one
+    /// are appended) — poisoned-lane contract, see [`PoolExhausted`].
     fn append_chunk(&mut self, pool: &mut PagePool, heads: &Heads,
-                    head: usize, ms: &[i32], ks: &[i32]) {
+                    head: usize, ms: &[i32], ks: &[i32])
+                    -> Result<(), PoolExhausted> {
         let (t, hd) = (heads.t, heads.hd);
         if t == 0 {
-            return;
+            return Ok(());
         }
         if self.len == 0 {
             self.m = ms[0];
@@ -731,7 +863,7 @@ impl Lane {
             .collect();
         let k_entry = self.k;
         let grows = self.grows_needed(&rows);
-        self.grow_by(pool, grows, hd);
+        self.grow_by(pool, grows, hd)?;
         // health telemetry, mirroring `append`: per nonzero row, a
         // pre-grow gap past the cap forced saturating probes; a
         // post-grow gap past the cap stores the row as zeros
@@ -752,13 +884,14 @@ impl Lane {
         for r in 0..t {
             let sh = self.k - ks[r];
             let mt = ms[r] as i64;
-            let (id, slot) = self.writable_tail(pool);
+            let (id, slot) = self.writable_tail(pool)?;
             let dst = &mut pool.page_mut(id)[slot * hd..(slot + 1) * hd];
             for (d, &v) in dst.iter_mut().zip(heads.head_row(r, head)) {
                 *d = self.to_lane(v, mt, sh) as i32;
             }
             self.len += 1;
         }
+        Ok(())
     }
 
     fn n_tokens(&self) -> usize {
@@ -1237,8 +1370,8 @@ impl IntModel {
     /// head in bulk. Returns last-position logits.
     pub fn prefill_batch(&self, tokens: &[u16], cache: &mut IntKvCache)
         -> Vec<f32> {
-        self.prefill_batch_opts(tokens, cache,
-                                crate::util::illm_threads(), false)
+        expect_pool(self.prefill_batch_opts(
+            tokens, cache, crate::util::illm_threads(), false))
     }
 
     /// Tiled batched prefill with an explicit attention-worker count.
@@ -1248,6 +1381,18 @@ impl IntModel {
     pub fn prefill_batch_threads(&self, tokens: &[u16],
                                  cache: &mut IntKvCache, threads: usize)
         -> Vec<f32> {
+        expect_pool(self.prefill_batch_opts(tokens, cache, threads, false))
+    }
+
+    /// Fallible batched prefill: like [`IntModel::prefill_batch_threads`]
+    /// but surfaces pool exhaustion as [`PoolExhausted`] instead of
+    /// panicking — the serving path. On `Err` the cache is poisoned
+    /// for compute and must be discarded (its pages are released on
+    /// drop); see the error-state contract on [`PoolExhausted`].
+    pub fn try_prefill_batch_threads(&self, tokens: &[u16],
+                                     cache: &mut IntKvCache,
+                                     threads: usize)
+        -> Result<Vec<f32>, PoolExhausted> {
         self.prefill_batch_opts(tokens, cache, threads, false)
     }
 
@@ -1257,17 +1402,18 @@ impl IntModel {
     /// benchmarks.
     pub fn prefill_batch_rowwise(&self, tokens: &[u16],
                                  cache: &mut IntKvCache) -> Vec<f32> {
-        self.prefill_batch_opts(tokens, cache, 1, true)
+        expect_pool(self.prefill_batch_opts(tokens, cache, 1, true))
     }
 
     fn prefill_batch_opts(&self, tokens: &[u16], cache: &mut IntKvCache,
-                          threads: usize, rowwise: bool) -> Vec<f32> {
+                          threads: usize, rowwise: bool)
+        -> Result<Vec<f32>, PoolExhausted> {
         if tokens.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
-        let raw = self.prefill_raw(tokens, cache, threads, rowwise);
+        let raw = self.prefill_raw(tokens, cache, threads, rowwise)?;
         let logits = dequant_logits(&raw);
-        logits.row(logits.rows - 1).to_vec()
+        Ok(logits.row(logits.rows - 1).to_vec())
     }
 
     /// Integer part of the batched prefill: advances the cache by
@@ -1280,8 +1426,13 @@ impl IntModel {
     /// heads + a storage snapshot), then a lock-free attend phase over
     /// the snapshot — tiled by default, optionally fanned out over
     /// `threads` head-parallel scoped workers.
+    ///
+    /// Fallible: a failed page grab in the append phase propagates as
+    /// [`PoolExhausted`] with the lock released, the wave's other
+    /// caches untouched and THIS cache poisoned-but-droppable.
     fn prefill_raw(&self, tokens: &[u16], cache: &mut IntKvCache,
-                   threads: usize, rowwise: bool) -> crate::ops::RawRows {
+                   threads: usize, rowwise: bool)
+        -> Result<crate::ops::RawRows, PoolExhausted> {
         let cfg = &self.cfg;
         let centered = cfg.arch == Arch::Opt;
         let a_bits = self.scheme.a_bits;
@@ -1319,12 +1470,13 @@ impl IntModel {
                 // narrowing split (the guard drops before the timer)
                 let _pt = phase_timer(Phase::KvAppend, li as i64);
                 let mut guard = lock_pool(pool);
+                crate::util::faults::on_append_lock();
                 for head in 0..h {
                     let idx = li * h + head;
                     k_lanes[idx].append_chunk(&mut guard, &kh, head,
-                                              &k.m, &k.k);
+                                              &k.m, &k.k)?;
                     v_lanes[idx].append_chunk(&mut guard, &vh, head,
-                                              &v.m, &v.k);
+                                              &v.m, &v.k)?;
                 }
                 guard.refresh_snapshot(snap);
             }
@@ -1453,15 +1605,23 @@ impl IntModel {
             bits: x.bits,
         };
         let hf = di_norm(&last, NL_BITS, centered);
-        di_linear_raw(&hf, &self.lm_head)
+        Ok(di_linear_raw(&hf, &self.lm_head))
     }
 
     /// Decode one token given the cache; appends K/V and returns logits.
     pub fn decode_one(&self, token: u16, cache: &mut IntKvCache)
         -> Vec<f32> {
-        let raw = self.decode_raw(token, cache);
+        expect_pool(self.try_decode_one(token, cache))
+    }
+
+    /// Fallible single-token decode (the serving path): pool
+    /// exhaustion surfaces as [`PoolExhausted`] and the cache must be
+    /// discarded — see the error-state contract on [`PoolExhausted`].
+    pub fn try_decode_one(&self, token: u16, cache: &mut IntKvCache)
+        -> Result<Vec<f32>, PoolExhausted> {
+        let raw = self.decode_raw(token, cache)?;
         let logits = dequant_logits(&raw);
-        logits.row(0).to_vec()
+        Ok(logits.row(0).to_vec())
     }
 
     /// Single-token forward. Same locking shape as `prefill_raw`: per
@@ -1471,7 +1631,7 @@ impl IntModel {
     /// head cannot amortize a thread spawn; decode parallelism is per
     /// SEQUENCE in the batcher's wave.
     fn decode_raw(&self, token: u16, cache: &mut IntKvCache)
-        -> crate::ops::RawRows {
+        -> Result<crate::ops::RawRows, PoolExhausted> {
         let cfg = &self.cfg;
         let centered = cfg.arch == Arch::Opt;
         let a_bits = self.scheme.a_bits;
@@ -1507,16 +1667,17 @@ impl IntModel {
             {
                 let _pt = phase_timer(Phase::KvAppend, li as i64);
                 let mut guard = lock_pool(pool);
+                crate::util::faults::on_append_lock();
                 for head in 0..h {
                     let idx = li * h + head;
                     k_lanes[idx].append(
                         &mut guard,
                         &krow[head * hd..(head + 1) * hd],
-                        k.m[0], k.k[0], hd);
+                        k.m[0], k.k[0], hd)?;
                     v_lanes[idx].append(
                         &mut guard,
                         &vrow[head * hd..(head + 1) * hd],
-                        v.m[0], v.k[0], hd);
+                        v.m[0], v.k[0], hd)?;
                 }
                 guard.refresh_snapshot(snap);
             }
@@ -1557,7 +1718,7 @@ impl IntModel {
         }
         cache.pos += 1;
         let hf = di_norm(&x, NL_BITS, centered);
-        di_linear_raw(&hf, &self.lm_head)
+        Ok(di_linear_raw(&hf, &self.lm_head))
     }
 
     /// One continuous-batched decode step: logits for every sequence.
@@ -1569,9 +1730,24 @@ impl IntModel {
         threads: usize,
         batch: &mut DecodeBatchScratch,
     ) -> Vec<Vec<f32>> {
-        let raw = self.decode_batch_raw(tokens, caches, threads, batch);
+        expect_pool(self.try_decode_batch(tokens, caches, threads, batch))
+    }
+
+    /// Fallible continuous-batched decode step (the serving path):
+    /// pool exhaustion mid-wave surfaces as [`PoolExhausted`]. The
+    /// whole wave's caches are then mid-token and must ALL be
+    /// discarded (the batcher preempts the entire wave) — see the
+    /// error-state contract on [`PoolExhausted`].
+    pub fn try_decode_batch(
+        &self,
+        tokens: &[u16],
+        caches: &mut [&mut IntKvCache],
+        threads: usize,
+        batch: &mut DecodeBatchScratch,
+    ) -> Result<Vec<Vec<f32>>, PoolExhausted> {
+        let raw = self.decode_batch_raw(tokens, caches, threads, batch)?;
         let logits = dequant_logits(&raw);
-        (0..raw.rows).map(|r| logits.row(r).to_vec()).collect()
+        Ok((0..raw.rows).map(|r| logits.row(r).to_vec()).collect())
     }
 
     /// One decode step for N sequences as N-ROW batched work per layer
@@ -1599,8 +1775,7 @@ impl IntModel {
         caches: &mut [&mut IntKvCache],
         threads: usize,
         batch: &mut DecodeBatchScratch,
-    ) -> crate::ops::RawRows {
-        let cfg = &self.cfg;
+    ) -> Result<crate::ops::RawRows, PoolExhausted> {
         let n = tokens.len();
         assert_eq!(caches.len(), n, "one cache per token");
         assert!(n > 0, "decode_batch_raw needs at least one sequence");
@@ -1608,6 +1783,23 @@ impl IntModel {
             !batch.in_use.swap(true, Ordering::Acquire),
             "DecodeBatchScratch shared by two concurrent waves"
         );
+        let out = self.decode_batch_raw_inner(tokens, caches, threads,
+                                              batch);
+        // cleared on BOTH exits: an Err wave must leave the scratch
+        // reusable for the next (post-preemption) wave
+        batch.in_use.store(false, Ordering::Release);
+        out
+    }
+
+    fn decode_batch_raw_inner(
+        &self,
+        tokens: &[u16],
+        caches: &mut [&mut IntKvCache],
+        threads: usize,
+        batch: &mut DecodeBatchScratch,
+    ) -> Result<crate::ops::RawRows, PoolExhausted> {
+        let cfg = &self.cfg;
+        let n = tokens.len();
         let pool = caches[0].pool.clone();
         for c in caches.iter() {
             assert!(Arc::ptr_eq(&pool, &c.pool),
@@ -1627,8 +1819,9 @@ impl IntModel {
             let p = pe.gather(&positions);
             x = di_add(&x, &p, NL_BITS);
         }
-        let DecodeBatchScratch { snap, workers, o_raw, vms, vks, in_use } =
-            batch;
+        let DecodeBatchScratch {
+            snap, workers, o_raw, vms, vks, in_use: _,
+        } = batch;
         for (li, layer) in self.layers.iter().enumerate() {
             let pt = phase_timer(Phase::Qkv, li as i64);
             let hh = di_norm(&x, a_bits, centered);
@@ -1649,17 +1842,18 @@ impl IntModel {
             {
                 let _pt = phase_timer(Phase::KvAppend, li as i64);
                 let mut guard = lock_pool(&pool);
+                crate::util::faults::on_append_lock();
                 for (s, cache) in caches.iter_mut().enumerate() {
                     for head in 0..h {
                         let idx = li * h + head;
                         cache.k[idx].append(
                             &mut guard,
                             kh.head_row(s, head),
-                            k.m[s], k.k[s], hd);
+                            k.m[s], k.k[s], hd)?;
                         cache.v[idx].append(
                             &mut guard,
                             vh.head_row(s, head),
-                            v.m[s], v.k[s], hd);
+                            v.m[s], v.k[s], hd)?;
                     }
                 }
                 guard.refresh_snapshot(snap);
@@ -1774,9 +1968,7 @@ impl IntModel {
             cache.pos += 1;
         }
         let hf = di_norm(&x, NL_BITS, centered);
-        let out = di_linear_raw_threads(&hf, &self.lm_head, nt);
-        in_use.store(false, Ordering::Release);
-        out
+        Ok(di_linear_raw_threads(&hf, &self.lm_head, nt))
     }
 
     /// Center + rotate a single-row qkv output into `out` (H*hd,) i64,
@@ -1806,9 +1998,9 @@ mod tests {
     #[test]
     fn pool_free_list_reuse_and_high_water() {
         let mut pool = PagePool::new(4);
-        let a = pool.alloc();
-        let b = pool.alloc();
-        let c = pool.alloc();
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
         assert_eq!(pool.used(), 3);
         assert_eq!(pool.stats().high_water, 3);
         pool.page_mut(b)[0] = 42;
@@ -1817,7 +2009,7 @@ mod tests {
         assert_eq!(pool.used(), 1);
         assert_eq!(pool.stats().free, 2);
         // reuse comes off the free list (zeroed), no fresh allocation
-        let d = pool.alloc();
+        let d = pool.alloc().unwrap();
         assert!(d == b || d == c, "free list not reused");
         assert_eq!(pool.page(d), &[0; 4 * PAGE_TOKENS][..],
                    "reused page not zeroed");
@@ -1839,7 +2031,7 @@ mod tests {
     fn snapshot_reads_match_pool_reads_across_slabs() {
         let mut pool = PagePool::new(2);
         let n = SLAB_PAGES + 3; // forces a second slab
-        let ids: Vec<u32> = (0..n).map(|_| pool.alloc()).collect();
+        let ids: Vec<u32> = (0..n).map(|_| pool.alloc().unwrap()).collect();
         for (i, &id) in ids.iter().enumerate() {
             for (c, v) in pool.page_mut(id).iter_mut().enumerate() {
                 *v = (i * 1000 + c) as i32;
@@ -1851,7 +2043,7 @@ mod tests {
         assert_eq!(snap.slabs.len(), 2);
         // growing the pool after the refresh must not disturb the view
         let extra: Vec<u32> =
-            (0..SLAB_PAGES).map(|_| pool.alloc()).collect();
+            (0..SLAB_PAGES).map(|_| pool.alloc().unwrap()).collect();
         assert_eq!(pool.slabs.len(), 3);
         for (i, &id) in ids.iter().enumerate() {
             assert_eq!(snap.page(id), pool.page(id), "page {id}");
@@ -1882,7 +2074,7 @@ mod tests {
         .join();
         assert!(pool.lock().is_err(), "lock must be poisoned");
         let mut g = lock_pool(&pool);
-        let id = g.alloc();
+        let id = g.alloc().unwrap();
         assert_eq!(g.used(), 1);
         g.release(id);
         assert_eq!(g.used(), 0);
@@ -1895,9 +2087,9 @@ mod tests {
         let mut lane = Lane::new();
         // two vectors at different incoming scales
         let v1 = vec![100i64, -50, 25, 0]; // scale 200/2^12
-        lane.append(&mut pool, &v1, 200, 12, hd);
+        lane.append(&mut pool, &v1, 200, 12, hd).unwrap();
         let v2 = vec![10i64, -120, 60, 90]; // scale 150/2^10
-        lane.append(&mut pool, &v2, 150, 10, hd);
+        lane.append(&mut pool, &v2, 150, 10, hd).unwrap();
         assert_eq!(lane.n_tokens(), 2);
         let vals = lane.used_vals(&pool, hd);
         let s_lane = lane.m as f64 / (lane.k as f64).exp2();
@@ -1920,11 +2112,12 @@ mod tests {
         let hd = 2;
         let mut pool = PagePool::new(hd);
         let mut lane = Lane::new();
-        lane.append(&mut pool, &[100, -100], 128, 10, hd); // small values
+        // small values
+        lane.append(&mut pool, &[100, -100], 128, 10, hd).unwrap();
         let s_before = lane.m as f64 / (lane.k as f64).exp2();
         let want_old = 100f64 * 128.0 / (10f64).exp2();
         // a vector 100x larger forces grow-only rescaling
-        lane.append(&mut pool, &[10_000, -10_000], 128, 10, hd);
+        lane.append(&mut pool, &[10_000, -10_000], 128, 10, hd).unwrap();
         let s_after = lane.m as f64 / (lane.k as f64).exp2();
         assert!(s_after > s_before, "lane scale must coarsen");
         let vals = lane.used_vals(&pool, hd);
@@ -1947,7 +2140,7 @@ mod tests {
         // 20 appends cross a PAGE_TOKENS=16 page boundary
         for step in 0..20 {
             let v = vec![mag, -mag / 2, mag / 3];
-            lane.append(&mut pool, &v, 128 + (step % 100) as i32, 12, hd);
+            lane.append(&mut pool, &v, 128 + (step % 100) as i32, 12, hd).unwrap();
             mag = (mag * 3).min(1 << 40);
         }
         assert!(lane.used_vals(&pool, hd).iter().all(|&v| v.abs() <= 127),
@@ -1965,8 +2158,8 @@ mod tests {
         // adopt a very fine scale, then append at a much coarser one:
         // the saturating probe must keep growing rather than silently
         // truncating the shift, and values must stay in range
-        lane.append(&mut pool, &[50, -50], 200, 60, hd);
-        lane.append(&mut pool, &[100, -100], 200, 2, hd);
+        lane.append(&mut pool, &[50, -50], 200, 60, hd).unwrap();
+        lane.append(&mut pool, &[100, -100], 200, 2, hd).unwrap();
         let vals = lane.used_vals(&pool, hd);
         assert!(vals.iter().all(|&v| v.abs() <= 127),
                 "gap append escaped 8-bit range: {vals:?}");
@@ -1979,7 +2172,7 @@ mod tests {
                    "grow-saturation must count once per clamped append");
         assert_eq!(d.lane_zero_rounds, 0);
         // reverse direction: much finer than the lane rounds to zero
-        lane.append(&mut pool, &[3, -3], 200, 62, hd);
+        lane.append(&mut pool, &[3, -3], 200, 62, hd).unwrap();
         let vals = lane.used_vals(&pool, hd);
         assert_eq!(&vals[2 * hd..], &[0, 0]);
         let d = health().snapshot().since(&h0);
@@ -2019,12 +2212,12 @@ mod tests {
             let mut seq = Lane::new();
             for r in 0..t {
                 seq.append(&mut pool_s, heads.head_row(r, 0),
-                           ms[r], ks[r], hd);
+                           ms[r], ks[r], hd).unwrap();
             }
             // bulk
             let mut pool_b = PagePool::new(hd);
             let mut bulk = Lane::new();
-            bulk.append_chunk(&mut pool_b, &heads, 0, &ms, &ks);
+            bulk.append_chunk(&mut pool_b, &heads, 0, &ms, &ks).unwrap();
             assert_eq!(bulk.n_tokens(), seq.n_tokens(), "case {case} length");
             assert_eq!((bulk.m, bulk.k), (seq.m, seq.k),
                        "case {case} lane scale");
@@ -2050,7 +2243,7 @@ mod tests {
         let mut lane = Lane::new();
         // 18 tokens: one full page + a 2-token tail page
         for i in 0..18i64 {
-            lane.append(&mut pool, &[i, -i], 128, 12, hd);
+            lane.append(&mut pool, &[i, -i], 128, 12, hd).unwrap();
         }
         assert_eq!(pool.used(), 2);
         let fork = lane.fork(&mut pool);
@@ -2060,7 +2253,7 @@ mod tests {
 
         // divergent append on the original: tail page CoWs, the full
         // page stays shared
-        lane.append(&mut pool, &[5, -5], 128, 12, hd);
+        lane.append(&mut pool, &[5, -5], 128, 12, hd).unwrap();
         let s1 = pool.stats();
         assert_eq!(s1.cow_copies, 1, "tail append must CoW once");
         assert_eq!(s1.used, 3);
@@ -2071,7 +2264,7 @@ mod tests {
         // a grow on the original rescales in place -> must CoW the
         // still-shared page; the fork keeps its scale AND its values
         let (fm, fk) = (fork.m, fork.k);
-        lane.append(&mut pool, &[1 << 20, -(1 << 20)], 128, 12, hd);
+        lane.append(&mut pool, &[1 << 20, -(1 << 20)], 128, 12, hd).unwrap();
         assert!(lane.k < fk, "big append must have grown the lane");
         let s2 = pool.stats();
         assert!(s2.cow_copies >= 2, "grow on shared page must CoW");
@@ -2253,4 +2446,47 @@ mod tests {
             assert_eq!(v, zp1, "silent head [{c}] must sit at zp");
         }
     }
+
+    /// Capacity-bounded pool: allocation past the limit fails typed,
+    /// with the pool unchanged, and succeeds again after a release.
+    #[test]
+    fn capacity_bounded_alloc_fails_typed_and_recovers() {
+        let mut pool = PagePool::with_capacity(4, 2);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let err = pool.alloc().unwrap_err();
+        assert_eq!(err, PoolExhausted { used: 2, capacity: Some(2) });
+        assert_eq!(pool.used(), 2, "failed alloc must not change used");
+        assert_eq!(pool.stats().high_water, 2);
+        pool.release(b);
+        let c = pool.alloc().unwrap();
+        pool.release(a);
+        pool.release(c);
+        assert_eq!(pool.used(), 0);
+    }
+
+    /// A CoW fork that cannot allocate propagates BEFORE mutating:
+    /// the shared page keeps both references and no page leaks.
+    #[test]
+    fn cow_failure_leaves_refcounts_balanced() {
+        let hd = 2;
+        let mut pool = PagePool::with_capacity(hd, 1);
+        let mut lane = Lane::new();
+        lane.append(&mut pool, &[7, -7], 128, 12, hd).unwrap();
+        let fork = lane.fork(&mut pool); // refcount 2, no allocation
+        assert_eq!(pool.used(), 1);
+        // divergent append needs a CoW page; the pool is full
+        let err = lane.append(&mut pool, &[9, -9], 128, 12, hd);
+        assert!(err.is_err(), "append must fail, not panic");
+        assert_eq!(pool.used(), 1, "failed CoW must not leak");
+        assert_eq!(pool.stats().shared, 1,
+                   "shared page must keep both references");
+        assert_eq!(lane.n_tokens(), 1, "failed append must not extend");
+        // both sides still release cleanly
+        lane.release(&mut pool);
+        let mut fork = fork;
+        fork.release(&mut pool);
+        assert_eq!(pool.used(), 0);
+    }
+
 }

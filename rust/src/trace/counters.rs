@@ -98,6 +98,22 @@ health_counters!(
     prefix_hits,
     /// Prefix-tree leaves evicted (LRU or admission reclaim).
     prefix_evictions,
+    /// Page allocations that returned `PoolExhausted` (capacity bound
+    /// hit, or a fault-injected failure).
+    pool_alloc_failures,
+    /// Sequences preempted by the batcher (checkpointed, pages freed,
+    /// re-queued for restore).
+    preemptions,
+    /// KV pages reclaimed by preempting sequences (freed at preempt
+    /// time; restore re-allocates them via normal admission).
+    preempted_pages_reclaimed,
+    /// Tokens recomputed while restoring preempted sequences (prompt
+    /// re-prefill chunks + generated-token replay).
+    restore_prefill_tokens,
+    /// Requests rejected with a typed reason instead of being
+    /// admitted (oversized prompt, or pool exhaustion that retry and
+    /// preemption could not relieve).
+    oversize_rejections,
 );
 
 /// The process-wide counter set.

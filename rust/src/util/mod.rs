@@ -3,6 +3,7 @@
 //! timing helpers.
 
 pub mod bench;
+pub mod faults;
 pub mod json;
 pub mod rng;
 pub mod worker_pool;

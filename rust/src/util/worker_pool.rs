@@ -113,7 +113,10 @@ fn drain_slots(p: &'static Pool) {
         // SAFETY: the job (and the closure it points to) stays alive
         // until our `running -= 1` below — the poster's barrier
         // cannot pass while this slot is counted as running.
-        let r = catch_unwind(AssertUnwindSafe(|| unsafe { (*body)(slot) }));
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            crate::util::faults::on_broadcast_slot(slot);
+            unsafe { (*body)(slot) }
+        }));
         let mut g = lock_recover(&p.state);
         if let Some(j) = g.job.as_mut() {
             j.running -= 1;
@@ -147,8 +150,12 @@ fn worker_loop() {
 /// broadcast all degrade to inline serial execution — bit-identical
 /// results, no waiting.
 pub fn broadcast<F: Fn(usize) + Sync>(n: usize, body: F) {
+    // fault-injection schedule point: counts every broadcast,
+    // whichever execution path it takes (pool, inline, contended)
+    crate::util::faults::on_broadcast_enter();
     if n <= 1 || IN_WORKER.with(|c| c.get()) {
         for slot in 0..n {
+            crate::util::faults::on_broadcast_slot(slot);
             body(slot);
         }
         return;
@@ -163,6 +170,7 @@ pub fn broadcast<F: Fn(usize) + Sync>(n: usize, body: F) {
             // thread that already holds pool slots never blocks here.
             drop(g);
             for slot in 0..n {
+                crate::util::faults::on_broadcast_slot(slot);
                 body(slot);
             }
             return;

@@ -1,0 +1,334 @@
+//! Graceful-degradation suite: page-granular preemption, fallible
+//! allocation and deterministic fault injection, end to end through
+//! the real integer engine (`make smoke-faults`).
+//!
+//! Fault arming is PROCESS-GLOBAL (`illm::util::faults`), so every
+//! test here serializes on a shared gate mutex and the Make/CI target
+//! runs this binary with `--test-threads=1`. Tests that arm nothing
+//! still take the gate — a capacity-bounded pool and an armed
+//! schedule must never overlap in one process.
+
+use illm::coordinator::batcher::{Batcher, BatcherConfig};
+use illm::coordinator::engine::{Engine, IntEngine};
+use illm::coordinator::metrics::ServeMetrics;
+use illm::coordinator::{RejectReason, Request, Response};
+use illm::int_model::quantize::quantize_model;
+use illm::nn::load_model;
+use illm::quant::QuantScheme;
+use illm::util::faults::{arm, spec_from_env, FaultSpec};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Serialize every test in this binary: fault schedules are
+/// process-global atomics. Poison-tolerant so one failing test does
+/// not cascade.
+fn gate() -> MutexGuard<'static, ()> {
+    static G: OnceLock<Mutex<()>> = OnceLock::new();
+    G.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Integer engine with an explicit prefix-cache budget and an
+/// optional HARD page-pool capacity (the squeeze under test).
+fn engine(name: &str, scheme: QuantScheme, prefix_pages: usize,
+          capacity: Option<usize>) -> IntEngine {
+    let dir = illm::artifacts_dir();
+    let fp = load_model(&dir, name).unwrap();
+    IntEngine::with_limits(
+        Arc::new(quantize_model(&fp, scheme, None, None)),
+        prefix_pages,
+        capacity,
+    )
+}
+
+fn req(id: u64, prompt: &str, max_new: usize) -> Request {
+    Request {
+        id,
+        prompt: prompt.to_string(),
+        max_new,
+        submitted: Instant::now(),
+    }
+}
+
+/// Step the batcher until idle, collecting every response. Keeps the
+/// engine OUTSIDE the coordinator (unlike `run_workload`) so tests
+/// can inspect pool occupancy after the drain.
+fn drive(b: &mut Batcher, engine: &IntEngine, m: &mut ServeMetrics,
+         guard_max: usize) -> Vec<Response> {
+    let mut out = Vec::new();
+    let mut steps = 0usize;
+    while !b.is_idle() {
+        out.extend(b.step(engine, m));
+        steps += 1;
+        assert!(steps < guard_max,
+                "batcher failed to drain within {guard_max} steps \
+                 (livelock?)");
+    }
+    out
+}
+
+/// Reference outputs: each request alone on a fresh, UNBOUNDED engine
+/// (no prefix cache, no capacity) — the bit-identity oracle.
+fn solo_texts(name: &str, scheme: QuantScheme, threads: usize,
+              reqs: &[(&str, usize)]) -> Vec<String> {
+    reqs.iter()
+        .map(|(p, n)| {
+            let e = engine(name, scheme, 0, None);
+            let mut b = Batcher::new(BatcherConfig {
+                threads,
+                stop_token: None,
+                ..Default::default()
+            });
+            let mut m = ServeMetrics::default();
+            b.enqueue(req(0, p, *n));
+            let out = drive(&mut b, &e, &mut m, 10_000);
+            assert_eq!(out.len(), 1);
+            assert!(out[0].reject.is_none());
+            out[0].text.clone()
+        })
+        .collect()
+}
+
+/// Drain the pool completely after a run: unpin any prefix-cache
+/// pages, then assert every page went back to the free list. This is
+/// the refcount-balance acceptance check — a leaked page (double
+/// count, missed release on an error path) shows up here as a
+/// nonzero residue.
+fn assert_pool_drained(e: &IntEngine) {
+    e.reclaim_prefix_pages(usize::MAX);
+    assert_eq!(e.kv_pages_used(), Some(0),
+               "pool pages leaked after teardown");
+}
+
+/// Satellite (a): organic mid-decode pool exhaustion — no injection,
+/// just a hard capacity below the active set's joint growth. The
+/// whole wave must preempt, every request must still finish, and the
+/// pool must drain to zero.
+///
+/// Geometry (tinyllama_s: 4 layers x 4 heads x {K,V} = 32 lanes,
+/// PAGE_TOKENS = 16): a 15-token prompt holds 32 pages; crossing
+/// token 17 takes another 32 per sequence. Three sequences fit at
+/// admission (96 pages) but their joint growth (192) exceeds the
+/// 170-page capacity, so the first boundary-crossing wave faults.
+#[test]
+fn mid_decode_exhaustion_preempts_and_drains() {
+    let _g = gate();
+    let e = engine("tinyllama_s", QuantScheme::W8A8, 0, Some(170));
+    let mut b = Batcher::new(BatcherConfig {
+        stop_token: None,
+        threads: 1,
+        ..Default::default()
+    });
+    let mut m = ServeMetrics::default();
+    let prompts = ["abcdefghijklmno", "bcdefghijklmnop",
+                   "cdefghijklmnopq"];
+    for (i, p) in prompts.iter().enumerate() {
+        b.enqueue(req(i as u64, p, 20));
+    }
+    let mut out = drive(&mut b, &e, &mut m, 10_000);
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 3);
+    for r in &out {
+        assert!(r.reject.is_none(),
+                "req {} rejected under recoverable pressure", r.id);
+        assert_eq!(r.n_generated, 20);
+    }
+    assert!(m.preemptions >= 1,
+            "capacity squeeze never triggered a preemption");
+    assert!(m.preempted_pages_reclaimed > 0);
+    assert!(m.restore_prefill_tokens > 0,
+            "preempted sequences were never restored");
+    assert_pool_drained(&e);
+}
+
+/// Satellite (b): a request whose page estimate exceeds the budget
+/// even against an EMPTY pool is rejected immediately with a typed
+/// reason — no engine work, no admission block, and the queue behind
+/// it is served normally.
+#[test]
+fn oversized_request_rejected_typed_on_real_engine() {
+    let _g = gate();
+    let e = engine("tinyllama_s", QuantScheme::W8A8, 0, None);
+    // 20-token prompt + 10 new = 30 tokens -> 2 pages x 32 lanes =
+    // 64 pages > budget 50; the 8-token request needs 32 <= 50
+    let mut b = Batcher::new(BatcherConfig {
+        kv_page_budget: 50,
+        stop_token: None,
+        threads: 1,
+        ..Default::default()
+    });
+    let mut m = ServeMetrics::default();
+    b.enqueue(req(0, &"z".repeat(20), 10));
+    b.enqueue(req(1, "abcd", 4));
+    let mut out = drive(&mut b, &e, &mut m, 10_000);
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 2);
+    match out[0].reject {
+        Some(RejectReason::OversizedPrompt { est_pages, budget }) => {
+            assert!(est_pages > budget);
+            assert_eq!(budget, 50);
+        }
+        other => panic!("expected OversizedPrompt, got {other:?}"),
+    }
+    assert_eq!(out[0].n_generated, 0);
+    assert!(out[0].text.is_empty());
+    assert!(out[1].reject.is_none());
+    assert_eq!(out[1].n_generated, 4);
+    assert_eq!(m.oversize_rejections, 1);
+    assert_eq!(m.admission_blocks, 0,
+               "unsatisfiable must not count as backpressure");
+    assert_pool_drained(&e);
+}
+
+/// Satellite (d): preempt-and-restore is EXACT. Runs the same
+/// three-request workload through a capacity-squeezed engine (which
+/// preempts) and compares every output byte against fresh solo runs
+/// on an unbounded engine, across quantization schemes and thread
+/// counts.
+#[test]
+fn preemption_restore_is_bit_identical() {
+    let _g = gate();
+    let reqs: [(&str, usize); 3] = [
+        ("the quick brown", 20),
+        ("integer only aa", 20),
+        ("paged kv cache q", 18),
+    ];
+    for scheme in [QuantScheme::W8A8, QuantScheme::W4A4] {
+        for threads in [1usize, 4] {
+            let want =
+                solo_texts("tinyllama_s", scheme, threads, &reqs);
+            let e = engine("tinyllama_s", scheme, 0, Some(170));
+            let mut b = Batcher::new(BatcherConfig {
+                stop_token: None,
+                threads,
+                ..Default::default()
+            });
+            let mut m = ServeMetrics::default();
+            for (i, (p, n)) in reqs.iter().enumerate() {
+                b.enqueue(req(i as u64, p, *n));
+            }
+            let mut out = drive(&mut b, &e, &mut m, 10_000);
+            out.sort_by_key(|r| r.id);
+            assert_eq!(out.len(), reqs.len());
+            for (r, want) in out.iter().zip(&want) {
+                assert!(r.reject.is_none());
+                assert_eq!(&r.text, want,
+                           "restored output diverged from solo run \
+                            (scheme {scheme:?}, threads {threads})");
+            }
+            assert!(m.preemptions >= 1,
+                    "squeeze never preempted (scheme {scheme:?}, \
+                     threads {threads}) — bit-identity not exercised");
+            assert_pool_drained(&e);
+        }
+    }
+}
+
+/// Satellite (d): randomized-schedule fault sweep. A one-shot page-
+/// allocation failure injected at the Nth allocation — for a spread
+/// of Ns hitting admission prefill, chunked prefill and decode waves
+/// — must always degrade to retry / preempt-restore / typed
+/// rejection: every request gets exactly one response, nothing
+/// panics, and the pool drains to zero.
+#[test]
+fn injected_alloc_fault_sweep_never_loses_a_request() {
+    let _g = gate();
+    for n in [1u64, 2, 3, 5, 8, 13, 21, 34, 55, 89] {
+        let e = engine("tinyllama_s", QuantScheme::W8A8, 0, None);
+        let mut b = Batcher::new(BatcherConfig {
+            stop_token: None,
+            threads: 1,
+            ..Default::default()
+        });
+        let mut m = ServeMetrics::default();
+        b.enqueue(req(0, "abcdefghijklmno", 8));
+        b.enqueue(req(1, "ponmlkjihgfedcb", 8));
+        let guard = arm(FaultSpec {
+            alloc_fail_at: n,
+            ..FaultSpec::default()
+        });
+        let mut out = drive(&mut b, &e, &mut m, 10_000);
+        drop(guard);
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2, "lost a request at alloc_fail_at={n}");
+        assert_eq!(out[0].id, 0);
+        assert_eq!(out[1].id, 1);
+        for r in &out {
+            // a one-shot fault is always recoverable by retry, so
+            // every outcome here should be a full completion — but
+            // the CONTRACT is only serve-or-typed-reject, never a
+            // panic or a lost request
+            assert!(r.reject.is_some() || r.n_generated == 8,
+                    "req {} neither served nor rejected \
+                     (alloc_fail_at={n})", r.id);
+        }
+        assert_pool_drained(&e);
+    }
+}
+
+/// The ISSUE acceptance workload: 16 mixed requests (including one
+/// unsatisfiable oversize) against a capacity-bounded pool WITH the
+/// full injection plan armed — a one-shot allocation failure, a
+/// worker-pool panic in slot 0 (fires on the inline path too, so it
+/// triggers at every thread count) and a poisoned pool lock. Every
+/// request must resolve as finish / preempt-and-restore / typed
+/// rejection; zero panics escape; the pool drains to zero.
+/// `ILLM_FAULTS` overrides the default plan so `make smoke-faults`
+/// can sweep schedules without recompiling.
+#[test]
+fn mixed_workload_acceptance_under_faults() {
+    let _g = gate();
+    let e = engine("tinyllama_s", QuantScheme::W8A8, 64, Some(200));
+    let mut b = Batcher::new(BatcherConfig {
+        kv_page_budget: 150,
+        stop_token: None,
+        threads: 0, // honor ILLM_THREADS: smoke-faults runs 1 and 4
+        ..Default::default()
+    });
+    let mut m = ServeMetrics::default();
+    let mut expected = std::collections::HashMap::new();
+    for i in 0..15u64 {
+        let plen = 4 + (i as usize * 3) % 28; // 4..=31 tokens
+        let max_new = 4 + (i as usize * 5) % 17; // 4..=20 tokens
+        let ch = b'a' + (i as u8 % 26);
+        let prompt: String = (0..plen)
+            .map(|j| ((ch + j as u8) % 26 + b'a') as char)
+            .collect();
+        expected.insert(i, max_new);
+        b.enqueue(req(i, &prompt, max_new));
+    }
+    // request 15 is unsatisfiable: 60 + 16 = 76 tokens -> 5 pages x
+    // 32 lanes = 160 > kv_page_budget 150
+    expected.insert(15, 16);
+    b.enqueue(req(15, &"y".repeat(60), 16));
+    let spec = spec_from_env().unwrap_or(FaultSpec {
+        alloc_fail_at: 40,
+        alloc_fail_every: 0,
+        worker_panic_slot: 0,
+        worker_panic_at: 3,
+        pool_poison_at: 7,
+    });
+    let guard = arm(spec);
+    let mut out = drive(&mut b, &e, &mut m, 50_000);
+    drop(guard);
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 16, "every request must get a response");
+    for (i, r) in out.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "duplicate or missing response id");
+        match r.reject {
+            Some(_) => {
+                assert!(r.text.is_empty());
+                assert_eq!(r.n_generated, 0);
+            }
+            None => assert_eq!(r.n_generated, expected[&r.id],
+                               "req {} finished short", r.id),
+        }
+    }
+    assert!(matches!(out[15].reject,
+                     Some(RejectReason::OversizedPrompt { .. })),
+            "oversize request must fast-fail typed: {:?}",
+            out[15].reject);
+    assert!(m.oversize_rejections >= 1);
+    assert_pool_drained(&e);
+}
