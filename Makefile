@@ -6,7 +6,7 @@
 PYTHON ?= python3
 
 .PHONY: artifacts artifacts-full test smoke smoke-faults bench-json \
-	trace-smoke trace-overhead lint
+	bench-diff trace-smoke trace-overhead lint
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../artifacts --fast
@@ -56,10 +56,25 @@ bench-json:
 		ILLM_GIT_REV=$$(git rev-parse --short HEAD) \
 		cargo bench --bench perf_serving
 
+# perf-regression gate: validate the diff tool on its built-in
+# fixtures, then regenerate BENCH_serving.json and compare it against
+# the previously committed snapshot (10% throughput band, 50% latency
+# band; the seed placeholder snapshots pass vacuously with a warning)
+bench-diff:
+	$(PYTHON) python/bench_diff.py --self-test
+	mkdir -p rust/target
+	cp rust/BENCH_serving.json rust/target/bench_baseline.json
+	$(MAKE) bench-json
+	$(PYTHON) python/bench_diff.py rust/target/bench_baseline.json \
+		rust/BENCH_serving.json
+
 # request-lifecycle tracing end to end: run the smoke bench with
 # ILLM_TRACE set, then validate the Chrome-trace JSON (full span chain
-# per request + per-layer phase events) with the schema checker
+# per request, per-layer phase events, per-wave Perfetto counter
+# tracks) with the schema checker — after the checker proves it still
+# rejects its bad fixtures
 trace-smoke:
+	$(PYTHON) python/check_trace.py --self-test
 	cd rust && ILLM_THREADS=2 ILLM_TRACE=trace_smoke.json \
 		cargo bench --bench perf_serving -- --smoke
 	$(PYTHON) python/check_trace.py rust/trace_smoke.json

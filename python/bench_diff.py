@@ -1,0 +1,311 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over BENCH_serving.json snapshots — the
+`make bench-diff` target.
+
+Compares a candidate snapshot against a baseline and exits non-zero
+when a tracked metric regresses beyond its tolerance band:
+
+  bench_diff.py base.json new.json        # explicit pair
+  bench_diff.py --history BENCH_history/serving.jsonl [--last N]
+      # candidate = last line; baseline = per-metric median of up to
+      # N preceding lines (default 8) — robust to one noisy run
+  bench_diff.py --self-test               # built-in fixtures
+
+Tracked metrics are dotted paths into the snapshot (see METRICS):
+throughputs are higher-is-better with a 10% band; latency quantiles
+are lower-is-better with a 50% band (they are noisy on shared CI
+hardware and the throughput columns already catch real slowdowns).
+`--tolerance`/`--latency-tolerance` override the bands.
+
+A metric missing from either side, or non-positive in the baseline,
+is skipped — so the committed placeholder snapshots (no toolchain in
+the authoring environment, see BENCH_serving.json's note) pass
+vacuously with a warning. `--min-metrics K` turns "fewer than K
+comparable metrics" into a failure once real snapshots are committed.
+
+Stdlib only. Exit 0 = pass, 1 = regression (or min-metrics unmet),
+2 = usage/IO error.
+"""
+
+import json
+import sys
+
+# (dotted path, direction, default tolerance band)
+#   higher: fail when new < base * (1 - tol)
+#   lower:  fail when new > base * (1 + tol)
+THROUGHPUT_TOL = 0.10
+LATENCY_TOL = 0.50
+METRICS = (
+    ("prefill.rowwise_tok_per_s", "higher", THROUGHPUT_TOL),
+    ("prefill.tiled_tok_per_s", "higher", THROUGHPUT_TOL),
+    ("prefill.tiled_threaded_tok_per_s", "higher", THROUGHPUT_TOL),
+    ("radix.engine_cold_tok_per_s", "higher", THROUGHPUT_TOL),
+    ("radix.radix_hit_tok_per_s", "higher", THROUGHPUT_TOL),
+    ("decode.decode_wave_tok_per_s", "higher", THROUGHPUT_TOL),
+    ("decode.decode_batched_t1_tok_per_s", "higher", THROUGHPUT_TOL),
+    ("decode.decode_batched_t4_tok_per_s", "higher", THROUGHPUT_TOL),
+    ("serving_int_w8a8_batch8.decode_tok_per_s", "higher",
+     THROUGHPUT_TOL),
+    ("serving_int_w8a8_batch8.prefill_tok_per_s", "higher",
+     THROUGHPUT_TOL),
+    ("serving_int_w8a8_batch8.total_tok_per_s", "higher",
+     THROUGHPUT_TOL),
+    ("serving_int_w8a8_batch8.latency_p50_s", "lower", LATENCY_TOL),
+    ("serving_int_w8a8_batch8.latency_p99_s", "lower", LATENCY_TOL),
+    ("serving_int_w8a8_batch8.ttft_p95_s", "lower", LATENCY_TOL),
+)
+
+
+def lookup(doc, dotted):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    if isinstance(cur, bool) or not isinstance(cur, (int, float)):
+        return None
+    return float(cur)
+
+
+def median(xs):
+    s = sorted(xs)
+    n = len(s)
+    if n % 2:
+        return s[n // 2]
+    return 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def diff(base, new, tol_throughput, tol_latency, min_metrics,
+         base_label="base"):
+    """Compare snapshots; returns (exit_code, lines_printed)."""
+    lines = []
+    failures = 0
+    compared = 0
+    for path, direction, tol in METRICS:
+        if direction == "higher":
+            tol = tol_throughput if tol_throughput is not None else tol
+        else:
+            tol = tol_latency if tol_latency is not None else tol
+        b = lookup(base, path)
+        n = lookup(new, path)
+        if b is None or n is None or b <= 0.0:
+            continue
+        compared += 1
+        rel = (n - b) / b
+        if direction == "higher":
+            bad = n < b * (1.0 - tol)
+            arrow = "-" if rel < 0 else "+"
+        else:
+            bad = n > b * (1.0 + tol)
+            arrow = "+" if rel > 0 else "-"
+        verdict = "REGRESSION" if bad else "ok"
+        lines.append(
+            f"  {'FAIL' if bad else ' ok '} {path}: "
+            f"{b:.4g} -> {n:.4g} ({arrow}{abs(rel) * 100.0:.1f}%, "
+            f"band {tol * 100.0:.0f}%, {direction} is better) "
+            f"{verdict if bad else ''}".rstrip())
+        if bad:
+            failures += 1
+    if compared == 0:
+        lines.append(
+            "bench_diff: WARN: no comparable metrics between the two "
+            "snapshots (placeholder snapshots without measured "
+            "sections? run `make bench-json` to regenerate) — passing "
+            "vacuously")
+        if min_metrics > 0:
+            lines.append(
+                f"bench_diff: FAIL: 0 comparable metrics < "
+                f"--min-metrics {min_metrics}")
+            return 1, lines
+        return 0, lines
+    if compared < min_metrics:
+        lines.append(
+            f"bench_diff: FAIL: only {compared} comparable metrics < "
+            f"--min-metrics {min_metrics}")
+        return 1, lines
+    if failures:
+        lines.append(
+            f"bench_diff: FAIL: {failures}/{compared} tracked "
+            f"metric(s) regressed vs {base_label}")
+        return 1, lines
+    lines.append(
+        f"bench_diff: OK: {compared} tracked metric(s) within "
+        f"tolerance vs {base_label}")
+    return 0, lines
+
+
+def load_json(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: cannot load {path}: {e}")
+        sys.exit(2)
+
+
+def history_pair(path, last_n):
+    """Candidate = last jsonl line; baseline = per-metric median of up
+    to `last_n` preceding lines, synthesized as a flat dict keyed by
+    the METRICS paths."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            rows = [json.loads(ln) for ln in f if ln.strip()]
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: cannot load history {path}: {e}")
+        sys.exit(2)
+    if len(rows) < 2:
+        return None, rows[-1] if rows else None
+    cand = rows[-1]
+    prior = rows[max(0, len(rows) - 1 - last_n):-1]
+    base = {}
+    for mpath, _, _ in METRICS:
+        vals = [v for v in (lookup(r, mpath) for r in prior)
+                if v is not None and v > 0.0]
+        if not vals:
+            continue
+        # rebuild the nested shape so lookup() works on the synth base
+        cur = base
+        parts = mpath.split(".")
+        for part in parts[:-1]:
+            cur = cur.setdefault(part, {})
+        cur[parts[-1]] = median(vals)
+    return base, cand
+
+
+# --------------------------------------------------------- self-test
+
+def _real_shaped(decode_scale=1.0, p99=0.40):
+    return {
+        "model": "tinyllama_s", "threads": 4, "smoke": False,
+        "prefill": {"rowwise_tok_per_s": 900.0,
+                    "tiled_tok_per_s": 1500.0,
+                    "tiled_threaded_tok_per_s": 4200.0},
+        "radix": {"engine_cold_tok_per_s": 800.0,
+                  "radix_hit_tok_per_s": 2600.0},
+        "decode": {"decode_wave_tok_per_s": 110.0 * decode_scale,
+                   "decode_batched_t1_tok_per_s": 150.0 * decode_scale,
+                   "decode_batched_t4_tok_per_s": 430.0 * decode_scale},
+        "serving_int_w8a8_batch8": {
+            "decode_tok_per_s": 400.0 * decode_scale,
+            "prefill_tok_per_s": 3100.0,
+            "total_tok_per_s": 3500.0,
+            "latency_p50_s": 0.21, "latency_p99_s": p99,
+            "ttft_p95_s": 0.12},
+    }
+
+
+def self_test():
+    placeholder = {"model": "tinyllama_s", "threads": 4, "smoke": False,
+                   "note": "seed snapshot only"}
+    cases = [
+        # (tag, base, new, expected exit)
+        ("identical-pair", _real_shaped(), _real_shaped(), 0),
+        ("20pct-decode-drop", _real_shaped(),
+         _real_shaped(decode_scale=0.80), 1),
+        ("5pct-noise-passes", _real_shaped(),
+         _real_shaped(decode_scale=0.95), 0),
+        ("improvement-passes", _real_shaped(),
+         _real_shaped(decode_scale=1.30), 0),
+        ("latency-within-band", _real_shaped(),
+         _real_shaped(p99=0.55), 0),
+        ("latency-blowup-fails", _real_shaped(),
+         _real_shaped(p99=0.70), 1),
+        ("placeholder-vacuous-pass", placeholder, placeholder, 0),
+    ]
+    for tag, base, new, want in cases:
+        got, _ = diff(base, new, None, None, 0)
+        if got != want:
+            print(f"bench_diff: FAIL: self-test {tag!r}: exit {got} "
+                  f"!= expected {want}")
+            return 1
+    # min-metrics turns a vacuous placeholder pass into a failure
+    got, _ = diff(placeholder, placeholder, None, None, 1)
+    if got != 1:
+        print("bench_diff: FAIL: self-test 'min-metrics-enforced': "
+              f"exit {got} != 1")
+        return 1
+    # history mode: median-of-priors baseline catches a last-line drop
+    rows = [_real_shaped(), _real_shaped(decode_scale=1.02),
+            _real_shaped(decode_scale=0.98),
+            _real_shaped(decode_scale=0.75)]
+    import tempfile
+    import os
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    try:
+        with os.fdopen(fd, "w") as f:
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+        base, cand = history_pair(path, 8)
+        got, _ = diff(base, cand, None, None, 0,
+                      base_label="history median")
+        if got != 1:
+            print("bench_diff: FAIL: self-test 'history-drop': "
+                  f"exit {got} != 1")
+            return 1
+    finally:
+        os.unlink(path)
+    print(f"bench_diff: OK: self-test passed ({len(cases) + 2} cases)")
+    return 0
+
+
+def main():
+    args = sys.argv[1:]
+    tol_throughput = None
+    tol_latency = None
+    min_metrics = 0
+    history = None
+    last_n = 8
+    positional = []
+    i = 0
+    while i < len(args):
+        a = args[i]
+        if a == "--self-test":
+            sys.exit(self_test())
+        elif a == "--tolerance":
+            i += 1
+            tol_throughput = float(args[i])
+        elif a == "--latency-tolerance":
+            i += 1
+            tol_latency = float(args[i])
+        elif a == "--min-metrics":
+            i += 1
+            min_metrics = int(args[i])
+        elif a == "--history":
+            i += 1
+            history = args[i]
+        elif a == "--last":
+            i += 1
+            last_n = int(args[i])
+        else:
+            positional.append(a)
+        i += 1
+    if history is not None:
+        base, cand = history_pair(history, last_n)
+        if cand is None:
+            print(f"bench_diff: WARN: history {history} is empty — "
+                  "nothing to gate")
+            sys.exit(0)
+        if base is None or not base:
+            print(f"bench_diff: WARN: history {history} has no prior "
+                  "runs with measured metrics — passing vacuously")
+            sys.exit(0)
+        code, lines = diff(base, cand, tol_throughput, tol_latency,
+                           min_metrics, base_label="history median")
+    elif len(positional) == 2:
+        base = load_json(positional[0])
+        new = load_json(positional[1])
+        code, lines = diff(base, new, tol_throughput, tol_latency,
+                           min_metrics, base_label=positional[0])
+    else:
+        print("usage: bench_diff.py base.json new.json | "
+              "--history FILE [--last N] | --self-test\n"
+              "       [--tolerance F] [--latency-tolerance F] "
+              "[--min-metrics K]")
+        sys.exit(2)
+    for ln in lines:
+        print(ln)
+    sys.exit(code)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,8 @@ layer (ILLM_TRACE=out.json) — the `make trace-smoke` gate.
 Checks, in order:
   * top-level shape: {"traceEvents": [...], "displayTimeUnit": "ms"}
   * every event carries name/cat/ph/ts/pid/tid with sane types;
-    'X' events carry a non-negative dur, 'i' events scope s == "g"
+    'X' events carry a non-negative dur, 'i' events scope s == "g",
+    'C' events (Perfetto counter tracks) carry a numeric args.value
   * at least one request traverses the FULL lifecycle chain
     queued -> admitted -> prefill-chunk -> decode-wave -> finished
     (matched through args.req)
@@ -14,6 +15,11 @@ Checks, in order:
     decode-wave span exists, at least one wave-level "decode-batch"
     span (cat == "engine", the single batched forward every
     decode-wave of that step shares) must exist too
+  * counter tracks: every 'C' name is one of the 16 known time-series
+    (KNOWN_COUNTERS, mirroring rust TS_SERIES); per-name timestamps
+    are non-decreasing; and if the trace shows decode waves (the
+    batcher ran) all 16 tracks must be present — the per-wave sampler
+    fires on every `Batcher::step`
   * graceful degradation (vacuous when no faults occurred): every
     preempted request resolves — it is later restored ("restoring",
     emitted when it checkpointed generated tokens) and finishes, or
@@ -22,7 +28,8 @@ Checks, in order:
 
 Stdlib only (the container has no extra wheels). Exit 0 on success
 with a one-line summary; exit 1 with "check_trace: FAIL: ..." on the
-first violation.
+first violation. `--self-test` runs the checker against built-in
+good/bad fixtures instead of a file.
 """
 
 import json
@@ -31,10 +38,33 @@ import sys
 LIFECYCLE = ("queued", "admitted", "prefill-chunk", "decode-wave",
              "finished")
 
+# Mirror of rust/src/trace/timeseries.rs TS_SERIES, in slot order.
+KNOWN_COUNTERS = (
+    "kv_pages_used",
+    "kv_pages_free",
+    "prefix_pinned_pages",
+    "active_seqs",
+    "queued_seqs",
+    "preempted_total",
+    "decode_batch_width",
+    "scratch_free",
+    "decode_tokens_wave",
+    "prefill_tokens_wave",
+    "wave_dur_us",
+    "decode_tok_per_s",
+    "prefill_tok_per_s",
+    "sat_events_wave",
+    "softmax_rows_wave",
+    "softmax_clipped_wave",
+)
+
+
+class CheckFailure(Exception):
+    """A named trace-validation violation."""
+
 
 def fail(msg):
-    print(f"check_trace: FAIL: {msg}")
-    sys.exit(1)
+    raise CheckFailure(msg)
 
 
 def check_event(i, e):
@@ -57,22 +87,23 @@ def check_event(i, e):
         if e.get("s") != "g":
             fail(f"event {i} ({e['name']}): instant scope {e.get('s')!r}"
                  " != 'g'")
+    elif e["ph"] == "C":
+        v = e.get("args", {}).get("value") \
+            if isinstance(e.get("args"), dict) else None
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            fail(f"event {i} ({e['name']}): 'C' without numeric "
+                 "args.value")
     else:
         fail(f"event {i} ({e['name']}): unexpected ph {e['ph']!r}")
     if "args" in e and not isinstance(e["args"], dict):
         fail(f"event {i} ({e['name']}): args is not an object")
 
 
-def main():
-    if len(sys.argv) != 2:
-        print("usage: check_trace.py <trace.json>")
-        sys.exit(2)
-    path = sys.argv[1]
-    try:
-        with open(path, encoding="utf-8") as f:
-            doc = json.load(f)
-    except (OSError, ValueError) as e:
-        fail(f"cannot load {path}: {e}")
+def validate(doc):
+    """Validate a parsed trace document; return the summary line.
+
+    Raises CheckFailure on the first violation.
+    """
     if not isinstance(doc, dict):
         fail("top level is not an object")
     events = doc.get("traceEvents")
@@ -87,12 +118,21 @@ def main():
     n_phase = 0
     n_decode_wave = 0
     n_decode_batch = 0
+    # counter tracks: name -> [ts...] in file order
+    counters = {}
     # degradation bookkeeping: req id -> set of degradation events,
     # plus whether any preemption checkpointed generated tokens
     degrade = {}
     preempted_with_tokens = set()
     for i, e in enumerate(events):
         check_event(i, e)
+        if e["ph"] == "C":
+            if e["name"] not in KNOWN_COUNTERS:
+                fail(f"event {i}: unknown counter track "
+                     f"{e['name']!r} (not in the {len(KNOWN_COUNTERS)} "
+                     "known time-series)")
+            counters.setdefault(e["name"], []).append(e["ts"])
+            continue
         if e["cat"] == "phase":
             n_phase += 1
         if e["name"] == "decode-wave":
@@ -106,7 +146,7 @@ def main():
         if req is not None and e["name"] in LIFECYCLE:
             per_req.setdefault(req, set()).add(e["name"])
         if req is not None and e["name"] in ("preempted", "restoring",
-                                            "rejected", "finished"):
+                                             "rejected", "finished"):
             degrade.setdefault(req, set()).add(e["name"])
             if (e["name"] == "preempted"
                     and e.get("args", {}).get("generated", 0) > 0):
@@ -124,6 +164,21 @@ def main():
         fail(f"{n_decode_wave} decode-wave spans but no wave-level "
              "'decode-batch' span — decode ran outside the batched "
              "path")
+
+    # counter tracks: per-name monotone timestamps; batcher ran =>
+    # the per-wave sampler must have emitted every known series
+    n_counter_samples = 0
+    for name, tss in sorted(counters.items()):
+        n_counter_samples += len(tss)
+        for a, b in zip(tss, tss[1:]):
+            if b < a:
+                fail(f"counter track {name!r}: timestamps go "
+                     f"backwards ({a} -> {b})")
+    if n_decode_wave > 0:
+        missing = [n for n in KNOWN_COUNTERS if n not in counters]
+        if missing:
+            fail(f"decode waves ran but {len(missing)} counter "
+                 f"track(s) missing: {', '.join(missing)}")
 
     # graceful-degradation chain (vacuously true without faults):
     # preempt -> restore -> finished, or a typed rejection
@@ -148,12 +203,122 @@ def main():
             if "finished" in names:
                 fail(f"req {req} is both rejected and finished")
 
-    print(f"check_trace: OK: {len(events)} events, "
-          f"{len(complete)}/{len(per_req)} requests with the full "
-          f"lifecycle chain, {n_phase} phase events, "
-          f"{n_decode_batch} batched decode waves, "
-          f"{n_preempt} preemptions / {n_restore} restores / "
-          f"{n_reject} rejections")
+    return (f"{len(events)} events, "
+            f"{len(complete)}/{len(per_req)} requests with the full "
+            f"lifecycle chain, {n_phase} phase events, "
+            f"{n_decode_batch} batched decode waves, "
+            f"{len(counters)} counter tracks "
+            f"({n_counter_samples} samples), "
+            f"{n_preempt} preemptions / {n_restore} restores / "
+            f"{n_reject} rejections")
+
+
+# --------------------------------------------------------- self-test
+
+def _span(name, cat, ts, dur=1.0, **args):
+    e = {"name": name, "cat": cat, "ph": "X", "ts": ts, "dur": dur,
+         "pid": 1, "tid": 0}
+    if args:
+        e["args"] = args
+    return e
+
+
+def _counter(name, ts, value):
+    return {"name": name, "cat": "timeseries", "ph": "C", "ts": ts,
+            "pid": 1, "tid": 0, "args": {"value": value}}
+
+
+def _good_doc():
+    ev = [
+        _span("queued", "lifecycle", 1.0, req=0),
+        _span("admitted", "lifecycle", 2.0, req=0),
+        _span("prefill-chunk", "lifecycle", 3.0, req=0),
+        _span("layer", "phase", 3.5),
+        _span("decode-batch", "engine", 4.0),
+        _span("decode-wave", "lifecycle", 4.0, req=0),
+        _span("finished", "lifecycle", 5.0, req=0),
+    ]
+    for t in (6.0, 7.0):
+        for i, name in enumerate(KNOWN_COUNTERS):
+            ev.append(_counter(name, t, i))
+    return {"traceEvents": ev, "displayTimeUnit": "ms"}
+
+
+def self_test():
+    doc = _good_doc()
+    try:
+        validate(doc)
+    except CheckFailure as e:
+        print(f"check_trace: FAIL: self-test good fixture rejected: {e}")
+        return 1
+
+    def expect_fail(tag, mutate):
+        d = _good_doc()
+        mutate(d)
+        try:
+            validate(d)
+        except CheckFailure:
+            return None
+        return f"self-test bad fixture {tag!r} was accepted"
+
+    def drop_counter(d):
+        d["traceEvents"] = [e for e in d["traceEvents"]
+                            if not (e["ph"] == "C"
+                                    and e["name"] == "kv_pages_free")]
+
+    def unknown_counter(d):
+        d["traceEvents"].append(_counter("bogus_series", 8.0, 1))
+
+    def backwards_ts(d):
+        d["traceEvents"].append(_counter("kv_pages_used", 0.5, 1))
+
+    def no_value(d):
+        d["traceEvents"].append(
+            {"name": "kv_pages_used", "cat": "timeseries", "ph": "C",
+             "ts": 9.0, "pid": 1, "tid": 0, "args": {}})
+
+    def bad_ph(d):
+        d["traceEvents"].append(
+            {"name": "x", "cat": "c", "ph": "Z", "ts": 9.0,
+             "pid": 1, "tid": 0})
+
+    def broken_chain(d):
+        d["traceEvents"] = [e for e in d["traceEvents"]
+                            if e["name"] != "admitted"]
+
+    for tag, mutate in (("missing-counter-track", drop_counter),
+                        ("unknown-counter-name", unknown_counter),
+                        ("backwards-counter-ts", backwards_ts),
+                        ("counter-without-value", no_value),
+                        ("unexpected-ph", bad_ph),
+                        ("broken-lifecycle", broken_chain)):
+        err = expect_fail(tag, mutate)
+        if err:
+            print(f"check_trace: FAIL: {err}")
+            return 1
+    print("check_trace: OK: self-test passed (1 good, 6 bad fixtures)")
+    return 0
+
+
+def main():
+    if len(sys.argv) == 2 and sys.argv[1] == "--self-test":
+        sys.exit(self_test())
+    if len(sys.argv) != 2:
+        print("usage: check_trace.py <trace.json> | --self-test")
+        sys.exit(2)
+    path = sys.argv[1]
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_trace: FAIL: cannot load {path}: {e}")
+        sys.exit(1)
+    try:
+        summary = validate(doc)
+    except CheckFailure as e:
+        print(f"check_trace: FAIL: {e}")
+        sys.exit(1)
+    print(f"check_trace: OK: {summary}")
 
 
 if __name__ == "__main__":

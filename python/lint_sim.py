@@ -913,6 +913,48 @@ def main():
                 f"justification or explicit wrapping_/saturating_/"
                 f"checked_ intent"))
 
+    # ---- rule 5: hot-path discipline in trace/timeseries.rs ----
+    # Per-wave sampling sites (`sample*` / `record*`) run inside
+    # Batcher::step on every wave: preallocated rings only, Relaxed-only
+    # atomics. Export paths (snapshot/to_json) are out of scope.
+    ALLOC_TYPES = {"Vec", "String", "Box", "VecDeque", "BTreeMap",
+                   "HashMap"}
+    ALLOC_MACROS = {"vec", "format"}
+    ALLOC_METHODS = {"to_vec", "to_string", "to_owned", "collect",
+                     "push", "extend", "reserve", "insert",
+                     "with_capacity"}
+    for fn in registry.values():
+        if fn.is_test or fn.path != "trace/timeseries.rs" \
+                or not (fn.name.startswith("sample")
+                        or fn.name.startswith("record")):
+            continue
+        toks = fn.body
+        for i, t in enumerate(toks):
+            if t.kind != IDENT:
+                continue
+            nxt = toks[i + 1].text if i + 1 < len(toks) else ""
+            msg = None
+            if i >= 2 and toks[i - 2].text == "Ordering" \
+                    and toks[i - 1].text == "::" and t.text != "Relaxed":
+                msg = (f"Ordering::{t.text} in a per-wave sampling site "
+                       f"— hot-path atomics must be Relaxed")
+            elif t.text in ALLOC_TYPES and nxt == "::":
+                msg = (f"{t.text}:: constructor in a per-wave sampling "
+                       f"site — preallocate in the TimeSeries "
+                       f"constructor")
+            elif t.text in ALLOC_MACROS and nxt == "!":
+                msg = f"{t.text}! allocates in a per-wave sampling site"
+            elif t.text in ALLOC_METHODS and i >= 1 \
+                    and toks[i - 1].text == "." and nxt == "(":
+                msg = (f".{t.text}() may allocate in a per-wave "
+                       f"sampling site")
+            if msg is None:
+                continue
+            if allowed(allow, "hot-path", fn.path, fn.qname, t.text):
+                continue
+            viols.append(Violation(
+                "hot-path", fn.path, t.line, fn.qname, msg))
+
     for e in allow:
         if not e.get("_used"):
             viols.append(Violation(

@@ -587,6 +587,10 @@ fn main() {
                 let reqs = workload::generate(&spec, &corpus);
                 let cfg = BatcherConfig { max_batch: batch,
                                           ..Default::default() };
+                // the per-wave ring is process-global: reset so the
+                // timeseries section captured below covers exactly
+                // this (engine, batch) run
+                illm::trace::reset_timeseries();
                 let (_resp, m) = match engine_name {
                     "int-w8a8" => run_workload(
                         IntEngine::new(im.clone()), cfg, reqs, 0.0),

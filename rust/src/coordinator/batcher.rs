@@ -110,7 +110,10 @@ use super::metrics::ServeMetrics;
 use super::{RejectReason, Request, Response};
 use crate::data;
 use crate::trace;
-use crate::trace::{bump, bump_by, health};
+use crate::trace::{
+    bump, bump_by, health, HealthSnapshot, SloAccount, SloTargets,
+    WaveSample,
+};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
@@ -134,6 +137,11 @@ pub struct BatcherConfig {
     /// decode-wave worker threads; 0 (default) reads `ILLM_THREADS`.
     /// Results are bit-identical at every count.
     pub threads: usize,
+    /// TTFT/TPOT targets for SLO attribution (`ServeMetrics::slo`).
+    /// Attribution only — scheduling does not act on them yet (that
+    /// is ROADMAP item 4's SLO-aware admission, which will consume
+    /// this accounting). `SloTargets::disabled()` turns it off.
+    pub slo: SloTargets,
 }
 
 impl Default for BatcherConfig {
@@ -144,6 +152,7 @@ impl Default for BatcherConfig {
             prefill_chunk: 64,
             stop_token: Some(b'\n' as u16),
             threads: 0,
+            slo: SloTargets::default(),
         }
     }
 }
@@ -303,6 +312,10 @@ pub struct Batcher {
     /// a lone request is still always admitted — a too-low estimate
     /// degrades throughput to serial, never wedges the queue.
     learned_page_cap: Option<usize>,
+    /// Health-counter snapshot at the END of the last wave — the
+    /// baseline the per-wave time-series sample diffs against to turn
+    /// cumulative saturation/clip tallies into per-wave *rates*.
+    last_health: HealthSnapshot,
 }
 
 /// Token count of a prompt as it will be admitted: truncated to the
@@ -340,6 +353,7 @@ impl Batcher {
             active: Vec::new(),
             next_seq: 0,
             learned_page_cap: None,
+            last_health: health().snapshot(),
         }
     }
 
@@ -359,6 +373,10 @@ impl Batcher {
     pub fn step<E: Engine>(&mut self, engine: &E,
                            metrics: &mut ServeMetrics) -> Vec<Response> {
         let step_t0 = Instant::now();
+        // token counters at wave start: the per-wave time-series
+        // sample reports deltas, not run totals
+        let wave_decode_tok0 = metrics.decode_tokens;
+        let wave_prefill_tok0 = metrics.prefill_tokens;
         let mut out = Vec::new();
         // ---- admission ----
         loop {
@@ -380,6 +398,9 @@ impl Batcher {
                                  ("generated", 0)]);
                 let latency = req.submitted.elapsed().as_secs_f64();
                 metrics.record_request(latency, latency);
+                // no tokens were requested — nothing to hold against
+                // a TTFT/TPOT target
+                metrics.slo.exclude_zero_budget();
                 out.push(Response {
                     id: req.id,
                     text: String::new(),
@@ -688,6 +709,9 @@ impl Batcher {
             }
             decodes.push((a, next));
         }
+        // wave width for the time-series sample, captured before the
+        // decode block consumes `decodes`
+        let wave_width = decodes.len() as u64;
         // Prefill lanes fan out across scoped workers when
         // configured; the thread budget is split so nt wave workers ×
         // attn_share engine-internal attention threads never exceeds
@@ -841,19 +865,35 @@ impl Batcher {
         for i in (0..self.active.len()).rev() {
             if finished[i] {
                 let a = self.active.swap_remove(i);
+                let latency = a.req.submitted.elapsed().as_secs_f64();
+                let ttft = a.ttft.unwrap_or(latency);
+                let n_gen = a.generated.len();
                 trace::instant(
                     "finished", "request",
                     &[("req", a.req.id as i64),
-                      ("generated", a.generated.len() as i64)]);
-                let latency = a.req.submitted.elapsed().as_secs_f64();
-                metrics.record_request(latency,
-                                       a.ttft.unwrap_or(latency));
+                      ("generated", n_gen as i64),
+                      ("slo_violated",
+                       SloAccount::violates(&self.cfg.slo, ttft,
+                                            latency, n_gen)
+                           as i64)]);
+                metrics.record_request(latency, ttft);
+                // SLO attribution + windowed latency series: every
+                // finished request lands in exactly one account row
+                // and one time-series window
+                metrics.slo.observe(&self.cfg.slo, ttft, latency,
+                                    n_gen);
+                trace::record_ttft_ns((ttft * 1e9) as u64);
+                if n_gen >= 2 {
+                    let tpot = (latency - ttft).max(0.0)
+                        / (n_gen - 1) as f64;
+                    trace::record_tpot_ns((tpot * 1e9) as u64);
+                }
                 out.push(Response {
                     id: a.req.id,
                     text: data::decode(&a.generated),
                     n_prompt: a.prompt_len,
-                    n_generated: a.generated.len(),
-                    ttft: a.ttft.unwrap_or(latency),
+                    n_generated: n_gen,
+                    ttft,
                     latency,
                     reject: None,
                 });
@@ -872,12 +912,48 @@ impl Batcher {
         for a in preempted.into_iter().rev() {
             self.preempt_one(engine, a, metrics);
         }
-        if let Some(ps) = engine.pool_stats() {
-            metrics.observe_pool(&ps);
+        let pool = engine.pool_stats();
+        if let Some(ps) = &pool {
+            metrics.observe_pool(ps);
         }
         if let Some(ps) = engine.prefix_stats() {
             metrics.observe_prefix(&ps);
         }
+        // ---- per-wave time-series sample ----
+        // One ring write per step (relaxed stores into preallocated
+        // slots — see trace::timeseries). Gauges reuse the pool/prefix
+        // stats sampled above; saturation/clip series are DELTAS of
+        // the cumulative health counters against the last wave, so the
+        // exported series is a rate, not a running total.
+        let h = health().snapshot();
+        let dh = h.since(&self.last_health);
+        self.last_health = h;
+        trace::sample_wave(&WaveSample {
+            kv_pages_used: pool.as_ref().map_or(0, |p| p.used as u64),
+            kv_pages_free: pool.as_ref().map_or(0, |p| p.free as u64),
+            prefix_pinned_pages: pool
+                .as_ref()
+                .map_or(0, |p| p.prefix_pages as u64),
+            active_seqs: self.active.len() as u64,
+            queued_seqs: self.queue.len() as u64,
+            preempted_total: metrics.preemptions,
+            decode_batch_width: wave_width,
+            scratch_free: engine.scratch_free().unwrap_or(0) as u64,
+            decode_tokens_wave: metrics
+                .decode_tokens
+                .saturating_sub(wave_decode_tok0),
+            prefill_tokens_wave: metrics
+                .prefill_tokens
+                .saturating_sub(wave_prefill_tok0),
+            wave_dur_us: step_t0.elapsed().as_micros() as u64,
+            sat_events_wave: dh.lane_grow_saturations
+                + dh.lane_zero_rounds
+                + dh.merge_saturations
+                + dh.requant_scale_clamps
+                + dh.exp_underflows,
+            softmax_rows_wave: dh.softmax_rows,
+            softmax_clipped_wave: dh.softmax_clipped_rows,
+        });
         out
     }
 
@@ -946,6 +1022,8 @@ impl Batcher {
                               as i64)]);
         metrics.oversize_rejections += 1;
         bump(&health().oversize_rejections);
+        // never served — excluded from SLO attribution
+        metrics.slo.exclude_rejected();
         let latency = req.submitted.elapsed().as_secs_f64();
         Response {
             id: req.id,

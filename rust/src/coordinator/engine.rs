@@ -200,6 +200,16 @@ pub trait Engine: Send + Sync {
     fn prefix_stats(&self) -> Option<PrefixStats> {
         None
     }
+
+    /// Decode-scratch free-list depth — the `scratch_free` gauge of
+    /// the per-wave time-series sample (`trace::timeseries`). A depth
+    /// stuck at 0 while waves run means every wave is allocating a
+    /// fresh scratch instead of reusing a parked one. None for
+    /// engines without batched-decode scratch. O(1), sampled once per
+    /// scheduling step.
+    fn scratch_free(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// Greedy sampling at the model boundary: NaN-safe argmax over f32
@@ -456,6 +466,10 @@ impl Engine for IntEngine {
 
     fn prefix_stats(&self) -> Option<PrefixStats> {
         Some(lock_recover(&self.prefix).stats())
+    }
+
+    fn scratch_free(&self) -> Option<usize> {
+        Some(self.idle_decode_scratches())
     }
 }
 

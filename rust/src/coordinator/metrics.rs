@@ -5,6 +5,7 @@
 
 use super::prefix_tree::PrefixStats;
 use crate::int_model::kv_cache::PoolStats;
+use crate::trace::SloAccount;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -42,6 +43,10 @@ pub struct ServeMetrics {
     /// latest prefix-cache sample (hit rate, tokens reused, pinned
     /// pages; None for engines without a prefix tree)
     pub prefix_last: Option<PrefixStats>,
+    /// per-request SLO attribution against the batcher's TTFT/TPOT
+    /// targets (good/violated counts, excess, time-to-violation);
+    /// driven from the batcher's finish/zero-budget/reject paths
+    pub slo: SloAccount,
 }
 
 impl ServeMetrics {
@@ -220,6 +225,12 @@ impl ServeMetrics {
         // counts just mean timing was never enabled)
         put("phases", crate::trace::phases_json());
         put("health", crate::trace::health_json());
+        // observability (PR 10): the per-wave time-series (gauges,
+        // rates, windowed TTFT/TPOT quantiles — process-global like
+        // phases/health; benches reset it per tracked section) and
+        // this run's SLO attribution
+        put("timeseries", crate::trace::timeseries_json());
+        put("slo", self.slo.to_json());
         Json::Obj(o)
     }
 
@@ -266,6 +277,23 @@ impl ServeMetrics {
                 p.high_water,
                 p.prefix_pages,
                 p.evicted_prefix_pages,
+            );
+        }
+        if self.slo.attributed > 0 {
+            println!(
+                "slo         attributed {} / ttft {}:{} good:violated \
+                 / tpot {}:{} / e2e {}:{} (mean ttv {:.3}s) / \
+                 excluded {} zero-budget + {} rejected",
+                self.slo.attributed,
+                self.slo.ttft_good,
+                self.slo.ttft_violated,
+                self.slo.tpot_good,
+                self.slo.tpot_violated,
+                self.slo.e2e_good,
+                self.slo.e2e_violated,
+                self.slo.mean_ttv_s(),
+                self.slo.excluded_zero_budget,
+                self.slo.excluded_rejected,
             );
         }
         if let Some(p) = &self.prefix_last {
@@ -377,6 +405,8 @@ mod tests {
             lookups: 10, hits: 4, exact_hits: 1, tokens_reused: 128,
             pinned_pages: 5, ..Default::default()
         });
+        m.slo.observe(&crate::trace::SloTargets::default(),
+                      0.2, 1.0, 5);
         let j = m.to_json();
         let parsed = Json::parse(&j.dump()).expect("valid json");
         assert_eq!(parsed.get("requests").unwrap().as_i64(), Some(20));
@@ -406,6 +436,15 @@ mod tests {
         let rate = pre.get("hit_rate").unwrap().as_f64().unwrap();
         assert!((rate - 0.4).abs() < 1e-9);
         assert_eq!(m.prefill_tokens_saved(), 128);
+        // PR 10 sections ride along in every snapshot
+        let ts = parsed.get("timeseries").expect("timeseries section");
+        assert!(ts.get("waves").is_some());
+        assert!(ts.get("series").is_some());
+        let slo = parsed.get("slo").expect("slo section");
+        assert_eq!(slo.get("attributed").unwrap().as_i64(), Some(1));
+        assert_eq!(slo.get("ttft_good").unwrap().as_i64(), Some(1));
+        assert!(slo.get("targets").unwrap().get("ttft_target_s")
+                    .is_some());
     }
 
     #[test]

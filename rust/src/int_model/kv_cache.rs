@@ -302,7 +302,12 @@ pub(crate) fn merge_align(dst: &mut [i64], src: &[i64], vm: i32, sh: i32) {
     bump_by(&health().merge_saturations, clamped);
 }
 
-/// Aggregate pool counters for metrics / admission diagnostics.
+/// Aggregate pool counters for metrics / admission diagnostics. The
+/// batcher samples this once per scheduling step; since PR 10 the
+/// same sample also feeds the `kv_pages_used` / `kv_pages_free` /
+/// `prefix_pinned_pages` series of the per-wave time-series telemetry
+/// (`trace::timeseries`), so pool occupancy is exported over time,
+/// not just as peaks.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct PoolStats {
     /// pages currently allocated to some lane
@@ -505,10 +510,22 @@ impl PagePool {
         self.refcnt.len() - self.free.len()
     }
 
+    /// O(1) occupancy gauges `(used, free)` — for callers that need
+    /// pool occupancy every wave (time-series sampling, admission
+    /// diagnostics) without the O(pages) shared-page scan `stats`
+    /// performs.
+    pub fn gauges(&self) -> (usize, usize) {
+        (self.used(), self.free.len())
+    }
+
+    /// Full counter sample. O(pages) (the shared count walks the
+    /// refcount table) — per scheduling step is fine, per page-op is
+    /// not; use [`PagePool::gauges`] where only occupancy matters.
     pub fn stats(&self) -> PoolStats {
+        let (used, free) = self.gauges();
         PoolStats {
-            used: self.used(),
-            free: self.free.len(),
+            used,
+            free,
             shared: self.refcnt.iter().filter(|&&c| c > 1).count(),
             cow_copies: self.cow_copies,
             high_water: self.high_water,

@@ -8,7 +8,7 @@
 //! only — the offline vendor policy forbids syn/proc-macro crates)
 //! that tokenizes `rust/src/` with a lightweight Rust lexer
 //! ([`tokenizer`]), extracts per-function call-and-lock summaries
-//! ([`parse`]), and enforces four rule families ([`rules`]):
+//! ([`parse`]), and enforces five rule families ([`rules`]):
 //!
 //! ## Rule 1 — float-freedom (`float-freedom`)
 //!
@@ -62,6 +62,19 @@
 //! (end-of-line form covers its line; a standalone `// ovf:` comment
 //! covers the next code line within 5 lines). Index/capacity math in
 //! `[...]` and assertion-macro arguments are exempt.
+//!
+//! ## Rule 5 — hot-path discipline (`hot-path`)
+//!
+//! The per-wave telemetry sampling sites in `trace/timeseries.rs`
+//! (every non-test fn named `sample*` or `record*`) run inside
+//! `Batcher::step` on every wave, so they must write into
+//! preallocated rings with Relaxed-only atomics. The rule flags any
+//! non-Relaxed `Ordering::` variant and any allocation indicator in
+//! those bodies: constructors on `Vec`/`String`/`Box`/`VecDeque`/
+//! `BTreeMap`/`HashMap`, the `vec!`/`format!` macros, and possibly
+//! reallocating methods (`.push(`, `.collect(`, `.to_vec(`, ...).
+//! Export-time paths (`snapshot`, `to_json`, `counter_events`) are
+//! out of scope — they may allocate freely.
 //!
 //! ## Allowlist (`rust/lint_allow.toml`)
 //!
@@ -336,6 +349,38 @@ mod tests {
             .collect();
         assert_eq!(hits.len(), 1, "{v:?}");
         assert_eq!(hits[0].item, "pinned");
+    }
+
+    #[test]
+    fn catches_alloc_and_seqcst_in_sampling_site() {
+        let t = TempTree::create("hotpath");
+        t.write(
+            "trace/timeseries.rs",
+            "pub fn sample_bad(c: &C) {\n    let mut v = Vec::new();\n    \
+             v.push(1u64);\n    c.n.fetch_add(1, Ordering::SeqCst);\n}\n",
+        );
+        let v = t.lint();
+        let hits: Vec<_> =
+            v.iter().filter(|v| v.rule == "hot-path").collect();
+        // Vec:: constructor, .push(, and Ordering::SeqCst each fire
+        assert_eq!(hits.len(), 3, "{v:?}");
+    }
+
+    #[test]
+    fn hot_path_ignores_export_paths_and_relaxed_stores() {
+        let t = TempTree::create("hotpath_ok");
+        t.write(
+            "trace/timeseries.rs",
+            "pub fn sample(c: &C) {\n    \
+             c.n.fetch_add(1, Ordering::Relaxed);\n}\n\n\
+             pub fn record_ttft_ns(c: &C, ns: u64) {\n    \
+             c.slots[0].store(ns, Ordering::Relaxed);\n}\n\n\
+             pub fn snapshot(c: &C) -> Vec<u64> {\n    \
+             let mut v = Vec::new();\n    \
+             v.push(c.n.load(Ordering::Relaxed));\n    v\n}\n",
+        );
+        let v = t.lint();
+        assert!(!has_rule(&v, "hot-path"), "{v:?}");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The four illm-lint rule families, and the driver that runs them over
+//! The five illm-lint rule families, and the driver that runs them over
 //! a source tree. See `lint::mod` docs for rule semantics and
 //! rationale; mirrored 1:1 by `python/lint_sim.py`.
 
@@ -109,6 +109,25 @@ const ASSERT_MACROS: [&str; 6] = [
     "debug_assert",
     "debug_assert_eq",
     "debug_assert_ne",
+];
+
+/// Allocation indicators for the hot-path rule (rule 5). A per-wave
+/// sampling site in `trace/timeseries.rs` must write into preallocated
+/// rings only: any constructor on these types, these macros, or these
+/// (possibly reallocating) methods is a violation there.
+const ALLOC_TYPES: [&str; 6] =
+    ["Vec", "String", "Box", "VecDeque", "BTreeMap", "HashMap"];
+const ALLOC_MACROS: [&str; 2] = ["vec", "format"];
+const ALLOC_METHODS: [&str; 9] = [
+    "to_vec",
+    "to_string",
+    "to_owned",
+    "collect",
+    "push",
+    "extend",
+    "reserve",
+    "insert",
+    "with_capacity",
 ];
 
 #[derive(Clone, Debug)]
@@ -764,6 +783,74 @@ pub fn run(src_root: &Path, allow_path: &Path) -> Vec<Violation> {
                      explicit wrapping_/saturating_/checked_ intent",
                     t.text
                 ),
+            ));
+        }
+    }
+
+    // ---- rule 5: hot-path discipline in trace/timeseries.rs ----
+    // The per-wave sampling sites (`sample*` / `record*`) run inside
+    // `Batcher::step` on every wave. They must stay allocation-free
+    // (rings are preallocated in the constructor) and Relaxed-only:
+    // a SeqCst fence would put a full barrier on every wave, and a
+    // `Vec::push` would put the allocator there. `snapshot`/`to_json`
+    // run at export time and are deliberately out of scope.
+    for f in &fns {
+        if f.dead
+            || f.is_test
+            || f.path != "trace/timeseries.rs"
+            || !(f.name.starts_with("sample")
+                || f.name.starts_with("record"))
+        {
+            continue;
+        }
+        let toks = &f.body;
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != Kind::Ident {
+                continue;
+            }
+            let msg = if i >= 2
+                && toks[i - 2].text == "Ordering"
+                && toks[i - 1].text == "::"
+                && t.text != "Relaxed"
+            {
+                Some(format!(
+                    "Ordering::{} in a per-wave sampling site — \
+                     hot-path atomics must be Relaxed",
+                    t.text
+                ))
+            } else if ALLOC_TYPES.contains(&t.text.as_str())
+                && toks.get(i + 1).map(|x| x.text.as_str()) == Some("::")
+            {
+                Some(format!(
+                    "{}:: constructor in a per-wave sampling site — \
+                     preallocate in the TimeSeries constructor",
+                    t.text
+                ))
+            } else if ALLOC_MACROS.contains(&t.text.as_str())
+                && toks.get(i + 1).map(|x| x.text.as_str()) == Some("!")
+            {
+                Some(format!(
+                    "{}! allocates in a per-wave sampling site",
+                    t.text
+                ))
+            } else if ALLOC_METHODS.contains(&t.text.as_str())
+                && i >= 1
+                && toks[i - 1].text == "."
+                && toks.get(i + 1).map(|x| x.text.as_str()) == Some("(")
+            {
+                Some(format!(
+                    ".{}() may allocate in a per-wave sampling site",
+                    t.text
+                ))
+            } else {
+                None
+            };
+            let Some(msg) = msg else { continue };
+            if allowed(&allow, "hot-path", &f.path, &f.qname, &t.text) {
+                continue;
+            }
+            viols.push(Violation::new(
+                "hot-path", &f.path, t.line, &f.qname, msg,
             ));
         }
     }

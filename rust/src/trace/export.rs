@@ -21,6 +21,9 @@ fn event_json(e: &Event) -> Json {
         'X' => pairs.push(("dur", Json::Num(e.dur_us))),
         // instants need a scope; "g" (global) spans all rows
         'i' => pairs.push(("s", Json::Str("g".into()))),
+        // counter tracks ('C') carry only args.value — Perfetto keys
+        // the track on (pid, name) and plots args values over ts
+        'C' => {}
         _ => {}
     }
     if !e.args.is_empty() {
@@ -44,10 +47,14 @@ pub fn chrome_trace_json(events: &[Event]) -> Json {
     ])
 }
 
-/// Drain all recorded events into a Chrome trace file. Returns the
-/// number of events written.
+/// Drain all recorded events into a Chrome trace file, appending the
+/// time-series counter tracks (`ph: 'C'`, one track per series in
+/// `timeseries::TS_SERIES`). Returns the number of events written.
+/// (`chrome_trace_json` itself stays a pure function of its input —
+/// the counter tracks are merged only here, at flush time.)
 pub fn write_chrome_trace(path: &str) -> std::io::Result<usize> {
-    let events = take_events();
+    let mut events = take_events();
+    events.extend(super::timeseries::counter_events());
     let json = chrome_trace_json(&events);
     std::fs::write(path, json.dump() + "\n")?;
     Ok(events.len())
@@ -167,6 +174,33 @@ mod tests {
         let i = &evs[1];
         assert_eq!(i.get("s").and_then(Json::as_str), Some("g"));
         assert!(i.get("dur").is_none());
+    }
+
+    #[test]
+    fn counter_event_json_shape() {
+        let events = vec![Event {
+            name: "kv_pages_used",
+            cat: "timeseries",
+            ph: 'C',
+            ts_us: 42.0,
+            dur_us: 0.0,
+            tid: 0,
+            args: vec![("value", 17)],
+        }];
+        let j = chrome_trace_json(&events);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let c = &parsed.get("traceEvents").unwrap().as_arr().unwrap()[0];
+        assert_eq!(c.get("ph").and_then(Json::as_str), Some("C"));
+        assert_eq!(c.get("ts").and_then(Json::as_f64), Some(42.0));
+        // no dur, no scope — just the plotted value
+        assert!(c.get("dur").is_none());
+        assert!(c.get("s").is_none());
+        assert_eq!(
+            c.get("args")
+                .and_then(|a| a.get("value"))
+                .and_then(Json::as_i64),
+            Some(17)
+        );
     }
 
     #[test]

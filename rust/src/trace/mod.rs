@@ -28,11 +28,25 @@
 //!   to a mutex'd vector drained at export time (the mutex is
 //!   touched only at span END, never inside kernels).
 //!
+//! - **Time-series telemetry** (`timeseries`) + **SLO accounting**
+//!   (`slo`): once per batcher wave, a [`timeseries::WaveSample`] of
+//!   system gauges (KV pages used/free, prefix-pinned pages,
+//!   active/queued/preempted sequences, batch width, scratch depth)
+//!   and per-wave rates (decode/prefill tok/s, wave duration,
+//!   HealthCounters deltas) goes into a preallocated lock-free ring;
+//!   finished requests land TTFT/TPOT in rotating log2-ns histogram
+//!   windows. Sampling is relaxed-atomics-only and allocation-free
+//!   (the `hot-path` illm-lint rule enforces this). `slo::SloAccount`
+//!   classifies each finished request against `BatcherConfig` TTFT/
+//!   TPOT targets (good/violated, excess, time-to-violation).
+//!
 //! Export paths (`export`): Chrome trace-event JSON for
-//! `chrome://tracing` / Perfetto (`ILLM_TRACE=out.json`), the
-//! `phases`/`health` blocks embedded in `ServeMetrics::to_json`
-//! (hence BENCH_serving.json), and a human phase-breakdown table for
-//! `print_summary`.
+//! `chrome://tracing` / Perfetto (`ILLM_TRACE=out.json`) including
+//! `ph: 'C'` counter tracks for every time-series gauge, the
+//! `phases`/`health`/`timeseries`/`slo` blocks embedded in
+//! `ServeMetrics::to_json` (hence BENCH_serving.json — which
+//! `python/bench_diff.py` diffs across runs as the perf-regression
+//! gate), and a human phase-breakdown table for `print_summary`.
 //!
 //! Overhead discipline: nothing in this module runs on the hot path
 //! unless it is (a) a relaxed atomic increment at an already-rare
@@ -42,7 +56,9 @@
 
 pub mod counters;
 pub mod export;
+pub mod slo;
 pub mod span;
+pub mod timeseries;
 
 pub use counters::{
     bump, bump_by, health, HealthCounters, HealthSnapshot,
@@ -51,9 +67,16 @@ pub use export::{
     chrome_trace_json, flush_env_trace, health_json, phases_json,
     print_phase_table, write_chrome_trace,
 };
+pub use slo::{SloAccount, SloTargets};
 pub use span::{
-    init_from_env, instant, phase_snapshots, phase_timer, reset_phases,
-    set_spans, set_timing, span, span_at, spans_on, take_events,
-    timing_on, Event, Phase, PhaseSnapshot, PhaseTimer, Span,
-    N_BUCKETS, N_PHASES,
+    bucket_of, init_from_env, instant, now_us, phase_snapshots,
+    phase_timer, reset_phases, set_spans, set_timing, span, span_at,
+    spans_on, take_events, timing_on, Event, Phase, PhaseSnapshot,
+    PhaseTimer, Span, N_BUCKETS, N_PHASES,
+};
+pub use timeseries::{
+    bucket_lo_ns, counter_events, quantile_bucket, record_tpot_ns,
+    record_ttft_ns, reset_timeseries, sample_wave, timeseries_json,
+    TimeSeries, TsSnapshot, TsWindow, WaveSample, EXPORT_TAIL,
+    N_TS_SERIES, N_TS_WINDOWS, TS_RING, TS_SERIES, WINDOW_WAVES,
 };

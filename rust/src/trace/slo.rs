@@ -1,0 +1,314 @@
+//! Per-request SLO attribution: classify every finished request as
+//! good/violated against TTFT and TPOT targets, and account how far
+//! over budget the violations went.
+//!
+//! The batcher owns targets (in `BatcherConfig`) and drives an
+//! [`SloAccount`] inside `ServeMetrics` from its finish / zero-budget
+//! / reject paths; `ServeMetrics::to_json` exports the account as the
+//! `slo` section of BENCH_serving.json. This is plain bookkeeping on
+//! the scheduler thread — no atomics, no locks — and the decision
+//! inputs the SLO-aware admission work (ROADMAP item 4) will read.
+//!
+//! Semantics:
+//! - TTFT is good when `ttft <= target` (boundary counts as good —
+//!   a request that hits the deadline exactly met it).
+//! - TPOT is attributed only for requests that decoded at least two
+//!   tokens (`tpot = (latency - ttft) / (n_generated - 1)`); a
+//!   one-token request has no inter-token gap to measure.
+//! - The end-to-end deadline is `ttft_target + (n-1) * tpot_target`;
+//!   `time-to-violation` for an e2e-violated request is that deadline
+//!   (the instant its budget ran out).
+//! - Zero-budget (`max_new == 0`) and rejected requests are excluded
+//!   from attribution and counted separately.
+//! - A non-positive target disables that metric's attribution.
+
+use crate::util::json::{obj, Json};
+
+/// Latency targets a request must meet to count as "good".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloTargets {
+    /// Time-to-first-token target, seconds (<= 0 disables).
+    pub ttft_target_s: f64,
+    /// Per-output-token target, seconds (<= 0 disables).
+    pub tpot_target_s: f64,
+}
+
+impl Default for SloTargets {
+    /// Interactive-chat shaped defaults: first token in 500 ms, then
+    /// 20 tok/s sustained.
+    fn default() -> Self {
+        SloTargets { ttft_target_s: 0.5, tpot_target_s: 0.05 }
+    }
+}
+
+impl SloTargets {
+    /// Targets that attribute nothing (both metrics disabled).
+    pub fn disabled() -> Self {
+        SloTargets { ttft_target_s: 0.0, tpot_target_s: 0.0 }
+    }
+
+    pub fn ttft_enabled(&self) -> bool {
+        self.ttft_target_s > 0.0
+    }
+
+    pub fn tpot_enabled(&self) -> bool {
+        self.tpot_target_s > 0.0
+    }
+
+    /// End-to-end latency budget for a request that generated
+    /// `n_generated` tokens: TTFT budget plus one TPOT budget per
+    /// inter-token gap.
+    pub fn deadline_s(&self, n_generated: usize) -> f64 {
+        self.ttft_target_s
+            + n_generated.saturating_sub(1) as f64 * self.tpot_target_s
+    }
+}
+
+/// Running SLO attribution over a workload. Plain counters owned by
+/// `ServeMetrics`; `observe` is called once per finished request.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloAccount {
+    /// Targets used for attribution (recorded on first observe so the
+    /// JSON export is self-describing).
+    pub targets: Option<SloTargets>,
+    /// Requests attributed (finished, generated >= 1 token).
+    pub attributed: u64,
+    pub ttft_good: u64,
+    pub ttft_violated: u64,
+    /// Total / worst TTFT overshoot across violated requests, seconds.
+    pub ttft_excess_sum_s: f64,
+    pub ttft_excess_max_s: f64,
+    pub tpot_good: u64,
+    pub tpot_violated: u64,
+    pub tpot_excess_sum_s: f64,
+    pub tpot_excess_max_s: f64,
+    /// End-to-end: latency vs `deadline_s(n_generated)`.
+    pub e2e_good: u64,
+    pub e2e_violated: u64,
+    /// Sum over e2e-violated requests of the instant (seconds into the
+    /// request) the budget ran out — mean is the "time to violation".
+    pub ttv_sum_s: f64,
+    /// `max_new == 0` requests: no tokens, nothing to attribute.
+    pub excluded_zero_budget: u64,
+    /// Rejected requests: never served, excluded from attribution.
+    pub excluded_rejected: u64,
+}
+
+impl SloAccount {
+    /// Attribute one finished request. `ttft_s` is time to first
+    /// token, `latency_s` total time queued -> finished, `n_generated`
+    /// the tokens it decoded (>= 1 for any finished request).
+    pub fn observe(
+        &mut self,
+        t: &SloTargets,
+        ttft_s: f64,
+        latency_s: f64,
+        n_generated: usize,
+    ) {
+        self.targets = Some(*t);
+        self.attributed += 1;
+        if t.ttft_enabled() {
+            if ttft_s <= t.ttft_target_s {
+                self.ttft_good += 1;
+            } else {
+                self.ttft_violated += 1;
+                let ex = ttft_s - t.ttft_target_s;
+                self.ttft_excess_sum_s += ex;
+                self.ttft_excess_max_s = self.ttft_excess_max_s.max(ex);
+            }
+        }
+        if t.tpot_enabled() && n_generated >= 2 {
+            let tpot =
+                (latency_s - ttft_s).max(0.0) / (n_generated - 1) as f64;
+            if tpot <= t.tpot_target_s {
+                self.tpot_good += 1;
+            } else {
+                self.tpot_violated += 1;
+                let ex = tpot - t.tpot_target_s;
+                self.tpot_excess_sum_s += ex;
+                self.tpot_excess_max_s = self.tpot_excess_max_s.max(ex);
+            }
+        }
+        if t.ttft_enabled() || t.tpot_enabled() {
+            let deadline = t.deadline_s(n_generated);
+            if latency_s <= deadline {
+                self.e2e_good += 1;
+            } else {
+                self.e2e_violated += 1;
+                self.ttv_sum_s += deadline;
+            }
+        }
+    }
+
+    /// Would this request count as an SLO violation? (Used by the
+    /// batcher to stamp the `finished` lifecycle instant without
+    /// mutating the account.)
+    pub fn violates(
+        t: &SloTargets,
+        ttft_s: f64,
+        latency_s: f64,
+        n_generated: usize,
+    ) -> bool {
+        (t.ttft_enabled() && ttft_s > t.ttft_target_s)
+            || ((t.ttft_enabled() || t.tpot_enabled())
+                && latency_s > t.deadline_s(n_generated))
+    }
+
+    pub fn exclude_zero_budget(&mut self) {
+        self.excluded_zero_budget += 1;
+    }
+
+    pub fn exclude_rejected(&mut self) {
+        self.excluded_rejected += 1;
+    }
+
+    /// Mean seconds-into-request at which violated requests ran out
+    /// of budget (0 when nothing violated).
+    pub fn mean_ttv_s(&self) -> f64 {
+        if self.e2e_violated == 0 {
+            0.0
+        } else {
+            self.ttv_sum_s / self.e2e_violated as f64
+        }
+    }
+
+    /// The `slo` section of `ServeMetrics::to_json`.
+    pub fn to_json(&self) -> Json {
+        let targets = match &self.targets {
+            Some(t) => obj(vec![
+                ("ttft_target_s", Json::Num(t.ttft_target_s)),
+                ("tpot_target_s", Json::Num(t.tpot_target_s)),
+            ]),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("targets", targets),
+            ("attributed", Json::Int(self.attributed as i64)),
+            ("ttft_good", Json::Int(self.ttft_good as i64)),
+            ("ttft_violated", Json::Int(self.ttft_violated as i64)),
+            ("ttft_excess_mean_s", Json::Num(mean(
+                self.ttft_excess_sum_s, self.ttft_violated,
+            ))),
+            ("ttft_excess_max_s", Json::Num(self.ttft_excess_max_s)),
+            ("tpot_good", Json::Int(self.tpot_good as i64)),
+            ("tpot_violated", Json::Int(self.tpot_violated as i64)),
+            ("tpot_excess_mean_s", Json::Num(mean(
+                self.tpot_excess_sum_s, self.tpot_violated,
+            ))),
+            ("tpot_excess_max_s", Json::Num(self.tpot_excess_max_s)),
+            ("e2e_good", Json::Int(self.e2e_good as i64)),
+            ("e2e_violated", Json::Int(self.e2e_violated as i64)),
+            ("mean_ttv_s", Json::Num(self.mean_ttv_s())),
+            ("excluded_zero_budget", Json::Int(
+                self.excluded_zero_budget as i64,
+            )),
+            ("excluded_rejected", Json::Int(
+                self.excluded_rejected as i64,
+            )),
+        ])
+    }
+}
+
+fn mean(sum: f64, n: u64) -> f64 {
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: SloTargets =
+        SloTargets { ttft_target_s: 0.5, tpot_target_s: 0.05 };
+
+    #[test]
+    fn boundary_ttft_exactly_at_target_is_good() {
+        let mut a = SloAccount::default();
+        a.observe(&T, 0.5, 0.5, 1);
+        assert_eq!(a.ttft_good, 1);
+        assert_eq!(a.ttft_violated, 0);
+        assert_eq!(a.e2e_good, 1); // deadline for n=1 is the ttft target
+        assert!(!SloAccount::violates(&T, 0.5, 0.5, 1));
+        assert!(SloAccount::violates(&T, 0.5001, 0.5001, 1));
+    }
+
+    #[test]
+    fn tpot_attribution_needs_two_tokens() {
+        let mut a = SloAccount::default();
+        // one token: no inter-token gap, tpot not attributed
+        a.observe(&T, 0.1, 0.1, 1);
+        assert_eq!(a.tpot_good + a.tpot_violated, 0);
+        // 11 tokens over 0.1 + 10 * 0.04: tpot 0.04 <= 0.05 -> good
+        a.observe(&T, 0.1, 0.5, 11);
+        assert_eq!(a.tpot_good, 1);
+        // 11 tokens over 0.1 + 10 * 0.06: tpot 0.06 > 0.05 -> violated
+        a.observe(&T, 0.1, 0.7, 11);
+        assert_eq!(a.tpot_violated, 1);
+        assert!((a.tpot_excess_max_s - 0.01).abs() < 1e-9);
+        assert_eq!(a.attributed, 3);
+    }
+
+    #[test]
+    fn time_to_violation_is_the_deadline() {
+        let mut a = SloAccount::default();
+        // deadline = 0.5 + 9 * 0.05 = 0.95; latency 2.0 violates
+        a.observe(&T, 0.4, 2.0, 10);
+        assert_eq!(a.e2e_violated, 1);
+        assert!((a.mean_ttv_s() - 0.95).abs() < 1e-9);
+        assert!(SloAccount::violates(&T, 0.4, 2.0, 10));
+        assert!(!SloAccount::violates(&T, 0.4, 0.95, 10));
+    }
+
+    #[test]
+    fn exclusions_do_not_attribute() {
+        let mut a = SloAccount::default();
+        a.exclude_zero_budget();
+        a.exclude_rejected();
+        a.exclude_rejected();
+        assert_eq!(a.attributed, 0);
+        assert_eq!(a.excluded_zero_budget, 1);
+        assert_eq!(a.excluded_rejected, 2);
+        assert_eq!(a.ttft_good + a.ttft_violated, 0);
+    }
+
+    #[test]
+    fn disabled_targets_attribute_nothing_per_metric() {
+        let mut a = SloAccount::default();
+        a.observe(&SloTargets::disabled(), 9.0, 99.0, 50);
+        assert_eq!(a.attributed, 1); // counted, but no metric attributed
+        assert_eq!(a.ttft_good + a.ttft_violated, 0);
+        assert_eq!(a.tpot_good + a.tpot_violated, 0);
+        assert_eq!(a.e2e_good + a.e2e_violated, 0);
+        assert!(!SloAccount::violates(
+            &SloTargets::disabled(), 9.0, 99.0, 50,
+        ));
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let mut a = SloAccount::default();
+        a.observe(&T, 0.2, 1.0, 5);
+        a.observe(&T, 0.9, 3.0, 5);
+        a.exclude_rejected();
+        let j = a.to_json();
+        assert_eq!(j.get("attributed").and_then(Json::as_i64), Some(2));
+        assert_eq!(j.get("ttft_good").and_then(Json::as_i64), Some(1));
+        assert_eq!(
+            j.get("ttft_violated").and_then(Json::as_i64),
+            Some(1)
+        );
+        assert_eq!(
+            j.get("excluded_rejected").and_then(Json::as_i64),
+            Some(1)
+        );
+        let t = j.get("targets").expect("targets");
+        assert_eq!(t.get("ttft_target_s").and_then(Json::as_f64),
+                   Some(0.5));
+        // empty account exports null targets
+        assert_eq!(SloAccount::default().to_json().get("targets"),
+                   Some(&Json::Null));
+    }
+}

@@ -104,6 +104,13 @@ fn us_since_epoch(t: Instant) -> f64 {
     t.saturating_duration_since(tracer().t0).as_nanos() as f64 / 1e3
 }
 
+/// Current time on the tracer epoch, in microseconds — the same clock
+/// span events carry, so time-series samples (`trace::timeseries`)
+/// line up with spans on the Perfetto timeline.
+pub fn now_us() -> f64 {
+    us_since_epoch(Instant::now())
+}
+
 fn push_event(e: Event) {
     lock_recover(&tracer().events).push(e);
 }

@@ -1,0 +1,630 @@
+//! Per-wave time-series telemetry: ring-buffered system gauges and
+//! windowed latency/rate histograms, sampled once per `Batcher::step`.
+//!
+//! Everything here is lock-free and allocation-free on the sampling
+//! path: the ring and the window histograms are `Vec<AtomicU64>`
+//! preallocated at first use, and `sample`/`record_*` perform only
+//! relaxed atomic loads/stores/adds (enforced by the `hot-path`
+//! illm-lint rule). `Relaxed` is correct for the same reason it is in
+//! `counters`: each cell is an independent scalar sample with no
+//! cross-cell invariant a reader could rely on — a snapshot taken
+//! concurrently with a wave is racy by design and at worst tears
+//! between two adjacent waves, never within a single cell.
+//!
+//! The series feed three exporters:
+//! - Perfetto counter tracks (`ph: 'C'`) appended to the Chrome-trace
+//!   export by `write_chrome_trace` (one track per entry in
+//!   [`TS_SERIES`], timestamps on the span clock epoch),
+//! - the `timeseries` section of `ServeMetrics::to_json` (columnar
+//!   last/peak/mean plus a bounded tail of raw samples, and per-window
+//!   TTFT/TPOT quantiles from the log2-ns histograms),
+//! - downstream, `python/bench_diff.py` compares the resulting
+//!   BENCH_serving.json snapshots across runs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::json::{obj, Json};
+
+use super::span::{bucket_of, now_us, Event, N_BUCKETS};
+
+/// Ring capacity in waves. At a ~1 ms wave this holds the last ~0.5 s
+/// of per-wave samples; exports keep the full ring, counter tracks
+/// and the JSON tail are additionally bounded by [`EXPORT_TAIL`].
+pub const TS_RING: usize = 512;
+
+/// Waves per latency window (TTFT/TPOT histograms rotate at this
+/// granularity, giving per-window quantiles instead of run totals).
+pub const WINDOW_WAVES: u64 = 64;
+
+/// Live latency windows retained (older windows are recycled).
+pub const N_TS_WINDOWS: usize = 8;
+
+/// Raw samples per series kept in the JSON export (the Perfetto
+/// counter tracks also cap at this many samples per series).
+pub const EXPORT_TAIL: usize = 64;
+
+/// Names of the gauge/rate series, in slot order. Also the Perfetto
+/// counter-track names and the keys under `timeseries.series` in
+/// BENCH_serving.json; `python/check_trace.py` validates against this
+/// exact list.
+pub const TS_SERIES: [&str; N_TS_SERIES] = [
+    "kv_pages_used",
+    "kv_pages_free",
+    "prefix_pinned_pages",
+    "active_seqs",
+    "queued_seqs",
+    "preempted_total",
+    "decode_batch_width",
+    "scratch_free",
+    "decode_tokens_wave",
+    "prefill_tokens_wave",
+    "wave_dur_us",
+    "decode_tok_per_s",
+    "prefill_tok_per_s",
+    "sat_events_wave",
+    "softmax_rows_wave",
+    "softmax_clipped_wave",
+];
+
+pub const N_TS_SERIES: usize = 16;
+
+/// Ring slot stride: one timestamp cell + one cell per series.
+const STRIDE: usize = N_TS_SERIES + 1;
+
+/// One wave's raw gauge readings, filled by the batcher at the end of
+/// `step` and written into the ring by [`TimeSeries::sample`]. Plain
+/// data — building it costs a handful of integer reads the batcher
+/// already has at hand.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WaveSample {
+    pub kv_pages_used: u64,
+    pub kv_pages_free: u64,
+    pub prefix_pinned_pages: u64,
+    pub active_seqs: u64,
+    pub queued_seqs: u64,
+    pub preempted_total: u64,
+    pub decode_batch_width: u64,
+    pub scratch_free: u64,
+    pub decode_tokens_wave: u64,
+    pub prefill_tokens_wave: u64,
+    pub wave_dur_us: u64,
+    /// Saturation/clamp events this wave (HealthCounters delta:
+    /// lane grow/zero, merge saturations, requant clamps, exp
+    /// underflows) — the per-wave *rate* form of the run totals.
+    pub sat_events_wave: u64,
+    pub softmax_rows_wave: u64,
+    pub softmax_clipped_wave: u64,
+}
+
+impl WaveSample {
+    /// Expand into the slot-ordered series values (derived tok/s in
+    /// integer math; `wave_dur_us` is clamped to 1 so an
+    /// unmeasurably-fast wave reads as its token count * 1e6, not a
+    /// division fault). Runs on the sampling path: no allocation.
+    fn sample_values(&self) -> [u64; N_TS_SERIES] {
+        let dur = self.wave_dur_us.max(1);
+        [
+            self.kv_pages_used,
+            self.kv_pages_free,
+            self.prefix_pinned_pages,
+            self.active_seqs,
+            self.queued_seqs,
+            self.preempted_total,
+            self.decode_batch_width,
+            self.scratch_free,
+            self.decode_tokens_wave,
+            self.prefill_tokens_wave,
+            self.wave_dur_us,
+            self.decode_tokens_wave.saturating_mul(1_000_000) / dur,
+            self.prefill_tokens_wave.saturating_mul(1_000_000) / dur,
+            self.sat_events_wave,
+            self.softmax_rows_wave,
+            self.softmax_clipped_wave,
+        ]
+    }
+}
+
+/// The telemetry store: a fixed ring of per-wave samples plus a small
+/// rotation of windowed log2-ns histograms for TTFT/TPOT. All storage
+/// is allocated once in [`TimeSeries::new`]; sampling mutates it with
+/// relaxed atomics only.
+pub struct TimeSeries {
+    /// Total waves ever sampled (ring write cursor = head % TS_RING).
+    head: AtomicU64,
+    /// TS_RING slots of STRIDE cells: `[t_us, v0, v1, ...]`.
+    slots: Vec<AtomicU64>,
+    /// Window id currently receiving latency records.
+    cur_window: AtomicU64,
+    /// Window id stored in each rotation slot (slot = id % N_TS_WINDOWS);
+    /// a mismatch means the slot still holds a recycled older window.
+    win_id: Vec<AtomicU64>,
+    /// N_TS_WINDOWS * N_BUCKETS log2-ns histogram cells each.
+    ttft_buckets: Vec<AtomicU64>,
+    tpot_buckets: Vec<AtomicU64>,
+    /// Per-window record counts (cheaper than summing buckets).
+    ttft_count: Vec<AtomicU64>,
+    tpot_count: Vec<AtomicU64>,
+}
+
+fn zeroed(n: usize) -> Vec<AtomicU64> {
+    (0..n).map(|_| AtomicU64::new(0)).collect()
+}
+
+impl Default for TimeSeries {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TimeSeries {
+    pub fn new() -> TimeSeries {
+        TimeSeries {
+            head: AtomicU64::new(0),
+            slots: zeroed(TS_RING * STRIDE),
+            cur_window: AtomicU64::new(0),
+            win_id: zeroed(N_TS_WINDOWS),
+            ttft_buckets: zeroed(N_TS_WINDOWS * N_BUCKETS),
+            tpot_buckets: zeroed(N_TS_WINDOWS * N_BUCKETS),
+            ttft_count: zeroed(N_TS_WINDOWS),
+            tpot_count: zeroed(N_TS_WINDOWS),
+        }
+    }
+
+    /// Record one wave's gauges. Hot-path contract: relaxed atomics
+    /// only, zero allocation (the ring was preallocated in `new`).
+    /// Single logical writer (the batcher's scheduler thread); a
+    /// concurrent `snapshot` may observe a half-written slot, which
+    /// tears at worst between adjacent waves of the same series.
+    pub fn sample(&self, s: &WaveSample) {
+        let n = self.head.fetch_add(1, Ordering::Relaxed);
+        let base = (n as usize % TS_RING) * STRIDE;
+        self.slots[base].store(now_us() as u64, Ordering::Relaxed);
+        let vals = s.sample_values();
+        for (i, v) in vals.iter().enumerate() {
+            self.slots[base + 1 + i].store(*v, Ordering::Relaxed);
+        }
+        // rotate the latency window every WINDOW_WAVES waves: claim
+        // the slot by zeroing its histograms, then stamp its id so
+        // concurrent readers skip it until the id matches
+        let w = n / WINDOW_WAVES;
+        if self.cur_window.load(Ordering::Relaxed) != w {
+            let slot = w as usize % N_TS_WINDOWS;
+            if self.win_id[slot].load(Ordering::Relaxed) != w {
+                let b0 = slot * N_BUCKETS;
+                for b in 0..N_BUCKETS {
+                    self.ttft_buckets[b0 + b].store(0, Ordering::Relaxed);
+                    self.tpot_buckets[b0 + b].store(0, Ordering::Relaxed);
+                }
+                self.ttft_count[slot].store(0, Ordering::Relaxed);
+                self.tpot_count[slot].store(0, Ordering::Relaxed);
+                self.win_id[slot].store(w, Ordering::Relaxed);
+            }
+            self.cur_window.store(w, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one finished request's TTFT into the current latency
+    /// window. Hot-path contract as for [`TimeSeries::sample`].
+    pub fn record_ttft_ns(&self, ns: u64) {
+        let slot =
+            self.cur_window.load(Ordering::Relaxed) as usize % N_TS_WINDOWS;
+        let b = slot * N_BUCKETS + bucket_of(ns);
+        self.ttft_buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.ttft_count[slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one finished request's per-token decode latency (TPOT)
+    /// into the current window. Hot-path contract as for `sample`.
+    pub fn record_tpot_ns(&self, ns: u64) {
+        let slot =
+            self.cur_window.load(Ordering::Relaxed) as usize % N_TS_WINDOWS;
+        let b = slot * N_BUCKETS + bucket_of(ns);
+        self.tpot_buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.tpot_count[slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy the live state out (racy by design — see `sample`).
+    /// Samples come back oldest-first; windows come back in id order,
+    /// only slots whose stamped id is still live.
+    pub fn snapshot(&self) -> TsSnapshot {
+        let n = self.head.load(Ordering::Relaxed);
+        let kept = (n as usize).min(TS_RING);
+        let start = n - kept as u64;
+        let mut samples = Vec::with_capacity(kept);
+        for abs in start..n {
+            let base = (abs as usize % TS_RING) * STRIDE;
+            let t = self.slots[base].load(Ordering::Relaxed);
+            let mut vals = [0u64; N_TS_SERIES];
+            for (i, v) in vals.iter_mut().enumerate() {
+                *v = self.slots[base + 1 + i].load(Ordering::Relaxed);
+            }
+            samples.push((t, vals));
+        }
+        let cw = self.cur_window.load(Ordering::Relaxed);
+        let lo = (cw + 1).saturating_sub(N_TS_WINDOWS as u64);
+        let mut windows = Vec::new();
+        for id in lo..=cw {
+            let slot = id as usize % N_TS_WINDOWS;
+            if self.win_id[slot].load(Ordering::Relaxed) != id {
+                continue; // recycled or never filled
+            }
+            let b0 = slot * N_BUCKETS;
+            let mut w = TsWindow {
+                id,
+                ttft_count: self.ttft_count[slot].load(Ordering::Relaxed),
+                tpot_count: self.tpot_count[slot].load(Ordering::Relaxed),
+                ttft_buckets: [0; N_BUCKETS],
+                tpot_buckets: [0; N_BUCKETS],
+            };
+            for b in 0..N_BUCKETS {
+                w.ttft_buckets[b] =
+                    self.ttft_buckets[b0 + b].load(Ordering::Relaxed);
+                w.tpot_buckets[b] =
+                    self.tpot_buckets[b0 + b].load(Ordering::Relaxed);
+            }
+            windows.push(w);
+        }
+        TsSnapshot { waves: n, samples, windows }
+    }
+
+    /// Zero everything (between bench sections; not on the hot path).
+    pub fn reset(&self) {
+        self.head.store(0, Ordering::Relaxed);
+        for c in &self.slots {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.cur_window.store(0, Ordering::Relaxed);
+        for slot in 0..N_TS_WINDOWS {
+            // mark recycled: id 0 slot stays valid for a fresh run
+            self.win_id[slot].store(u64::MAX, Ordering::Relaxed);
+            self.ttft_count[slot].store(0, Ordering::Relaxed);
+            self.tpot_count[slot].store(0, Ordering::Relaxed);
+        }
+        self.win_id[0].store(0, Ordering::Relaxed);
+        for c in self.ttft_buckets.iter().chain(&self.tpot_buckets) {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One retained latency window (copied out of the rotation).
+#[derive(Clone, Copy, Debug)]
+pub struct TsWindow {
+    pub id: u64,
+    pub ttft_count: u64,
+    pub tpot_count: u64,
+    pub ttft_buckets: [u64; N_BUCKETS],
+    pub tpot_buckets: [u64; N_BUCKETS],
+}
+
+/// Point-in-time copy of the telemetry store.
+#[derive(Clone, Debug)]
+pub struct TsSnapshot {
+    /// Total waves sampled since creation/reset (may exceed the ring).
+    pub waves: u64,
+    /// Retained per-wave samples, oldest first: `(t_us, values)` with
+    /// values in [`TS_SERIES`] slot order.
+    pub samples: Vec<(u64, [u64; N_TS_SERIES])>,
+    pub windows: Vec<TsWindow>,
+}
+
+impl TsSnapshot {
+    /// The `timeseries` section of `ServeMetrics::to_json`: columnar
+    /// summaries per series plus a bounded raw tail, and per-window
+    /// TTFT/TPOT counts + p50/p95 from the log2-ns histograms.
+    pub fn to_json(&self) -> Json {
+        let tail0 = self.samples.len().saturating_sub(EXPORT_TAIL);
+        let t_us: Vec<Json> = self.samples[tail0..]
+            .iter()
+            .map(|(t, _)| Json::Int(*t as i64))
+            .collect();
+        let mut series = Vec::with_capacity(N_TS_SERIES);
+        for (i, name) in TS_SERIES.iter().enumerate() {
+            let mut peak = 0u64;
+            let mut sum = 0u128;
+            for (_, vals) in &self.samples {
+                peak = peak.max(vals[i]);
+                sum += vals[i] as u128;
+            }
+            let last =
+                self.samples.last().map_or(0, |(_, vals)| vals[i]);
+            let mean = if self.samples.is_empty() {
+                0.0
+            } else {
+                sum as f64 / self.samples.len() as f64
+            };
+            let tail: Vec<Json> = self.samples[tail0..]
+                .iter()
+                .map(|(_, vals)| Json::Int(vals[i] as i64))
+                .collect();
+            series.push((
+                *name,
+                obj(vec![
+                    ("last", Json::Int(last as i64)),
+                    ("peak", Json::Int(peak as i64)),
+                    ("mean", Json::Num(mean)),
+                    ("tail", Json::Arr(tail)),
+                ]),
+            ));
+        }
+        let windows: Vec<Json> = self
+            .windows
+            .iter()
+            .map(|w| {
+                obj(vec![
+                    ("id", Json::Int(w.id as i64)),
+                    ("ttft", hist_json(&w.ttft_buckets, w.ttft_count)),
+                    ("tpot", hist_json(&w.tpot_buckets, w.tpot_count)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("waves", Json::Int(self.waves as i64)),
+            ("window_waves", Json::Int(WINDOW_WAVES as i64)),
+            ("t_us", Json::Arr(t_us)),
+            ("series", Json::Obj(
+                series.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            )),
+            ("windows", Json::Arr(windows)),
+        ])
+    }
+
+    /// Perfetto counter-track events: one `ph: 'C'` event per
+    /// (retained sample, series), chronological, so each track's
+    /// timestamps are monotonically non-decreasing. Appended to the
+    /// span events by `write_chrome_trace`.
+    pub fn counter_events(&self) -> Vec<Event> {
+        let tail0 = self.samples.len().saturating_sub(EXPORT_TAIL);
+        let mut out =
+            Vec::with_capacity((self.samples.len() - tail0) * N_TS_SERIES);
+        for (t, vals) in &self.samples[tail0..] {
+            for (i, name) in TS_SERIES.iter().enumerate() {
+                out.push(Event {
+                    name,
+                    cat: "timeseries",
+                    ph: 'C',
+                    ts_us: *t as f64,
+                    dur_us: 0.0,
+                    tid: 0,
+                    args: vec![("value", vals[i] as i64)],
+                });
+            }
+        }
+        out
+    }
+}
+
+fn hist_json(buckets: &[u64; N_BUCKETS], count: u64) -> Json {
+    let q = |p: f64| match quantile_bucket(buckets, p) {
+        Some(b) => Json::Int(bucket_lo_ns(b) as i64),
+        None => Json::Null,
+    };
+    obj(vec![
+        ("count", Json::Int(count as i64)),
+        ("p50_ns", q(0.50)),
+        ("p95_ns", q(0.95)),
+    ])
+}
+
+/// Nearest-rank quantile over a log2-ns histogram: the bucket holding
+/// the `ceil(p * n)`-th smallest recorded value (1-based, clamped to
+/// [1, n] so p = 0 means the minimum). `None` on an empty histogram.
+/// Agrees with the exact nearest-rank oracle at bucket granularity:
+/// `bucket_of(exact_quantile) == quantile_bucket(counts, p)` —
+/// property-tested against `ServeMetrics`-style percentile math in
+/// `tests/proptests.rs`.
+pub fn quantile_bucket(buckets: &[u64], p: f64) -> Option<usize> {
+    let n: u64 = buckets.iter().sum();
+    if n == 0 {
+        return None;
+    }
+    let rank =
+        ((p.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+    let mut acc = 0u64;
+    for (b, c) in buckets.iter().enumerate() {
+        acc += c;
+        if acc >= rank {
+            return Some(b);
+        }
+    }
+    Some(buckets.len().saturating_sub(1))
+}
+
+/// Lower bound in ns of log2 histogram bucket `b` (inverse of
+/// `bucket_of`: bucket 0 covers [0, 512) ns, bucket b >= 1 covers
+/// [2^(8+b), 2^(9+b)) ns).
+pub fn bucket_lo_ns(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << (8 + b).min(63)
+    }
+}
+
+// ------------------------------------------------------- global store
+
+fn timeseries() -> &'static TimeSeries {
+    static TS: OnceLock<TimeSeries> = OnceLock::new();
+    TS.get_or_init(TimeSeries::new)
+}
+
+/// Record one wave's gauges into the process-global store.
+pub fn sample_wave(s: &WaveSample) {
+    timeseries().sample(s);
+}
+
+/// Record a finished request's TTFT (global store, current window).
+pub fn record_ttft_ns(ns: u64) {
+    timeseries().record_ttft_ns(ns);
+}
+
+/// Record a finished request's TPOT (global store, current window).
+pub fn record_tpot_ns(ns: u64) {
+    timeseries().record_tpot_ns(ns);
+}
+
+/// Zero the global store (bench sections call this alongside
+/// `reset_phases` so each tracked run exports only its own telemetry).
+pub fn reset_timeseries() {
+    timeseries().reset();
+}
+
+/// The `timeseries` JSON section from the global store.
+pub fn timeseries_json() -> Json {
+    timeseries().snapshot().to_json()
+}
+
+/// Perfetto counter-track events from the global store.
+pub fn counter_events() -> Vec<Event> {
+    timeseries().snapshot().counter_events()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wave(i: u64) -> WaveSample {
+        WaveSample {
+            kv_pages_used: 10 + i,
+            kv_pages_free: 100 - i,
+            active_seqs: 4,
+            decode_batch_width: 4,
+            decode_tokens_wave: 4,
+            wave_dur_us: 1000,
+            ..WaveSample::default()
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_latest() {
+        let ts = TimeSeries::new();
+        for i in 0..(TS_RING as u64 + 10) {
+            ts.sample(&wave(i));
+        }
+        let snap = ts.snapshot();
+        assert_eq!(snap.waves, TS_RING as u64 + 10);
+        assert_eq!(snap.samples.len(), TS_RING);
+        // oldest retained sample is wave 10, newest is the last
+        assert_eq!(snap.samples[0].1[0], 10 + 10);
+        let last = snap.samples[TS_RING - 1].1;
+        assert_eq!(last[0], 10 + TS_RING as u64 + 9);
+        // derived decode tok/s: 4 tokens / 1000 us = 4000 tok/s
+        assert_eq!(last[11], 4000);
+    }
+
+    #[test]
+    fn window_rotation_zeroes_recycled_slots() {
+        let ts = TimeSeries::new();
+        ts.record_ttft_ns(1 << 20); // window 0
+        for i in 0..WINDOW_WAVES * (N_TS_WINDOWS as u64 + 1) {
+            ts.sample(&wave(i));
+            ts.record_tpot_ns(1 << 15);
+        }
+        let snap = ts.snapshot();
+        // window 0's slot was recycled; the original ttft record with
+        // it — every retained window must carry only its own counts
+        assert!(snap.windows.len() <= N_TS_WINDOWS);
+        for w in &snap.windows {
+            assert!(w.id >= 1, "window 0 must have been recycled");
+            assert_eq!(w.ttft_count, 0);
+            assert_eq!(
+                w.tpot_buckets.iter().sum::<u64>(),
+                w.tpot_count
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_bucket_fixed_cases() {
+        // empty
+        assert_eq!(quantile_bucket(&[0, 0, 0], 0.5), None);
+        // single bucket: every quantile lands there
+        assert_eq!(quantile_bucket(&[0, 7, 0], 0.0), Some(1));
+        assert_eq!(quantile_bucket(&[0, 7, 0], 1.0), Some(1));
+        // 10 values in bucket 0, 10 in bucket 2: p50 -> rank 10 ->
+        // bucket 0; p95 -> rank 19 -> bucket 2
+        assert_eq!(quantile_bucket(&[10, 0, 10], 0.5), Some(0));
+        assert_eq!(quantile_bucket(&[10, 0, 10], 0.95), Some(2));
+    }
+
+    #[test]
+    fn bucket_lo_inverts_bucket_of() {
+        assert_eq!(bucket_lo_ns(0), 0);
+        for b in 1..N_BUCKETS {
+            let lo = bucket_lo_ns(b);
+            assert_eq!(bucket_of(lo), b);
+            assert_eq!(bucket_of(lo - 1), b - 1);
+        }
+    }
+
+    #[test]
+    fn counter_events_are_monotone_and_named() {
+        let ts = TimeSeries::new();
+        for i in 0..5 {
+            ts.sample(&wave(i));
+        }
+        let evs = ts.snapshot().counter_events();
+        assert_eq!(evs.len(), 5 * N_TS_SERIES);
+        let mut last_ts = std::collections::HashMap::new();
+        for e in &evs {
+            assert_eq!(e.ph, 'C');
+            assert_eq!(e.cat, "timeseries");
+            assert!(TS_SERIES.contains(&e.name), "unknown {}", e.name);
+            assert_eq!(e.args.len(), 1);
+            assert_eq!(e.args[0].0, "value");
+            let prev =
+                last_ts.insert(e.name, e.ts_us).unwrap_or(f64::MIN);
+            assert!(e.ts_us >= prev, "ts regressed for {}", e.name);
+        }
+        assert_eq!(last_ts.len(), N_TS_SERIES);
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let ts = TimeSeries::new();
+        for i in 0..3 {
+            ts.sample(&wave(i));
+            ts.record_ttft_ns(1 << 20);
+        }
+        let j = ts.snapshot().to_json();
+        assert_eq!(j.get("waves").and_then(Json::as_i64), Some(3));
+        let series = j.get("series").expect("series section");
+        for name in TS_SERIES {
+            let s = series.get(name).expect("series entry");
+            assert!(s.get("last").is_some());
+            assert!(s.get("peak").is_some());
+            assert!(s.get("mean").is_some());
+        }
+        let used = series.get("kv_pages_used").expect("kv series");
+        assert_eq!(used.get("last").and_then(Json::as_i64), Some(12));
+        assert_eq!(used.get("peak").and_then(Json::as_i64), Some(12));
+        let wins = match j.get("windows") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("windows not an array: {other:?}"),
+        };
+        assert_eq!(wins.len(), 1);
+        let ttft = wins[0].get("ttft").expect("ttft block");
+        assert_eq!(ttft.get("count").and_then(Json::as_i64), Some(3));
+        // 2^20 ns -> bucket 12 -> lower bound 2^20
+        assert_eq!(
+            ttft.get("p50_ns").and_then(Json::as_i64),
+            Some(1 << 20)
+        );
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let ts = TimeSeries::new();
+        for i in 0..10 {
+            ts.sample(&wave(i));
+            ts.record_ttft_ns(4096);
+        }
+        ts.reset();
+        let snap = ts.snapshot();
+        assert_eq!(snap.waves, 0);
+        assert!(snap.samples.is_empty());
+        assert_eq!(snap.windows.len(), 1); // fresh window 0, empty
+        assert_eq!(snap.windows[0].ttft_count, 0);
+    }
+}

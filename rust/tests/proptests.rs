@@ -111,6 +111,7 @@ fn prop_scheduling_never_changes_results() {
                 kv_page_budget: budget,
                 stop_token: None,
                 threads,
+                ..Default::default()
             });
             let mut m = ServeMetrics::default();
             for (i, (p, n)) in reqs.iter().enumerate() {
@@ -385,5 +386,87 @@ fn prop_add_commutes() {
         assert_eq!(ab.m, ba.m);
         assert_eq!(ab.k, ba.k);
         assert_eq!(ab.zp, ba.zp);
+    }
+}
+
+// ---- timeseries: windowed quantile estimator vs exact oracle ----
+
+#[test]
+fn prop_windowed_quantile_matches_nearest_rank_oracle() {
+    use illm::trace::{bucket_of, quantile_bucket, N_BUCKETS};
+    let mut rng = Pcg64::new(0x7155);
+    assert_eq!(quantile_bucket(&[0u64; N_BUCKETS], 0.5), None);
+    for _case in 0..64 {
+        let n = 1 + rng.below(200);
+        // spread values over the full log2-ns range (sub-bucket 0
+        // through the saturating top bucket)
+        let mut vals: Vec<u64> = (0..n)
+            .map(|_| (rng.next_u64() % 256) << (rng.next_u64() % 34))
+            .collect();
+        let mut buckets = [0u64; N_BUCKETS];
+        for &v in &vals {
+            buckets[bucket_of(v)] += 1;
+        }
+        vals.sort_unstable();
+        for &p in &[0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            // exact nearest-rank oracle: rank = ceil(p*n), 1-based,
+            // clamped to [1, n] — the same convention ServeMetrics
+            // uses for its latency percentiles
+            let rank = ((p * n as f64).ceil() as usize).clamp(1, n);
+            let exact = vals[rank - 1];
+            assert_eq!(
+                quantile_bucket(&buckets, p),
+                Some(bucket_of(exact)),
+                "p={p} n={n} exact={exact}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_window_rotation_retains_exactly_the_live_tail() {
+    use illm::trace::{
+        quantile_bucket, TimeSeries, WaveSample, N_TS_WINDOWS,
+        WINDOW_WAVES,
+    };
+    let mut rng = Pcg64::new(0xD1A1);
+    // a LOCAL store — the process-global one is shared with other
+    // tests in this binary
+    let ts = TimeSeries::new();
+    let n_windows = 12u64; // > N_TS_WINDOWS so the rotation recycles
+    let mut expected: Vec<(u64, u32)> = Vec::new(); // (count, shift)
+    // one sample enters window 0; each subsequent window starts at
+    // the first sample whose wave index crosses the boundary
+    ts.sample(&WaveSample::default());
+    for w in 0..n_windows {
+        if w > 0 {
+            for _ in 0..WINDOW_WAVES {
+                ts.sample(&WaveSample::default());
+            }
+        }
+        let count = 1 + rng.below(20) as u64;
+        let shift = 10 + (w % 10) as u32; // distinct magnitude per window
+        for _ in 0..count {
+            ts.record_ttft_ns(1u64 << shift);
+        }
+        expected.push((count, shift));
+    }
+    let snap = ts.snapshot();
+    assert_eq!(snap.waves, 1 + (n_windows - 1) * WINDOW_WAVES);
+    // only the last N_TS_WINDOWS windows survive, in id order
+    let ids: Vec<u64> = snap.windows.iter().map(|w| w.id).collect();
+    let lo = n_windows - N_TS_WINDOWS as u64;
+    assert_eq!(ids, (lo..n_windows).collect::<Vec<u64>>());
+    for w in &snap.windows {
+        let (count, shift) = expected[w.id as usize];
+        assert_eq!(w.ttft_count, count, "window {}", w.id);
+        assert_eq!(w.tpot_count, 0, "window {}", w.id);
+        let total: u64 = w.ttft_buckets.iter().sum();
+        assert_eq!(total, count, "window {} histogram count", w.id);
+        // all records in a window share one magnitude, so every
+        // quantile lands in that magnitude's bucket
+        let b = illm::trace::bucket_of(1u64 << shift);
+        assert_eq!(quantile_bucket(&w.ttft_buckets, 0.5), Some(b));
+        assert_eq!(quantile_bucket(&w.ttft_buckets, 0.99), Some(b));
     }
 }

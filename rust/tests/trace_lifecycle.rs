@@ -23,6 +23,7 @@ use std::sync::Arc;
 fn workload_emits_full_span_chain() {
     trace::set_spans(true);
     trace::set_timing(true);
+    trace::reset_timeseries();
     let dir = illm::artifacts_dir();
     let corpus = load_corpus(&dir).unwrap();
     let fp = load_model(&dir, "tinyllama_s").unwrap();
@@ -111,6 +112,34 @@ fn workload_emits_full_span_chain() {
         health.get("softmax_rows").and_then(Json::as_i64).unwrap()
             > 0,
         "softmax row counter never moved during a real workload");
+
+    // ---- per-wave time-series sampled alongside the spans ----
+    let counters = trace::counter_events();
+    assert!(!counters.is_empty(),
+            "batcher waves ran but no counter-track events");
+    let mut last_ts: std::collections::HashMap<&str, f64> =
+        std::collections::HashMap::new();
+    for e in &counters {
+        assert_eq!(e.ph, 'C', "counter event ph");
+        assert!(trace::TS_SERIES.contains(&e.name),
+                "unknown counter track {}", e.name);
+        if let Some(&prev) = last_ts.get(e.name) {
+            assert!(e.ts_us >= prev,
+                    "counter {} timestamps go backwards", e.name);
+        }
+        last_ts.insert(e.name, e.ts_us);
+    }
+    assert_eq!(last_ts.len(), trace::N_TS_SERIES,
+               "every series must emit a counter track");
+    let tsj = parsed.get("timeseries").expect("timeseries section");
+    assert!(
+        tsj.get("waves").and_then(Json::as_i64).unwrap() > 0,
+        "timeseries snapshot recorded no waves");
+    let slo = parsed.get("slo").expect("slo section");
+    assert_eq!(
+        slo.get("attributed").and_then(Json::as_i64).unwrap(),
+        4,
+        "all four finished requests must be SLO-attributed");
 
     // ---- Chrome-trace export round-trips ----
     let n = events.len();
